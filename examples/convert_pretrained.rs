@@ -1,0 +1,79 @@
+//! Pretrained-conversion walkthrough (paper Sec 5.4, Table 10 pipeline):
+//!
+//!   1. pretrain a softmax "GPT" on corpus A,
+//!   2. distill Hedgehog feature maps against its frozen attention,
+//!   3. finetune the linearized model on corpus B,
+//!   4. compare perplexities: zero-shot vs converted vs quadratic finetune.
+//!
+//!     cargo run --release --example convert_pretrained -- [pretrain_steps]
+
+use anyhow::Result;
+use hedgehog::data::{corpus, Pcg32};
+use hedgehog::metrics::perplexity;
+use hedgehog::runtime::ArtifactRegistry;
+use hedgehog::train::session::{evaluate, Batch, Session};
+use hedgehog::train::{convert, ConversionSpec};
+
+fn batch(lang: &corpus::TinyLanguage, d: corpus::Domain, rng: &mut Pcg32) -> Batch {
+    let (t, g, m) = lang.lm_batch(rng, d, 8, 128);
+    Batch::new().with("tokens", t).with("targets", g).with("loss_mask", m)
+}
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(250);
+    let reg = ArtifactRegistry::open("artifacts")?;
+    let lang = corpus::TinyLanguage::new(256);
+
+    // 1. pretrain softmax teacher on corpus A
+    println!("[1/4] pretraining softmax LM for {steps} steps on corpus A...");
+    let mut rng = Pcg32::new(0);
+    let mut teacher = Session::init(&reg, "lm_softmax", 0)?;
+    teacher.run(steps, |_| 6e-4, 0.01, |_| batch(&lang, corpus::Domain::Pretrain, &mut rng))?;
+
+    let ppl = |tag: &str, params, stream| -> Result<f32> {
+        let mut erng = Pcg32::with_stream(0, stream);
+        let (loss, _) =
+            evaluate(&reg, tag, params, 6, |_| batch(&lang, corpus::Domain::Transfer, &mut erng))?;
+        Ok(perplexity(loss))
+    };
+    println!("      zero-shot ppl on corpus B: {:.2}", ppl("lm_softmax", &teacher.params, 11)?);
+
+    // 2+3. distill hedgehog maps on corpus A, then finetune on corpus B
+    println!("[2/4] distilling hedgehog feature maps (Eq. 4 soft-XE)...");
+    let mut spec = ConversionSpec::new("lmconv_hedgehog");
+    spec.distill_steps = 100;
+    spec.finetune_steps = 0;
+    let mut drng = Pcg32::with_stream(0, 12);
+    let conv = convert(
+        &reg,
+        &teacher.params,
+        &spec,
+        |_| {
+            let b = batch(&lang, corpus::Domain::Pretrain, &mut drng);
+            Batch { slots: b.slots.into_iter().filter(|(n, _)| n == "tokens").collect() }
+        },
+        |_| unreachable!(),
+    )?;
+    println!(
+        "      {} shared leaves copied; distill loss {:.3} -> {:.3}",
+        conv.shared_leaves,
+        conv.distill_losses.first().unwrap_or(&f32::NAN),
+        conv.distill_losses.last().unwrap_or(&f32::NAN)
+    );
+
+    println!("[3/4] finetuning the linearized model on corpus B...");
+    let mut student = Session::from_params(&reg, "lm_hedgehog", conv.params)?;
+    let mut frng = Pcg32::with_stream(0, 13);
+    student.run(steps, |_| 3e-4, 0.01, |_| batch(&lang, corpus::Domain::Transfer, &mut frng))?;
+    println!("      hedgehog-converted ppl on B: {:.2}", ppl("lm_hedgehog", &student.params, 14)?);
+
+    // 4. quadratic upper bound: full softmax finetune
+    println!("[4/4] quadratic softmax finetune (upper bound)...");
+    let mut ft = Session::from_params(&reg, "lm_softmax", teacher.params.clone())?;
+    let mut qrng = Pcg32::with_stream(0, 15);
+    ft.run(steps, |_| 3e-4, 0.01, |_| batch(&lang, corpus::Domain::Transfer, &mut qrng))?;
+    println!("      softmax-finetuned ppl on B: {:.2}", ppl("lm_softmax", &ft.params, 16)?);
+
+    println!("expected shape (paper Table 10): zero-shot >> hedgehog-converted >~ softmax-FT");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: the whole stack in ~60 seconds.
+//!
+//! Loads the AOT artifacts, trains a tiny Hedgehog Transformer from scratch
+//! on associative recall (the paper's Sec 3.2 probe task), and prints the
+//! accuracy plus the attention-entropy diagnostic that motivates the paper.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use hedgehog::coordinator::glue_runner::{ar_batch, attn_stats};
+use hedgehog::data::Pcg32;
+use hedgehog::runtime::ArtifactRegistry;
+use hedgehog::train::session::{evaluate, Batch, Session};
+
+fn main() -> Result<()> {
+    let reg = ArtifactRegistry::open("artifacts")?;
+
+    // 1. Train-from-scratch: Hedgehog linear attention on associative recall.
+    let mut rng = Pcg32::new(0);
+    let mut session = Session::init(&reg, "ar_hedgehog", 0)?;
+    println!(
+        "hedgehog AR model: {} parameters",
+        session.params.num_elements()
+    );
+    for step in 0..120 {
+        let batch = ar_batch(&mut rng, 32);
+        let loss = session.train_step(1e-3, 1e-4, &batch)?;
+        if step % 20 == 0 {
+            println!("step {step:>4}  loss {loss:.4}");
+        }
+    }
+
+    // 2. Evaluate recall accuracy on fresh sequences.
+    let mut erng = Pcg32::with_stream(0, 7);
+    let (loss, acc) = evaluate(&reg, "ar_hedgehog", &session.params, 4, |_| {
+        ar_batch(&mut erng, 32)
+    })?;
+    println!("eval: loss {loss:.4}, recall accuracy {:.1}%", 100.0 * acc);
+
+    // 3. The paper's diagnostic: Hedgehog keeps attention entropy low
+    //    (spiky), tracking the softmax teacher.
+    let mut srng = Pcg32::with_stream(0, 8);
+    let b = ar_batch(&mut srng, 32);
+    let tokens_only = Batch {
+        slots: b.slots.into_iter().filter(|(n, _)| n == "tokens").collect(),
+    };
+    let (teacher_h, student_h, kl) = attn_stats(&reg, "ar_hedgehog", &session.params, &tokens_only)?;
+    println!(
+        "attention entropy: softmax teacher {teacher_h:.3} nats, hedgehog {student_h:.3} nats, \
+         KL {kl:.3}"
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Serve a linearized LM: batched greedy decoding with O(1) recurrent
+//! state per sequence — the deployment story behind the paper's Fig 6.
+//!
+//! Trains a small Hedgehog LM briefly, then pushes a wave of generation
+//! requests through the slot batcher and reports latency/throughput.
+//!
+//!     cargo run --release --example serve_linear_llm -- [n_requests]
+
+use anyhow::Result;
+use hedgehog::data::{corpus, Pcg32};
+use hedgehog::metrics::Stats;
+use hedgehog::runtime::ArtifactRegistry;
+use hedgehog::serve::{Batcher, Engine, Request};
+use hedgehog::train::session::{Batch, Session};
+
+fn main() -> Result<()> {
+    let n_requests: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+    let reg = ArtifactRegistry::open("artifacts")?;
+    let lang = corpus::TinyLanguage::new(256);
+
+    println!("warm-up training (150 steps) so generations aren't noise...");
+    let mut rng = Pcg32::new(0);
+    let mut s = Session::init(&reg, "lm_hedgehog", 0)?;
+    s.run(150, |_| 1e-3, 0.01, |_| {
+        let (t, g, m) = lang.lm_batch(&mut rng, corpus::Domain::Pretrain, 8, 128);
+        Batch::new().with("tokens", t).with("targets", g).with("loss_mask", m)
+    })?;
+
+    let mut engine = Engine::new(&reg, "lm_hedgehog", &s.params)?;
+    println!("engine: {} slots, vocab {}", engine.batch, engine.vocab);
+
+    let mut batcher = Batcher::new(engine.batch, 256);
+    let mut prng = Pcg32::with_stream(0, 1);
+    for id in 0..n_requests {
+        let plen = 6 + prng.usize_below(20);
+        let prompt = lang.stream(&mut prng, corpus::Domain::Pretrain, plen);
+        let ok = batcher.submit(Request { id, prompt, max_new: 20, eos: corpus::EOS });
+        assert!(ok, "queue backpressure triggered");
+    }
+
+    let (steps, secs) = batcher.run_to_completion(&mut engine)?;
+
+    let mut latency = Stats::default();
+    let mut out_tokens = 0usize;
+    for r in &batcher.completed {
+        latency.push((r.decode_steps + r.queue_steps) as f64);
+        out_tokens += r.output.len();
+    }
+    println!("completed {} requests in {secs:.2}s / {steps} engine steps", batcher.completed.len());
+    println!(
+        "throughput: {:.0} slot-tokens/s, {} generated tokens",
+        engine.tokens_processed as f64 / secs,
+        out_tokens
+    );
+    println!(
+        "latency (engine steps): mean {:.1}, min {:.0}, max {:.0}",
+        latency.mean(),
+        latency.min,
+        latency.max
+    );
+    // show one generation
+    if let Some(r) = batcher.completed.first() {
+        println!("sample generation (request {}): {:?}", r.id, r.output);
+    }
+    println!("per-token cost is constant: no KV cache growth at any context length");
+    Ok(())
+}

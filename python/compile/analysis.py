@@ -1,0 +1,111 @@
+"""Analysis graphs for the paper's diagnostic figures.
+
+Exported per model config so the Rust experiment runner can measure:
+
+  * `attn_stats`     — teacher/student attention entropies + KL (Figs 2, 4,
+                       7, 8; Tables 4, 5, 14).
+  * `mono_probe`     — (dot-product, teacher weight, student weight)
+                       triples from layer-0/head-0 (Fig 3/5 monotonicity;
+                       Rust computes Spearman rho over them).
+  * `attn_dump`      — full (N, N) teacher and student maps for one
+                       layer/head (the qualitative weight visualizations,
+                       Figs 7-20; written to disk by the runner).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import model as model_mod
+from .kernels import feature_maps, ref
+
+
+def _layer_maps(params, cfg, *inputs):
+    """Per-layer (teacher softmax map, student map) over one batch."""
+    teacher_cfg = cfg.replace(attn="softmax")
+    if cfg.kind == "vit":
+        _, hiddens = model_mod.collect_hidden(params, teacher_cfg, None, patches=inputs[0])
+    else:
+        _, hiddens = model_mod.collect_hidden(params, teacher_cfg, inputs[0])
+    out = []
+    for layer_p, h in zip(params["blocks"], hiddens):
+        q, k = attn_mod.qk_heads(layer_p["mix"], cfg, h)
+        teacher = ref.softmax_attention_weights(q, k, causal=cfg.causal, scale=1.0)
+        if cfg.attn == "softmax":
+            student = teacher
+        else:
+            fm_params = layer_p["mix"].get("fm", {})
+            if cfg.attn == "performer":
+                proj = jax.random.normal(
+                    jax.random.PRNGKey(1234 + cfg.d_head), (cfg.d_head, cfg.d_head)
+                )
+                qf, kf = ref.feature_performer(q, proj), ref.feature_performer(k, proj)
+            else:
+                qf = feature_maps.apply(cfg.attn, fm_params, q)
+                kf = feature_maps.apply(cfg.attn, fm_params, k)
+            student = ref.linear_attention_weights(qf, kf, causal=cfg.causal)
+        out.append((teacher, student, q, k))
+    return out
+
+
+def _masked_row_entropy(attn, causal):
+    h = -(attn * jnp.log(attn + ref.EPS)).sum(-1)
+    return h.mean()
+
+
+def make_attn_stats(cfg):
+    """(params, *inputs) -> (teacher_entropy, student_entropy, kl)."""
+
+    def fn(params, *inputs):
+        maps = _layer_maps(params, cfg, *inputs)
+        te, se, kl = 0.0, 0.0, 0.0
+        n = maps[0][0].shape[-1]
+        tri = jnp.tril(jnp.ones((n, n), dtype=bool)) if cfg.causal else None
+        for teacher, student, _, _ in maps:
+            te = te + _masked_row_entropy(teacher, cfg.causal)
+            se = se + _masked_row_entropy(student, cfg.causal)
+            terms = teacher * (jnp.log(teacher + ref.EPS) - jnp.log(student + ref.EPS))
+            if tri is not None:
+                terms = jnp.where(tri, terms, 0.0)
+            kl = kl + terms.sum(-1).mean()
+        L = len(maps)
+        return te / L, se / L, kl / L
+
+    return fn
+
+
+def make_mono_probe(cfg):
+    """(params, *inputs) -> (dots, teacher_w, student_w), each (B*N*N,).
+
+    Flattened (q_i . k_j, teacher A_ij, student A_ij) triples from layer 0,
+    head 0 — enough to draw Fig 3 and compute Spearman monotonicity.
+    """
+
+    def fn(params, *inputs):
+        maps = _layer_maps(params, cfg, *inputs)
+        teacher, student, q, k = maps[0]
+        dots = jnp.einsum("bnd,bmd->bnm", q[:, 0], k[:, 0])
+        t = teacher[:, 0]
+        s = student[:, 0]
+        if cfg.causal:
+            n = dots.shape[-1]
+            tri = jnp.tril(jnp.ones((n, n), dtype=bool), k=-0)
+            # keep strictly valid positions; invalid marked with NaN for Rust to drop
+            dots = jnp.where(tri, dots, jnp.nan)
+        return dots.reshape(-1), t.reshape(-1), s.reshape(-1)
+
+    return fn
+
+
+def make_attn_dump(cfg, layer: int = 0, head: int = 0):
+    """(params, *inputs) -> (teacher_map, student_map) for one layer/head,
+    shape (B, N, N) each."""
+
+    def fn(params, *inputs):
+        maps = _layer_maps(params, cfg, *inputs)
+        teacher, student, _, _ = maps[min(layer, len(maps) - 1)]
+        return teacher[:, head], student[:, head]
+
+    return fn

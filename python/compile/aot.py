@@ -1,0 +1,565 @@
+"""AOT export driver: lower every compute graph to HLO text + JSON manifest.
+
+This is the only place Python touches the pipeline — `make artifacts` runs
+it once; afterwards the Rust binary is self-contained.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact `<name>` produces:
+    artifacts/<name>.hlo.txt   — the lowered module
+    artifacts/<name>.json      — manifest: named inputs/outputs
+                                 (shape + dtype) and experiment metadata
+
+Pytree arguments are flattened to a positional leaf list; leaf names are
+jax tree paths (e.g. `params/blocks/0/mix/wq`), which is how the Rust
+`ParamStore` moves parameter sets between graphs (and between model
+variants during conversion: shared leaves match by name).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import analysis, configs, decode, distill, lora, train
+from . import model as model_mod
+from .kernels import feature_maps
+from .kernels.linear_attention import linear_attention_pallas
+from .kernels.softmax_attention import softmax_attention_pallas
+from .train import path_str
+
+DTYPE_NAMES = {
+    jnp.dtype("float32"): "f32",
+    jnp.dtype("int32"): "i32",
+    jnp.dtype("uint32"): "u32",
+}
+
+
+def spec_of(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def _leaf_entry(name, leaf):
+    return {
+        "name": name,
+        "shape": [int(d) for d in leaf.shape],
+        "dtype": DTYPE_NAMES[jnp.dtype(leaf.dtype)],
+    }
+
+
+def flatten_named(named_args):
+    """[(name, pytree_of_specs)] -> (flat_specs, input_entries, unflatten)."""
+    flat_all, metas = [], []
+    rebuilders = []
+    for name, tree in named_args:
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        paths = [
+            f"{name}/{path_str(p)}" if path_str(p) else name
+            for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+        ]
+        start = len(flat_all)
+        flat_all.extend(leaves)
+        metas.extend(_leaf_entry(pn, leaf) for pn, leaf in zip(paths, leaves))
+        rebuilders.append((treedef, start, len(leaves)))
+
+    def unflatten(flat):
+        out = []
+        for treedef, start, n in rebuilders:
+            out.append(jax.tree_util.tree_unflatten(treedef, flat[start : start + n]))
+        return out
+
+    return flat_all, metas, unflatten
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Exporter:
+    def __init__(self, out_dir: str, only: str | None, force: bool):
+        self.out_dir = out_dir
+        self.only = re.compile(only) if only else None
+        self.force = force
+        self.count = 0
+        self.skipped = 0
+
+    def emit(self, name, fn, named_args, out_names, meta):
+        """Lower `fn(*pytrees)` (args given as [(name, spec-pytree)])."""
+        if self.only and not self.only.search(name):
+            return
+        hlo_path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        man_path = os.path.join(self.out_dir, f"{name}.json")
+        if not self.force and os.path.exists(hlo_path) and os.path.exists(man_path):
+            self.skipped += 1
+            return
+
+        flat_specs, in_entries, unflatten = flatten_named(named_args)
+
+        def wrapped(*flat):
+            args = unflatten(list(flat))
+            out = fn(*args)
+            leaves = jax.tree_util.tree_leaves(out)
+            return tuple(leaves)
+
+        lowered = jax.jit(wrapped).lower(*flat_specs)
+        text = to_hlo_text(lowered)
+
+        # jax DCEs unused arguments out of the lowered module; the manifest
+        # must describe the *compiled* signature, so filter to kept inputs.
+        kept = getattr(lowered._lowering, "compile_args", {}).get("kept_var_idx")
+        if kept is not None:
+            in_entries = [e for i, e in enumerate(in_entries) if i in kept]
+
+        # Output manifest entries: evaluate shapes abstractly.
+        out_shapes = jax.eval_shape(wrapped, *flat_specs)
+        out_leaves = jax.tree_util.tree_leaves(out_shapes)
+        if len(out_names) != len(out_leaves):
+            # auto-name overflow (e.g. flattened param outputs)
+            out_names = list(out_names) + [
+                f"out{i}" for i in range(len(out_names), len(out_leaves))
+            ]
+        out_entries = [_leaf_entry(n, l) for n, l in zip(out_names, out_leaves)]
+
+        with open(hlo_path, "w") as f:
+            f.write(text)
+        with open(man_path, "w") as f:
+            json.dump(
+                {"name": name, "inputs": in_entries, "outputs": out_entries, "meta": meta},
+                f,
+                indent=1,
+            )
+        self.count += 1
+        print(f"  [{self.count}] {name}: {len(in_entries)} in / {len(out_entries)} out, "
+              f"{len(text)//1024} KiB hlo")
+
+
+# ---------------------------------------------------------------------------
+# Per-family artifact builders
+# ---------------------------------------------------------------------------
+
+def params_out_names(cfg):
+    ex = jax.eval_shape(lambda: model_mod.init_params(jax.random.PRNGKey(0), cfg))
+    paths = [
+        f"params/{path_str(p)}"
+        for p, _ in jax.tree_util.tree_flatten_with_path(ex)[0]
+    ]
+    return ex, paths
+
+
+def cfg_meta(cfg, spec, **extra):
+    m = {
+        "family": cfg.name, "kind": cfg.kind, "attn": cfg.attn,
+        "mixer": cfg.mixer, "vocab": cfg.vocab, "n_layers": cfg.n_layers,
+        "heads": cfg.heads, "d_head": cfg.d_head, "d_model": cfg.d_model,
+        "max_len": cfg.max_len, "num_classes": cfg.num_classes,
+        "regression": cfg.regression, "pair_input": cfg.pair_input,
+        "patch_dim": cfg.patch_dim,
+        "batch_size": spec.batch_size, "seq_len": spec.seq_len,
+    }
+    m.update(extra)
+    return m
+
+
+def scalar(dtype):
+    return jax.ShapeDtypeStruct((), dtype)
+
+
+def export_model_variant(ex: Exporter, cfg, spec, tag, *, graphs=("init", "train", "eval", "logits"),
+                         with_distill=False, seq_len=None):
+    """Export the standard graph set for one (config, attn/mixer) variant."""
+    seq = seq_len or spec.seq_len
+    params_spec, p_names = params_out_names(cfg)
+    batch = train.batch_specs(cfg, spec.batch_size, seq)
+    batch_named = [(n, s) for n, s in batch]
+    opt_named = [
+        ("m", params_spec), ("v", params_spec),
+        ("step", scalar(jnp.int32)), ("lr", scalar(jnp.float32)),
+        ("wd", scalar(jnp.float32)),
+    ]
+    meta = cfg_meta(cfg, spec, seq_len=seq)
+
+    if "init" in graphs:
+        ex.emit(
+            f"{tag}_init",
+            lambda seed: train.make_init(cfg)(seed),
+            [("seed", scalar(jnp.uint32))],
+            p_names,
+            {**meta, "graph": "init"},
+        )
+    if "train" in graphs:
+        step_fn = train.make_train_step(cfg)
+        ex.emit(
+            f"{tag}_train_step",
+            step_fn,
+            [("params", params_spec)] + opt_named + batch_named,
+            p_names + [n.replace("params/", "m/") for n in p_names]
+            + [n.replace("params/", "v/") for n in p_names]
+            + ["step", "loss"],
+            {**meta, "graph": "train_step"},
+        )
+    if "eval" in graphs:
+        ex.emit(
+            f"{tag}_eval",
+            train.make_eval(cfg),
+            [("params", params_spec)] + batch_named,
+            ["loss", "metric"],
+            {**meta, "graph": "eval"},
+        )
+    if "logits" in graphs:
+        inputs = batch[: 2 if cfg.pair_input else 1]
+        ex.emit(
+            f"{tag}_logits",
+            train.make_logits(cfg),
+            [("params", params_spec)] + [(n, s) for n, s in inputs],
+            ["logits"],
+            {**meta, "graph": "logits"},
+        )
+    if "stats" in graphs:
+        inputs = batch[: 2 if cfg.pair_input else 1]
+        ex.emit(
+            f"{tag}_attn_stats",
+            analysis.make_attn_stats(cfg),
+            [("params", params_spec)] + [(n, s) for n, s in inputs],
+            ["teacher_entropy", "student_entropy", "kl"],
+            {**meta, "graph": "attn_stats"},
+        )
+    if "mono" in graphs:
+        inputs = batch[:1]
+        ex.emit(
+            f"{tag}_mono_probe",
+            analysis.make_mono_probe(cfg),
+            [("params", params_spec)] + [(n, s) for n, s in inputs],
+            ["dots", "teacher_w", "student_w"],
+            {**meta, "graph": "mono_probe"},
+        )
+    if "dump" in graphs:
+        inputs = batch[:1]
+        ex.emit(
+            f"{tag}_attn_dump",
+            analysis.make_attn_dump(cfg),
+            [("params", params_spec)] + [(n, s) for n, s in inputs],
+            ["teacher_map", "student_map"],
+            {**meta, "graph": "attn_dump"},
+        )
+    if with_distill:
+        dstep = distill.make_distill_step(cfg)
+        inputs = batch[: 2 if cfg.pair_input else 1]
+        ex.emit(
+            f"{tag}_distill_step",
+            dstep,
+            [("params", params_spec)] + opt_named + [(n, s) for n, s in inputs],
+            p_names + [n.replace("params/", "m/") for n in p_names]
+            + [n.replace("params/", "v/") for n in p_names]
+            + ["step", "loss"],
+            {**meta, "graph": "distill_step"},
+        )
+        ex.emit(
+            f"{tag}_distill_eval",
+            distill.make_distill_eval(cfg),
+            [("params", params_spec)] + [(n, s) for n, s in inputs],
+            ["distill_loss", "kl"],
+            {**meta, "graph": "distill_eval"},
+        )
+
+
+def export_decode(ex: Exporter, cfg, spec, tag, batch_size=None):
+    """Recurrent decode_step + prefill for a linear-attention decoder."""
+    b = batch_size or spec.batch_size
+    params_spec, _ = params_out_names(cfg)
+    fn, dp = decode.make_decode_step(cfg)
+    L, H, DV = cfg.n_layers, cfg.heads, cfg.d_head
+    named = [
+        ("params", params_spec),
+        ("token", jax.ShapeDtypeStruct((b,), jnp.int32)),
+        ("pos", jax.ShapeDtypeStruct((b,), jnp.int32)),
+        ("s", jax.ShapeDtypeStruct((L, b, H, dp, DV), jnp.float32)),
+        ("z", jax.ShapeDtypeStruct((L, b, H, dp), jnp.float32)),
+    ]
+    meta = cfg_meta(cfg, spec, graph="decode_step", feature_dim=dp, decode_batch=b)
+    ex.emit(f"{tag}_decode_step", fn, named, ["logits", "s", "z"], meta)
+
+
+def export_decode_softmax(ex: Exporter, cfg, spec, tag, batch_size=None, max_len=None):
+    b = batch_size or spec.batch_size
+    n = max_len or cfg.max_len
+    params_spec, _ = params_out_names(cfg)
+    fn = decode.make_decode_step_softmax(cfg, n)
+    L, H, DH = cfg.n_layers, cfg.heads, cfg.d_head
+    named = [
+        ("params", params_spec),
+        ("token", jax.ShapeDtypeStruct((b,), jnp.int32)),
+        ("pos", jax.ShapeDtypeStruct((b,), jnp.int32)),
+        ("k_cache", jax.ShapeDtypeStruct((L, b, H, n, DH), jnp.float32)),
+        ("v_cache", jax.ShapeDtypeStruct((L, b, H, n, DH), jnp.float32)),
+    ]
+    meta = cfg_meta(cfg, spec, graph="decode_step_softmax", cache_len=n, decode_batch=b)
+    ex.emit(f"{tag}_decode_step_softmax", fn, named, ["logits", "k_cache", "v_cache"], meta)
+
+
+def export_lora(ex: Exporter, cfg, spec, tag, rank=8, alpha=16.0):
+    params_spec, _ = params_out_names(cfg)
+    ad_spec = jax.eval_shape(lambda: lora.init_lora(jax.random.PRNGKey(0), cfg, rank))
+    ad_leaves = [
+        f"lora/{path_str(p)}"
+        for p, _ in jax.tree_util.tree_flatten_with_path(ad_spec)[0]
+    ]
+    batch = train.batch_specs(cfg, spec.batch_size, spec.seq_len)
+    meta = cfg_meta(cfg, spec, lora_rank=rank, lora_alpha=alpha)
+
+    ex.emit(
+        f"{tag}_lora_init",
+        lambda seed: lora.init_lora(jax.random.PRNGKey(seed), cfg, rank),
+        [("seed", scalar(jnp.uint32))],
+        ad_leaves,
+        {**meta, "graph": "lora_init"},
+    )
+    step_fn = lora.make_lora_train_step(cfg, alpha, rank)
+    ex.emit(
+        f"{tag}_lora_train_step",
+        step_fn,
+        [
+            ("base", params_spec), ("lora", ad_spec),
+            ("m", ad_spec), ("v", ad_spec),
+            ("step", scalar(jnp.int32)), ("lr", scalar(jnp.float32)),
+            ("wd", scalar(jnp.float32)),
+        ] + [(n, s) for n, s in batch],
+        ad_leaves + [n.replace("lora/", "m/") for n in ad_leaves]
+        + [n.replace("lora/", "v/") for n in ad_leaves] + ["step", "loss"],
+        {**meta, "graph": "lora_train_step"},
+    )
+    ex.emit(
+        f"{tag}_lora_eval",
+        lora.make_lora_eval(cfg, alpha, rank),
+        [("base", params_spec), ("lora", ad_spec)] + [(n, s) for n, s in batch],
+        ["loss", "metric"],
+        {**meta, "graph": "lora_eval"},
+    )
+    ex.emit(
+        f"{tag}_lora_logits",
+        lora.make_lora_logits(cfg, alpha, rank),
+        [("base", params_spec), ("lora", ad_spec)] + [(n, s) for n, s in batch[:1]],
+        ["logits"],
+        {**meta, "graph": "lora_logits"},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Standalone kernel / scaling artifacts (Fig 6 + integration smoke tests)
+# ---------------------------------------------------------------------------
+
+def export_kernels(ex: Exporter):
+    b, h, n, d = 1, 2, 128, 16
+    qkv = [
+        ("q", jax.ShapeDtypeStruct((b, h, n, d), jnp.float32)),
+        ("k", jax.ShapeDtypeStruct((b, h, n, d), jnp.float32)),
+        ("v", jax.ShapeDtypeStruct((b, h, n, d), jnp.float32)),
+    ]
+    ex.emit(
+        "kernel_linear_attention",
+        lambda q, k, v: linear_attention_pallas(jnp.exp(q), jnp.exp(k), v, 32),
+        qkv,
+        ["out"],
+        {"graph": "kernel", "kernel": "linear_attention", "b": b, "h": h, "n": n, "d": d},
+    )
+    ex.emit(
+        "kernel_softmax_attention",
+        lambda q, k, v: softmax_attention_pallas(q, k, v, 32),
+        qkv,
+        ["out"],
+        {"graph": "kernel", "kernel": "softmax_attention", "b": b, "h": h, "n": n, "d": d},
+    )
+
+
+FIG6_HEADS = 4
+FIG6_DHEAD = 64
+FIG6_SOFTMAX_LENS = [256, 512, 1024, 2048, 4096]
+FIG6_LINEAR_LENS = [256, 512, 1024, 2048, 4096, 8192, 16384]
+
+
+def export_fig6(ex: Exporter):
+    """Single attention-layer forward at many sequence lengths (Fig 6)."""
+    h, d = FIG6_HEADS, FIG6_DHEAD
+
+    for n in FIG6_SOFTMAX_LENS:
+        spec = jax.ShapeDtypeStruct((1, h, n, d), jnp.float32)
+        ex.emit(
+            f"fig6_softmax_n{n}",
+            lambda q, k, v: softmax_attention_pallas(q, k, v, 64),
+            [("q", spec), ("k", spec), ("v", spec)],
+            ["out"],
+            {"graph": "fig6", "attn": "softmax", "n": n, "heads": h, "d_head": d},
+        )
+    for n in FIG6_LINEAR_LENS:
+        spec = jax.ShapeDtypeStruct((1, h, n, d), jnp.float32)
+
+        def hh(q, k, v):
+            qf = jnp.concatenate([jnp.exp(q), jnp.exp(-q)], -1)
+            kf = jnp.concatenate([jnp.exp(k), jnp.exp(-k)], -1)
+            return linear_attention_pallas(qf, kf, v, 64)
+
+        ex.emit(
+            f"fig6_hedgehog_n{n}",
+            hh,
+            [("q", spec), ("k", spec), ("v", spec)],
+            ["out"],
+            {"graph": "fig6", "attn": "hedgehog", "n": n, "heads": h, "d_head": d},
+        )
+    for n in FIG6_SOFTMAX_LENS[:4]:  # taylor d'=d^2 is heavy; cap the sweep
+        spec = jax.ShapeDtypeStruct((1, h, n, d), jnp.float32)
+
+        def taylor(q, k, v):
+            from .kernels import ref
+
+            qf = ref.feature_taylor(q * d ** -0.25)
+            kf = ref.feature_taylor(k * d ** -0.25)
+            return linear_attention_pallas(qf, kf, v, 64)
+
+        ex.emit(
+            f"fig6_taylor_n{n}",
+            taylor,
+            [("q", spec), ("k", spec), ("v", spec)],
+            ["out"],
+            {"graph": "fig6", "attn": "taylor", "n": n, "heads": h, "d_head": d},
+        )
+
+
+# ---------------------------------------------------------------------------
+# The full experiment grid
+# ---------------------------------------------------------------------------
+
+def export_all(ex: Exporter):
+    # --- kernels + fig6 scaling -------------------------------------------
+    export_kernels(ex)
+    export_fig6(ex)
+
+    # --- AR: train-from-scratch, all maps (Figs 2/4, Tables 2/3) ----------
+    cfg0, spec = configs.family("ar")
+    for attn in ["softmax"] + configs.PRIOR_MAPS + ["taylor", "hedgehog"]:
+        cfg = cfg0.replace(attn=attn)
+        export_model_variant(
+            ex, cfg, spec, f"ar_{attn}",
+            graphs=("init", "train", "eval", "stats"),
+        )
+
+    # --- GLUE-like encoders (Tables 1/8/15, Figs 3/5/7, Tables 4/5) -------
+    # Head variants: 2-class (most tasks), 3-class (mnli), regression (stsb).
+    glue0, gspec = configs.family("glue")
+    heads = {
+        "glue2": glue0,
+        "glue3": glue0.replace(num_classes=3),
+        "gluer": glue0.replace(num_classes=1, regression=True),
+    }
+    for hname, base in heads.items():
+        # softmax teacher
+        export_model_variant(ex, base.replace(attn="softmax"), gspec, f"{hname}_softmax",
+                             graphs=("init", "train", "eval", "logits", "stats", "mono", "dump"))
+        # converted students
+        maps = (
+            configs.PRIOR_MAPS + ["taylor", "hedgehog", "t2r"]
+            if hname == "glue2"
+            else ["hedgehog", "t2r"]
+        )
+        for attn in maps:
+            cfg = base.replace(attn=attn)
+            trainable = attn in ("hedgehog", "t2r", "hedgehog_sm")
+            export_model_variant(
+                ex, cfg, gspec, f"{hname}_{attn}",
+                graphs=("init", "train", "eval", "logits", "stats", "mono", "dump")
+                if hname == "glue2"
+                else ("init", "train", "eval", "logits"),
+                with_distill=trainable,
+            )
+    # Context-length generalization (Table 5): hedgehog distill_eval at longer N.
+    for n in [64, 128, 256]:
+        cfg = glue0.replace(attn="hedgehog", max_len=n)
+        sp = configs.TrainSpec(batch_size=4, seq_len=n)
+        params_spec, _ = params_out_names(cfg)
+        ex.emit(
+            f"glue2_hedgehog_distill_eval_n{n}",
+            distill.make_distill_eval(cfg),
+            [("params", params_spec),
+             ("tokens", jax.ShapeDtypeStruct((4, n), jnp.int32))],
+            ["distill_loss", "kl"],
+            cfg_meta(cfg, sp, graph="distill_eval", ctx_len=n),
+        )
+
+    # --- LM: from-scratch (Table 7) + pretrained conversion (Table 10) ----
+    lm0, lspec = configs.family("lm")
+    for attn in ["softmax", "elu", "performer", "hedgehog"]:
+        export_model_variant(ex, lm0.replace(attn=attn), lspec, f"lm_{attn}")
+    for mixer in ["aft", "h3", "hyena"]:
+        export_model_variant(ex, lm0.replace(mixer=mixer), lspec, f"lm_{mixer}")
+    for attn in ["hedgehog", "t2r"]:
+        export_model_variant(
+            ex, lm0.replace(attn=attn), lspec, f"lmconv_{attn}",
+            graphs=(), with_distill=True,
+        )
+    export_decode(ex, lm0.replace(attn="hedgehog"), lspec, "lm_hedgehog", batch_size=4)
+    export_decode_softmax(ex, lm0, lspec, "lm_softmax", batch_size=4)
+
+    # --- LRA-like (Table 6/13) --------------------------------------------
+    for fam in ["lra_listops", "lra_text", "lra_retrieval", "lra_image", "lra_pathfinder"]:
+        c0, sp = configs.family(fam)
+        for attn in ["softmax", "elu", "performer", "cosformer", "hedgehog"]:
+            export_model_variant(ex, c0.replace(attn=attn), sp, f"{fam}_{attn}")
+
+    # --- ViT (Table 9) ------------------------------------------------------
+    vit0, vspec = configs.family("vit")
+    export_model_variant(ex, vit0.replace(attn="softmax"), vspec, "vit_softmax")
+    for attn in ["hedgehog", "t2r"]:
+        export_model_variant(
+            ex, vit0.replace(attn=attn), vspec, f"vit_{attn}", with_distill=True
+        )
+
+    # --- Summarization + LoRA (Table 11) ------------------------------------
+    sum0, sspec = configs.family("sum")
+    export_model_variant(
+        ex, sum0.replace(attn="softmax"), sspec, "sum_softmax",
+        graphs=("init", "train", "eval", "logits"),
+    )
+    export_lora(ex, sum0.replace(attn="softmax"), sspec, "sum_softmax")
+    for attn in ["hedgehog", "t2r"]:
+        cfg = sum0.replace(attn=attn)
+        export_model_variant(
+            ex, cfg, sspec, f"sum_{attn}",
+            graphs=("init", "logits"), with_distill=True,
+        )
+        export_lora(ex, cfg, sspec, f"sum_{attn}")
+
+    # --- End-to-end example drivers ------------------------------------------
+    for fam in ["e2e_small", "e2e_medium"]:
+        c0, sp = configs.family(fam)
+        for attn in ["softmax", "hedgehog"]:
+            export_model_variant(ex, c0.replace(attn=attn), sp, f"{fam}_{attn}")
+        export_decode(ex, c0.replace(attn="hedgehog"), sp, f"{fam}_hedgehog", batch_size=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    ap.add_argument("--force", action="store_true", help="rebuild even if present")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    ex = Exporter(args.out, args.only, args.force)
+    export_all(ex)
+    print(f"wrote {ex.count} artifacts ({ex.skipped} already present) -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

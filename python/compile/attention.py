@@ -1,0 +1,131 @@
+"""Multi-head attention with pluggable similarity: softmax or any feature map.
+
+This is the L2 glue between the model blocks and the L1 kernels:
+
+  * `attn="softmax"`  -> quadratic softmax attention (jnp reference math for
+    training graphs; the Pallas flash kernel is exported separately for the
+    forward/serving artifacts and Fig 6).
+  * any feature-map name from kernels.feature_maps -> linear attention via
+    the chunked Pallas kernel (causal) or the closed-form full-sequence
+    state (bidirectional encoders).
+
+Per the paper (Sec 4.2 / A.2) the Hedgehog MLP is inserted after the q/k
+projections, one map per head per layer, and the *same* map is applied to
+queries and keys. Queries and keys are pre-scaled by d_head**-0.25 each so
+every similarity sees the softmax temperature of Eq. 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import feature_maps, ref
+from .kernels.linear_attention import linear_attention_pallas, linear_attention_scan
+
+ATTN_CHUNK = 64  # sequence chunk for the Pallas kernel; seq lens are multiples
+
+
+def init_attention(key, cfg, layer_idx: int) -> dict:
+    """Parameters for one attention layer (projections + optional feature map)."""
+    d, h, dh = cfg.d_model, cfg.heads, cfg.d_head
+    inner = h * dh
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    std = d ** -0.5
+    params = {
+        "wq": jax.random.normal(k1, (d, inner)) * std,
+        "wk": jax.random.normal(k2, (d, inner)) * std,
+        "wv": jax.random.normal(k3, (d, inner)) * std,
+        "wo": jax.random.normal(k4, (inner, d)) * std,
+    }
+    if cfg.attn != "softmax" and feature_maps.get(cfg.attn).trainable:
+        params["fm"] = feature_maps.init_params(cfg.attn, k5, h, dh)
+    return params
+
+
+def split_heads(x, heads):
+    b, n, hd = x.shape
+    return x.reshape(b, n, heads, hd // heads).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x):
+    b, h, n, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+
+
+def _features(cfg, params, q, k):
+    """Apply the configured feature map to pre-scaled q and k."""
+    fm_params = params.get("fm", {})
+    if cfg.attn == "performer":
+        # Fixed (non-trainable) FAVOR+ projection, deterministic per config:
+        # generated from a constant key so it constant-folds into the HLO.
+        proj = jax.random.normal(jax.random.PRNGKey(1234 + cfg.d_head), (cfg.d_head, cfg.d_head))
+        return ref.feature_performer(q, proj), ref.feature_performer(k, proj)
+    qf = feature_maps.apply(cfg.attn, fm_params, q)
+    kf = feature_maps.apply(cfg.attn, fm_params, k)
+    return qf, kf
+
+
+def attention(params: dict, cfg, x: jnp.ndarray, *, use_pallas: bool = True):
+    """Full multi-head attention over (B, N, D) hidden states."""
+    h, dh = cfg.heads, cfg.d_head
+    q = split_heads(x @ params["wq"], h)
+    k = split_heads(x @ params["wk"], h)
+    v = split_heads(x @ params["wv"], h)
+
+    scale = dh ** -0.25
+    q = q * scale
+    k = k * scale
+
+    if cfg.attn == "softmax":
+        out = ref.softmax_attention(q, k, v, causal=cfg.causal, scale=1.0)
+    else:
+        qf, kf = _features(cfg, params, q, k)
+        if cfg.causal:
+            n = x.shape[1]
+            if use_pallas and n % ATTN_CHUNK == 0:
+                out = linear_attention_pallas(qf, kf, v, ATTN_CHUNK)
+            else:
+                chunk = min(ATTN_CHUNK, n)
+                chunk = n // max(1, n // chunk)  # largest divisor <= chunk
+                while n % chunk != 0:
+                    chunk -= 1
+                out = linear_attention_scan(qf, kf, v, chunk)
+        else:
+            out = ref.linear_attention_noncausal(qf, kf, v)
+
+    return merge_heads(out) @ params["wo"]
+
+
+def attention_weights(params: dict, cfg, x: jnp.ndarray, attn: str | None = None):
+    """Materialized (B, H, N, N) attention map for analysis/distillation.
+
+    `attn` overrides the config's similarity (e.g. compute the softmax
+    teacher map on a model configured with a linear student).
+    """
+    name = cfg.attn if attn is None else attn
+    h, dh = cfg.heads, cfg.d_head
+    q = split_heads(x @ params["wq"], h) * dh ** -0.25
+    k = split_heads(x @ params["wk"], h) * dh ** -0.25
+    if name == "softmax":
+        return ref.softmax_attention_weights(q, k, causal=cfg.causal, scale=1.0)
+    sub_cfg_attn = cfg.attn
+    if name == "performer":
+        proj = jax.random.normal(jax.random.PRNGKey(1234 + cfg.d_head), (dh, dh))
+        qf, kf = ref.feature_performer(q, proj), ref.feature_performer(k, proj)
+    else:
+        fm_params = params.get("fm", {}) if name == sub_cfg_attn else {}
+        if feature_maps.get(name).trainable and name != sub_cfg_attn:
+            # untrained comparison map: identity init
+            fm_params = feature_maps.init_params(name, jax.random.PRNGKey(0), h, dh)
+        qf = feature_maps.apply(name, fm_params, q)
+        kf = feature_maps.apply(name, fm_params, k)
+    return ref.linear_attention_weights(qf, kf, causal=cfg.causal)
+
+
+def qk_heads(params: dict, cfg, x: jnp.ndarray):
+    """Pre-scaled per-head q, k — the raw material for distillation (Eq. 4)."""
+    h, dh = cfg.heads, cfg.d_head
+    q = split_heads(x @ params["wq"], h) * dh ** -0.25
+    k = split_heads(x @ params["wk"], h) * dh ** -0.25
+    return q, k

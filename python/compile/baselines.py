@@ -1,0 +1,160 @@
+"""Subquadratic baseline sequence mixers the paper compares against.
+
+Drop-in replacements for the attention mixer inside a Transformer block
+(Table 7: AFT, Table 10: Hybrid H3, Hyena). Implemented from scratch,
+scaled to this repo's model sizes:
+
+  * `aft`   — AFT-simple (Zhai et al., 2021): gated causal exponential
+              moving pool over values.
+  * `h3`    — H3-lite (Fu et al., 2023): shift-SSM + diagonal-SSM with
+              multiplicative q/k gating (the Hungry-Hungry-Hippos recipe
+              with diagonal state and per-channel decays).
+  * `hyena` — Hyena-lite (Poli et al., 2023): order-2 gated implicit long
+              convolution; filters are an MLP of sinusoidal positional
+              features with exponential decay windowing, applied via FFT.
+
+All operate on (B, N, D) hidden states and are causal.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# AFT-simple
+# ---------------------------------------------------------------------------
+
+def init_aft(key, cfg) -> dict:
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = d ** -0.5
+    return {
+        "wq": jax.random.normal(k1, (d, d)) * std,
+        "wk": jax.random.normal(k2, (d, d)) * std,
+        "wv": jax.random.normal(k3, (d, d)) * std,
+        "wo": jax.random.normal(k4, (d, d)) * std,
+    }
+
+
+def aft_mixer(params, cfg, x):
+    """AFT-simple: y_t = sigmoid(q_t) * cumsum(exp(k)*v)_t / cumsum(exp(k))_t."""
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    k = k - jax.lax.stop_gradient(k.max(axis=1, keepdims=True))  # stability
+    ek = jnp.exp(k)
+    num = jnp.cumsum(ek * v, axis=1)
+    den = jnp.cumsum(ek, axis=1) + 1e-6
+    y = jax.nn.sigmoid(q) * (num / den)
+    return y @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# H3-lite
+# ---------------------------------------------------------------------------
+
+def init_h3(key, cfg) -> dict:
+    d = cfg.d_model
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    std = d ** -0.5
+    return {
+        "wq": jax.random.normal(k1, (d, d)) * std,
+        "wk": jax.random.normal(k2, (d, d)) * std,
+        "wv": jax.random.normal(k3, (d, d)) * std,
+        "wo": jax.random.normal(k4, (d, d)) * std,
+        # per-channel decay in (0,1) via sigmoid; init near 0.9..0.99
+        "log_decay": jax.random.uniform(k5, (d,), minval=2.0, maxval=4.0),
+    }
+
+
+def _diag_ssm(x, decay):
+    """s_t = a * s_{t-1} + x_t per channel, via parallel associative scan."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    n = x.shape[1]
+    a = jnp.broadcast_to(decay[None, None, :], x.shape)
+    _, s = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return s
+
+
+def h3_mixer(params, cfg, x):
+    """H3-lite: q * diag-SSM(k * shift(v)) with learned per-channel decays."""
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    # shift-SSM: v delayed by one step (the 'shift' memory of H3)
+    v_shift = jnp.pad(v, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    decay = jax.nn.sigmoid(params["log_decay"])
+    s = _diag_ssm(k * v_shift, decay)
+    return (q * s) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Hyena-lite
+# ---------------------------------------------------------------------------
+
+FILTER_FEATS = 16
+
+
+def init_hyena(key, cfg) -> dict:
+    d = cfg.d_model
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    std = d ** -0.5
+    return {
+        "wv": jax.random.normal(k1, (d, d)) * std,
+        "wx1": jax.random.normal(k2, (d, d)) * std,
+        "wx2": jax.random.normal(k3, (d, d)) * std,
+        "wo": jax.random.normal(k4, (d, d)) * std,
+        # implicit filter MLP: sinusoidal pos feats -> hidden -> d channels
+        "fw1": jax.random.normal(k5, (FILTER_FEATS, 32)) * FILTER_FEATS ** -0.5,
+        "fw2": jax.random.normal(k6, (32, d)) * 32 ** -0.5,
+        "decay": jnp.linspace(0.5, 4.0, d),
+    }
+
+
+def _pos_features(n: int) -> jnp.ndarray:
+    t = jnp.arange(n)[:, None] / max(n, 1)
+    freqs = jnp.arange(FILTER_FEATS // 2)[None, :] + 1.0
+    ang = 2.0 * jnp.pi * t * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)  # (N, F)
+
+
+def _implicit_filter(params, n: int) -> jnp.ndarray:
+    feats = _pos_features(n)
+    h = jnp.sin(feats @ params["fw1"]) @ params["fw2"]  # (N, D)
+    t = jnp.arange(n)[:, None] / max(n, 1)
+    window = jnp.exp(-params["decay"][None, :] * t)  # exponential decay window
+    return h * window
+
+
+def _causal_fft_conv(x, h):
+    """y[:, t, c] = sum_{s<=t} h[t-s, c] * x[:, s, c] via zero-padded FFT."""
+    n = x.shape[1]
+    m = 2 * n
+    xf = jnp.fft.rfft(x, n=m, axis=1)
+    hf = jnp.fft.rfft(h, n=m, axis=0)
+    y = jnp.fft.irfft(xf * hf[None], n=m, axis=1)[:, :n]
+    return y.astype(x.dtype)
+
+
+def hyena_mixer(params, cfg, x):
+    """Hyena-lite order-2 recurrence: x2 * conv(h, x1 * v)."""
+    v = x @ params["wv"]
+    x1 = x @ params["wx1"]
+    x2 = x @ params["wx2"]
+    h = _implicit_filter(params, x.shape[1])
+    y = x2 * _causal_fft_conv(x1 * v, h)
+    return y @ params["wo"]
+
+
+MIXERS = {
+    "aft": (init_aft, aft_mixer),
+    "h3": (init_h3, h3_mixer),
+    "hyena": (init_hyena, hyena_mixer),
+}

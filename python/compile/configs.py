@@ -1,0 +1,164 @@
+"""Model + experiment configuration registry — the single source of truth
+shared between the Python compile path and the Rust runtime (via artifact
+manifests).
+
+Sizes are scaled to the testbed (single-core CPU PJRT): each family keeps
+the paper's *structure* (layers of pre-LN attention+MLP, per-head feature
+maps, the same train/distill/finetune pipelines) at widths where the full
+experiment grid runs in minutes. The `e2e_*` family scales up for the
+end-to-end example (`examples/train_e2e.rs`).
+
+Batch shapes live here too so Rust and Python agree by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .model import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSpec:
+    """Batch geometry attached to a model family."""
+
+    batch_size: int
+    seq_len: int
+
+
+# family name -> (base ModelConfig, TrainSpec)
+FAMILIES: dict[str, tuple[ModelConfig, TrainSpec]] = {}
+
+
+def _fam(cfg: ModelConfig, batch: int, seq: int):
+    FAMILIES[cfg.name] = (cfg, TrainSpec(batch, seq))
+    return cfg
+
+
+# --- Associative recall (Sec 3.2, Figs 2/4, Tables 2/3) ---------------------
+# Paper: vocab 40, seq 128, 4 layers. Scaled: vocab 32, seq 64, 2 layers.
+AR = _fam(
+    ModelConfig(
+        name="ar", kind="decoder", vocab=34, n_layers=2, heads=2,
+        d_head=16, d_model=64, max_len=64,
+    ),
+    batch=32, seq=64,
+)
+
+# --- GLUE-like encoder (Tables 1/8/15, Figs 3/5/7/9) ------------------------
+# One encoder family; per-task heads (num_classes / regression) via variants.
+GLUE = _fam(
+    ModelConfig(
+        name="glue", kind="encoder", vocab=64, n_layers=2, heads=2,
+        d_head=16, d_model=64, max_len=64, num_classes=2,
+    ),
+    batch=16, seq=64,
+)
+
+# --- Language modeling (Tables 7/10; the WT-103 stand-in) --------------------
+LM = _fam(
+    ModelConfig(
+        name="lm", kind="decoder", vocab=256, n_layers=2, heads=2,
+        d_head=16, d_model=64, max_len=128,
+    ),
+    batch=8, seq=128,
+)
+
+# --- LRA-like long-range tasks (Table 6/13) ----------------------------------
+LRA_LISTOPS = _fam(
+    ModelConfig(
+        name="lra_listops", kind="encoder", vocab=20, n_layers=2, heads=2,
+        d_head=16, d_model=64, max_len=128, num_classes=10,
+    ),
+    batch=16, seq=128,
+)
+LRA_TEXT = _fam(
+    ModelConfig(
+        name="lra_text", kind="encoder", vocab=100, n_layers=2, heads=2,
+        d_head=16, d_model=64, max_len=256, num_classes=2,
+    ),
+    batch=8, seq=256,
+)
+LRA_RETRIEVAL = _fam(
+    ModelConfig(
+        name="lra_retrieval", kind="encoder", vocab=64, n_layers=2, heads=2,
+        d_head=16, d_model=64, max_len=128, num_classes=2, pair_input=True,
+    ),
+    batch=8, seq=128,
+)
+LRA_IMAGE = _fam(
+    ModelConfig(
+        name="lra_image", kind="encoder", vocab=64, n_layers=2, heads=2,
+        d_head=16, d_model=64, max_len=256, num_classes=10,
+    ),
+    batch=8, seq=256,
+)
+LRA_PATHFINDER = _fam(
+    ModelConfig(
+        name="lra_pathfinder", kind="encoder", vocab=4, n_layers=2, heads=2,
+        d_head=16, d_model=64, max_len=256, num_classes=2,
+    ),
+    batch=8, seq=256,
+)
+
+# --- ViT (Table 9) -----------------------------------------------------------
+VIT = _fam(
+    ModelConfig(
+        name="vit", kind="vit", vocab=0, n_layers=2, heads=2, d_head=16,
+        d_model=64, max_len=17, num_classes=10, patch_dim=16,
+    ),
+    batch=16, seq=16,  # 16 patches (4x4 grid of 4x4 patches of a 16x16 image)
+)
+
+# --- Summarization decoder (Table 11; SAMSum stand-in) ------------------------
+SUM = _fam(
+    ModelConfig(
+        name="sum", kind="decoder", vocab=256, n_layers=2, heads=2,
+        d_head=16, d_model=64, max_len=192,
+    ),
+    batch=8, seq=192,
+)
+
+# --- End-to-end example drivers ------------------------------------------------
+E2E_SMALL = _fam(
+    ModelConfig(
+        name="e2e_small", kind="decoder", vocab=512, n_layers=4, heads=4,
+        d_head=16, d_model=128, max_len=128,
+    ),
+    batch=8, seq=128,
+)
+E2E_MEDIUM = _fam(
+    ModelConfig(
+        name="e2e_medium", kind="decoder", vocab=1024, n_layers=6, heads=8,
+        d_head=32, d_model=256, max_len=256,
+    ),
+    batch=4, seq=256,
+)
+
+# GLUE task table: task -> (num_classes, regression). Pair tasks are encoded
+# as single concatenated sequences with a separator token (documented
+# substitution; keeps one encoder family for the whole table).
+GLUE_TASKS: dict[str, tuple[int, bool]] = {
+    "cola": (2, False),
+    "sst2": (2, False),
+    "mrpc": (2, False),
+    "stsb": (1, True),
+    "qqp": (2, False),
+    "mnli": (3, False),
+    "qnli": (2, False),
+    "rte": (2, False),
+}
+
+# Feature-map variants exercised by the experiment grid.
+PRIOR_MAPS = ["elu", "relu", "performer", "cosformer", "exp_t1", "exp_t2"]
+LEARNED_MAPS = ["hedgehog", "t2r"]
+ALL_MAPS = PRIOR_MAPS + ["taylor"] + LEARNED_MAPS
+
+
+def family(name: str) -> tuple[ModelConfig, TrainSpec]:
+    return FAMILIES[name]
+
+
+def variant(name: str, attn: str, **overrides) -> ModelConfig:
+    cfg, _spec = FAMILIES[name]
+    return cfg.replace(attn=attn, **overrides)

@@ -1,0 +1,153 @@
+"""Single-token decode steps — the serving engine's hot path.
+
+Two families, both exported per decoder config:
+
+  * `decode_step` (linear attention): carries the O(1) recurrent state
+      S (L, B, H, Dp, Dv) and z (L, B, H, Dp)
+    per layer. One call = embed token -> L blocks of (feature map, state
+    update, readout, MLP) -> next-token logits. Cost is independent of how
+    many tokens came before — the paper's Fig 6 inference claim.
+
+  * `decode_step_softmax` (quadratic baseline): carries a KV cache
+    (L, B, H, MAXLEN, Dh) pair and attends over the valid prefix with a
+    position mask. Cost grows linearly per token (quadratic per sequence).
+
+The Rust `serve::Engine` threads these states through PJRT buffers across
+calls; batch slots map to the B axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as model_mod
+from .kernels import feature_maps
+from .kernels.linear_attention import EPS, linear_attention_decode_step
+
+
+def _block_token(layer_p, cfg, x, attn_out):
+    """Residual + MLP half of a block for a single token (B, D)."""
+    x = x + attn_out
+    h = model_mod.layer_norm(layer_p["ln2"], x)
+    return x + model_mod.mlp(layer_p["mlp"], h)
+
+
+def _qkv_token(layer_p, cfg, h):
+    """Per-head q, k, v for a single token; h is (B, D)."""
+    hh, dh = cfg.heads, cfg.d_head
+    q = (h @ layer_p["mix"]["wq"]).reshape(-1, hh, dh)
+    k = (h @ layer_p["mix"]["wk"]).reshape(-1, hh, dh)
+    v = (h @ layer_p["mix"]["wv"]).reshape(-1, hh, dh)
+    scale = dh ** -0.25
+    return q * scale, k * scale, v
+
+
+def make_decode_step(cfg):
+    """Linear-attention decode: (params, token, pos, S, Z) -> (logits, S', Z').
+
+    token (B,) i32; pos (B,) i32; S (L,B,H,Dp,Dv); Z (L,B,H,Dp).
+    """
+    fm = feature_maps.get(cfg.attn)
+    dp = fm.feature_dim(cfg.d_head)
+
+    def fn(params, token, pos, s_all, z_all):
+        x = params["emb"][token] + params["pos"][pos]  # (B, D)
+        new_s, new_z = [], []
+        for li, layer_p in enumerate(params["blocks"]):
+            h = model_mod.layer_norm(layer_p["ln1"], x)
+            q, k, v = _qkv_token(layer_p, cfg, h)
+            fm_params = layer_p["mix"].get("fm", {})
+            # feature maps expect (B,H,N,D); add/remove a singleton N axis
+            qf = feature_maps.apply(cfg.attn, fm_params, q[:, :, None, :])[:, :, 0]
+            kf = feature_maps.apply(cfg.attn, fm_params, k[:, :, None, :])[:, :, 0]
+            s, z, y = linear_attention_decode_step(s_all[li], z_all[li], qf, kf, v)
+            new_s.append(s)
+            new_z.append(z)
+            attn_out = y.reshape(y.shape[0], -1) @ layer_p["mix"]["wo"]
+            x = _block_token(layer_p, cfg, x, attn_out)
+        x = model_mod.layer_norm(params["ln_f"], x)
+        logits = x @ params["head"]
+        return logits, jnp.stack(new_s), jnp.stack(new_z)
+
+    return fn, dp
+
+
+def make_decode_step_softmax(cfg, max_len: int | None = None):
+    """KV-cache decode: (params, token, pos, Kc, Vc) -> (logits, Kc', Vc').
+
+    Kc, Vc are (L, B, H, MAXLEN, Dh); `pos` is the number of tokens already
+    in the cache (the new token is written at index pos).
+    """
+    n = max_len or cfg.max_len
+
+    def fn(params, token, pos, k_cache, v_cache):
+        x = params["emb"][token] + params["pos"][pos]
+        new_k, new_v = [], []
+        idx = jnp.arange(n)
+        for li, layer_p in enumerate(params["blocks"]):
+            h = model_mod.layer_norm(layer_p["ln1"], x)
+            q, k, v = _qkv_token(layer_p, cfg, h)
+            kc = _write_cache(k_cache[li], k, pos)
+            vc = _write_cache(v_cache[li], v, pos)
+            new_k.append(kc)
+            new_v.append(vc)
+            scores = jnp.einsum("bhd,bhnd->bhn", q, kc)
+            valid = idx[None, :] <= pos[:, None]          # (B, N)
+            scores = jnp.where(valid[:, None, :], scores, -1e30)
+            w = jax.nn.softmax(scores, axis=-1)
+            y = jnp.einsum("bhn,bhnd->bhd", w, vc)
+            attn_out = y.reshape(y.shape[0], -1) @ layer_p["mix"]["wo"]
+            x = _block_token(layer_p, cfg, x, attn_out)
+        x = model_mod.layer_norm(params["ln_f"], x)
+        return x @ params["head"], jnp.stack(new_k), jnp.stack(new_v)
+
+    return fn
+
+
+def _write_cache(cache, val, pos):
+    """cache (B,H,N,Dh), val (B,H,Dh), pos (B,) -> cache with val at [b,:,pos[b]]."""
+    n = cache.shape[2]
+    onehot = jax.nn.one_hot(pos, n, dtype=cache.dtype)  # (B, N)
+    return cache * (1.0 - onehot[:, None, :, None]) + (
+        val[:, :, None, :] * onehot[:, None, :, None]
+    )
+
+
+def make_prefill(cfg):
+    """(params, tokens) -> (logits_last, S, Z): process a whole prompt with
+    the chunked kernel, returning the recurrent state for decode."""
+    fm = feature_maps.get(cfg.attn)
+    dp = fm.feature_dim(cfg.d_head)
+
+    def fn(params, tokens):
+        b, n = tokens.shape
+        x = model_mod.embed_tokens(params, cfg, tokens)
+        s_out, z_out = [], []
+        for layer_p in params["blocks"]:
+            h = model_mod.layer_norm(layer_p["ln1"], x)
+            hh, dh = cfg.heads, cfg.d_head
+            q = attn_mod_split(h @ layer_p["mix"]["wq"], hh) * dh ** -0.25
+            k = attn_mod_split(h @ layer_p["mix"]["wk"], hh) * dh ** -0.25
+            v = attn_mod_split(h @ layer_p["mix"]["wv"], hh)
+            fm_params = layer_p["mix"].get("fm", {})
+            qf = feature_maps.apply(cfg.attn, fm_params, q)
+            kf = feature_maps.apply(cfg.attn, fm_params, k)
+            from .kernels.linear_attention import linear_attention_scan
+
+            y = linear_attention_scan(qf, kf, v, min(64, n))
+            s_out.append(jnp.einsum("bhnp,bhnd->bhpd", kf, v))
+            z_out.append(kf.sum(axis=2))
+            attn_out = y.transpose(0, 2, 1, 3).reshape(b, n, -1) @ layer_p["mix"]["wo"]
+            x = x + attn_out
+            x = x + model_mod.mlp(layer_p["mlp"], model_mod.layer_norm(layer_p["ln2"], x))
+        x = model_mod.layer_norm(params["ln_f"], x)
+        logits = x[:, -1] @ params["head"]
+        return logits, jnp.stack(s_out), jnp.stack(z_out)
+
+    return fn, dp
+
+
+def attn_mod_split(x, heads):
+    b, n, hd = x.shape
+    return x.reshape(b, n, heads, hd // heads).transpose(0, 2, 1, 3)

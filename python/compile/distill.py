@@ -1,0 +1,109 @@
+"""Attention-weight distillation (paper Sec 4.2, Eq 4; Appendix A.3).
+
+Stage 1 of finetuned/pretrained conversion: freeze every original model
+weight, insert per-head feature-map MLPs after the q/k projections, and
+train ONLY the MLPs so the linear attention map matches the softmax map the
+frozen model computes over the same hidden states.
+
+The graph mirrors Listing 2/3 of the paper: one forward pass of the frozen
+model collects every layer's pre-attention hidden state; each layer
+contributes a soft-label cross-entropy between its student (linear) and
+teacher (softmax) maps; the summed loss trains all feature maps jointly
+with a single AdamW.
+
+Propagation uses the *teacher* (the model still runs softmax attention
+while the maps are being distilled), exactly as in the paper's recipe.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import model as model_mod
+from . import train as train_mod
+from .kernels import feature_maps, ref
+
+
+def distill_loss(params, cfg, *inputs):
+    """Summed per-layer soft-XE between student and teacher attention maps."""
+    teacher_cfg = cfg.replace(attn="softmax")
+    if cfg.kind == "vit":
+        _, hiddens = model_mod.collect_hidden(params, teacher_cfg, None, patches=inputs[0])
+    else:
+        _, hiddens = model_mod.collect_hidden(params, teacher_cfg, inputs[0])
+
+    total = 0.0
+    for layer_p, h in zip(params["blocks"], hiddens):
+        q, k = attn_mod.qk_heads(layer_p["mix"], cfg, h)
+        true_attn = ref.softmax_attention_weights(q, k, causal=cfg.causal, scale=1.0)
+        fm_params = layer_p["mix"].get("fm", {})
+        qf = feature_maps.apply(cfg.attn, fm_params, q)
+        kf = feature_maps.apply(cfg.attn, fm_params, k)
+        pred_attn = ref.linear_attention_weights(qf, kf, causal=cfg.causal)
+        total = total + ref.distill_soft_xe(pred_attn, true_attn, causal=cfg.causal)
+    return total / len(hiddens)
+
+
+def make_distill_step(cfg):
+    """(params, m, v, step, lr, wd, *model_inputs) -> (params', m', v', step', loss).
+
+    Only leaves under a `fm` subtree receive updates; everything else is
+    frozen (gradient-masked), so the same full parameter tree flows through
+    distillation and the later finetuning stage unchanged in structure.
+    """
+
+    def loss_fn(params, *inputs):
+        return distill_loss(params, cfg, *inputs)
+
+    def step_fn(params, m, v, step, lr, wd, *inputs):
+        loss, grads = jax.value_and_grad(loss_fn)(params, *inputs)
+        grads = train_mod.mask_grads(grads, lambda p: "/fm/" not in f"/{p}/")
+        new_step = step + 1
+        params, m, v = train_mod.adamw_update(params, grads, m, v, new_step, lr, wd)
+        return params, m, v, new_step, loss
+
+    return step_fn
+
+
+def make_distill_eval(cfg):
+    """(params, *inputs) -> (distill_loss, mean_kl) on held-out data."""
+
+    def eval_fn(params, *inputs):
+        loss = distill_loss(params, cfg, *inputs)
+        kl = mean_attention_kl(params, cfg, *inputs)
+        return loss, kl
+
+    return eval_fn
+
+
+def mean_attention_kl(params, cfg, *inputs):
+    """Mean KL(teacher || student) across layers — Tables 4/5/14 metric."""
+    teacher_cfg = cfg.replace(attn="softmax")
+    if cfg.kind == "vit":
+        _, hiddens = model_mod.collect_hidden(params, teacher_cfg, None, patches=inputs[0])
+    else:
+        _, hiddens = model_mod.collect_hidden(params, teacher_cfg, inputs[0])
+    total = 0.0
+    for layer_p, h in zip(params["blocks"], hiddens):
+        q, k = attn_mod.qk_heads(layer_p["mix"], cfg, h)
+        true_attn = ref.softmax_attention_weights(q, k, causal=cfg.causal, scale=1.0)
+        fm_params = layer_p["mix"].get("fm", {})
+        qf = feature_maps.apply(cfg.attn, fm_params, q)
+        kf = feature_maps.apply(cfg.attn, fm_params, k)
+        pred_attn = ref.linear_attention_weights(qf, kf, causal=cfg.causal)
+        if cfg.causal:
+            # exclude the structurally-zero upper triangle from the mean
+            total = total + _causal_kl(true_attn, pred_attn)
+        else:
+            total = total + ref.attention_kl(true_attn, pred_attn)
+    return total / len(hiddens)
+
+
+def _causal_kl(true_attn, pred_attn):
+    n = true_attn.shape[-2]
+    mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+    kl_terms = true_attn * (jnp.log(true_attn + ref.EPS) - jnp.log(pred_attn + ref.EPS))
+    kl_terms = jnp.where(mask, kl_terms, 0.0)
+    return kl_terms.sum(-1).mean()

@@ -1,0 +1,205 @@
+"""Feature-map zoo: every phi() the paper compares, behind one registry.
+
+Each entry knows its feature dimension, whether it carries trainable
+parameters, and how to apply itself to per-head (B, H, N, D) tensors.
+The L2 models select a map by name; the distillation and analysis graphs
+iterate the registry. All maps are plain differentiable jnp (they are cheap
+elementwise/matmul prologues); the O(N) attention itself is the Pallas
+kernel in linear_attention.py.
+
+Scaling convention: softmax attention uses scores q.k/sqrt(d) (Eq. 1). For
+a like-for-like comparison every feature map receives queries and keys
+pre-scaled by d**-0.25 each (so phi(q).phi(k) sees the same temperature the
+softmax teacher does). The models apply this scaling before calling phi.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureMap:
+    """A named feature map phi: R^d -> R^{feature_dim(d)}."""
+
+    name: str
+    feature_dim: Callable[[int], int]
+    init: Callable[[Any, int, int], dict]  # (key, heads, d) -> params
+    apply: Callable[[dict, jnp.ndarray], jnp.ndarray]
+    trainable: bool
+    spiky: bool      # paper Table 2 property column
+    monotonic: bool  # paper Table 2 property column
+
+
+def _no_params(_key, _heads, _d):
+    return {}
+
+
+def _linear_map_params(key, heads, d, identity_init=True):
+    """Per-head (H, D, D) weight + (H, D) bias, identity-initialized (A.2)."""
+    if identity_init:
+        w = jnp.tile(jnp.eye(d)[None], (heads, 1, 1))
+    else:
+        w = jax.random.normal(key, (heads, d, d)) * (d ** -0.5)
+    return {"w": w, "b": jnp.zeros((heads, d))}
+
+
+def _performer_params(key, heads, d):
+    # Shared Gaussian projection (redrawn per model init, fixed thereafter).
+    return {"proj": jax.random.normal(key, (d, d))}
+
+
+REGISTRY: dict[str, FeatureMap] = {}
+
+
+def _register(fm: FeatureMap) -> FeatureMap:
+    REGISTRY[fm.name] = fm
+    return fm
+
+
+SOFTMAX = "softmax"  # sentinel: not a feature map; models dispatch specially
+
+ELU = _register(
+    FeatureMap(
+        "elu",
+        feature_dim=lambda d: d,
+        init=_no_params,
+        apply=lambda p, x: ref.feature_elu(x),
+        trainable=False,
+        spiky=False,
+        monotonic=False,
+    )
+)
+
+RELU = _register(
+    FeatureMap(
+        "relu",
+        feature_dim=lambda d: d,
+        init=_no_params,
+        apply=lambda p, x: ref.feature_relu(x),
+        trainable=False,
+        spiky=False,
+        monotonic=False,
+    )
+)
+
+EXP_T1 = _register(
+    FeatureMap(
+        "exp_t1",
+        feature_dim=lambda d: d,
+        init=_no_params,
+        apply=lambda p, x: ref.feature_exp_t(x, 1.0),
+        trainable=False,
+        spiky=False,
+        monotonic=False,
+    )
+)
+
+EXP_T2 = _register(
+    FeatureMap(
+        "exp_t2",
+        feature_dim=lambda d: d,
+        init=_no_params,
+        apply=lambda p, x: ref.feature_exp_t(x, 2.0),
+        trainable=False,
+        spiky=True,
+        monotonic=False,
+    )
+)
+
+PERFORMER = _register(
+    FeatureMap(
+        "performer",
+        feature_dim=lambda d: d,
+        init=_performer_params,
+        apply=lambda p, x: ref.feature_performer(x, p["proj"]),
+        trainable=False,  # projection is fixed after init (FAVOR+)
+        spiky=False,
+        monotonic=False,
+    )
+)
+
+COSFORMER = _register(
+    FeatureMap(
+        "cosformer",
+        feature_dim=lambda d: 2 * d,
+        init=_no_params,
+        apply=lambda p, x: ref.feature_cosformer(x),
+        trainable=False,
+        spiky=False,
+        monotonic=False,
+    )
+)
+
+TAYLOR = _register(
+    FeatureMap(
+        "taylor",
+        feature_dim=lambda d: 1 + d + d * d,
+        init=_no_params,
+        apply=lambda p, x: ref.feature_taylor(x),
+        trainable=False,
+        spiky=True,
+        monotonic=True,
+    )
+)
+
+HEDGEHOG = _register(
+    FeatureMap(
+        "hedgehog",
+        feature_dim=lambda d: 2 * d,
+        init=_linear_map_params,
+        apply=lambda p, x: ref.feature_hedgehog(x, p["w"], p["b"]),
+        trainable=True,
+        spiky=True,
+        monotonic=True,
+    )
+)
+
+HEDGEHOG_SM = _register(
+    FeatureMap(
+        "hedgehog_sm",
+        feature_dim=lambda d: 2 * d,
+        init=_linear_map_params,
+        apply=lambda p, x: ref.feature_hedgehog_softmax(x, p["w"], p["b"]),
+        trainable=True,
+        spiky=True,
+        monotonic=True,
+    )
+)
+
+T2R = _register(
+    FeatureMap(
+        "t2r",
+        feature_dim=lambda d: d,
+        init=_linear_map_params,
+        apply=lambda p, x: ref.feature_t2r(x, p["w"], p["b"]),
+        trainable=True,
+        spiky=False,
+        monotonic=False,
+    )
+)
+
+
+def get(name: str) -> FeatureMap:
+    """Look up a feature map; raises KeyError with the known names."""
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown feature map {name!r}; known: {sorted(REGISTRY)}")
+
+
+def init_params(name: str, key, heads: int, d: int) -> dict:
+    return get(name).init(key, heads, d)
+
+
+def apply(name: str, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return get(name).apply(params, x)
+
+
+ALL_LINEAR = sorted(REGISTRY)

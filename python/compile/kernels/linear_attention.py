@@ -1,0 +1,323 @@
+"""L1 Pallas kernels: chunked causal linear attention (the Hedgehog hot path).
+
+Computes, for feature-mapped queries/keys `q_f, k_f` (B, H, N, Dp) and values
+`v` (B, H, N, Dv):
+
+    y_i = ( phi(q_i) . sum_{j<=i} phi(k_j) v_j^T ) / ( phi(q_i) . sum_{j<=i} phi(k_j) )
+
+in O(N * Dp * Dv) time by carrying the running KV state
+
+    S in R^{Dp x Dv},   z in R^{Dp}
+
+across sequence chunks of length CHUNK. Within a chunk, the causal part is a
+small (CHUNK x CHUNK) masked matmul; across chunks the state is updated with
+one (Dp x CHUNK) @ (CHUNK x Dv) contraction — both MXU-systolic-array-shaped.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the state lives in
+VMEM scratch for the whole row of the grid; q/k/v stream HBM->VMEM one chunk
+at a time via BlockSpec. This is the TPU-native expression of what the
+paper's CUDA implementations do with threadblock tiling.
+
+A hand-derived custom VJP makes the kernel differentiable (pallas_call has
+no autodiff rule), so the same kernel sits inside the L2 training graphs.
+Backward math (u_i = dy_i / den_i, a_i = -(dy_i . y_i) / den_i):
+
+    dqf_i = S_i u_i + a_i z_i            (forward-direction scan, recompute S)
+    dkf_j = T_j v_j + r_j                (reverse scan: T_j = sum_{i>=j} qf_i u_i^T,
+    dv_j  = T_j^T kf_j                               r_j = sum_{i>=j} a_i qf_i)
+
+All kernels run interpret=True (CPU PJRT cannot execute Mosaic custom-calls);
+structure, not interpret-mode wallclock, is the optimization target.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-6
+DEFAULT_CHUNK = 64
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(qf_ref, kf_ref, v_ref, o_ref, den_ref, s_ref, z_ref, *, chunk):
+    """One (batch*head, chunk) grid step of the chunked forward pass."""
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    qf = qf_ref[0]  # (C, Dp)
+    kf = kf_ref[0]  # (C, Dp)
+    v = v_ref[0]    # (C, Dv)
+
+    # Intra-chunk causal scores (C, C), inclusive lower triangle.
+    scores = jnp.dot(qf, kf.T)
+    mask = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+    scores = jnp.where(mask, scores, 0.0)
+
+    num = jnp.dot(qf, s_ref[...]) + jnp.dot(scores, v)           # (C, Dv)
+    den = jnp.dot(qf, z_ref[...]) + scores.sum(-1, keepdims=True)  # (C, 1)
+    den = den + EPS
+
+    o_ref[0] = num / den
+    den_ref[0] = den
+
+    # Inter-chunk state update (runs after outputs: state holds prefix < chunk).
+    s_ref[...] += jnp.dot(kf.T, v)
+    z_ref[...] += kf.sum(0)[:, None]
+
+
+def _fwd(qf, kf, v, chunk):
+    b, h, n, dp = qf.shape
+    dv = v.shape[-1]
+    bh = b * h
+    qf2 = qf.reshape(bh, n, dp)
+    kf2 = kf.reshape(bh, n, dp)
+    v2 = v.reshape(bh, n, dv)
+
+    grid = (bh, n // chunk)
+    out, den = pl.pallas_call(
+        functools.partial(_fwd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, dp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, n, dv), qf.dtype),
+            jax.ShapeDtypeStruct((bh, n, 1), qf.dtype),
+        ],
+        scratch_shapes=_tpu_scratch(qf.dtype, dp, dv),
+        interpret=True,
+    )(qf2, kf2, v2)
+    return out.reshape(b, h, n, dv), den.reshape(b, h, n, 1)
+
+
+def _tpu_scratch(dtype, dp, dv):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return [pltpu.VMEM((dp, dv), dtype), pltpu.VMEM((dp, 1), dtype)]
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels
+# ---------------------------------------------------------------------------
+
+def _bwd_dq_kernel(qf_ref, kf_ref, v_ref, u_ref, a_ref, dqf_ref, s_ref, z_ref, *, chunk):
+    """Forward-direction scan computing dqf; recomputes the prefix state."""
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    qf = qf_ref[0]
+    kf = kf_ref[0]
+    v = v_ref[0]
+    u = u_ref[0]    # (C, Dv) = dy / den
+    a = a_ref[0]    # (C, 1)  = -(dy . y) / den
+
+    # Intra-chunk (inclusive) causal contributions.
+    uv = jnp.dot(u, v.T)  # (C, C): (v_j . u_i) at [i, j]
+    mask = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+    uv = jnp.where(mask, uv, 0.0)
+    # dqf_i = S_{<c} u_i + sum_{j<=i in chunk} (v_j.u_i) kf_j  + a_i * z_i
+    dqf = jnp.dot(u, s_ref[...].T) + jnp.dot(uv, kf)
+    zcum = z_ref[...][:, 0][None, :] + jnp.cumsum(kf, axis=0)  # (C, Dp) z_i
+    dqf = dqf + a * zcum
+    dqf_ref[0] = dqf
+
+    s_ref[...] += jnp.dot(kf.T, v)
+    z_ref[...] += kf.sum(0)[:, None]
+
+
+def _bwd_dkv_kernel(qf_ref, kf_ref, v_ref, u_ref, a_ref, dkf_ref, dv_ref, t_ref, r_ref, *, chunk, nchunks):
+    """Reverse-direction scan computing dkf and dv via suffix states T, r."""
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        t_ref[...] = jnp.zeros_like(t_ref)
+        r_ref[...] = jnp.zeros_like(r_ref)
+
+    qf = qf_ref[0]
+    kf = kf_ref[0]
+    v = v_ref[0]
+    u = u_ref[0]
+    a = a_ref[0]
+
+    # Suffix-inclusive within the chunk: i >= j (upper triangle inclusive).
+    uv = jnp.dot(u, v.T)  # [i, j] = v_j . u_i
+    mask_ge = jnp.triu(jnp.ones((chunk, chunk), dtype=bool)).T  # [i, j] True when i >= j
+    # dkf_j = sum_{i >= j} (v_j.u_i) qf_i  +  T_{>c} v_j  +  sum_{i>=j} a_i qf_i + r_{>c}
+    uv_ge = jnp.where(mask_ge, uv, 0.0)  # (C, C)
+    dkf = jnp.dot(uv_ge.T, qf) + jnp.dot(v, t_ref[...].T)
+    # reverse-cumulative sum of a_i qf_i within chunk (inclusive)
+    aq = a * qf  # (C, Dp)
+    rev = jnp.cumsum(aq[::-1], axis=0)[::-1]  # (C, Dp): sum_{i>=j within chunk}
+    dkf = dkf + rev + r_ref[...][:, 0][None, :]
+    dkf_ref[0] = dkf
+
+    # dv_j = sum_{i>=j} (qf_i.kf_j) u_i = intra + T_{>c}^T kf_j
+    qk = jnp.dot(qf, kf.T)  # [i, j]
+    qk_ge = jnp.where(mask_ge, qk, 0.0)
+    dv = jnp.dot(qk_ge.T, u) + jnp.dot(kf, t_ref[...])
+    dv_ref[0] = dv
+
+    t_ref[...] += jnp.dot(qf.T, u)
+    r_ref[...] += jnp.dot(qf.T, a)
+
+
+def _bwd(chunk, res, dy):
+    qf, kf, v, y, den = res
+    b, h, n, dp = qf.shape
+    dv_dim = v.shape[-1]
+    bh = b * h
+
+    u = dy / den                                        # (B,H,N,Dv)
+    a = -(dy * y).sum(-1, keepdims=True) / den          # (B,H,N,1)
+
+    qf2 = qf.reshape(bh, n, dp)
+    kf2 = kf.reshape(bh, n, dp)
+    v2 = v.reshape(bh, n, dv_dim)
+    u2 = u.reshape(bh, n, dv_dim)
+    a2 = a.reshape(bh, n, 1)
+
+    nchunks = n // chunk
+    spec_p = pl.BlockSpec((1, chunk, dp), lambda i, j: (i, j, 0))
+    spec_v = pl.BlockSpec((1, chunk, dv_dim), lambda i, j: (i, j, 0))
+    spec_1 = pl.BlockSpec((1, chunk, 1), lambda i, j: (i, j, 0))
+
+    dqf = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, chunk=chunk),
+        grid=(bh, nchunks),
+        in_specs=[spec_p, spec_p, spec_v, spec_v, spec_1],
+        out_specs=spec_p,
+        out_shape=jax.ShapeDtypeStruct((bh, n, dp), qf.dtype),
+        scratch_shapes=_tpu_scratch(qf.dtype, dp, dv_dim),
+        interpret=True,
+    )(qf2, kf2, v2, u2, a2)
+
+    # Reverse scan: flip the chunk axis via the index map.
+    rev = lambda i, j: (i, nchunks - 1 - j, 0)
+    spec_pr = pl.BlockSpec((1, chunk, dp), rev)
+    spec_vr = pl.BlockSpec((1, chunk, dv_dim), rev)
+    spec_1r = pl.BlockSpec((1, chunk, 1), rev)
+
+    dkf, dvv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, chunk=chunk, nchunks=nchunks),
+        grid=(bh, nchunks),
+        in_specs=[spec_pr, spec_pr, spec_vr, spec_vr, spec_1r],
+        out_specs=[spec_pr, spec_vr],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, n, dp), qf.dtype),
+            jax.ShapeDtypeStruct((bh, n, dv_dim), qf.dtype),
+        ],
+        scratch_shapes=_tpu_scratch(qf.dtype, dp, dv_dim),
+        interpret=True,
+    )(qf2, kf2, v2, u2, a2)
+
+    return (
+        dqf.reshape(b, h, n, dp),
+        dkf.reshape(b, h, n, dp),
+        dvv.reshape(b, h, n, dv_dim),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear_attention_pallas(qf, kf, v, chunk: int = DEFAULT_CHUNK):
+    """Causal normalized linear attention, O(N) chunked Pallas kernel.
+
+    Args:
+      qf, kf: feature-mapped queries/keys (B, H, N, Dp); must be >= 0.
+      v: values (B, H, N, Dv).
+      chunk: sequence chunk length; N must be divisible by it (pad upstream).
+    Returns:
+      (B, H, N, Dv) attention outputs, matching ref.linear_attention.
+    """
+    out, _ = _fwd(qf, kf, v, chunk)
+    return out
+
+
+def _vjp_fwd(qf, kf, v, chunk):
+    out, den = _fwd(qf, kf, v, chunk)
+    return out, (qf, kf, v, out, den)
+
+
+linear_attention_pallas.defvjp(_vjp_fwd, _bwd)
+
+
+def linear_attention_scan(qf, kf, v, chunk: int = DEFAULT_CHUNK):
+    """Chunked causal linear attention as a pure-jnp lax.scan.
+
+    Same O(N) math and chunking as the Pallas kernel, but expressed with
+    lax.scan so it stays compact inside large AOT-lowered training graphs
+    (interpret-mode pallas unrolls its grid into the jaxpr; see DESIGN.md).
+    Fully differentiable through native jax autodiff.
+    """
+    b, h, n, dp = qf.shape
+    dv = v.shape[-1]
+    nchunks = n // chunk
+    qc = qf.reshape(b, h, nchunks, chunk, dp)
+    kc = kf.reshape(b, h, nchunks, chunk, dp)
+    vc = v.reshape(b, h, nchunks, chunk, dv)
+    mask = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+
+    def step(carry, inp):
+        s, z = carry  # (B,H,Dp,Dv), (B,H,Dp)
+        qb, kb, vb = inp
+        scores = jnp.einsum("bhcp,bhdp->bhcd", qb, kb)
+        scores = jnp.where(mask, scores, 0.0)
+        num = jnp.einsum("bhcp,bhpd->bhcd", qb, s) + jnp.einsum(
+            "bhcd,bhde->bhce", scores, vb
+        )
+        den = jnp.einsum("bhcp,bhp->bhc", qb, z) + scores.sum(-1)
+        y = num / (den[..., None] + EPS)
+        s = s + jnp.einsum("bhcp,bhcd->bhpd", kb, vb)
+        z = z + kb.sum(axis=2)
+        return (s, z), y
+
+    s0 = jnp.zeros((b, h, dp, dv), qf.dtype)
+    z0 = jnp.zeros((b, h, dp), qf.dtype)
+    xs = (
+        jnp.moveaxis(qc, 2, 0),
+        jnp.moveaxis(kc, 2, 0),
+        jnp.moveaxis(vc, 2, 0),
+    )
+    _, ys = jax.lax.scan(step, (s0, z0), xs)  # (nchunks, B, H, chunk, Dv)
+    return jnp.moveaxis(ys, 0, 2).reshape(b, h, n, dv)
+
+
+def linear_attention_decode_step(s, z, qf_t, kf_t, v_t):
+    """Single-token recurrent decode update (the serving engine hot path).
+
+    Args:
+      s: (B, H, Dp, Dv) running KV state.  z: (B, H, Dp) running key sum.
+      qf_t, kf_t: (B, H, Dp) current-token features.  v_t: (B, H, Dv).
+    Returns:
+      (s', z', y_t) with y_t (B, H, Dv).
+    """
+    s = s + jnp.einsum("bhp,bhd->bhpd", kf_t, v_t)
+    z = z + kf_t
+    num = jnp.einsum("bhp,bhpd->bhd", qf_t, s)
+    den = jnp.einsum("bhp,bhp->bh", qf_t, z)
+    return s, z, num / (den[..., None] + EPS)

@@ -1,0 +1,229 @@
+"""Pure-jnp reference oracles for every L1 kernel.
+
+These are the ground truth the Pallas kernels (and, transitively, every
+HLO artifact the Rust runtime executes) are validated against in pytest.
+Everything here is written for clarity, not speed: quadratic materialized
+attention maps, token-by-token recurrences, explicit masks.
+
+Shapes use the convention:
+    q, k : (B, H, N, D)     queries / keys per head
+    v    : (B, H, N, Dv)    values per head
+    q_f, k_f : (B, H, N, Dp) feature-mapped queries / keys (Dp = feature dim)
+
+`EPS` guards the linear-attention denominator: feature maps are positive, so
+the denominator is positive, but it can be tiny for near-zero features.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Softmax attention (the teacher / quadratic baseline)
+# ---------------------------------------------------------------------------
+
+def softmax_attention_weights(q, k, causal: bool = True, scale: float | None = None):
+    """Materialized (B,H,N,N) softmax attention map. Eq. 1 of the paper."""
+    d = q.shape[-1]
+    scale = (d ** -0.5) if scale is None else scale
+    scores = jnp.einsum("bhnd,bhmd->bhnm", q, k) * scale
+    if causal:
+        n = q.shape[-2]
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def softmax_attention(q, k, v, causal: bool = True, scale: float | None = None):
+    """Softmax attention output y_i = sum_j sim(q_i, k_j) v_j."""
+    attn = softmax_attention_weights(q, k, causal=causal, scale=scale)
+    return jnp.einsum("bhnm,bhmd->bhnd", attn, v)
+
+
+# ---------------------------------------------------------------------------
+# Linear attention (materialized + recurrent forms)
+# ---------------------------------------------------------------------------
+
+def linear_attention_weights(q_f, k_f, causal: bool = True):
+    """Materialized (B,H,N,N) *normalized* linear attention map (Eq. 2).
+
+    The quadratic form of linear attention: A_ij = phi(q_i).phi(k_j) /
+    sum_m phi(q_i).phi(k_m). Used as the student map in distillation and as
+    the oracle for the O(n) forms.
+    """
+    scores = jnp.einsum("bhnp,bhmp->bhnm", q_f, k_f)
+    if causal:
+        n = q_f.shape[-2]
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        scores = jnp.where(mask, scores, 0.0)
+    denom = scores.sum(axis=-1, keepdims=True)
+    return scores / (denom + EPS)
+
+
+def linear_attention(q_f, k_f, v, causal: bool = True):
+    """Quadratic-form linear attention output (oracle for the chunked kernel)."""
+    attn = linear_attention_weights(q_f, k_f, causal=causal)
+    return jnp.einsum("bhnm,bhmd->bhnd", attn, v)
+
+
+def linear_attention_recurrent(q_f, k_f, v):
+    """Token-by-token causal linear attention via the running KV state.
+
+    State per head:  S_t = S_{t-1} + phi(k_t) v_t^T   (Dp, Dv)
+                     z_t = z_{t-1} + phi(k_t)         (Dp,)
+    Output:          y_t = (phi(q_t) S_t) / (phi(q_t) . z_t)
+
+    Mathematically identical to `linear_attention(..., causal=True)`;
+    exercised separately because the chunked Pallas kernel and the Rust
+    serving engine both carry this state.
+    """
+    b, h, n, dp = q_f.shape
+    dv = v.shape[-1]
+
+    def step(carry, inputs):
+        s, z = carry
+        qt, kt, vt = inputs  # (B,H,Dp), (B,H,Dp), (B,H,Dv)
+        s = s + jnp.einsum("bhp,bhd->bhpd", kt, vt)
+        z = z + kt
+        num = jnp.einsum("bhp,bhpd->bhd", qt, s)
+        den = jnp.einsum("bhp,bhp->bh", qt, z)
+        y = num / (den[..., None] + EPS)
+        return (s, z), y
+
+    s0 = jnp.zeros((b, h, dp, dv), q_f.dtype)
+    z0 = jnp.zeros((b, h, dp), q_f.dtype)
+    xs = (
+        jnp.moveaxis(q_f, 2, 0),
+        jnp.moveaxis(k_f, 2, 0),
+        jnp.moveaxis(v, 2, 0),
+    )
+    _, ys = jax.lax.scan(step, (s0, z0), xs)
+    return jnp.moveaxis(ys, 0, 2)
+
+
+def linear_attention_noncausal(q_f, k_f, v):
+    """Bidirectional linear attention (encoder models): full-sequence state."""
+    s = jnp.einsum("bhmp,bhmd->bhpd", k_f, v)
+    z = k_f.sum(axis=2)
+    num = jnp.einsum("bhnp,bhpd->bhnd", q_f, s)
+    den = jnp.einsum("bhnp,bhp->bhn", q_f, z)
+    return num / (den[..., None] + EPS)
+
+
+# ---------------------------------------------------------------------------
+# Feature maps (functional references; learnable params passed explicitly)
+# ---------------------------------------------------------------------------
+
+def feature_elu(x):
+    """1 + ELU  (Katharopoulos et al., 2020)."""
+    return 1.0 + jax.nn.elu(x)
+
+
+def feature_relu(x):
+    """ReLU  (T2R without the learned map; Kasai et al., 2021)."""
+    return jax.nn.relu(x)
+
+
+def feature_exp_t(x, t: float = 1.0):
+    """Element-wise temperature-scaled exponential phi_t(x) = exp(t*x) (Sec 3.2)."""
+    return jnp.exp(t * x)
+
+
+def feature_performer(x, proj):
+    """FAVOR+ positive random features (Choromanski et al., 2020).
+
+    phi(x) = exp(W x - |x|^2 / 2) / sqrt(m),  W ~ N(0, I) rows, shape (D, M).
+    """
+    m = proj.shape[-1]
+    xw = jnp.einsum("bhnd,dm->bhnm", x, proj)
+    sq = 0.5 * jnp.sum(x * x, axis=-1, keepdims=True)
+    return jnp.exp(xw - sq) / jnp.sqrt(m)
+
+
+def feature_cosformer(x, seq_len: int | None = None):
+    """cosFormer (Qin et al., 2022b): ReLU features with cos/sin position
+    reweighting. phi(x_i) = [relu(x_i) cos(pi i / 2M), relu(x_i) sin(pi i / 2M)].
+    """
+    n = x.shape[-2]
+    m = n if seq_len is None else seq_len
+    idx = jnp.arange(n, dtype=x.dtype)
+    theta = jnp.pi * idx / (2.0 * m)
+    r = jax.nn.relu(x)
+    c = jnp.cos(theta)[None, None, :, None]
+    s = jnp.sin(theta)[None, None, :, None]
+    return jnp.concatenate([r * c, r * s], axis=-1)
+
+
+def feature_taylor(x):
+    """2nd-degree Taylor features (Sec 4.1): exp(q.k) ~= phi(q).phi(k) with
+    phi(x) = [1, x, vec(x x^T)/sqrt(2)]  ->  dim 1 + d + d^2.
+    """
+    b, h, n, d = x.shape
+    ones = jnp.ones((b, h, n, 1), x.dtype)
+    outer = jnp.einsum("bhni,bhnj->bhnij", x, x).reshape(b, h, n, d * d)
+    return jnp.concatenate([ones, x, outer / jnp.sqrt(2.0)], axis=-1)
+
+
+def feature_hedgehog(x, w, b=None):
+    """Hedgehog spiky MLP feature map (Eq. 3 + Eq. 6, negation mapping).
+
+    phi(x) = [exp(x W + b), exp(-(x W + b))]   with W (H, D, D), b (H, D).
+    Per-head trainable map; identity init recovers [exp(x), exp(-x)].
+    """
+    y = jnp.einsum("bhnd,hde->bhne", x, w)
+    if b is not None:
+        y = y + b[None, :, None, :]
+    return jnp.concatenate([jnp.exp(y), jnp.exp(-y)], axis=-1)
+
+
+def feature_hedgehog_softmax(x, w, b=None):
+    """Numerically-stable Hedgehog variant (Eq. 5): softmax over the MLP
+    output dimension, applied to both the positive and negated halves.
+    """
+    y = jnp.einsum("bhnd,hde->bhne", x, w)
+    if b is not None:
+        y = y + b[None, :, None, :]
+    pos = jax.nn.softmax(y, axis=-1)
+    neg = jax.nn.softmax(-y, axis=-1)
+    return jnp.concatenate([pos, neg], axis=-1)
+
+
+def feature_t2r(x, w, b=None):
+    """Transformer-to-RNN learned feature map: relu(x W + b) (Kasai 2021)."""
+    y = jnp.einsum("bhnd,hde->bhne", x, w)
+    if b is not None:
+        y = y + b[None, :, None, :]
+    return jax.nn.relu(y)
+
+
+# ---------------------------------------------------------------------------
+# Distillation + analysis references
+# ---------------------------------------------------------------------------
+
+def distill_soft_xe(pred_attn, true_attn, causal: bool = True):
+    """Attention-weight distillation loss (Eq. 4): soft-label cross-entropy
+    between the linear (student) and softmax (teacher) attention maps,
+    averaged over (B, H, N).
+    """
+    logp = jnp.log(pred_attn + EPS)
+    if causal:
+        n = pred_attn.shape[-2]
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        logp = jnp.where(mask, logp, 0.0)
+    return -(true_attn * logp).sum(axis=-1).mean()
+
+
+def attention_entropy(attn):
+    """Mean Shannon entropy (nats) of each row of an attention map (Fig 2/4)."""
+    h = -(attn * jnp.log(attn + EPS)).sum(axis=-1)
+    return h.mean()
+
+
+def attention_kl(true_attn, pred_attn):
+    """Mean KL(true || pred) over rows of the attention maps (Tables 4/5/14)."""
+    kl = (true_attn * (jnp.log(true_attn + EPS) - jnp.log(pred_attn + EPS))).sum(-1)
+    return kl.mean()

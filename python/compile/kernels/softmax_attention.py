@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: blockwise (flash-style) causal softmax attention.
+
+The quadratic baseline / distillation teacher, written with the online
+softmax recurrence so the (N x N) score matrix is never materialized:
+
+    m_i   <- max(m_i, rowmax(S_block))
+    l_i   <- l_i * exp(m_old - m_i) + rowsum(exp(S_block - m_i))
+    acc_i <- acc_i * exp(m_old - m_i) + exp(S_block - m_i) V_block
+
+Grid is (B*H, Nq/C, Nk/C) with the k-block axis innermost; the running
+(m, l, acc) statistics persist in VMEM scratch across k-blocks and the
+normalized output is written on the final k-block. Fully-masked causal
+blocks (k-block start > q-block end) contribute nothing — on real TPU they
+would be skipped by the grid; under interpret=True they are computed and
+masked, which only costs CPU-test time.
+
+Forward-only: training graphs that need a differentiable softmax baseline
+use the jnp reference (ref.softmax_attention) — the quadratic baseline is
+not the paper's hot path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, chunk, nk, scale):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (C, D)
+    k = k_ref[0]  # (C, D)
+    v = v_ref[0]  # (C, Dv)
+
+    s = jnp.dot(q, k.T) * scale  # (C, C)
+    rows = qi * chunk + jnp.arange(chunk)[:, None]
+    cols = ki * chunk + jnp.arange(chunk)[None, :]
+    s = jnp.where(cols <= rows, s, NEG_INF)
+
+    m_prev = m_ref[...]                   # (C, 1)
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)                # (C, C)
+    corr = jnp.exp(m_prev - m_new)        # (C, 1)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[...] / l_ref[...]
+
+
+def softmax_attention_pallas(q, k, v, chunk: int = 64, scale: float | None = None):
+    """Causal softmax attention via the blockwise Pallas kernel.
+
+    Args:
+      q, k: (B, H, N, D). v: (B, H, N, Dv). N divisible by `chunk`.
+      scale: score scale; defaults to 1/sqrt(D) (Eq. 1).
+    Returns:
+      (B, H, N, Dv), matching ref.softmax_attention to fp32 tolerance.
+    """
+    b, h, n, d = q.shape
+    dv = v.shape[-1]
+    scale = (d ** -0.5) if scale is None else scale
+    bh = b * h
+    nk = n // chunk
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, chunk=chunk, nk=nk, scale=scale),
+        grid=(bh, nk, nk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d), lambda i, j, kk: (i, j, 0)),
+            pl.BlockSpec((1, chunk, d), lambda i, j, kk: (i, kk, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda i, j, kk: (i, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda i, j, kk: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((chunk, 1), q.dtype),
+            pltpu.VMEM((chunk, 1), q.dtype),
+            pltpu.VMEM((chunk, dv), q.dtype),
+        ],
+        interpret=True,
+    )(q.reshape(bh, n, d), k.reshape(bh, n, d), v.reshape(bh, n, dv))
+    return out.reshape(b, h, n, dv)

@@ -1,0 +1,86 @@
+"""Low-rank adaptation (Hu et al., 2021) for pretrained-conversion (Sec 5.4).
+
+LoRA adapters on the q/k/v/o projections of every layer: W' = W + (alpha/r) A B
+with A (d_in, r), B (r, d_out), A gaussian / B zero init so training starts
+from the base model. Used for the Table 11 pipeline: distill Hedgehog maps,
+then LoRA-finetune the converted model on the summarization task while the
+base weights stay frozen.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as model_mod
+from . import train as train_mod
+
+TARGETS = ("wq", "wk", "wv", "wo")
+
+
+def init_lora(key, cfg, rank: int = 8) -> list:
+    """One adapter dict per layer: {wq: {a, b}, ...}."""
+    adapters = []
+    for li in range(cfg.n_layers):
+        layer = {}
+        for ti, t in enumerate(TARGETS):
+            k = jax.random.fold_in(key, li * len(TARGETS) + ti)
+            d_in = cfg.d_model if t != "wo" else cfg.heads * cfg.d_head
+            d_out = cfg.heads * cfg.d_head if t != "wo" else cfg.d_model
+            layer[t] = {
+                "a": jax.random.normal(k, (d_in, rank)) * d_in ** -0.5,
+                "b": jnp.zeros((rank, d_out)),
+            }
+        adapters.append(layer)
+    return adapters
+
+
+def merge(params: dict, adapters: list, alpha: float = 16.0, rank: int = 8) -> dict:
+    """Return a parameter tree with W' = W + (alpha/r) A B on each target."""
+    scale = alpha / rank
+    merged = jax.tree_util.tree_map(lambda x: x, params)  # shallow-ish copy
+    new_blocks = []
+    for layer_p, ad in zip(params["blocks"], adapters):
+        mix = dict(layer_p["mix"])
+        for t in TARGETS:
+            mix[t] = layer_p["mix"][t] + scale * (ad[t]["a"] @ ad[t]["b"])
+        new_blocks.append({**layer_p, "mix": mix})
+    merged = dict(merged)
+    merged["blocks"] = new_blocks
+    return merged
+
+
+def make_lora_train_step(cfg, alpha: float = 16.0, rank: int = 8):
+    """(base_params, adapters, m, v, step, lr, wd, *batch) ->
+    (adapters', m', v', step', loss). Base weights are frozen inputs."""
+
+    def loss_fn(adapters, base_params, *batch):
+        merged = merge(base_params, adapters, alpha, rank)
+        inputs, labels = train_mod.split_batch(cfg, batch)
+        logits = model_mod.forward(merged, cfg, *inputs)
+        return train_mod.task_loss(cfg, logits, *labels)
+
+    def step_fn(base_params, adapters, m, v, step, lr, wd, *batch):
+        loss, grads = jax.value_and_grad(loss_fn)(adapters, base_params, *batch)
+        new_step = step + 1
+        adapters, m, v = train_mod.adamw_update(adapters, grads, m, v, new_step, lr, wd)
+        return adapters, m, v, new_step, loss
+
+    return step_fn
+
+
+def make_lora_eval(cfg, alpha: float = 16.0, rank: int = 8):
+    """(base_params, adapters, *batch) -> (loss, metric) on merged weights."""
+    ev = train_mod.make_eval(cfg)
+
+    def fn(base_params, adapters, *batch):
+        return ev(merge(base_params, adapters, alpha, rank), *batch)
+
+    return fn
+
+
+def make_lora_logits(cfg, alpha: float = 16.0, rank: int = 8):
+    def fn(base_params, adapters, *inputs):
+        return model_mod.forward(merge(base_params, adapters, alpha, rank), cfg, *inputs)
+
+    return fn

@@ -1,0 +1,210 @@
+"""L2 model zoo: GPT-lite decoder, BERT-lite encoder, ViT-lite — all with
+pluggable attention (softmax or any linear feature map) and pluggable
+sequence mixers (AFT / H3 / Hyena baselines).
+
+Everything is a pure function over an explicit parameter pytree, so each
+graph AOT-lowers to a self-contained HLO module the Rust runtime executes.
+Pre-LN residual blocks; learned absolute positional embeddings; untied LM
+head; no dropout (training runs are deterministic, which keeps the Rust
+driver and EXPERIMENTS.md reproducible bit-for-bit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import baselines
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyperparameters for one model family instance (see configs.py)."""
+
+    name: str
+    kind: str  # "decoder" | "encoder" | "vit"
+    vocab: int
+    n_layers: int
+    heads: int
+    d_head: int
+    d_model: int
+    max_len: int
+    attn: str = "softmax"          # "softmax" or a feature-map name
+    mixer: str = "attention"       # "attention" | "aft" | "h3" | "hyena"
+    mlp_mult: int = 4
+    num_classes: int | None = None  # encoder/vit classification head
+    regression: bool = False        # encoder scalar-regression head (STS-B-like)
+    patch_dim: int | None = None    # vit: flattened patch size
+    pair_input: bool = False        # encoder consumes two sequences (retrieval)
+
+    @property
+    def causal(self) -> bool:
+        return self.kind == "decoder"
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_ln(d):
+    return {"g": jnp.ones((d,)), "b": jnp.zeros((d,))}
+
+
+def _init_mlp(key, d, mult):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (d, mult * d)) * d ** -0.5,
+        "b1": jnp.zeros((mult * d,)),
+        "w2": jax.random.normal(k2, (mult * d, d)) * (mult * d) ** -0.5,
+        "b2": jnp.zeros((d,)),
+    }
+
+
+def _init_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    if cfg.mixer == "attention":
+        mix = attn_mod.init_attention(k1, cfg, 0)
+    else:
+        mix = baselines.MIXERS[cfg.mixer][0](k1, cfg)
+    return {
+        "ln1": _init_ln(cfg.d_model),
+        "mix": mix,
+        "ln2": _init_ln(cfg.d_model),
+        "mlp": _init_mlp(k2, cfg.d_model, cfg.mlp_mult),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    """Initialize the full parameter pytree for a config."""
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    d = cfg.d_model
+    params: dict = {
+        "pos": jax.random.normal(keys[0], (cfg.max_len, d)) * 0.02,
+        "ln_f": _init_ln(d),
+        "blocks": [_init_block(keys[2 + i], cfg) for i in range(cfg.n_layers)],
+    }
+    if cfg.kind == "vit":
+        assert cfg.patch_dim is not None
+        params["patch_proj"] = jax.random.normal(keys[1], (cfg.patch_dim, d)) * cfg.patch_dim ** -0.5
+        params["cls"] = jax.random.normal(keys[-1], (1, 1, d)) * 0.02
+    else:
+        params["emb"] = jax.random.normal(keys[1], (cfg.vocab, d)) * 0.02
+    if cfg.kind == "decoder":
+        params["head"] = jax.random.normal(keys[-1], (d, cfg.vocab)) * d ** -0.5
+    else:
+        n_out = 1 if cfg.regression else (cfg.num_classes or 2)
+        in_dim = 2 * d if cfg.pair_input else d
+        params["head"] = jax.random.normal(keys[-1], (in_dim, n_out)) * in_dim ** -0.5
+        params["head_b"] = jnp.zeros((n_out,))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def layer_norm(p, x, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def mlp(p, x):
+    return jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+def block(p, cfg, x, collect=None):
+    h = layer_norm(p["ln1"], x)
+    if collect is not None:
+        collect.append(h)  # pre-attention hidden state (distillation hook)
+    if cfg.mixer == "attention":
+        x = x + attn_mod.attention(p["mix"], cfg, h)
+    else:
+        x = x + baselines.MIXERS[cfg.mixer][1](p["mix"], cfg, h)
+    x = x + mlp(p["mlp"], layer_norm(p["ln2"], x))
+    return x
+
+
+def embed_tokens(params, cfg, tokens):
+    n = tokens.shape[1]
+    x = params["emb"][tokens] + params["pos"][:n][None]
+    return x
+
+
+def backbone(params, cfg, x, collect=None):
+    for p in params["blocks"]:
+        x = block(p, cfg, x, collect)
+    return layer_norm(params["ln_f"], x)
+
+
+def decoder_logits(params, cfg, tokens):
+    """(B, N) int32 tokens -> (B, N, vocab) next-token logits."""
+    x = backbone(params, cfg, embed_tokens(params, cfg, tokens))
+    return x @ params["head"]
+
+
+def encoder_pooled(params, cfg, tokens):
+    """Mean-pooled encoder representation (B, D)."""
+    x = backbone(params, cfg, embed_tokens(params, cfg, tokens))
+    return x.mean(axis=1)
+
+
+def encoder_logits(params, cfg, tokens, tokens2=None):
+    """Classification (B, C) / regression (B, 1) head over pooled states."""
+    pooled = encoder_pooled(params, cfg, tokens)
+    if cfg.pair_input:
+        pooled2 = encoder_pooled(params, cfg, tokens2)
+        pooled = jnp.concatenate([pooled, pooled2], axis=-1)
+    return pooled @ params["head"] + params["head_b"]
+
+
+def vit_logits(params, cfg, patches):
+    """(B, P, patch_dim) f32 patches -> (B, C) class logits."""
+    b = patches.shape[0]
+    x = patches @ params["patch_proj"]
+    cls = jnp.broadcast_to(params["cls"], (b, 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], axis=1)
+    x = x + params["pos"][: x.shape[1]][None]
+    x = backbone(params, cfg, x)
+    return x[:, 0] @ params["head"] + params["head_b"]
+
+
+def collect_hidden(params, cfg, tokens, patches=None):
+    """Run the backbone collecting per-layer pre-attention hidden states.
+
+    Returns (final_x, [h_1 .. h_L]) — the inputs each attention layer saw.
+    Used by the distillation and analysis graphs (teacher and student q/k
+    are both computed from these)."""
+    if cfg.kind == "vit":
+        b = patches.shape[0]
+        x = patches @ params["patch_proj"]
+        cls = jnp.broadcast_to(params["cls"], (b, 1, cfg.d_model))
+        x = jnp.concatenate([cls, x], axis=1) + params["pos"][: patches.shape[1] + 1][None]
+    else:
+        x = embed_tokens(params, cfg, tokens)
+    collect: list = []
+    x = backbone(params, cfg, x, collect=collect)
+    return x, collect
+
+
+def forward(params, cfg, *inputs):
+    """Dispatch to the config's forward: logits of the right shape."""
+    if cfg.kind == "decoder":
+        return decoder_logits(params, cfg, inputs[0])
+    if cfg.kind == "encoder":
+        if cfg.pair_input:
+            return encoder_logits(params, cfg, inputs[0], inputs[1])
+        return encoder_logits(params, cfg, inputs[0])
+    if cfg.kind == "vit":
+        return vit_logits(params, cfg, inputs[0])
+    raise ValueError(cfg.kind)
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,210 @@
+"""Training graphs: losses, AdamW, train/eval steps for every model kind.
+
+Each public `make_*` returns a pure function over explicit pytrees which
+aot.py flattens and lowers to one HLO artifact. The optimizer is AdamW
+implemented here from scratch (bias-corrected moments, decoupled weight
+decay); the learning rate and weight decay are *runtime inputs* so the Rust
+orchestrator owns the schedule without recompiling.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as model_mod
+
+B1, B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits, targets, mask):
+    """Mean next-token cross-entropy over masked positions.
+
+    logits (B,N,V), targets (B,N) int32, mask (B,N) f32 in {0,1}.
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -(ll * mask).sum() / (mask.sum() + 1e-6)
+
+
+def class_loss(logits, labels):
+    """Mean cross-entropy; logits (B,C), labels (B,) int32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def regression_loss(pred, labels):
+    """MSE for scalar-regression heads; pred (B,1), labels (B,) f32."""
+    return ((pred[:, 0] - labels) ** 2).mean()
+
+
+def task_loss(cfg, logits, *labels):
+    if cfg.kind == "decoder":
+        targets, mask = labels
+        return lm_loss(logits, targets, mask)
+    if cfg.regression:
+        return regression_loss(logits, labels[0])
+    return class_loss(logits, labels[0])
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def adamw_update(params, grads, m, v, step, lr, wd):
+    """One decoupled-weight-decay Adam step. `step` is the *new* step index
+    (1-based) used for bias correction; lr, wd are scalars."""
+    b1t = 1.0 - B1 ** step
+    b2t = 1.0 - B2 ** step
+
+    def upd(p, g, m_, v_):
+        m_new = B1 * m_ + (1.0 - B1) * g
+        v_new = B2 * v_ + (1.0 - B2) * g * g
+        mhat = m_new / b1t
+        vhat = v_new / b2t
+        p_new = p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + wd * p)
+        return p_new, m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_init(cfg):
+    """seed (u32 scalar) -> params pytree."""
+
+    def init_fn(seed):
+        key = jax.random.PRNGKey(seed)
+        return model_mod.init_params(key, cfg)
+
+    return init_fn
+
+
+def make_train_step(cfg, freeze_pred=None):
+    """(params, m, v, step, lr, wd, *batch) -> (params', m', v', step', loss).
+
+    `freeze_pred(path)` -> True freezes that leaf (used for distillation and
+    partial finetuning); gradients of frozen leaves are zeroed before AdamW.
+    """
+
+    def loss_fn(params, *batch):
+        inputs, labels = split_batch(cfg, batch)
+        logits = model_mod.forward(params, cfg, *inputs)
+        return task_loss(cfg, logits, *labels)
+
+    def step_fn(params, m, v, step, lr, wd, *batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, *batch)
+        if freeze_pred is not None:
+            grads = mask_grads(grads, freeze_pred)
+        new_step = step + 1
+        params, m, v = adamw_update(params, grads, m, v, new_step, lr, wd)
+        return params, m, v, new_step, loss
+
+    return step_fn
+
+
+def make_eval(cfg):
+    """(params, *batch) -> (loss, metric) — metric is accuracy for
+    classification, MSE again for regression, token-avg NLL for LM."""
+
+    def eval_fn(params, *batch):
+        inputs, labels = split_batch(cfg, batch)
+        logits = model_mod.forward(params, cfg, *inputs)
+        loss = task_loss(cfg, logits, *labels)
+        if cfg.kind == "decoder":
+            targets, mask = labels
+            pred = logits.argmax(-1)
+            acc = ((pred == targets) * mask).sum() / (mask.sum() + 1e-6)
+        elif cfg.regression:
+            acc = loss
+        else:
+            acc = (logits.argmax(-1) == labels[0]).mean()
+        return loss, acc
+
+    return eval_fn
+
+
+def make_logits(cfg):
+    def logits_fn(params, *inputs):
+        return model_mod.forward(params, cfg, *inputs)
+
+    return logits_fn
+
+
+def split_batch(cfg, batch):
+    """Split the flat batch tuple into (model_inputs, labels) per kind."""
+    if cfg.kind == "decoder":
+        tokens, targets, mask = batch
+        return (tokens,), (targets, mask)
+    if cfg.kind == "vit":
+        patches, labels = batch
+        return (patches,), (labels,)
+    if cfg.pair_input:
+        t1, t2, labels = batch
+        return (t1, t2), (labels,)
+    tokens, labels = batch
+    return (tokens,), (labels,)
+
+
+def batch_specs(cfg, batch_size: int, seq_len: int):
+    """ShapeDtypeStructs for one batch, in split_batch order."""
+    f32, i32 = jnp.float32, jnp.int32
+    if cfg.kind == "decoder":
+        return [
+            ("tokens", jax.ShapeDtypeStruct((batch_size, seq_len), i32)),
+            ("targets", jax.ShapeDtypeStruct((batch_size, seq_len), i32)),
+            ("loss_mask", jax.ShapeDtypeStruct((batch_size, seq_len), f32)),
+        ]
+    if cfg.kind == "vit":
+        n_patches = cfg.max_len - 1
+        return [
+            ("patches", jax.ShapeDtypeStruct((batch_size, n_patches, cfg.patch_dim), f32)),
+            ("labels", jax.ShapeDtypeStruct((batch_size,), i32)),
+        ]
+    specs = [("tokens", jax.ShapeDtypeStruct((batch_size, seq_len), i32))]
+    if cfg.pair_input:
+        specs.append(("tokens2", jax.ShapeDtypeStruct((batch_size, seq_len), i32)))
+    lab_dtype = f32 if cfg.regression else i32
+    specs.append(("labels", jax.ShapeDtypeStruct((batch_size,), lab_dtype)))
+    return specs
+
+
+def mask_grads(grads, freeze_pred):
+    """Zero gradient leaves whose tree path satisfies freeze_pred(path_str)."""
+
+    def fn(path, g):
+        p = path_str(path)
+        return jnp.zeros_like(g) if freeze_pred(p) else g
+
+    return jax.tree_util.tree_map_with_path(fn, grads)
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)

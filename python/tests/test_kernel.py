@@ -1,0 +1,329 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+The core correctness signal of the whole stack: if these pass, every HLO
+artifact built from the kernels computes the paper's math.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import feature_maps, ref
+from compile.kernels.linear_attention import (
+    linear_attention_decode_step,
+    linear_attention_pallas,
+    linear_attention_scan,
+)
+from compile.kernels.softmax_attention import softmax_attention_pallas
+
+
+def make_qkv(seed, b, h, n, d, dv, positive=False):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (b, h, n, d), jnp.float32)
+    k = jax.random.normal(k2, (b, h, n, d), jnp.float32)
+    v = jax.random.normal(k3, (b, h, n, dv), jnp.float32)
+    if positive:
+        q = jnp.abs(q) + 0.05
+        k = jnp.abs(k) + 0.05
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Chunked linear attention kernel
+# ---------------------------------------------------------------------------
+
+class TestLinearAttentionPallas:
+    @pytest.mark.parametrize("chunk", [16, 32, 64])
+    def test_matches_quadratic_oracle(self, chunk):
+        qf, kf, v = make_qkv(0, 2, 3, 128, 16, 16, positive=True)
+        got = linear_attention_pallas(qf, kf, v, chunk)
+        want = ref.linear_attention(qf, kf, v, causal=True)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_matches_recurrent_oracle(self):
+        qf, kf, v = make_qkv(1, 1, 2, 64, 8, 8, positive=True)
+        got = linear_attention_pallas(qf, kf, v, 16)
+        want = ref.linear_attention_recurrent(qf, kf, v)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_scan_form_matches_pallas(self):
+        qf, kf, v = make_qkv(2, 2, 2, 96, 12, 12, positive=True)
+        a = linear_attention_pallas(qf, kf, v, 32)
+        b = linear_attention_scan(qf, kf, v, 32)
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+    def test_causality(self):
+        """Output at position i must not depend on tokens > i."""
+        qf, kf, v = make_qkv(3, 1, 1, 64, 8, 8, positive=True)
+        base = linear_attention_pallas(qf, kf, v, 16)
+        # Perturb the last 16 tokens of k/v; first 48 outputs must not move.
+        kf2 = kf.at[..., 48:, :].set(kf[..., 48:, :] * 3.0 + 1.0)
+        v2 = v.at[..., 48:, :].set(-v[..., 48:, :])
+        out2 = linear_attention_pallas(qf, kf2, v2, 16)
+        assert_allclose(
+            np.asarray(base[..., :48, :]), np.asarray(out2[..., :48, :]), atol=1e-6
+        )
+
+    def test_rows_are_convex_combinations(self):
+        """With positive features, y_i lies in the convex hull of v_{<=i}."""
+        qf, kf, v = make_qkv(4, 1, 1, 32, 8, 4, positive=True)
+        out = np.asarray(linear_attention_pallas(qf, kf, v, 16))
+        v_np = np.asarray(v)
+        for i in range(32):
+            lo = v_np[0, 0, : i + 1].min(axis=0) - 1e-4
+            hi = v_np[0, 0, : i + 1].max(axis=0) + 1e-4
+            assert (out[0, 0, i] >= lo).all() and (out[0, 0, i] <= hi).all()
+
+    def test_custom_vjp_matches_autodiff_oracle(self):
+        qf, kf, v = make_qkv(5, 1, 2, 64, 8, 8, positive=True)
+
+        def f_pal(qf, kf, v):
+            return (linear_attention_pallas(qf, kf, v, 16) ** 2).sum()
+
+        def f_ref(qf, kf, v):
+            return (ref.linear_attention(qf, kf, v, causal=True) ** 2).sum()
+
+        gp = jax.grad(f_pal, argnums=(0, 1, 2))(qf, kf, v)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(qf, kf, v)
+        for a, b in zip(gp, gr):
+            assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+    def test_vjp_randomized_cotangent(self):
+        qf, kf, v = make_qkv(6, 1, 1, 32, 8, 8, positive=True)
+        dy = jax.random.normal(jax.random.PRNGKey(9), (1, 1, 32, 8))
+
+        _, vjp_p = jax.vjp(lambda a, b, c: linear_attention_pallas(a, b, c, 16), qf, kf, v)
+        _, vjp_r = jax.vjp(
+            lambda a, b, c: ref.linear_attention(a, b, c, causal=True), qf, kf, v
+        )
+        for a, b in zip(vjp_p(dy), vjp_r(dy)):
+            assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        b=st.integers(1, 2),
+        h=st.integers(1, 3),
+        nc=st.integers(1, 4),
+        d=st.sampled_from([4, 8, 16]),
+        dv=st.sampled_from([4, 8, 16]),
+        chunk=st.sampled_from([8, 16]),
+    )
+    def test_hypothesis_shape_sweep(self, seed, b, h, nc, d, dv, chunk):
+        n = nc * chunk
+        qf, kf, v = make_qkv(seed, b, h, n, d, dv, positive=True)
+        got = linear_attention_pallas(qf, kf, v, chunk)
+        want = ref.linear_attention(qf, kf, v, causal=True)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-5, atol=5e-5)
+
+
+class TestDecodeStep:
+    def test_decode_matches_prefill(self):
+        """Running the recurrent decode step token-by-token equals prefill."""
+        qf, kf, v = make_qkv(7, 2, 2, 24, 8, 8, positive=True)
+        want = np.asarray(ref.linear_attention(qf, kf, v, causal=True))
+        b, h, n, dp = qf.shape
+        dv = v.shape[-1]
+        s = jnp.zeros((b, h, dp, dv))
+        z = jnp.zeros((b, h, dp))
+        for t in range(n):
+            s, z, y = linear_attention_decode_step(
+                s, z, qf[..., t, :], kf[..., t, :], v[..., t, :]
+            )
+            assert_allclose(np.asarray(y), want[..., t, :], rtol=2e-5, atol=2e-5)
+
+    def test_state_shapes_preserved(self):
+        s = jnp.zeros((1, 2, 8, 4))
+        z = jnp.zeros((1, 2, 8))
+        qt = jnp.ones((1, 2, 8))
+        s2, z2, y = linear_attention_decode_step(s, z, qt, qt, jnp.ones((1, 2, 4)))
+        assert s2.shape == s.shape and z2.shape == z.shape and y.shape == (1, 2, 4)
+
+
+# ---------------------------------------------------------------------------
+# Flash softmax kernel
+# ---------------------------------------------------------------------------
+
+class TestSoftmaxAttentionPallas:
+    @pytest.mark.parametrize("chunk,n", [(16, 64), (32, 128), (64, 128)])
+    def test_matches_oracle(self, chunk, n):
+        q, k, v = make_qkv(10, 2, 2, n, 16, 16)
+        got = softmax_attention_pallas(q, k, v, chunk)
+        want = ref.softmax_attention(q, k, v, causal=True)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_causality(self):
+        q, k, v = make_qkv(11, 1, 1, 64, 8, 8)
+        base = softmax_attention_pallas(q, k, v, 16)
+        k2 = k.at[..., 32:, :].add(5.0)
+        v2 = v.at[..., 32:, :].multiply(-2.0)
+        out2 = softmax_attention_pallas(q, k2, v2, 16)
+        assert_allclose(
+            np.asarray(base[..., :32, :]), np.asarray(out2[..., :32, :]), atol=1e-6
+        )
+
+    def test_large_scores_stable(self):
+        """Online-softmax must survive large logits (no overflow)."""
+        q, k, v = make_qkv(12, 1, 1, 32, 8, 8)
+        got = softmax_attention_pallas(q * 30.0, k * 30.0, v, 16)
+        want = ref.softmax_attention(q * 30.0, k * 30.0, v, causal=True)
+        assert np.isfinite(np.asarray(got)).all()
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16), nc=st.integers(1, 4), d=st.sampled_from([4, 8, 16]))
+    def test_hypothesis_sweep(self, seed, nc, d):
+        n = nc * 16
+        q, k, v = make_qkv(seed, 1, 2, n, d, d)
+        got = softmax_attention_pallas(q, k, v, 16)
+        want = ref.softmax_attention(q, k, v, causal=True)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-5, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# Feature maps
+# ---------------------------------------------------------------------------
+
+class TestFeatureMaps:
+    def test_registry_complete(self):
+        for name in ["elu", "relu", "exp_t1", "exp_t2", "performer", "cosformer",
+                     "taylor", "hedgehog", "hedgehog_sm", "t2r"]:
+            assert name in feature_maps.REGISTRY
+
+    @pytest.mark.parametrize("name", feature_maps.ALL_LINEAR)
+    def test_feature_dims(self, name):
+        fm = feature_maps.get(name)
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 8, 8))
+        params = fm.init(jax.random.PRNGKey(1), 3, 8)
+        out = fm.apply(params, x)
+        assert out.shape == (2, 3, 8, fm.feature_dim(8))
+
+    @pytest.mark.parametrize("name", ["elu", "exp_t1", "exp_t2", "performer",
+                                      "hedgehog", "hedgehog_sm", "taylor"])
+    def test_positive_attention_weights(self, name):
+        """Positivity: the resulting attention weights are >= 0 (Sec 2)."""
+        fm = feature_maps.get(name)
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 16, 8))
+        params = fm.init(jax.random.PRNGKey(3), 2, 8)
+        f = fm.apply(params, x)
+        attn = ref.linear_attention_weights(f, f, causal=True)
+        assert (np.asarray(attn) >= -1e-6).all()
+
+    def test_taylor_approximates_exp(self):
+        """phi_taylor(q).phi_taylor(k) == 1 + q.k + (q.k)^2/2 exactly."""
+        q = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 8, 6)) * 0.5
+        k = jax.random.normal(jax.random.PRNGKey(5), (1, 1, 8, 6)) * 0.5
+        fq, fk = ref.feature_taylor(q), ref.feature_taylor(k)
+        got = jnp.einsum("bhnp,bhmp->bhnm", fq, fk)
+        qk = jnp.einsum("bhnd,bhmd->bhnm", q, k)
+        want = 1.0 + qk + 0.5 * qk**2
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_hedgehog_identity_init(self):
+        """Identity-initialized Hedgehog == [exp(x), exp(-x)] (A.2)."""
+        x = jax.random.normal(jax.random.PRNGKey(6), (1, 2, 4, 8))
+        params = feature_maps.init_params("hedgehog", jax.random.PRNGKey(7), 2, 8)
+        got = feature_maps.apply("hedgehog", params, x)
+        want = jnp.concatenate([jnp.exp(x), jnp.exp(-x)], axis=-1)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    def test_hedgehog_sm_normalized(self):
+        """Eq. 5 variant: each half sums to 1 over the feature dim."""
+        x = jax.random.normal(jax.random.PRNGKey(8), (1, 2, 4, 8)) * 3
+        params = feature_maps.init_params("hedgehog_sm", jax.random.PRNGKey(9), 2, 8)
+        out = feature_maps.apply("hedgehog_sm", params, x)
+        pos, neg = out[..., :8], out[..., 8:]
+        assert_allclose(np.asarray(pos.sum(-1)), 1.0, rtol=1e-5)
+        assert_allclose(np.asarray(neg.sum(-1)), 1.0, rtol=1e-5)
+
+    def test_performer_unbiasedness_direction(self):
+        """E[phi(q).phi(k)] ~ exp(q.k) for FAVOR+ with many features."""
+        d = 4
+        q = jnp.ones((1, 1, 1, d)) * 0.3
+        k = jnp.ones((1, 1, 1, d)) * 0.2
+        proj = jax.random.normal(jax.random.PRNGKey(10), (d, 4096))
+        fq = ref.feature_performer(q, proj)
+        fk = ref.feature_performer(k, proj)
+        got = float(jnp.einsum("bhnp,bhmp->bhnm", fq, fk)[0, 0, 0, 0])
+        want = float(jnp.exp((q * k).sum()))
+        assert abs(got - want) / want < 0.15
+
+    def test_cosformer_locality(self):
+        """cosFormer upweights nearby positions: same-vector similarity decays
+        with distance for the cos component."""
+        n, d = 32, 8
+        x = jnp.abs(jax.random.normal(jax.random.PRNGKey(11), (1, 1, n, d)))
+        f = ref.feature_cosformer(x)
+        # similarity of token 16's q-feature with each k-feature of same x
+        sims = np.asarray(jnp.einsum("p,mp->m", f[0, 0, 16], f[0, 0]))
+        raw = np.asarray(jnp.einsum("d,md->m", x[0, 0, 16], x[0, 0]))
+        # relative weight vs raw dot product decays with |i-16|
+        rel = sims / (raw + 1e-6)
+        assert rel[16] > rel[0] and rel[16] > rel[31]
+
+
+# ---------------------------------------------------------------------------
+# Distillation loss + analysis references
+# ---------------------------------------------------------------------------
+
+class TestDistillAndAnalysis:
+    def test_distill_loss_minimized_at_match(self):
+        """Soft-XE is minimized (== teacher entropy) when student == teacher."""
+        q, k, _ = make_qkv(13, 1, 2, 16, 8, 8)
+        true = ref.softmax_attention_weights(q, k, causal=True)
+        loss_match = ref.distill_soft_xe(true, true)
+        uniform = ref.linear_attention_weights(
+            jnp.ones_like(q), jnp.ones_like(k), causal=True
+        )
+        loss_uniform = ref.distill_soft_xe(uniform, true)
+        assert float(loss_match) < float(loss_uniform)
+
+    def test_entropy_bounds(self):
+        n = 16
+        # one-hot rows -> entropy 0; uniform rows -> log(n)
+        eye = jnp.eye(n)[None, None]
+        assert float(ref.attention_entropy(eye)) < 1e-4
+        unif = jnp.full((1, 1, n, n), 1.0 / n)
+        assert abs(float(ref.attention_entropy(unif)) - np.log(n)) < 1e-3
+
+    def test_spiky_maps_have_lower_entropy(self):
+        """The paper's Fig 2 claim, in miniature: exp_t2 features give lower
+        attention entropy than 1+ELU on the same q/k."""
+        q, k, _ = make_qkv(14, 2, 4, 64, 16, 16)
+        f_elu = ref.feature_elu
+        h_elu = ref.attention_entropy(
+            ref.linear_attention_weights(f_elu(q), f_elu(k), causal=True)
+        )
+        f_exp = lambda x: ref.feature_exp_t(x, 2.0)
+        h_exp = ref.attention_entropy(
+            ref.linear_attention_weights(f_exp(q), f_exp(k), causal=True)
+        )
+        assert float(h_exp) < float(h_elu)
+
+    def test_kl_zero_iff_equal(self):
+        q, k, _ = make_qkv(15, 1, 1, 16, 8, 8)
+        p = ref.softmax_attention_weights(q, k, causal=True)
+        assert abs(float(ref.attention_kl(p, p))) < 1e-5
+        q2 = q + 1.0
+        p2 = ref.softmax_attention_weights(q2, k, causal=True)
+        assert float(ref.attention_kl(p, p2)) > 1e-3
+
+    def test_monotonicity_property(self):
+        """Taylor features are monotone in q.k in the bounded regime the
+        paper identifies (q.k >= -1: d/dx [1+x+x^2/2] = 1+x). Checks the
+        Fig 3/5 diagnostic computation."""
+        d = 8
+        k1 = jax.random.normal(jax.random.PRNGKey(16), (d,))
+        nrm = float((k1 * k1).sum())
+        # scales chosen so q.k spans [-0.9, +2.0] * — inside the bounded regime
+        scales = jnp.linspace(-0.9 / nrm, 2.0 / nrm, 21)
+        q = scales[:, None] * k1[None, :]  # dot products increase along rows
+        qb = q[None, None]  # (1,1,21,d)
+        kb = k1[None, None, None, :]
+        fq = ref.feature_taylor(qb)
+        fk = ref.feature_taylor(kb)
+        sims = np.asarray(jnp.einsum("bhnp,bhmp->bhnm", fq, fk))[0, 0, :, 0]
+        assert (np.diff(sims) > -1e-5).all()

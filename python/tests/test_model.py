@@ -1,0 +1,266 @@
+"""L2 correctness: model graphs, optimizer, distillation, decode parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import configs, decode, distill, lora, train
+from compile import model as model_mod
+from compile.model import ModelConfig
+
+
+def tiny_decoder(attn="softmax", **kw):
+    base = dict(
+        name="t", kind="decoder", vocab=32, n_layers=2, heads=2,
+        d_head=8, d_model=32, max_len=32, attn=attn,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tiny_encoder(attn="softmax", **kw):
+    base = dict(
+        name="t", kind="encoder", vocab=32, n_layers=2, heads=2,
+        d_head=8, d_model=32, max_len=32, num_classes=3, attn=attn,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+class TestForwardShapes:
+    @pytest.mark.parametrize("attn", ["softmax", "elu", "hedgehog", "taylor", "cosformer"])
+    def test_decoder_logits_shape(self, attn):
+        cfg = tiny_decoder(attn)
+        params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jnp.zeros((2, 32), jnp.int32)
+        out = model_mod.decoder_logits(params, cfg, toks)
+        assert out.shape == (2, 32, 32)
+        assert np.isfinite(np.asarray(out)).all()
+
+    @pytest.mark.parametrize("attn", ["softmax", "hedgehog", "performer"])
+    def test_encoder_logits_shape(self, attn):
+        cfg = tiny_encoder(attn)
+        params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jnp.zeros((2, 32), jnp.int32)
+        out = model_mod.encoder_logits(params, cfg, toks)
+        assert out.shape == (2, 3)
+
+    def test_pair_encoder(self):
+        cfg = tiny_encoder(pair_input=True, num_classes=2)
+        params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+        t = jnp.zeros((2, 32), jnp.int32)
+        out = model_mod.encoder_logits(params, cfg, t, t)
+        assert out.shape == (2, 2)
+
+    def test_vit(self):
+        cfg = ModelConfig(
+            name="v", kind="vit", vocab=0, n_layers=1, heads=2, d_head=8,
+            d_model=32, max_len=17, num_classes=10, patch_dim=16,
+        )
+        params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+        patches = jnp.zeros((2, 16, 16))
+        assert model_mod.vit_logits(params, cfg, patches).shape == (2, 10)
+
+    @pytest.mark.parametrize("mixer", ["aft", "h3", "hyena"])
+    def test_baseline_mixers(self, mixer):
+        cfg = tiny_decoder(mixer=mixer)
+        params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+        out = model_mod.decoder_logits(params, cfg, jnp.zeros((2, 32), jnp.int32))
+        assert out.shape == (2, 32, 32)
+        assert np.isfinite(np.asarray(out)).all()
+
+    @pytest.mark.parametrize("mixer", ["aft", "h3", "hyena"])
+    def test_baseline_mixers_causal(self, mixer):
+        """Changing future tokens must not change past logits."""
+        cfg = tiny_decoder(mixer=mixer)
+        params = model_mod.init_params(jax.random.PRNGKey(1), cfg)
+        t1 = jnp.zeros((1, 32), jnp.int32)
+        t2 = t1.at[:, 20:].set(5)
+        o1 = model_mod.decoder_logits(params, cfg, t1)
+        o2 = model_mod.decoder_logits(params, cfg, t2)
+        assert_allclose(np.asarray(o1[:, :20]), np.asarray(o2[:, :20]), atol=2e-4)
+
+    @pytest.mark.parametrize("attn", ["softmax", "hedgehog", "elu"])
+    def test_decoder_causality(self, attn):
+        cfg = tiny_decoder(attn)
+        params = model_mod.init_params(jax.random.PRNGKey(2), cfg)
+        t1 = jnp.ones((1, 32), jnp.int32)
+        t2 = t1.at[:, 16:].set(7)
+        o1 = model_mod.decoder_logits(params, cfg, t1)
+        o2 = model_mod.decoder_logits(params, cfg, t2)
+        assert_allclose(np.asarray(o1[:, :16]), np.asarray(o2[:, :16]), atol=2e-4)
+
+
+class TestTraining:
+    def test_adamw_matches_reference_update(self):
+        """Hand-check one AdamW step on a scalar parameter."""
+        p = {"w": jnp.array([1.0])}
+        g = {"w": jnp.array([0.5])}
+        m = {"w": jnp.array([0.0])}
+        v = {"w": jnp.array([0.0])}
+        new_p, new_m, new_v = train.adamw_update(p, g, m, v, step=1, lr=0.1, wd=0.0)
+        # bias-corrected: mhat = g, vhat = g^2 -> update = lr * g/|g| = 0.1
+        assert_allclose(float(new_p["w"][0]), 1.0 - 0.1, atol=1e-5)
+        assert_allclose(float(new_m["w"][0]), 0.05, atol=1e-7)
+        assert_allclose(float(new_v["w"][0]), 0.00025, atol=1e-9)
+
+    def test_weight_decay_decoupled(self):
+        p = {"w": jnp.array([2.0])}
+        zero = {"w": jnp.array([0.0])}
+        new_p, _, _ = train.adamw_update(p, zero, zero, zero, step=1, lr=0.1, wd=0.01)
+        # zero grad -> pure decay: w - lr*wd*w
+        assert_allclose(float(new_p["w"][0]), 2.0 * (1.0 - 0.1 * 0.01), atol=1e-6)
+
+    @pytest.mark.parametrize("attn", ["softmax", "hedgehog"])
+    def test_train_step_reduces_loss(self, attn):
+        cfg = tiny_decoder(attn)
+        step_fn = jax.jit(train.make_train_step(cfg))
+        params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+        m, v = train.adamw_init(params)
+        step = jnp.array(0, jnp.int32)
+        toks = jnp.tile(jnp.arange(32, dtype=jnp.int32)[None] % 7, (4, 1))
+        tgts = jnp.roll(toks, -1, axis=1)
+        mask = jnp.ones((4, 32))
+        losses = []
+        for _ in range(8):
+            params, m, v, step, loss = step_fn(
+                params, m, v, step, jnp.float32(1e-2), jnp.float32(0.0), toks, tgts, mask
+            )
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]
+
+    def test_freeze_mask_paths(self):
+        grads = {"blocks": [{"mix": {"fm": {"w": jnp.ones((2,))}, "wq": jnp.ones((2,))}}]}
+        masked = train.mask_grads(grads, lambda p: "/fm/" not in f"/{p}/")
+        assert float(masked["blocks"][0]["mix"]["fm"]["w"].sum()) == 2.0
+        assert float(masked["blocks"][0]["mix"]["wq"].sum()) == 0.0
+
+
+class TestDistillation:
+    def test_distill_loss_decreases(self):
+        cfg = tiny_encoder(attn="hedgehog")
+        step_fn = jax.jit(distill.make_distill_step(cfg))
+        params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+        m, v = train.adamw_init(params)
+        step = jnp.array(0, jnp.int32)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, 32)
+        losses = []
+        for _ in range(10):
+            params, m, v, step, loss = step_fn(
+                params, m, v, step, jnp.float32(1e-2), jnp.float32(0.0), toks
+            )
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]
+
+    def test_distill_freezes_base_weights(self):
+        cfg = tiny_encoder(attn="hedgehog")
+        step_fn = jax.jit(distill.make_distill_step(cfg))
+        params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+        wq_before = np.asarray(params["blocks"][0]["mix"]["wq"]).copy()
+        fm_before = np.asarray(params["blocks"][0]["mix"]["fm"]["w"]).copy()
+        m, v = train.adamw_init(params)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, 32)
+        params, *_ = step_fn(
+            params, m, v, jnp.array(0, jnp.int32), jnp.float32(1e-2), jnp.float32(0.0), toks
+        )
+        assert_allclose(np.asarray(params["blocks"][0]["mix"]["wq"]), wq_before, atol=1e-7)
+        assert np.abs(np.asarray(params["blocks"][0]["mix"]["fm"]["w"]) - fm_before).max() > 1e-6
+
+    def test_kl_drops_with_distillation(self):
+        cfg = tiny_encoder(attn="hedgehog")
+        step_fn = jax.jit(distill.make_distill_step(cfg))
+        eval_fn = jax.jit(distill.make_distill_eval(cfg))
+        params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, 32)
+        _, kl0 = eval_fn(params, toks)
+        m, v = train.adamw_init(params)
+        step = jnp.array(0, jnp.int32)
+        for _ in range(15):
+            params, m, v, step, _ = step_fn(
+                params, m, v, step, jnp.float32(1e-2), jnp.float32(0.0), toks
+            )
+        _, kl1 = eval_fn(params, toks)
+        assert float(kl1) < float(kl0)
+
+
+class TestDecodeParity:
+    def test_recurrent_decode_matches_full_forward(self):
+        """decode_step token-by-token == decoder_logits on the same prefix."""
+        cfg = tiny_decoder(attn="hedgehog")
+        params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, 32)
+        full = model_mod.decoder_logits(params, cfg, toks)
+
+        fn, dp = decode.make_decode_step(cfg)
+        fn = jax.jit(fn)
+        L, B, H, DV = cfg.n_layers, 1, cfg.heads, cfg.d_head
+        s = jnp.zeros((L, B, H, dp, DV))
+        z = jnp.zeros((L, B, H, dp))
+        for t in range(12):
+            logits, s, z = fn(
+                params, toks[:, t], jnp.array([t], jnp.int32), s, z
+            )
+            assert_allclose(
+                np.asarray(logits[0]), np.asarray(full[0, t]), rtol=2e-3, atol=2e-3
+            )
+
+    def test_softmax_kv_decode_matches_full_forward(self):
+        cfg = tiny_decoder(attn="softmax")
+        params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 10), 0, 32)
+        full = model_mod.decoder_logits(params, cfg, toks)
+        fn = jax.jit(decode.make_decode_step_softmax(cfg, 16))
+        L, B, H, DH = cfg.n_layers, 1, cfg.heads, cfg.d_head
+        kc = jnp.zeros((L, B, H, 16, DH))
+        vc = jnp.zeros((L, B, H, 16, DH))
+        for t in range(10):
+            logits, kc, vc = fn(params, toks[:, t], jnp.array([t], jnp.int32), kc, vc)
+            assert_allclose(
+                np.asarray(logits[0]), np.asarray(full[0, t]), rtol=2e-3, atol=2e-3
+            )
+
+
+class TestLora:
+    def test_zero_lora_is_identity(self):
+        cfg = tiny_decoder(attn="softmax")
+        params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+        adapters = lora.init_lora(jax.random.PRNGKey(1), cfg, rank=4)
+        merged = lora.merge(params, adapters)
+        toks = jnp.zeros((1, 32), jnp.int32)
+        o1 = model_mod.decoder_logits(params, cfg, toks)
+        o2 = model_mod.decoder_logits(merged, cfg, toks)
+        assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+    def test_lora_train_updates_adapters_only(self):
+        cfg = tiny_decoder(attn="softmax")
+        step_fn = jax.jit(lora.make_lora_train_step(cfg, alpha=16.0, rank=4))
+        base = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+        ad = lora.init_lora(jax.random.PRNGKey(1), cfg, rank=4)
+        m, v = train.adamw_init(ad)
+        toks = jnp.ones((2, 32), jnp.int32)
+        tgts = jnp.roll(toks, -1, 1)
+        mask = jnp.ones((2, 32))
+        ad2, m, v, step, loss = step_fn(
+            base, ad, m, v, jnp.array(0, jnp.int32), jnp.float32(1e-2),
+            jnp.float32(0.0), toks, tgts, mask
+        )
+        # b matrices move away from zero
+        delta = np.abs(np.asarray(ad2[0]["wq"]["b"])).max()
+        assert delta > 0.0
+        assert np.isfinite(float(loss))
+
+
+class TestConfigs:
+    def test_all_families_well_formed(self):
+        for name, (cfg, spec) in configs.FAMILIES.items():
+            assert cfg.name == name
+            assert spec.batch_size > 0 and spec.seq_len > 0
+            if cfg.kind != "vit":
+                assert cfg.vocab >= 4
+
+    def test_glue_task_table(self):
+        assert configs.GLUE_TASKS["mnli"] == (3, False)
+        assert configs.GLUE_TASKS["stsb"] == (1, True)
+        assert len(configs.GLUE_TASKS) == 8

@@ -1,0 +1,45 @@
+//! Tiny shared bench harness (criterion is not in the offline vendor set):
+//! warmup + repeated timing with mean/min reporting.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub reps: usize,
+}
+
+/// Time `f` with one warmup call and `reps` measured calls.
+pub fn bench(name: impl Into<String>, reps: usize, mut f: impl FnMut()) -> BenchResult {
+    f(); // warmup
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64() * 1000.0);
+    }
+    let mean = times.iter().sum::<f64>() / reps as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    BenchResult { name: name.into(), mean_ms: mean, min_ms: min, reps }
+}
+
+pub fn print_table(title: &str, results: &[BenchResult]) {
+    println!("\n== bench: {title} ==");
+    let w = results.iter().map(|r| r.name.len()).max().unwrap_or(10).max(10);
+    println!("{:<w$}  {:>10}  {:>10}  reps", "case", "mean ms", "min ms");
+    for r in results {
+        println!("{:<w$}  {:>10.2}  {:>10.2}  {}", r.name, r.mean_ms, r.min_ms, r.reps);
+    }
+}
+
+/// Pick rep count so slow cases don't stall the suite.
+pub fn reps_for(expected_ms: f64) -> usize {
+    if expected_ms > 2000.0 {
+        1
+    } else if expected_ms > 200.0 {
+        3
+    } else {
+        8
+    }
+}

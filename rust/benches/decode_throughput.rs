@@ -1,0 +1,66 @@
+//! Fig 6 (inference side): per-token decode cost vs context position.
+//!
+//! The linear-attention engine carries an O(1) recurrent state, so the
+//! 200th token costs the same as the 1st. The softmax KV-cache decode
+//! attends over an ever-longer prefix. This bench drives both exported
+//! decode graphs and prints per-token time at several positions.
+
+mod common;
+
+use common::{bench, print_table};
+use hedgehog::data::Pcg32;
+use hedgehog::runtime::{ArtifactRegistry, ParamStore, Tensor};
+use hedgehog::serve::Engine;
+use hedgehog::train::session::Session;
+
+fn main() {
+    let reg = ArtifactRegistry::open("artifacts").expect("run `make artifacts`");
+    // fresh random init is fine for timing
+    let s = Session::init(&reg, "lm_hedgehog", 0).unwrap();
+    let params = s.params;
+    let softmax_params = Session::init(&reg, "lm_softmax", 0).unwrap().params;
+
+    let mut results = Vec::new();
+
+    // linear engine: time a step at position ~0 and position ~100
+    let mut engine = Engine::new(&reg, "lm_hedgehog", &params).unwrap();
+    let b = engine.batch;
+    results.push(bench("linear  pos 0..8", 8, || {
+        engine.step(&vec![1i32; b]).unwrap();
+    }));
+    for _ in 0..92 {
+        engine.step(&vec![1i32; b]).unwrap();
+    }
+    results.push(bench("linear  pos ~100", 8, || {
+        engine.step(&vec![1i32; b]).unwrap();
+    }));
+
+    // softmax KV-cache decode at early and late positions
+    let exe = reg.get("lm_softmax_decode_step_softmax").unwrap();
+    let man = exe.manifest.clone();
+    let mut run_at = |pos: i32, label: &str, results: &mut Vec<common::BenchResult>| {
+        let mut rng = Pcg32::new(1);
+        let mut inputs = Vec::new();
+        for slot in &man.inputs {
+            let t = match slot.name.as_str() {
+                "token" => Tensor::from_i32(vec![1; slot.shape[0]], &slot.shape),
+                "pos" => Tensor::from_i32(vec![pos; slot.shape[0]], &slot.shape),
+                "k_cache" | "v_cache" => Tensor::from_f32(
+                    (0..slot.len()).map(|_| rng.normal() * 0.1).collect(),
+                    &slot.shape,
+                ),
+                name => softmax_params.get(name).unwrap().clone(),
+            };
+            inputs.push(t);
+        }
+        results.push(bench(label, 8, || {
+            exe.run(&inputs).unwrap();
+        }));
+    };
+    run_at(1, "softmax pos 1", &mut results);
+    run_at(100, "softmax pos 100", &mut results);
+
+    print_table("decode: per-token cost vs position (batch 4)", &results);
+    println!("paper shape: linear flat in position; softmax cost grows with prefix");
+    let _ = ParamStore::new();
+}

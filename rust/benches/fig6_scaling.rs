@@ -1,0 +1,52 @@
+//! Fig 6 reproduction: attention-layer forward wall-clock vs sequence
+//! length for softmax (O(n^2)), Hedgehog linear (O(n)), and 2nd-degree
+//! Taylor (O(n) with a d'^2 constant). Memory column is the analytic
+//! working-set (the CPU PJRT heap is shared, so tensors are the honest
+//! proxy). Expect the paper's shape: softmax curves up quadratically,
+//! hedgehog stays near-linear, taylor is linear but offset by ~d.
+
+mod common;
+
+use common::{bench, print_table, reps_for};
+use hedgehog::data::Pcg32;
+use hedgehog::runtime::{ArtifactRegistry, Tensor};
+
+fn main() {
+    let reg = ArtifactRegistry::open("artifacts").expect("run `make artifacts`");
+    let heads = 4usize;
+    let d = 64usize;
+    let mut results = Vec::new();
+    let cases: &[(&str, &[usize])] = &[
+        ("softmax", &[256, 512, 1024, 2048, 4096]),
+        ("hedgehog", &[256, 512, 1024, 2048, 4096, 8192, 16384]),
+        ("taylor", &[256, 512, 1024, 2048]),
+    ];
+    for &(attn, lens) in cases {
+        for &n in lens {
+            let name = format!("fig6_{attn}_n{n}");
+            if !reg.contains(&name) {
+                continue;
+            }
+            let exe = reg.get(&name).unwrap();
+            let mut rng = Pcg32::new(0);
+            let mk = |rng: &mut Pcg32| {
+                Tensor::from_f32(
+                    (0..heads * n * d).map(|_| rng.normal() * 0.3).collect(),
+                    &[1, heads, n, d],
+                )
+            };
+            let inputs = vec![mk(&mut rng), mk(&mut rng), mk(&mut rng)];
+            let expected = if attn == "softmax" {
+                (n * n) as f64 / 40_000.0
+            } else {
+                n as f64 / 20.0
+            };
+            let reps = reps_for(expected);
+            results.push(bench(format!("{attn:<9} n={n:<6}"), reps, || {
+                exe.run(&inputs).unwrap();
+            }));
+        }
+    }
+    print_table("fig6: attention forward scaling (1 x 4 heads x n x 64)", &results);
+    println!("paper shape: softmax ~O(n^2); hedgehog ~O(n); taylor O(n) with large constant");
+}

@@ -1,0 +1,37 @@
+//! L1 microbench: standalone Pallas kernel artifacts (linear vs softmax
+//! attention over identical shapes), plus the host<->literal marshalling
+//! overhead that the §Perf pass targets at L3.
+
+mod common;
+
+use common::{bench, print_table};
+use hedgehog::data::Pcg32;
+use hedgehog::runtime::{ArtifactRegistry, Tensor};
+
+fn main() {
+    let reg = ArtifactRegistry::open("artifacts").expect("run `make artifacts`");
+    let mut results = Vec::new();
+
+    let shape = [1usize, 2, 128, 16];
+    let n: usize = shape.iter().product();
+    let mut rng = Pcg32::new(0);
+    let mk = |rng: &mut Pcg32| Tensor::from_f32((0..n).map(|_| rng.normal() * 0.3).collect(), &shape);
+    let inputs = vec![mk(&mut rng), mk(&mut rng), mk(&mut rng)];
+
+    for name in ["kernel_linear_attention", "kernel_softmax_attention"] {
+        let exe = reg.get(name).unwrap();
+        results.push(bench(name, 16, || {
+            exe.run(&inputs).unwrap();
+        }));
+    }
+
+    // marshalling overhead: tensor -> literal -> tensor round-trip at the
+    // size of one e2e_small parameter set step (~1.8M f32)
+    let big = Tensor::from_f32(vec![0.5f32; 1_800_000], &[1_800_000]);
+    results.push(bench("literal roundtrip 1.8M f32", 16, || {
+        let lit = big.to_literal();
+        let _ = Tensor::from_literal(&lit).unwrap();
+    }));
+
+    print_table("kernel micro + marshalling", &results);
+}

@@ -1,0 +1,53 @@
+//! Train-step latency per model family/variant — the end-to-end cost
+//! behind every table: softmax vs hedgehog (Pallas linear attention) vs
+//! the subquadratic baselines, plus per-family scaling (ar -> lm -> e2e).
+
+mod common;
+
+use common::{bench, print_table, reps_for};
+use hedgehog::coordinator::glue_runner as gr;
+use hedgehog::data::{corpus, Pcg32};
+use hedgehog::runtime::ArtifactRegistry;
+use hedgehog::train::session::Session;
+
+fn main() {
+    let reg = ArtifactRegistry::open("artifacts").expect("run `make artifacts`");
+    let mut results = Vec::new();
+
+    for (tag, desc) in [
+        ("ar_softmax", "ar  softmax"),
+        ("ar_hedgehog", "ar  hedgehog"),
+        ("ar_taylor", "ar  taylor"),
+        ("lm_softmax", "lm  softmax"),
+        ("lm_hedgehog", "lm  hedgehog"),
+        ("lm_aft", "lm  aft"),
+        ("lm_h3", "lm  h3"),
+        ("lm_hyena", "lm  hyena"),
+        ("e2e_small_hedgehog", "e2e hedgehog"),
+    ] {
+        if !reg.contains(&format!("{tag}_train_step")) {
+            continue;
+        }
+        let man = reg.manifest(&format!("{tag}_train_step")).unwrap().clone();
+        let b = man.meta_usize("batch_size").unwrap_or(8);
+        let n = man.meta_usize("seq_len").unwrap_or(64);
+        let vocab = man.meta_usize("vocab").unwrap_or(256).max(64);
+        let mut session = Session::init(&reg, tag, 0).unwrap();
+        let lang = corpus::TinyLanguage::new(vocab);
+        let mut rng = Pcg32::new(0);
+        let batch = if tag.starts_with("ar_") {
+            gr::ar_batch(&mut rng, b)
+        } else {
+            gr::lm_batch(&lang, corpus::Domain::Pretrain, &mut rng, b, n)
+        };
+        let reps = reps_for(150.0);
+        results.push(bench(
+            format!("{desc} (b{b} n{n}, {}p)", session.params.num_elements()),
+            reps,
+            || {
+                session.train_step(1e-3, 0.0, &batch).unwrap();
+            },
+        ));
+    }
+    print_table("train_step latency per variant", &results);
+}

@@ -1,0 +1,287 @@
+//! Shared machinery for the GLUE-like experiments: batch builders per
+//! family, teacher training, conversion wrappers, and task-metric
+//! evaluation via logits graphs (Matthews for CoLA, Pearson for STS-B,
+//! accuracy otherwise).
+
+use anyhow::Result;
+
+use crate::data::{ar::ArTask, corpus, glue, lra, samsum, vision, Pcg32};
+use crate::metrics;
+use crate::runtime::{ArtifactRegistry, ParamStore, Tensor};
+use crate::train::session::{run_with_params, Batch, Session};
+use crate::train::{convert, ConversionSpec};
+
+// ---------------------------------------------------------------------------
+// Batch builders (one per model family; names match manifest slots)
+// ---------------------------------------------------------------------------
+
+pub fn ar_batch(rng: &mut Pcg32, b: usize) -> Batch {
+    let task = ArTask::default_for_family();
+    let (t, g, m) = task.batch(rng, b);
+    Batch::new().with("tokens", t).with("targets", g).with("loss_mask", m)
+}
+
+pub fn glue_batch(task: glue::GlueTask, rng: &mut Pcg32, b: usize) -> Batch {
+    let (t, l) = glue::batch(task, rng, b);
+    Batch::new().with("tokens", t).with("labels", l)
+}
+
+pub fn lm_batch(lang: &corpus::TinyLanguage, domain: corpus::Domain, rng: &mut Pcg32, b: usize, n: usize) -> Batch {
+    let (t, g, m) = lang.lm_batch(rng, domain, b, n);
+    Batch::new().with("tokens", t).with("targets", g).with("loss_mask", m)
+}
+
+pub fn lra_batch(task: lra::LraTask, rng: &mut Pcg32, b: usize) -> Batch {
+    let (t, t2, l) = lra::batch(task, rng, b);
+    let mut batch = Batch::new().with("tokens", t);
+    if let Some(t2) = t2 {
+        batch = batch.with("tokens2", t2);
+    }
+    batch.with("labels", l)
+}
+
+pub fn vit_batch(rng: &mut Pcg32, b: usize) -> Batch {
+    let (p, l) = vision::vit_batch(rng, b);
+    Batch::new().with("patches", p).with("labels", l)
+}
+
+pub fn sum_batch(rng: &mut Pcg32, b: usize) -> Batch {
+    let (t, g, m, _) = samsum::batch(rng, b);
+    Batch::new().with("tokens", t).with("targets", g).with("loss_mask", m)
+}
+
+// ---------------------------------------------------------------------------
+// Teachers + conversions
+// ---------------------------------------------------------------------------
+
+/// Train a softmax teacher for a GLUE task; returns its params.
+pub fn train_glue_teacher(
+    reg: &ArtifactRegistry,
+    task: glue::GlueTask,
+    steps: usize,
+    seed: u64,
+) -> Result<ParamStore> {
+    let fam = task.head_family();
+    let tag = format!("{fam}_softmax");
+    let mut rng = Pcg32::new(seed);
+    let mut s = Session::init(reg, &tag, seed as u32)?;
+    s.run(steps, |_| 1e-3, 0.0, |_| glue_batch(task, &mut rng, 16))?;
+    Ok(s.params)
+}
+
+/// Convert a GLUE teacher into `attn` and return converted params.
+pub fn convert_glue(
+    reg: &ArtifactRegistry,
+    teacher: &ParamStore,
+    task: glue::GlueTask,
+    attn: &str,
+    distill_steps: usize,
+    finetune_steps: usize,
+    seed: u64,
+) -> Result<ParamStore> {
+    let fam = task.head_family();
+    let mut spec = ConversionSpec::new(format!("{fam}_{attn}"));
+    spec.distill_steps = distill_steps;
+    spec.finetune_steps = finetune_steps;
+    spec.finetune_lr = 1e-3;
+    spec.seed = seed as u32;
+    let mut rng_d = Pcg32::with_stream(seed, 1);
+    let mut rng_f = Pcg32::with_stream(seed, 2);
+    let conv = convert(
+        reg,
+        teacher,
+        &spec,
+        |_| {
+            // distillation uses task tokens only
+            let b = glue_batch(task, &mut rng_d, 16);
+            Batch { slots: b.slots.into_iter().filter(|(n, _)| n != "labels").collect() }
+        },
+        |_| glue_batch(task, &mut rng_f, 16),
+    )?;
+    Ok(conv.params)
+}
+
+/// Paper-style task metric from the logits graph over eval batches.
+/// Returns (metric_value, accuracy).
+pub fn glue_metric(
+    reg: &ArtifactRegistry,
+    tag: &str,
+    params: &ParamStore,
+    task: glue::GlueTask,
+    n_batches: usize,
+    seed: u64,
+) -> Result<(f32, f32)> {
+    let mut rng = Pcg32::with_stream(seed, 99);
+    let mut preds: Vec<i32> = Vec::new();
+    let mut labels_i: Vec<i32> = Vec::new();
+    let mut preds_f: Vec<f32> = Vec::new();
+    let mut labels_f: Vec<f32> = Vec::new();
+    for _ in 0..n_batches {
+        let (toks, labels) = glue::batch(task, &mut rng, 16);
+        let batch = Batch::new().with("tokens", toks);
+        let outs = run_with_params(reg, &format!("{tag}_logits"), params, &batch)?;
+        let logits = outs[0].as_f32()?;
+        let b = 16;
+        let c = task.num_classes();
+        for i in 0..b {
+            let row = &logits[i * c..(i + 1) * c];
+            if task.is_regression() {
+                preds_f.push(row[0]);
+                labels_f.push(labels.as_f32()?[i]);
+            } else {
+                let mut best = 0;
+                for j in 1..c {
+                    if row[j] > row[best] {
+                        best = j;
+                    }
+                }
+                preds.push(best as i32);
+                labels_i.push(labels.as_i32()?[i]);
+            }
+        }
+    }
+    if task.is_regression() {
+        let p = metrics::pearson(&preds_f, &labels_f);
+        Ok((100.0 * p, p))
+    } else {
+        let acc = metrics::accuracy(&preds, &labels_i);
+        let m = match task.metric_name() {
+            "matthews" => 100.0 * metrics::matthews(&preds, &labels_i),
+            _ => 100.0 * acc,
+        };
+        Ok((m, acc))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Analysis helpers
+// ---------------------------------------------------------------------------
+
+/// (teacher_entropy, student_entropy, kl) from an `attn_stats` graph.
+pub fn attn_stats(
+    reg: &ArtifactRegistry,
+    tag: &str,
+    params: &ParamStore,
+    batch: &Batch,
+) -> Result<(f32, f32, f32)> {
+    let outs = run_with_params(reg, &format!("{tag}_attn_stats"), params, batch)?;
+    Ok((outs[0].item_f32()?, outs[1].item_f32()?, outs[2].item_f32()?))
+}
+
+/// Spearman rho of (q.k dot, student attention weight) from a mono_probe.
+pub fn monotonicity(
+    reg: &ArtifactRegistry,
+    tag: &str,
+    params: &ParamStore,
+    batch: &Batch,
+) -> Result<f32> {
+    let outs = run_with_params(reg, &format!("{tag}_mono_probe"), params, batch)?;
+    let dots = outs[0].as_f32()?;
+    let student = outs[2].as_f32()?;
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for (&d, &s) in dots.iter().zip(student) {
+        if d.is_finite() {
+            xs.push(d);
+            ys.push(s);
+        }
+    }
+    Ok(metrics::spearman(&xs, &ys))
+}
+
+/// Pad/tile a trained positional embedding to a longer context (Table 5).
+pub fn extend_pos_embedding(params: &ParamStore, target_len: usize) -> Result<ParamStore> {
+    let mut out = params.clone();
+    let pos = params.get("params/pos")?;
+    let (n, d) = (pos.shape[0], pos.shape[1]);
+    if n >= target_len {
+        return Ok(out);
+    }
+    let src = pos.as_f32()?;
+    let mut data = Vec::with_capacity(target_len * d);
+    for i in 0..target_len {
+        let j = i % n; // cyclic tiling of the learned table
+        data.extend_from_slice(&src[j * d..(j + 1) * d]);
+    }
+    out.insert("params/pos", Tensor::from_f32(data, &[target_len, d]));
+    Ok(out)
+}
+
+/// Distill-only KL: run `<tag>_distill_eval` on a token batch.
+pub fn distill_kl(
+    reg: &ArtifactRegistry,
+    artifact: &str,
+    params: &ParamStore,
+    batch: &Batch,
+) -> Result<f32> {
+    let outs = run_with_params(reg, artifact, params, batch)?;
+    Ok(outs[1].item_f32()?)
+}
+
+// ---------------------------------------------------------------------------
+// Greedy generation through a full `logits` graph (summarization, Table 11)
+// ---------------------------------------------------------------------------
+
+/// Greedily extend each row from `start[i]` for up to `max_new` tokens using
+/// repeated full forwards of `<artifact>` (tokens (B, N) -> logits (B, N, V)).
+/// Rows are mutated in place; generation for a row stops at `eos`.
+pub fn generate_greedy_logits(
+    reg: &ArtifactRegistry,
+    artifact: &str,
+    params: &ParamStore,
+    tokens: &mut [Vec<i32>],
+    start: &[usize],
+    max_new: usize,
+    eos: i32,
+) -> Result<Vec<Vec<i32>>> {
+    let exe = reg.get(artifact)?;
+    let man = &exe.manifest;
+    let tok_slot = man
+        .inputs
+        .iter()
+        .find(|s| s.name == "tokens")
+        .expect("logits graph needs tokens");
+    let (b, n) = (tok_slot.shape[0], tok_slot.shape[1]);
+    assert_eq!(tokens.len(), b);
+    let vocab = man.outputs[0].shape[2];
+
+    let mut done = vec![false; b];
+    let mut generated: Vec<Vec<i32>> = vec![Vec::new(); b];
+    for step in 0..max_new {
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        let mut flat = Vec::with_capacity(b * n);
+        for row in tokens.iter() {
+            flat.extend_from_slice(&row[..n]);
+        }
+        let batch = Batch::new().with("tokens", Tensor::from_i32(flat, &[b, n]));
+        let outs = run_with_params(reg, artifact, params, &batch)?;
+        let logits = outs[0].as_f32()?;
+        for i in 0..b {
+            if done[i] {
+                continue;
+            }
+            let pos = start[i] + step;
+            if pos + 1 >= n {
+                done[i] = true;
+                continue;
+            }
+            let row = &logits[(i * n + pos) * vocab..(i * n + pos + 1) * vocab];
+            let mut best = 0;
+            for j in 1..vocab {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            let tok = best as i32;
+            if tok == eos {
+                done[i] = true;
+            } else {
+                tokens[i][pos + 1] = tok;
+                generated[i].push(tok);
+            }
+        }
+    }
+    Ok(generated)
+}

@@ -1,0 +1,9 @@
+//! Coordinator: experiment runner (one function per paper table/figure),
+//! shared experiment context, and report emission.
+
+pub mod experiments;
+pub mod glue_runner;
+pub mod report;
+
+pub use experiments::{run_experiment, Ctx, EXPERIMENTS};
+pub use report::Report;

@@ -1,0 +1,111 @@
+//! Plain-text table reports: printed to stdout and appended to
+//! `results/<id>.txt` so EXPERIMENTS.md can cite exact runs.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+/// A column-aligned table with a title and free-form notes.
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: impl Into<String>, title: impl Into<String>) -> Self {
+        Report {
+            id: id.into(),
+            title: title.into(),
+            header: Vec::new(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn header(&mut self, cols: &[&str]) -> &mut Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cols: Vec<String>) -> &mut Self {
+        self.rows.push(cols);
+        self
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) -> &mut Self {
+        self.notes.push(s.into());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i >= widths.len() {
+                    widths.push(c.len());
+                } else {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} — {} ==", self.id, self.title);
+        if !self.header.is_empty() {
+            let line: Vec<String> = self
+                .header
+                .iter()
+                .enumerate()
+                .map(|(i, h)| format!("{h:<w$}", w = widths[i]))
+                .collect();
+            let _ = writeln!(out, "{}", line.join("  "));
+            let _ = writeln!(out, "{}", "-".repeat(line.join("  ").len()));
+        }
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{c:<w$}", w = widths.get(i).copied().unwrap_or(c.len())))
+                .collect();
+            let _ = writeln!(out, "{}", line.join("  "));
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "note: {n}");
+        }
+        out
+    }
+
+    /// Print and persist under `results/`.
+    pub fn emit(&self, results_dir: &PathBuf) {
+        let text = self.render();
+        println!("{text}");
+        let _ = std::fs::create_dir_all(results_dir);
+        let path = results_dir.join(format!("{}.txt", self.id));
+        let _ = std::fs::write(path, &text);
+    }
+}
+
+pub fn f(x: f32) -> String {
+    format!("{x:.3}")
+}
+
+pub fn f1(x: f32) -> String {
+    format!("{x:.1}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut r = Report::new("t", "demo");
+        r.header(&["name", "value"]);
+        r.row(vec!["a".into(), "1.0".into()]);
+        r.row(vec!["longer".into(), "2.0".into()]);
+        let s = r.render();
+        assert!(s.contains("longer"));
+        assert!(s.lines().count() >= 4);
+    }
+}

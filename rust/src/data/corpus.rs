@@ -1,0 +1,247 @@
+//! "Tiny language" corpus — the WikiText-103 stand-in (DESIGN.md §5).
+//!
+//! A probabilistic grammar over a Zipfian vocabulary with two kinds of
+//! learnable structure:
+//!
+//!   * **local syntax**: sentences follow `Det [Adj] Noun Verb Det Noun .`
+//!     with singular/plural *agreement* between determiner, noun suffix and
+//!     verb suffix — n-gram-learnable but benefiting from attention;
+//!   * **long-range recall**: a named entity introduced at the start of a
+//!     paragraph is referenced again near the end (`Name ... REF -> Name`),
+//!     the same spiky-attention dependency the paper isolates with AR.
+//!
+//! Two distributions share the grammar but skew topic-word frequencies
+//! differently: `Domain::Pretrain` (corpus A, for pretraining) and
+//! `Domain::Transfer` (corpus B, the "new task" for pretrained-conversion,
+//! Table 10) — so zero-shot ppl on B is measurably worse than finetuned.
+
+use super::rng::{zipf_weights, Pcg32};
+use crate::runtime::Tensor;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const REF: i32 = 3; // reference marker for the recall dependency
+pub const STOP: i32 = 4; // sentence terminator '.'
+const SPECIALS: usize = 5;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Domain {
+    Pretrain,
+    Transfer,
+}
+
+/// Token-class layout carved out of a `vocab`-sized id space.
+#[derive(Debug, Clone)]
+pub struct TinyLanguage {
+    pub vocab: usize,
+    dets: (usize, usize),   // (sg, pl) determiner ids
+    adjs: Vec<usize>,
+    nouns: Vec<usize>,      // noun stem ids; +1 = plural form (consecutive)
+    verbs: Vec<usize>,      // verb stem ids; +1 = plural form
+    names: Vec<usize>,
+    topic: Vec<usize>,      // topic words whose frequency differs per domain
+    noun_w: Vec<f32>,
+    verb_w: Vec<f32>,
+}
+
+impl TinyLanguage {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab >= 64, "tiny language needs >= 64 tokens");
+        let budget = vocab - SPECIALS;
+        // fixed fractions of the id space per class
+        let n_adj = budget / 8;
+        let n_names = budget / 8;
+        let n_topic = budget / 8;
+        let n_verbs2 = budget / 4; // verb sg/pl pairs occupy this many ids
+        let n_nouns2 = budget - n_adj - n_names - n_topic - n_verbs2 - 2;
+
+        let mut next = SPECIALS;
+        fn take(next: &mut usize, n: usize) -> Vec<usize> {
+            let r: Vec<usize> = (*next..*next + n).collect();
+            *next += n;
+            r
+        }
+        let dets = (next, next + 1);
+        next += 2;
+        let adjs = take(&mut next, n_adj);
+        let nouns = take(&mut next, n_nouns2).into_iter().step_by(2).collect::<Vec<_>>();
+        let verbs = take(&mut next, n_verbs2).into_iter().step_by(2).collect::<Vec<_>>();
+        let names = take(&mut next, n_names);
+        let topic = take(&mut next, n_topic);
+        assert!(next <= vocab);
+
+        let noun_w = zipf_weights(nouns.len(), 1.1);
+        let verb_w = zipf_weights(verbs.len(), 1.1);
+        TinyLanguage { vocab, dets, adjs, nouns, verbs, names, topic, noun_w, verb_w }
+    }
+
+    fn topic_weights(&self, domain: Domain) -> Vec<f32> {
+        // Pretrain skews toward the front of the topic block, Transfer
+        // toward the back — same grammar, shifted lexical distribution.
+        let n = self.topic.len();
+        (0..n)
+            .map(|i| match domain {
+                Domain::Pretrain => 1.0 / ((i + 1) as f32).powf(1.2),
+                Domain::Transfer => 1.0 / ((n - i) as f32).powf(1.2),
+            })
+            .collect()
+    }
+
+    /// One sentence with det-noun-verb number agreement.
+    fn sentence(&self, rng: &mut Pcg32, domain: Domain, out: &mut Vec<i32>) {
+        let plural = rng.bool(0.5);
+        let det = if plural { self.dets.1 } else { self.dets.0 };
+        out.push(det as i32);
+        if rng.bool(0.4) {
+            out.push(*rng.choose(&self.adjs) as i32);
+        }
+        let noun = self.nouns[rng.weighted(&self.noun_w)];
+        out.push((noun + plural as usize) as i32);
+        let verb = self.verbs[rng.weighted(&self.verb_w)];
+        out.push((verb + plural as usize) as i32);
+        // object: topic word (domain-skewed) or another noun phrase
+        if rng.bool(0.5) {
+            let tw = self.topic_weights(domain);
+            out.push(self.topic[rng.weighted(&tw)] as i32);
+        } else {
+            let p2 = rng.bool(0.5);
+            out.push((if p2 { self.dets.1 } else { self.dets.0 }) as i32);
+            let n2 = self.nouns[rng.weighted(&self.noun_w)];
+            out.push((n2 + p2 as usize) as i32);
+        }
+        out.push(STOP);
+    }
+
+    /// A paragraph: Name intro, sentences, then `REF Name` recall at the end.
+    pub fn paragraph(&self, rng: &mut Pcg32, domain: Domain, approx_len: usize) -> Vec<i32> {
+        let mut out = vec![BOS];
+        let name = *rng.choose(&self.names) as i32;
+        out.push(name);
+        let verb = self.verbs[rng.weighted(&self.verb_w)];
+        out.push(verb as i32);
+        out.push(STOP);
+        while out.len() + 10 < approx_len {
+            self.sentence(rng, domain, &mut out);
+        }
+        out.push(REF);
+        out.push(name); // the long-range recall target
+        out.push(EOS);
+        out
+    }
+
+    /// Endless token stream of paragraphs (for LM training windows).
+    pub fn stream(&self, rng: &mut Pcg32, domain: Domain, total: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(total + 64);
+        while out.len() < total {
+            let len = 48 + rng.usize_below(32);
+            let p = self.paragraph(rng, domain, len);
+            out.extend(p);
+        }
+        out.truncate(total);
+        out
+    }
+
+    /// LM batch of contiguous windows: (tokens, targets, mask).
+    pub fn lm_batch(
+        &self,
+        rng: &mut Pcg32,
+        domain: Domain,
+        b: usize,
+        n: usize,
+    ) -> (Tensor, Tensor, Tensor) {
+        let mut toks = Vec::with_capacity(b * n);
+        let mut tgts = Vec::with_capacity(b * n);
+        for _ in 0..b {
+            let w = self.stream(rng, domain, n + 1);
+            toks.extend_from_slice(&w[..n]);
+            tgts.extend_from_slice(&w[1..n + 1]);
+        }
+        let mask = vec![1.0f32; b * n];
+        (
+            Tensor::from_i32(toks, &[b, n]),
+            Tensor::from_i32(tgts, &[b, n]),
+            Tensor::from_f32(mask, &[b, n]),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_respected() {
+        let lang = TinyLanguage::new(256);
+        let mut rng = Pcg32::new(0);
+        let s = lang.stream(&mut rng, Domain::Pretrain, 4096);
+        assert!(s.iter().all(|&t| (t as usize) < 256));
+    }
+
+    #[test]
+    fn recall_dependency_present() {
+        let lang = TinyLanguage::new(256);
+        let mut rng = Pcg32::new(1);
+        let p = lang.paragraph(&mut rng, Domain::Pretrain, 64);
+        // REF token followed by the intro name (token index 1)
+        let ref_pos = p.iter().position(|&t| t == REF).unwrap();
+        assert_eq!(p[ref_pos + 1], p[1], "REF must resolve to the intro name");
+    }
+
+    #[test]
+    fn domains_differ_in_distribution() {
+        let lang = TinyLanguage::new(256);
+        let mut ra = Pcg32::new(2);
+        let mut rb = Pcg32::new(2);
+        let a = lang.stream(&mut ra, Domain::Pretrain, 20_000);
+        let b = lang.stream(&mut rb, Domain::Transfer, 20_000);
+        // histogram over topic tokens differs
+        let lo = lang.topic[0];
+        let hi = *lang.topic.last().unwrap();
+        let count = |s: &[i32], t: usize| s.iter().filter(|&&x| x as usize == t).count();
+        assert!(count(&a, lo) > count(&b, lo));
+        assert!(count(&b, hi) > count(&a, hi));
+    }
+
+    #[test]
+    fn agreement_holds() {
+        // determiner and the following noun always agree in number
+        let lang = TinyLanguage::new(256);
+        let mut rng = Pcg32::new(3);
+        let mut out = Vec::new();
+        for _ in 0..100 {
+            lang.sentence(&mut rng, Domain::Pretrain, &mut out);
+        }
+        let (sg, pl) = lang.dets;
+        let noun_set: std::collections::HashSet<usize> = lang.nouns.iter().copied().collect();
+        for i in 0..out.len() - 1 {
+            let t = out[i] as usize;
+            if t == sg || t == pl {
+                // skip optional adjective
+                let mut j = i + 1;
+                if lang.adjs.contains(&(out[j] as usize)) {
+                    j += 1;
+                }
+                let n = out[j] as usize;
+                let stem_plural = !noun_set.contains(&n);
+                if noun_set.contains(&n) || noun_set.contains(&(n - 1)) {
+                    assert_eq!(t == pl, stem_plural, "det-noun agreement violated");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lm_batch_is_shifted() {
+        let lang = TinyLanguage::new(256);
+        let mut rng = Pcg32::new(4);
+        let (t, g, _) = lang.lm_batch(&mut rng, Domain::Pretrain, 2, 32);
+        let toks = t.as_i32().unwrap();
+        let tgts = g.as_i32().unwrap();
+        for b in 0..2 {
+            for i in 0..31 {
+                assert_eq!(toks[b * 32 + i + 1], tgts[b * 32 + i]);
+            }
+        }
+    }
+}

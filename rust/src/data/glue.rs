@@ -1,0 +1,336 @@
+//! Synthetic GLUE-like task suite (DESIGN.md §5 substitution for GLUE).
+//!
+//! Eight tasks over a shared 64-token vocabulary and 64-token sequences,
+//! each with a distinct, learnable decision structure so the conversion
+//! recovery table (paper Table 8) keeps per-task variation:
+//!
+//!   cola  — acceptability: grammar-order vs token-shuffled sentences
+//!   sst2  — sentiment: positive-lexicon vs negative-lexicon density
+//!   mrpc  — paraphrase: pair is a (synonym-rotated) copy vs unrelated
+//!   stsb  — similarity regression: target = token-overlap fraction
+//!   qqp   — duplicate questions: mrpc-like with different generator knobs
+//!   mnli  — 3-way NLI: entail (subset) / neutral / contradiction (NEG)
+//!   qnli  — answerability: query token present in the passage or not
+//!   rte   — binary NLI: entail vs not
+//!
+//! Pair tasks are encoded as `s1 SEP s2` in one sequence (one encoder
+//! family serves the whole table; see configs.py).
+
+use super::rng::Pcg32;
+use crate::runtime::Tensor;
+
+pub const PAD: i32 = 0;
+pub const SEP: i32 = 1;
+pub const NEG: i32 = 2; // negation marker (mnli/rte contradiction)
+const WORDS: std::ops::Range<i32> = 8..64; // content tokens
+const POS_LEX: std::ops::Range<i32> = 8..20; // sst2 positive lexicon
+const NEG_LEX: std::ops::Range<i32> = 20..32; // sst2 negative lexicon
+
+pub const VOCAB: usize = 64;
+pub const SEQ: usize = 64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GlueTask {
+    Cola,
+    Sst2,
+    Mrpc,
+    Stsb,
+    Qqp,
+    Mnli,
+    Qnli,
+    Rte,
+}
+
+pub const ALL_TASKS: [GlueTask; 8] = [
+    GlueTask::Cola,
+    GlueTask::Sst2,
+    GlueTask::Mrpc,
+    GlueTask::Stsb,
+    GlueTask::Qqp,
+    GlueTask::Mnli,
+    GlueTask::Qnli,
+    GlueTask::Rte,
+];
+
+impl GlueTask {
+    pub fn name(self) -> &'static str {
+        match self {
+            GlueTask::Cola => "cola",
+            GlueTask::Sst2 => "sst2",
+            GlueTask::Mrpc => "mrpc",
+            GlueTask::Stsb => "stsb",
+            GlueTask::Qqp => "qqp",
+            GlueTask::Mnli => "mnli",
+            GlueTask::Qnli => "qnli",
+            GlueTask::Rte => "rte",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        ALL_TASKS.into_iter().find(|t| t.name() == s)
+    }
+
+    /// Which exported head variant serves this task (see aot.py).
+    pub fn head_family(self) -> &'static str {
+        match self {
+            GlueTask::Mnli => "glue3",
+            GlueTask::Stsb => "gluer",
+            _ => "glue2",
+        }
+    }
+
+    pub fn is_regression(self) -> bool {
+        matches!(self, GlueTask::Stsb)
+    }
+
+    pub fn num_classes(self) -> usize {
+        match self {
+            GlueTask::Mnli => 3,
+            GlueTask::Stsb => 1,
+            _ => 2,
+        }
+    }
+
+    /// Paper-reported metric for the table row (MC for CoLA, Pearson-like
+    /// for STS-B, accuracy otherwise).
+    pub fn metric_name(self) -> &'static str {
+        match self {
+            GlueTask::Cola => "matthews",
+            GlueTask::Stsb => "pearson",
+            _ => "accuracy",
+        }
+    }
+}
+
+fn rand_word(rng: &mut Pcg32) -> i32 {
+    WORDS.start + rng.below((WORDS.end - WORDS.start) as u32) as i32
+}
+
+/// A "grammatical" toy sentence: strictly increasing token runs of length 3
+/// (an order pattern a 2-layer encoder can verify), joined by random words.
+fn grammatical_sentence(rng: &mut Pcg32, len: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(len);
+    while out.len() + 3 <= len {
+        let base = WORDS.start + rng.below((WORDS.end - WORDS.start - 2) as u32) as i32;
+        out.extend_from_slice(&[base, base + 1, base + 2]);
+    }
+    while out.len() < len {
+        out.push(rand_word(rng));
+    }
+    out
+}
+
+fn pad_to(mut v: Vec<i32>, n: usize) -> Vec<i32> {
+    v.truncate(n);
+    while v.len() < n {
+        v.push(PAD);
+    }
+    v
+}
+
+/// Generate one labeled example: (tokens[SEQ], label as f32 — integer class
+/// for classification tasks, score in [0,1] for stsb).
+pub fn sample(task: GlueTask, rng: &mut Pcg32) -> (Vec<i32>, f32) {
+    let half = SEQ / 2 - 1;
+    match task {
+        GlueTask::Cola => {
+            let mut s = grammatical_sentence(rng, SEQ - 8);
+            let label = rng.bool(0.5);
+            if !label {
+                rng.shuffle(&mut s); // destroy the order pattern
+            }
+            (pad_to(s, SEQ), label as i32 as f32)
+        }
+        GlueTask::Sst2 => {
+            let label = rng.bool(0.5);
+            let lex = if label { POS_LEX } else { NEG_LEX };
+            let s: Vec<i32> = (0..SEQ - 8)
+                .map(|_| {
+                    if rng.bool(0.6) {
+                        lex.start + rng.below((lex.end - lex.start) as u32) as i32
+                    } else {
+                        rand_word(rng)
+                    }
+                })
+                .collect();
+            (pad_to(s, SEQ), label as i32 as f32)
+        }
+        GlueTask::Mrpc | GlueTask::Qqp => {
+            let rot = if task == GlueTask::Mrpc { 1 } else { 3 };
+            let s1: Vec<i32> = (0..half).map(|_| rand_word(rng)).collect();
+            let label = rng.bool(0.5);
+            let s2: Vec<i32> = if label {
+                // paraphrase: synonym rotation (+rot mod word range), order kept
+                s1.iter()
+                    .map(|&t| {
+                        let w = t - WORDS.start;
+                        WORDS.start + (w + rot) % (WORDS.end - WORDS.start)
+                    })
+                    .collect()
+            } else {
+                (0..half).map(|_| rand_word(rng)).collect()
+            };
+            let mut toks = s1;
+            toks.push(SEP);
+            toks.extend(s2);
+            (pad_to(toks, SEQ), label as i32 as f32)
+        }
+        GlueTask::Stsb => {
+            let s1: Vec<i32> = (0..half).map(|_| rand_word(rng)).collect();
+            // copy a prefix of s1, fill the rest randomly: similarity = fraction
+            let keep = rng.usize_below(half + 1);
+            let mut s2: Vec<i32> = s1[..keep].to_vec();
+            while s2.len() < half {
+                s2.push(rand_word(rng));
+            }
+            let score = keep as f32 / half as f32;
+            let mut toks = s1;
+            toks.push(SEP);
+            toks.extend(s2);
+            (pad_to(toks, SEQ), score)
+        }
+        GlueTask::Mnli => {
+            let premise: Vec<i32> = (0..half).map(|_| rand_word(rng)).collect();
+            let class = rng.below(3) as i32;
+            let hyp: Vec<i32> = match class {
+                0 => premise[..half / 2].to_vec(), // entailment: subset
+                1 => (0..half / 2).map(|_| rand_word(rng)).collect(), // neutral
+                _ => {
+                    // contradiction: subset prefixed with NEG
+                    let mut h = vec![NEG];
+                    h.extend_from_slice(&premise[..half / 2 - 1]);
+                    h
+                }
+            };
+            let mut toks = premise;
+            toks.push(SEP);
+            toks.extend(hyp);
+            (pad_to(toks, SEQ), class as f32)
+        }
+        GlueTask::Qnli => {
+            let passage: Vec<i32> = (0..half).map(|_| rand_word(rng)).collect();
+            let label = rng.bool(0.5);
+            let query = if label {
+                passage[rng.usize_below(half)]
+            } else {
+                // a word guaranteed absent
+                loop {
+                    let w = rand_word(rng);
+                    if !passage.contains(&w) {
+                        break w;
+                    }
+                }
+            };
+            let mut toks = vec![query, SEP];
+            toks.extend(passage);
+            (pad_to(toks, SEQ), label as i32 as f32)
+        }
+        GlueTask::Rte => {
+            let premise: Vec<i32> = (0..half).map(|_| rand_word(rng)).collect();
+            let label = rng.bool(0.5);
+            let hyp: Vec<i32> = if label {
+                premise[..half / 2].to_vec()
+            } else {
+                let mut h = vec![NEG];
+                h.extend_from_slice(&premise[..half / 2 - 1]);
+                h
+            };
+            let mut toks = premise;
+            toks.push(SEP);
+            toks.extend(hyp);
+            (pad_to(toks, SEQ), label as i32 as f32)
+        }
+    }
+}
+
+/// Batch as model tensors: (tokens, labels). Labels are i32 classes or f32
+/// scores depending on the task head.
+pub fn batch(task: GlueTask, rng: &mut Pcg32, b: usize) -> (Tensor, Tensor) {
+    let mut toks = Vec::with_capacity(b * SEQ);
+    let mut labels_f = Vec::with_capacity(b);
+    for _ in 0..b {
+        let (t, l) = sample(task, rng);
+        toks.extend(t);
+        labels_f.push(l);
+    }
+    let tokens = Tensor::from_i32(toks, &[b, SEQ]);
+    let labels = if task.is_regression() {
+        Tensor::from_f32(labels_f, &[b])
+    } else {
+        Tensor::from_i32(labels_f.iter().map(|&x| x as i32).collect(), &[b])
+    };
+    (tokens, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_valid_tokens() {
+        let mut rng = Pcg32::new(0);
+        for task in ALL_TASKS {
+            for _ in 0..20 {
+                let (t, l) = sample(task, &mut rng);
+                assert_eq!(t.len(), SEQ);
+                assert!(t.iter().all(|&x| (x as usize) < VOCAB), "{task:?}");
+                if task.is_regression() {
+                    assert!((0.0..=1.0).contains(&l));
+                } else {
+                    assert!(l >= 0.0 && l < task.num_classes() as f32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let mut rng = Pcg32::new(1);
+        for task in [GlueTask::Cola, GlueTask::Sst2, GlueTask::Qnli] {
+            let mut pos = 0;
+            for _ in 0..200 {
+                let (_, l) = sample(task, &mut rng);
+                pos += (l > 0.5) as usize;
+            }
+            assert!((60..140).contains(&pos), "{task:?} pos={pos}");
+        }
+    }
+
+    #[test]
+    fn qnli_query_presence_matches_label() {
+        let mut rng = Pcg32::new(2);
+        for _ in 0..100 {
+            let (t, l) = sample(GlueTask::Qnli, &mut rng);
+            let query = t[0];
+            let present = t[2..].contains(&query);
+            assert_eq!(present, l > 0.5);
+        }
+    }
+
+    #[test]
+    fn mnli_three_classes_seen() {
+        let mut rng = Pcg32::new(3);
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            let (_, l) = sample(GlueTask::Mnli, &mut rng);
+            seen[l as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn batch_label_dtype_by_task() {
+        let mut rng = Pcg32::new(4);
+        let (_, l) = batch(GlueTask::Stsb, &mut rng, 4);
+        assert!(l.as_f32().is_ok());
+        let (_, l) = batch(GlueTask::Cola, &mut rng, 4);
+        assert!(l.as_i32().is_ok());
+    }
+
+    #[test]
+    fn head_family_mapping() {
+        assert_eq!(GlueTask::Mnli.head_family(), "glue3");
+        assert_eq!(GlueTask::Stsb.head_family(), "gluer");
+        assert_eq!(GlueTask::Cola.head_family(), "glue2");
+    }
+}

@@ -1,0 +1,12 @@
+//! Synthetic data substrates (DESIGN.md §5): every corpus the paper's
+//! evaluation needs, generated deterministically in-process.
+
+pub mod ar;
+pub mod corpus;
+pub mod glue;
+pub mod lra;
+pub mod rng;
+pub mod samsum;
+pub mod vision;
+
+pub use rng::Pcg32;

@@ -1,0 +1,11 @@
+//! Hedgehog: expressive linear attention with softmax mimicry —
+//! full-system reproduction (Zhang et al., 2024) as a three-layer
+//! Rust + JAX + Pallas stack. See DESIGN.md for the architecture and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod runtime;
+pub mod serve;
+pub mod train;

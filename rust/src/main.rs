@@ -1,0 +1,135 @@
+//! Hedgehog coordinator CLI.
+//!
+//! Subcommands:
+//!   list                         — artifacts + experiments available
+//!   expt <id> [--scale S]        — regenerate a paper table/figure (DESIGN.md §3)
+//!   expt all [--scale S]         — the full grid
+//!   train <tag> [--steps N]      — train any exported family variant
+//!   serve                        — batched decode demo
+//!
+//! Global flags: --artifacts DIR (default ./artifacts), --seed N,
+//! --results DIR (default ./results).
+
+use anyhow::{bail, Context, Result};
+use hedgehog::coordinator::{run_experiment, Ctx, EXPERIMENTS};
+use hedgehog::runtime::ArtifactRegistry;
+
+struct Args {
+    cmd: String,
+    positional: Vec<String>,
+    artifacts: String,
+    results: String,
+    scale: f32,
+    seed: u64,
+    steps: usize,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut args = Args {
+        cmd: String::new(),
+        positional: Vec::new(),
+        artifacts: "artifacts".into(),
+        results: "results".into(),
+        scale: 1.0,
+        seed: 0,
+        steps: 200,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--artifacts" => args.artifacts = it.next().context("--artifacts DIR")?,
+            "--results" => args.results = it.next().context("--results DIR")?,
+            "--scale" => args.scale = it.next().context("--scale S")?.parse()?,
+            "--seed" => args.seed = it.next().context("--seed N")?.parse()?,
+            "--steps" => args.steps = it.next().context("--steps N")?.parse()?,
+            _ if args.cmd.is_empty() => args.cmd = a,
+            _ => args.positional.push(a),
+        }
+    }
+    Ok(args)
+}
+
+fn main() -> Result<()> {
+    let args = parse_args()?;
+    match args.cmd.as_str() {
+        "" | "help" => {
+            eprintln!("usage: hedgehog <list|expt <id>|train <tag>|serve> [flags]");
+            eprintln!("experiments:");
+            for (id, desc) in EXPERIMENTS {
+                eprintln!("  {id:<6} {desc}");
+            }
+            Ok(())
+        }
+        "list" => {
+            let reg = ArtifactRegistry::open(&args.artifacts)?;
+            println!("artifacts ({}):", reg.names().len());
+            for n in reg.names() {
+                println!("  {n}");
+            }
+            println!("\nexperiments:");
+            for (id, desc) in EXPERIMENTS {
+                println!("  {id:<6} {desc}");
+            }
+            Ok(())
+        }
+        "expt" => {
+            let id = args.positional.first().context("expt <id>")?.clone();
+            let ctx = Ctx {
+                reg: ArtifactRegistry::open(&args.artifacts)?,
+                scale: args.scale,
+                results_dir: args.results.clone().into(),
+                seed: args.seed,
+            };
+            let t0 = std::time::Instant::now();
+            run_experiment(&ctx, &id)?;
+            eprintln!(
+                "[{}] done in {:.1}s (compile {:.1}s)",
+                id,
+                t0.elapsed().as_secs_f64(),
+                ctx.reg.compile_seconds.borrow()
+            );
+            Ok(())
+        }
+        "train" => {
+            use hedgehog::coordinator::glue_runner as gr;
+            use hedgehog::data::{corpus, Pcg32};
+            use hedgehog::train::Session;
+            let tag = args.positional.first().context("train <tag>")?.clone();
+            let reg = ArtifactRegistry::open(&args.artifacts)?;
+            let man = reg.manifest(&format!("{tag}_train_step"))?.clone();
+            let vocab = man.meta_usize("vocab").unwrap_or(256);
+            let b = man.meta_usize("batch_size").unwrap_or(8);
+            let n = man.meta_usize("seq_len").unwrap_or(128);
+            let lang = corpus::TinyLanguage::new(vocab.max(64));
+            let mut rng = Pcg32::new(args.seed);
+            let mut s = Session::init(&reg, &tag, args.seed as u32)?;
+            println!(
+                "training {tag}: {} params, {} steps, batch {b} x {n}",
+                s.params.num_elements(),
+                args.steps
+            );
+            for i in 0..args.steps {
+                let batch = gr::lm_batch(&lang, corpus::Domain::Pretrain, &mut rng, b, n);
+                let loss = s.train_step(6e-4, 0.01, &batch)?;
+                if i % 10 == 0 || i + 1 == args.steps {
+                    println!("step {i:>5}  loss {loss:.4}  ppl {:.2}", loss.exp());
+                }
+            }
+            let ckpt = format!("results/{tag}.ckpt");
+            std::fs::create_dir_all("results").ok();
+            s.params.save(&ckpt)?;
+            println!("saved {ckpt}");
+            Ok(())
+        }
+        "serve" => {
+            let ctx = Ctx {
+                reg: ArtifactRegistry::open(&args.artifacts)?,
+                scale: args.scale,
+                results_dir: args.results.clone().into(),
+                seed: args.seed,
+            };
+            run_experiment(&ctx, "serve")
+        }
+        other => bail!("unknown command {other:?}; try `help`"),
+    }
+}

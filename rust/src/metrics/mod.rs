@@ -1,0 +1,313 @@
+//! Evaluation metrics for every table in the paper: perplexity, accuracy,
+//! Matthews correlation (CoLA), Pearson (STS-B), Spearman rho
+//! (monotonicity, Fig 3), ROUGE-1/2/L (SAMSum, Table 11), plus attention
+//! entropy/KL helpers mirroring the L2 analysis graphs.
+
+/// Perplexity from a mean token NLL (nats).
+pub fn perplexity(mean_nll: f32) -> f32 {
+    mean_nll.exp()
+}
+
+/// Binary/multiclass accuracy over (pred, label) pairs.
+pub fn accuracy(preds: &[i32], labels: &[i32]) -> f32 {
+    assert_eq!(preds.len(), labels.len());
+    if preds.is_empty() {
+        return 0.0;
+    }
+    let hits = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+    hits as f32 / preds.len() as f32
+}
+
+/// Matthews correlation coefficient for binary labels in {0, 1}.
+pub fn matthews(preds: &[i32], labels: &[i32]) -> f32 {
+    let (mut tp, mut tn, mut fp, mut fne) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &l) in preds.iter().zip(labels) {
+        match (p, l) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fne += 1.0,
+            _ => {}
+        }
+    }
+    let denom = ((tp + fp) * (tp + fne) * (tn + fp) * (tn + fne)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        ((tp * tn - fp * fne) / denom) as f32
+    }
+}
+
+/// Pearson correlation between two float series.
+pub fn pearson(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = x.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let my = y.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&a, &b) in x.iter().zip(y) {
+        let dx = a as f64 - mx;
+        let dy = b as f64 - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        0.0
+    } else {
+        (sxy / (sxx * syy).sqrt()) as f32
+    }
+}
+
+/// Ranks with average tie handling.
+fn ranks(x: &[f32]) -> Vec<f32> {
+    let mut idx: Vec<usize> = (0..x.len()).collect();
+    idx.sort_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut out = vec![0.0f32; x.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && x[idx[j + 1]] == x[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f32 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            out[k] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Spearman rank correlation — the monotonicity diagnostic for Fig 3:
+/// rho(q.k dot products, attention weights) ~ 1 for softmax/Hedgehog.
+pub fn spearman(x: &[f32], y: &[f32]) -> f32 {
+    pearson(&ranks(x), &ranks(y))
+}
+
+// ---------------------------------------------------------------------------
+// ROUGE over token sequences (Table 11)
+// ---------------------------------------------------------------------------
+
+fn ngram_counts(seq: &[i32], n: usize) -> std::collections::HashMap<&[i32], usize> {
+    let mut m = std::collections::HashMap::new();
+    if seq.len() >= n {
+        for w in seq.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// ROUGE-N F1 between candidate and reference token sequences.
+pub fn rouge_n(cand: &[i32], reference: &[i32], n: usize) -> f32 {
+    let c = ngram_counts(cand, n);
+    let r = ngram_counts(reference, n);
+    let overlap: usize = r
+        .iter()
+        .map(|(g, &rc)| rc.min(c.get(g).copied().unwrap_or(0)))
+        .sum();
+    let c_total: usize = c.values().sum();
+    let r_total: usize = r.values().sum();
+    if c_total == 0 || r_total == 0 {
+        return 0.0;
+    }
+    let p = overlap as f32 / c_total as f32;
+    let rec = overlap as f32 / r_total as f32;
+    if p + rec == 0.0 {
+        0.0
+    } else {
+        2.0 * p * rec / (p + rec)
+    }
+}
+
+/// Longest common subsequence length (O(nm) DP).
+fn lcs(a: &[i32], b: &[i32]) -> usize {
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for &x in a {
+        for (j, &y) in b.iter().enumerate() {
+            cur[j + 1] = if x == y { prev[j] + 1 } else { cur[j].max(prev[j + 1]) };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// ROUGE-L F1.
+pub fn rouge_l(cand: &[i32], reference: &[i32]) -> f32 {
+    if cand.is_empty() || reference.is_empty() {
+        return 0.0;
+    }
+    let l = lcs(cand, reference) as f32;
+    let p = l / cand.len() as f32;
+    let r = l / reference.len() as f32;
+    if p + r == 0.0 {
+        0.0
+    } else {
+        2.0 * p * r / (p + r)
+    }
+}
+
+/// (ROUGE-1, ROUGE-2, ROUGE-L), each scaled to the paper's 0-100 range.
+pub fn rouge_scores(cand: &[i32], reference: &[i32]) -> (f32, f32, f32) {
+    (
+        100.0 * rouge_n(cand, reference, 1),
+        100.0 * rouge_n(cand, reference, 2),
+        100.0 * rouge_l(cand, reference),
+    )
+}
+
+/// Shannon entropy (nats) of a normalized distribution row.
+pub fn entropy(p: &[f32]) -> f32 {
+    -p.iter().filter(|&&x| x > 0.0).map(|&x| x * x.ln()).sum::<f32>()
+}
+
+/// KL(p || q) with epsilon guard — matches the L2 analysis graphs.
+pub fn kl_div(p: &[f32], q: &[f32]) -> f32 {
+    const EPS: f32 = 1e-6;
+    p.iter()
+        .zip(q)
+        .map(|(&a, &b)| a * ((a + EPS).ln() - (b + EPS).ln()))
+        .sum()
+}
+
+/// Running mean/min/max accumulator used by benches and the trainer log.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    pub n: usize,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.sum += x;
+        self.n += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+    }
+
+    #[test]
+    fn matthews_perfect_and_inverse() {
+        let l = [0, 1, 0, 1, 1, 0];
+        assert!((matthews(&l, &l) - 1.0).abs() < 1e-6);
+        let inv: Vec<i32> = l.iter().map(|&x| 1 - x).collect();
+        assert!((matthews(&inv, &l) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matthews_bounded() {
+        let p = [1, 1, 0, 0, 1];
+        let l = [1, 0, 0, 1, 1];
+        let m = matthews(&p, &l);
+        assert!((-1.0..=1.0).contains(&m));
+    }
+
+    #[test]
+    fn pearson_linear() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-6);
+        let yneg = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spearman_monotone_nonlinear() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y = [1.0, 8.0, 27.0, 64.0, 125.0]; // x^3: nonlinear but monotone
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let x = [1.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 1.0, 2.0, 3.0];
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rouge_identical_is_100() {
+        let s = [3, 4, 5, 6, 7];
+        let (r1, r2, rl) = rouge_scores(&s, &s);
+        assert!((r1 - 100.0).abs() < 1e-4);
+        assert!((r2 - 100.0).abs() < 1e-4);
+        assert!((rl - 100.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rouge_disjoint_is_0() {
+        let (r1, r2, rl) = rouge_scores(&[1, 2, 3], &[4, 5, 6]);
+        assert_eq!((r1, r2, rl), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn rouge_l_subsequence() {
+        // cand is a subsequence of ref with gaps — LCS catches it, 2-gram not
+        let cand = [1, 3, 5];
+        let reference = [1, 2, 3, 4, 5];
+        assert!(rouge_l(&cand, &reference) > 0.7);
+        assert_eq!(rouge_n(&cand, &reference, 2), 0.0);
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        assert!(entropy(&[1.0, 0.0, 0.0]) < 1e-6);
+        let u = [0.25f32; 4];
+        assert!((entropy(&u) - (4f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn kl_zero_iff_equal() {
+        let p = [0.5, 0.3, 0.2];
+        assert!(kl_div(&p, &p).abs() < 1e-5);
+        assert!(kl_div(&p, &[0.2, 0.3, 0.5]) > 0.01);
+    }
+
+    #[test]
+    fn perplexity_exp() {
+        assert!((perplexity(0.0) - 1.0).abs() < 1e-6);
+        assert!((perplexity(2.0) - 2f32.exp()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn stats_accumulator() {
+        let mut s = Stats::default();
+        for x in [1.0, 2.0, 3.0] {
+            s.push(x);
+        }
+        assert_eq!(s.mean(), 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! ArtifactRegistry: load, compile (once), and execute AOT artifacts.
+//!
+//! `make artifacts` populates `artifacts/` with `<name>.hlo.txt` +
+//! `<name>.json` pairs. The registry scans the directory, parses manifests
+//! eagerly (cheap), and compiles HLO modules lazily on first use, caching
+//! the `PjRtLoadedExecutable` for the life of the process — compilation is
+//! the expensive step and every training loop reuses the same executable.
+//!
+//! Executables are invoked with host `Tensor`s; outputs are decomposed from
+//! the return tuple back into `Tensor`s, dtype-checked against the
+//! manifest. All graphs are lowered with `return_tuple=True` on the Python
+//! side, so the result is always a single tuple literal.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor::Tensor;
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Run the artifact on host tensors; returns outputs in manifest order.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Borrowed-input variant: the §Perf L3 hot path. Avoids cloning every
+    /// parameter tensor per step (the training loop feeds the same params
+    /// back each iteration; only the literal conversion copy remains).
+    pub fn run_refs(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.check_inputs(inputs)?;
+        let literals: Vec<xla::Literal> = inputs.iter().map(|t| t.to_literal()).collect();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.manifest.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {}: {e:?}", self.manifest.name))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", self.manifest.name))?;
+        if parts.len() != self.manifest.outputs.len() {
+            bail!(
+                "artifact {}: manifest declares {} outputs, got {}",
+                self.manifest.name,
+                self.manifest.outputs.len(),
+                parts.len()
+            );
+        }
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    fn check_inputs(&self, inputs: &[&Tensor]) -> Result<()> {
+        if inputs.len() != self.manifest.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                self.manifest.name,
+                self.manifest.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, slot) in inputs.iter().zip(&self.manifest.inputs) {
+            if t.shape != slot.shape || t.dtype() != slot.dtype {
+                bail!(
+                    "artifact {} input {:?}: expected {:?}/{}, got {:?}/{}",
+                    self.manifest.name,
+                    slot.name,
+                    slot.shape,
+                    slot.dtype.name(),
+                    t.shape,
+                    t.dtype().name()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Directory of artifacts with a compile-once executable cache.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    manifests: HashMap<String, Manifest>,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// Cumulative compile time, for §Perf accounting.
+    pub compile_seconds: RefCell<f64>,
+}
+
+impl ArtifactRegistry {
+    /// Scan `dir` for `<name>.json` manifests and create a CPU PJRT client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut manifests = HashMap::new();
+        for entry in std::fs::read_dir(&dir)
+            .with_context(|| format!("artifacts dir {} (run `make artifacts`)", dir.display()))?
+        {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("json") {
+                let m = Manifest::load(&path)?;
+                manifests.insert(m.name.clone(), m);
+            }
+        }
+        if manifests.is_empty() {
+            bail!("no artifacts found in {} — run `make artifacts`", dir.display());
+        }
+        Ok(ArtifactRegistry {
+            dir,
+            client,
+            manifests,
+            cache: RefCell::new(HashMap::new()),
+            compile_seconds: RefCell::new(0.0),
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.manifests.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.manifests.contains_key(name)
+    }
+
+    pub fn manifest(&self, name: &str) -> Result<&Manifest> {
+        self.manifests
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?} (run `make artifacts`?)"))
+    }
+
+    /// Get (compiling on first use) the executable for `name`.
+    pub fn get(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let manifest = self.manifest(name)?.clone();
+        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        *self.compile_seconds.borrow_mut() += dt;
+        let executable = Rc::new(Executable { manifest, exe });
+        self.cache.borrow_mut().insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    /// Convenience: compile + run in one call.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.get(name)?.run(inputs)
+    }
+}

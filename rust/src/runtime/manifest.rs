@@ -1,0 +1,181 @@
+//! Artifact manifests: the typed contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! Each `artifacts/<name>.json` describes the HLO module next to it: the
+//! ordered, named inputs and outputs (shape + dtype) plus free-form
+//! experiment metadata. Parameter leaves are named by their jax tree path
+//! (`params/blocks/0/mix/wq`), which is how `ParamStore` moves parameter
+//! sets between graphs and model variants.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::json::Json;
+use super::tensor::DType;
+
+/// One named input or output slot of an artifact.
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl Slot {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Parsed manifest for one artifact.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub inputs: Vec<Slot>,
+    pub outputs: Vec<Slot>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+fn parse_slot(j: &Json) -> Result<Slot> {
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("slot missing name"))?
+        .to_string();
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("slot {name} missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in {name}")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = DType::parse(
+        j.get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("slot {name} missing dtype"))?,
+    )?;
+    Ok(Slot { name, shape, dtype })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing name"))?
+            .to_string();
+        let inputs = j
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing inputs"))?
+            .iter()
+            .map(parse_slot)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = j
+            .get("outputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing outputs"))?
+            .iter()
+            .map(parse_slot)
+            .collect::<Result<Vec<_>>>()?;
+        let meta = match j.get("meta") {
+            Some(Json::Obj(m)) => m.clone(),
+            _ => BTreeMap::new(),
+        };
+        Ok(Manifest { name, inputs, outputs, meta })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Manifest::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Indices of inputs whose name starts with `prefix/`.
+    pub fn input_range(&self, prefix: &str) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.name == prefix || s.name.starts_with(&format!("{prefix}/")))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Indices of outputs whose name starts with `prefix/`.
+    pub fn output_range(&self, prefix: &str) -> Vec<usize> {
+        self.outputs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.name == prefix || s.name.starts_with(&format!("{prefix}/")))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("artifact {} has no input {name:?}", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("artifact {} has no output {name:?}", self.name))
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(Json::as_str)
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(Json::as_usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "demo_train_step",
+      "inputs": [
+        {"name": "params/emb", "shape": [8, 4], "dtype": "f32"},
+        {"name": "params/head", "shape": [4, 8], "dtype": "f32"},
+        {"name": "step", "shape": [], "dtype": "i32"},
+        {"name": "tokens", "shape": [2, 16], "dtype": "i32"}
+      ],
+      "outputs": [
+        {"name": "params/emb", "shape": [8, 4], "dtype": "f32"},
+        {"name": "loss", "shape": [], "dtype": "f32"}
+      ],
+      "meta": {"family": "demo", "graph": "train_step", "seq_len": 16}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "demo_train_step");
+        assert_eq!(m.inputs.len(), 4);
+        assert_eq!(m.inputs[0].shape, vec![8, 4]);
+        assert_eq!(m.outputs[1].name, "loss");
+        assert_eq!(m.meta_str("graph"), Some("train_step"));
+        assert_eq!(m.meta_usize("seq_len"), Some(16));
+    }
+
+    #[test]
+    fn ranges_by_prefix() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.input_range("params"), vec![0, 1]);
+        assert_eq!(m.input_index("tokens").unwrap(), 3);
+        assert!(m.input_index("nope").is_err());
+    }
+}

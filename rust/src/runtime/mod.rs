@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT artifacts (HLO text + manifest), compile once,
+//! execute from the hot path. See DESIGN.md §2 (L3) and §4 (interchange).
+
+pub mod artifact;
+pub mod json;
+pub mod manifest;
+pub mod params;
+pub mod tensor;
+
+pub use artifact::{ArtifactRegistry, Executable};
+pub use manifest::{Manifest, Slot};
+pub use params::ParamStore;
+pub use tensor::{DType, Tensor, TensorData};

@@ -1,0 +1,267 @@
+//! ParamStore: named parameter sets flowing between artifacts.
+//!
+//! Graphs exchange parameters as flat ordered lists whose names are jax
+//! tree paths (from the manifest). A `ParamStore` is the host-side home of
+//! one such set: it can be
+//!   * gathered into an input vector for any artifact (by name),
+//!   * scattered back from an artifact's outputs,
+//!   * merged across model variants (conversion: a hedgehog model shares
+//!     every leaf with its softmax teacher except the inserted `fm` maps),
+//!   * checkpointed to disk in a simple length-prefixed binary format.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{Manifest, Slot};
+use super::tensor::{DType, Tensor, TensorData};
+
+/// Named tensors, ordered by name (BTreeMap keeps ordering deterministic).
+#[derive(Debug, Clone, Default)]
+pub struct ParamStore {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from parallel slots + tensors (e.g. an init graph's outputs).
+    pub fn from_outputs(slots: &[Slot], tensors: Vec<Tensor>) -> Self {
+        let mut map = BTreeMap::new();
+        for (slot, t) in slots.iter().zip(tensors) {
+            map.insert(slot.name.clone(), t);
+        }
+        ParamStore { tensors: map }
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.tensors.insert(name.into(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("missing param {name:?}"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total element count (the model's parameter count when the store
+    /// holds exactly the `params/` leaves).
+    pub fn num_elements(&self) -> usize {
+        self.tensors.values().map(Tensor::len).sum()
+    }
+
+    /// Gather tensors matching the manifest's inputs at `indices`, in order.
+    pub fn gather(&self, manifest: &Manifest, indices: &[usize]) -> Result<Vec<Tensor>> {
+        indices
+            .iter()
+            .map(|&i| {
+                let slot = &manifest.inputs[i];
+                let t = self.get(&slot.name)?;
+                if t.shape != slot.shape {
+                    bail!(
+                        "param {:?}: shape {:?} != manifest {:?}",
+                        slot.name, t.shape, slot.shape
+                    );
+                }
+                Ok(t.clone())
+            })
+            .collect()
+    }
+
+    /// Scatter artifact outputs at `indices` back into this store, renaming
+    /// by stripping/replacing prefixes is the caller's job — names are taken
+    /// from the manifest's output slots verbatim.
+    pub fn scatter(&mut self, manifest: &Manifest, indices: &[usize], outputs: &[Tensor]) {
+        for &i in indices {
+            self.tensors.insert(manifest.outputs[i].name.clone(), outputs[i].clone());
+        }
+    }
+
+    /// Copy every leaf whose name exists in both stores from `other`,
+    /// returning how many matched. Used for conversion: initialize the
+    /// converted model, then overwrite shared weights from the teacher.
+    pub fn merge_from(&mut self, other: &ParamStore) -> usize {
+        let mut n = 0;
+        for (name, t) in &other.tensors {
+            if let Some(slot) = self.tensors.get_mut(name) {
+                if slot.shape == t.shape && slot.dtype() == t.dtype() {
+                    *slot = t.clone();
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Sub-store of leaves under `prefix/`, with the prefix stripped.
+    pub fn strip_prefix(&self, prefix: &str) -> ParamStore {
+        let pre = format!("{prefix}/");
+        let mut out = ParamStore::new();
+        for (name, t) in &self.tensors {
+            if let Some(rest) = name.strip_prefix(&pre) {
+                out.insert(rest.to_string(), t.clone());
+            }
+        }
+        out
+    }
+
+    /// New store with every name prefixed by `prefix/`.
+    pub fn with_prefix(&self, prefix: &str) -> ParamStore {
+        let mut out = ParamStore::new();
+        for (name, t) in &self.tensors {
+            out.insert(format!("{prefix}/{name}"), t.clone());
+        }
+        out
+    }
+
+    // -- checkpointing --------------------------------------------------
+
+    const MAGIC: &'static [u8; 8] = b"HHCKPT01";
+
+    /// Save to a simple binary format: magic, count, then per tensor:
+    /// name-len/name, dtype byte, rank, dims (u64 LE), raw data.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        f.write_all(Self::MAGIC)?;
+        f.write_all(&(self.tensors.len() as u64).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            f.write_all(&(name.len() as u64).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            let dt = match t.dtype() {
+                DType::F32 => 0u8,
+                DType::I32 => 1,
+                DType::U32 => 2,
+            };
+            f.write_all(&[dt])?;
+            f.write_all(&(t.shape.len() as u64).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            match &t.data {
+                TensorData::F32(v) => write_slice(&mut f, v)?,
+                TensorData::I32(v) => write_slice(&mut f, v)?,
+                TensorData::U32(v) => write_slice(&mut f, v)?,
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<ParamStore> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {}", path.as_ref().display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("bad checkpoint magic in {}", path.as_ref().display());
+        }
+        let count = read_u64(&mut f)? as usize;
+        let mut store = ParamStore::new();
+        for _ in 0..count {
+            let name_len = read_u64(&mut f)? as usize;
+            let mut name_bytes = vec![0u8; name_len];
+            f.read_exact(&mut name_bytes)?;
+            let name = String::from_utf8(name_bytes)?;
+            let mut dt = [0u8; 1];
+            f.read_exact(&mut dt)?;
+            let rank = read_u64(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut raw = vec![0u8; n * 4];
+            f.read_exact(&mut raw)?;
+            let t = match dt[0] {
+                0 => Tensor::from_f32(cast_vec::<f32>(&raw), &shape),
+                1 => Tensor::from_i32(cast_vec::<i32>(&raw), &shape),
+                2 => Tensor::from_u32(cast_vec::<u32>(&raw), &shape),
+                other => bail!("bad dtype byte {other}"),
+            };
+            store.insert(name, t);
+        }
+        Ok(store)
+    }
+}
+
+fn write_slice<T>(f: &mut impl Write, v: &[T]) -> Result<()> {
+    let bytes =
+        unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) };
+    f.write_all(bytes)?;
+    Ok(())
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn cast_vec<T: Copy>(raw: &[u8]) -> Vec<T> {
+    let n = raw.len() / std::mem::size_of::<T>();
+    let mut out = Vec::with_capacity(n);
+    unsafe {
+        out.set_len(n);
+        std::ptr::copy_nonoverlapping(raw.as_ptr(), out.as_mut_ptr() as *mut u8, raw.len());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ParamStore {
+        let mut s = ParamStore::new();
+        s.insert("params/emb", Tensor::from_f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]));
+        s.insert("params/head", Tensor::from_i32(vec![7, 8], &[2]));
+        s
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let s = sample();
+        let dir = std::env::temp_dir().join("hh_ckpt_test.bin");
+        s.save(&dir).unwrap();
+        let back = ParamStore::load(&dir).unwrap();
+        assert_eq!(s.tensors, back.tensors);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn merge_matches_by_name_and_shape() {
+        let teacher = sample();
+        let mut student = ParamStore::new();
+        student.insert("params/emb", Tensor::zeros(DType::F32, &[2, 2]));
+        student.insert("params/fm", Tensor::zeros(DType::F32, &[2, 2]));
+        let n = student.merge_from(&teacher);
+        assert_eq!(n, 1);
+        assert_eq!(student.get("params/emb").unwrap().as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        // fm untouched
+        assert_eq!(student.get("params/fm").unwrap().as_f32().unwrap(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn prefix_ops() {
+        let s = sample();
+        let stripped = s.strip_prefix("params");
+        assert!(stripped.tensors.contains_key("emb"));
+        let re = stripped.with_prefix("m");
+        assert!(re.tensors.contains_key("m/emb"));
+    }
+
+    #[test]
+    fn num_elements() {
+        assert_eq!(sample().num_elements(), 6);
+    }
+}

@@ -1,0 +1,232 @@
+//! Host-side tensor type bridging Rust data and XLA `Literal`s.
+//!
+//! Every value crossing the PJRT boundary is a `Tensor`: a dtype, a shape,
+//! and a flat host buffer. Conversions to/from `xla::Literal` are explicit
+//! and dtype-checked; the rest of the coordinator never touches raw
+//! literals.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Element types the artifact manifests use (`f32` / `i32` / `u32`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+        }
+    }
+
+    pub fn element_type(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::U32 => xla::ElementType::U32,
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Flat host buffer, one variant per supported dtype.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+/// A host tensor: shape + typed data. Row-major (XLA default layout).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn from_f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn from_i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn from_u32(data: Vec<u32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: TensorData::U32(data) }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        Tensor::from_f32(vec![x], &[])
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        Tensor::from_i32(vec![x], &[])
+    }
+
+    pub fn scalar_u32(x: u32) -> Self {
+        Tensor::from_u32(vec![x], &[])
+    }
+
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        let data = match dtype {
+            DType::F32 => TensorData::F32(vec![0.0; n]),
+            DType::I32 => TensorData::I32(vec![0; n]),
+            DType::U32 => TensorData::U32(vec![0; n]),
+        };
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+            TensorData::U32(_) => DType::U32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    /// Scalar extraction (0-d or 1-element tensors).
+    pub fn item_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("item_f32 on tensor with {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    pub fn item_i32(&self) -> Result<i32> {
+        let v = self.as_i32()?;
+        if v.len() != 1 {
+            bail!("item_i32 on tensor with {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    fn raw_bytes(&self) -> &[u8] {
+        match &self.data {
+            TensorData::F32(v) => bytemuck_cast(v),
+            TensorData::I32(v) => bytemuck_cast(v),
+            TensorData::U32(v) => bytemuck_cast(v),
+        }
+    }
+
+    /// Convert to an XLA literal (host copy).
+    pub fn to_literal(&self) -> xla::Literal {
+        xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype().element_type(),
+            &self.shape,
+            self.raw_bytes(),
+        )
+        .expect("literal creation")
+    }
+
+    /// Convert an XLA literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().map_err(|e| anyhow!("{e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => {
+                TensorData::F32(lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
+            }
+            xla::ElementType::S32 => {
+                TensorData::I32(lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?)
+            }
+            xla::ElementType::U32 => {
+                TensorData::U32(lit.to_vec::<u32>().map_err(|e| anyhow!("{e:?}"))?)
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        };
+        Ok(Tensor { shape: dims, data })
+    }
+}
+
+/// Reinterpret a 4-byte-element slice as bytes (little-endian host layout,
+/// which is what the CPU PJRT client expects).
+fn bytemuck_cast<T>(v: &[T]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::from_f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let lit = t.to_literal();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_i32_scalar() {
+        let t = Tensor::scalar_i32(-7);
+        let back = Tensor::from_literal(&t.to_literal()).unwrap();
+        assert_eq!(back.item_i32().unwrap(), -7);
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let t = Tensor::zeros(DType::F32, &[3, 5]);
+        assert_eq!(t.len(), 15);
+        assert_eq!(t.as_f32().unwrap().iter().sum::<f32>(), 0.0);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("i32").unwrap(), DType::I32);
+        assert!(DType::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! Recurrent-state decode engine over a `<tag>_decode_step` artifact.
+//!
+//! The linear-attention state is (S, z) per layer:
+//!     S (L, B, H, Dp, Dv)   running sum of phi(k) v^T
+//!     z (L, B, H, Dp)       running sum of phi(k)
+//! One `step()` advances every batch slot by one token for a constant cost
+//! — no KV cache growth. Slots are independent sequences; `reset_slot`
+//! zeroes one slot's state columns without touching the others (state
+//! isolation is property-tested in rust/tests).
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{ArtifactRegistry, Executable, ParamStore, Tensor};
+
+pub struct Engine {
+    exe: Rc<Executable>,
+    /// inputs in manifest order, with param slots pre-filled
+    param_inputs: Vec<Option<Tensor>>,
+    token_idx: usize,
+    pos_idx: usize,
+    s_idx: usize,
+    z_idx: usize,
+    pub s: Tensor,
+    pub z: Tensor,
+    pub batch: usize,
+    pub vocab: usize,
+    /// per-slot next position
+    pub positions: Vec<i32>,
+    /// tokens decoded since construction (throughput accounting)
+    pub tokens_processed: usize,
+}
+
+impl Engine {
+    pub fn new(reg: &ArtifactRegistry, tag: &str, params: &ParamStore) -> Result<Engine> {
+        let exe = reg.get(&format!("{tag}_decode_step"))?;
+        let man = exe.manifest.clone();
+        let token_idx = man.input_index("token")?;
+        let pos_idx = man.input_index("pos")?;
+        let s_idx = man.input_index("s")?;
+        let z_idx = man.input_index("z")?;
+        let batch = man.inputs[token_idx].shape[0];
+        let vocab = man.meta_usize("vocab").ok_or_else(|| anyhow!("manifest missing vocab"))?;
+
+        let mut param_inputs = vec![None; man.inputs.len()];
+        for (i, slot) in man.inputs.iter().enumerate() {
+            if slot.name.starts_with("params/") {
+                param_inputs[i] = Some(params.get(&slot.name)?.clone());
+            }
+        }
+        let s = Tensor::zeros(man.inputs[s_idx].dtype, &man.inputs[s_idx].shape);
+        let z = Tensor::zeros(man.inputs[z_idx].dtype, &man.inputs[z_idx].shape);
+        Ok(Engine {
+            exe,
+            param_inputs,
+            token_idx,
+            pos_idx,
+            s_idx,
+            z_idx,
+            s,
+            z,
+            batch,
+            vocab,
+            positions: vec![0; batch],
+            tokens_processed: 0,
+        })
+    }
+
+    /// Zero one slot's recurrent state and position (new request admitted).
+    pub fn reset_slot(&mut self, slot: usize) -> Result<()> {
+        assert!(slot < self.batch);
+        zero_slot(&mut self.s, 1, slot)?;
+        zero_slot(&mut self.z, 1, slot)?;
+        self.positions[slot] = 0;
+        Ok(())
+    }
+
+    /// Advance every slot by one token. `tokens[b]` is the input token for
+    /// slot b (idle slots can feed 0). Returns the (B, vocab) logits.
+    pub fn step(&mut self, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        assert_eq!(tokens.len(), self.batch);
+        let token_t = Tensor::from_i32(tokens.to_vec(), &[self.batch]);
+        let pos_t = Tensor::from_i32(self.positions.clone(), &[self.batch]);
+        // borrowed inputs: params + state are never cloned per token (§Perf L3)
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.param_inputs.len());
+        for (i, p) in self.param_inputs.iter().enumerate() {
+            let t: &Tensor = if let Some(p) = p {
+                p
+            } else if i == self.token_idx {
+                &token_t
+            } else if i == self.pos_idx {
+                &pos_t
+            } else if i == self.s_idx {
+                &self.s
+            } else if i == self.z_idx {
+                &self.z
+            } else {
+                return Err(anyhow!("unfilled decode input {i}"));
+            };
+            inputs.push(t);
+        }
+        let outs = self.exe.run_refs(&inputs)?;
+        // outputs: logits, s, z (manifest order)
+        let logits_t = &outs[0];
+        self.s = outs[1].clone();
+        self.z = outs[2].clone();
+        for p in &mut self.positions {
+            *p += 1;
+        }
+        self.tokens_processed += self.batch;
+
+        let flat = logits_t.as_f32()?;
+        let v = self.vocab;
+        Ok((0..self.batch).map(|b| flat[b * v..(b + 1) * v].to_vec()).collect())
+    }
+
+    /// Greedy-decode a single prompt in slot 0 (other slots idle).
+    /// Returns the generated continuation (stops at `eos` or `max_new`).
+    pub fn generate_greedy(
+        &mut self,
+        prompt: &[i32],
+        max_new: usize,
+        eos: i32,
+    ) -> Result<Vec<i32>> {
+        self.reset_slot(0)?;
+        let mut logits_row: Vec<f32> = Vec::new();
+        for &t in prompt {
+            let mut toks = vec![0; self.batch];
+            toks[0] = t;
+            logits_row = self.step(&toks)?.swap_remove(0);
+        }
+        let mut out = Vec::new();
+        for _ in 0..max_new {
+            let next = argmax(&logits_row);
+            if next == eos {
+                break;
+            }
+            out.push(next);
+            let mut toks = vec![0; self.batch];
+            toks[0] = next;
+            logits_row = self.step(&toks)?.swap_remove(0);
+        }
+        Ok(out)
+    }
+}
+
+pub fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in row.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Zero the `slot`-th column of a tensor along axis `axis` (axis 1 = the
+/// batch axis of (L, B, ...) state tensors).
+fn zero_slot(t: &mut Tensor, axis: usize, slot: usize) -> Result<()> {
+    let shape = t.shape.clone();
+    let outer: usize = shape[..axis].iter().product();
+    let axis_len = shape[axis];
+    let inner: usize = shape[axis + 1..].iter().product();
+    let data = t.as_f32_mut()?;
+    for o in 0..outer {
+        let base = o * axis_len * inner + slot * inner;
+        for x in &mut data[base..base + inner] {
+            *x = 0.0;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn zero_slot_isolates() {
+        // (L=2, B=3, inner=4)
+        let mut t = Tensor::from_f32((0..24).map(|i| i as f32 + 1.0).collect(), &[2, 3, 4]);
+        zero_slot(&mut t, 1, 1).unwrap();
+        let d = t.as_f32().unwrap();
+        // slot 1 zeroed in both layers
+        assert!(d[4..8].iter().all(|&x| x == 0.0));
+        assert!(d[16..20].iter().all(|&x| x == 0.0));
+        // slots 0 and 2 untouched
+        assert!(d[0..4].iter().all(|&x| x != 0.0));
+        assert!(d[8..12].iter().all(|&x| x != 0.0));
+    }
+}

@@ -1,0 +1,9 @@
+//! Serving runtime for linearized models: the recurrent-state decode
+//! engine (O(1) per token — the paper's Fig 6 inference claim) and a
+//! batched request scheduler with admission control.
+
+pub mod batcher;
+pub mod engine;
+
+pub use batcher::{Batcher, Request, RequestResult};
+pub use engine::Engine;

@@ -1,0 +1,99 @@
+//! Two-stage conversion pipeline (paper Appendix A.3):
+//!
+//!   1. **Attention distillation** — copy every shared weight from the
+//!      teacher into a freshly-initialized student (the student adds only
+//!      the per-head `fm` feature-map leaves), then train the `fm` leaves
+//!      with `<tag>_distill_step` (teacher weights are gradient-masked in
+//!      the graph itself).
+//!   2. **Finetuning** — unfreeze everything: run the student's ordinary
+//!      `<tag>_train_step` on the task loss.
+//!
+//! Fixed-feature-map students (1+ELU, Performer, ...) have no `fm` leaves
+//! and skip stage 1 — exactly the Table 1 comparison setup. Skipping
+//! stage 1 for a learnable map gives the "HH (No Train)" ablation; running
+//! stage 1 with the T2R map gives "T2R-HH".
+
+use anyhow::Result;
+
+use super::session::{Batch, Session};
+use crate::runtime::{ArtifactRegistry, ParamStore};
+
+/// Knobs for one conversion run.
+#[derive(Debug, Clone)]
+pub struct ConversionSpec {
+    /// student artifact tag, e.g. `glue2_hedgehog`
+    pub student_tag: String,
+    /// distillation steps (0 = skip stage 1 even if the artifact exists)
+    pub distill_steps: usize,
+    pub distill_lr: f32,
+    /// finetuning steps (0 = skip stage 2)
+    pub finetune_steps: usize,
+    pub finetune_lr: f32,
+    pub weight_decay: f32,
+    pub seed: u32,
+}
+
+impl ConversionSpec {
+    pub fn new(student_tag: impl Into<String>) -> Self {
+        ConversionSpec {
+            student_tag: student_tag.into(),
+            // paper defaults scaled to testbed: lr 1e-2 distill, task lr finetune
+            distill_steps: 100,
+            distill_lr: 1e-2,
+            finetune_steps: 150,
+            finetune_lr: 1e-3,
+            weight_decay: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of a conversion: converted params + stage losses.
+pub struct Conversion {
+    pub params: ParamStore,
+    pub shared_leaves: usize,
+    pub distill_losses: Vec<f32>,
+    pub finetune_losses: Vec<f32>,
+}
+
+/// Convert `teacher_params` (a softmax model) into the student variant.
+///
+/// `distill_batch` supplies token-only batches for stage 1; `task_batch`
+/// supplies full task batches for stage 2.
+pub fn convert(
+    reg: &ArtifactRegistry,
+    teacher_params: &ParamStore,
+    spec: &ConversionSpec,
+    mut distill_batch: impl FnMut(usize) -> Batch,
+    mut task_batch: impl FnMut(usize) -> Batch,
+) -> Result<Conversion> {
+    // Stage 0: init student, overwrite shared leaves from the teacher.
+    let init = Session::init(reg, &spec.student_tag, spec.seed)?;
+    let mut params = init.params;
+    let shared = params.merge_from(teacher_params);
+
+    // Stage 1: attention distillation (only if the artifact exists).
+    let distill_name = format!("{}_distill_step", spec.student_tag);
+    let mut distill_losses = Vec::new();
+    if spec.distill_steps > 0 && reg.contains(&distill_name) {
+        let mut d = Session::with_step_artifact(reg, &distill_name, params)?;
+        for i in 0..spec.distill_steps {
+            let b = distill_batch(i);
+            distill_losses.push(d.train_step(spec.distill_lr, 0.0, &b)?);
+        }
+        params = d.params;
+    }
+
+    // Stage 2: task finetuning with all weights unfrozen.
+    let mut finetune_losses = Vec::new();
+    if spec.finetune_steps > 0 {
+        let mut f = Session::from_params(reg, &spec.student_tag, params)?;
+        for i in 0..spec.finetune_steps {
+            let b = task_batch(i);
+            finetune_losses.push(f.train_step(spec.finetune_lr, spec.weight_decay, &b)?);
+        }
+        params = f.params;
+    }
+
+    Ok(Conversion { params, shared_leaves: shared, distill_losses, finetune_losses })
+}

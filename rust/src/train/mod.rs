@@ -1,0 +1,10 @@
+//! Training orchestration: the generic step driver over AOT train/distill
+//! graphs, LR schedules, and the two-stage conversion pipeline (A.3).
+
+pub mod conversion;
+pub mod schedule;
+pub mod session;
+
+pub use conversion::{convert, ConversionSpec};
+pub use schedule::Schedule;
+pub use session::{Batch, Session};

@@ -1,0 +1,59 @@
+//! Learning-rate schedules. The LR is a *runtime input* of every train
+//! artifact, so the whole schedule lives here — no recompilation.
+
+/// LR schedule over global steps.
+#[derive(Debug, Clone)]
+pub enum Schedule {
+    Constant(f32),
+    /// Linear warmup to `peak` over `warmup` steps, then cosine decay to
+    /// `floor` at `total` steps (the GPT-style default).
+    WarmupCosine { peak: f32, warmup: usize, total: usize, floor: f32 },
+}
+
+impl Schedule {
+    pub fn lr(&self, step: usize) -> f32 {
+        match *self {
+            Schedule::Constant(lr) => lr,
+            Schedule::WarmupCosine { peak, warmup, total, floor } => {
+                if warmup > 0 && step < warmup {
+                    return peak * (step + 1) as f32 / warmup as f32;
+                }
+                let t = (step.saturating_sub(warmup)) as f32
+                    / (total.saturating_sub(warmup)).max(1) as f32;
+                let t = t.clamp(0.0, 1.0);
+                floor + 0.5 * (peak - floor) * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant() {
+        let s = Schedule::Constant(0.1);
+        assert_eq!(s.lr(0), 0.1);
+        assert_eq!(s.lr(1000), 0.1);
+    }
+
+    #[test]
+    fn warmup_ramps() {
+        let s = Schedule::WarmupCosine { peak: 1.0, warmup: 10, total: 100, floor: 0.0 };
+        assert!(s.lr(0) < s.lr(5));
+        assert!(s.lr(5) < s.lr(9));
+        assert!((s.lr(9) - 1.0).abs() < 0.11);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = Schedule::WarmupCosine { peak: 1.0, warmup: 0, total: 100, floor: 0.1 };
+        assert!((s.lr(100) - 0.1).abs() < 1e-4);
+        assert!(s.lr(50) < s.lr(10));
+        // never below floor
+        for step in 0..120 {
+            assert!(s.lr(step) >= 0.1 - 1e-5);
+        }
+    }
+}

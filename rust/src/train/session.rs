@@ -1,0 +1,201 @@
+//! `Session`: the generic driver for any train/distill step artifact.
+//!
+//! A session owns the parameter set, the AdamW state, and the global step
+//! counter, and knows how to assemble an artifact's input vector from them
+//! plus a named `Batch`. The same driver runs task training, distillation,
+//! finetuning, and LoRA (any graph whose manifest follows the
+//! params/m/v/step/lr/wd/batch naming convention from aot.py).
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{ArtifactRegistry, Executable, ParamStore, Tensor};
+
+/// Named batch tensors, matched to manifest slots by name.
+#[derive(Debug, Clone, Default)]
+pub struct Batch {
+    pub slots: Vec<(String, Tensor)>,
+}
+
+impl Batch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with(mut self, name: impl Into<String>, t: Tensor) -> Self {
+        self.slots.push((name.into(), t));
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.slots.iter().find(|(n, _)| n == name).map(|(_, t)| t)
+    }
+}
+
+/// One optimization session over a `<tag>_train_step`-style artifact.
+pub struct Session {
+    step_exe: Rc<Executable>,
+    /// All `params/...` (and for LoRA graphs `lora/...` + frozen `base/...`)
+    /// leaves, by name.
+    pub params: ParamStore,
+    /// AdamW moments `m/...`, `v/...`.
+    pub opt: ParamStore,
+    pub step: i32,
+    pub losses: Vec<f32>,
+}
+
+impl Session {
+    /// Initialize from a `<tag>_init` graph with the given seed.
+    pub fn init(reg: &ArtifactRegistry, tag: &str, seed: u32) -> Result<Session> {
+        let init = reg.get(&format!("{tag}_init"))?;
+        let outs = init.run(&[Tensor::scalar_u32(seed)])?;
+        let params = ParamStore::from_outputs(&init.manifest.outputs, outs);
+        Session::from_params(reg, tag, params)
+    }
+
+    /// Resume from an existing parameter store (e.g. after conversion).
+    pub fn from_params(reg: &ArtifactRegistry, tag: &str, params: ParamStore) -> Result<Session> {
+        let step_exe = reg.get(&format!("{tag}_train_step"))?;
+        Ok(Session::over(step_exe, params))
+    }
+
+    /// Use an explicit step artifact (e.g. `<tag>_distill_step`).
+    pub fn with_step_artifact(
+        reg: &ArtifactRegistry,
+        step_name: &str,
+        params: ParamStore,
+    ) -> Result<Session> {
+        Ok(Session::over(reg.get(step_name)?, params))
+    }
+
+    fn over(step_exe: Rc<Executable>, params: ParamStore) -> Session {
+        // zero optimizer state for every m/ v/ input declared by the graph
+        let mut opt = ParamStore::new();
+        for slot in &step_exe.manifest.inputs {
+            if slot.name.starts_with("m/") || slot.name.starts_with("v/") {
+                opt.insert(slot.name.clone(), Tensor::zeros(slot.dtype, &slot.shape));
+            }
+        }
+        Session { step_exe, params, opt, step: 0, losses: Vec::new() }
+    }
+
+    /// Run one optimization step; returns the loss.
+    ///
+    /// Inputs are assembled *by reference* (`run_refs`): parameters and
+    /// optimizer moments are fed back every step, and cloning them per
+    /// step dominated the small-model hot path (§Perf L3).
+    pub fn train_step(&mut self, lr: f32, wd: f32, batch: &Batch) -> Result<f32> {
+        let step_t = Tensor::scalar_i32(self.step);
+        let lr_t = Tensor::scalar_f32(lr);
+        let wd_t = Tensor::scalar_f32(wd);
+        let exe = self.step_exe.clone();
+        let man = &exe.manifest;
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(man.inputs.len());
+        for slot in &man.inputs {
+            let t: &Tensor = match slot.name.as_str() {
+                "step" => &step_t,
+                "lr" => &lr_t,
+                "wd" => &wd_t,
+                name => {
+                    if let Ok(p) = self.params.get(name) {
+                        p
+                    } else if let Ok(o) = self.opt.get(name) {
+                        o
+                    } else if let Some(b) = batch.get(name) {
+                        b
+                    } else {
+                        return Err(anyhow!(
+                            "step {}: no source for input {:?}",
+                            man.name,
+                            slot.name
+                        ));
+                    }
+                }
+            };
+            inputs.push(t);
+        }
+        let outs = exe.run_refs(&inputs)?;
+        let mut loss = f32::NAN;
+        for (slot, t) in man.outputs.iter().zip(outs) {
+            match slot.name.as_str() {
+                "step" => self.step = t.item_i32()?,
+                "loss" => loss = t.item_f32()?,
+                name if name.starts_with("m/") || name.starts_with("v/") => {
+                    self.opt.insert(name.to_string(), t)
+                }
+                name => self.params.insert(name.to_string(), t),
+            }
+        }
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Train `steps` steps pulling batches from `next_batch`.
+    pub fn run(
+        &mut self,
+        steps: usize,
+        lr: impl Fn(usize) -> f32,
+        wd: f32,
+        mut next_batch: impl FnMut(usize) -> Batch,
+    ) -> Result<f32> {
+        let mut last = f32::NAN;
+        for i in 0..steps {
+            let b = next_batch(i);
+            last = self.train_step(lr(i), wd, &b)?;
+        }
+        Ok(last)
+    }
+
+    /// Mean loss over the trailing `n` recorded steps.
+    pub fn trailing_loss(&self, n: usize) -> f32 {
+        if self.losses.is_empty() {
+            return f32::NAN;
+        }
+        let k = n.min(self.losses.len());
+        self.losses[self.losses.len() - k..].iter().sum::<f32>() / k as f32
+    }
+}
+
+/// Run a non-training artifact (eval / logits / stats) against a parameter
+/// store plus a batch, matching inputs by name.
+pub fn run_with_params(
+    reg: &ArtifactRegistry,
+    name: &str,
+    params: &ParamStore,
+    batch: &Batch,
+) -> Result<Vec<Tensor>> {
+    let exe = reg.get(name)?;
+    let man = &exe.manifest;
+    let mut inputs: Vec<&Tensor> = Vec::with_capacity(man.inputs.len());
+    for slot in &man.inputs {
+        let t = if let Ok(p) = params.get(&slot.name) {
+            p
+        } else if let Some(b) = batch.get(&slot.name) {
+            b
+        } else {
+            return Err(anyhow!("{name}: no source for input {:?}", slot.name));
+        };
+        inputs.push(t);
+    }
+    exe.run_refs(&inputs)
+}
+
+/// Evaluate `<tag>_eval` over `n_batches`, returning (mean loss, mean metric).
+pub fn evaluate(
+    reg: &ArtifactRegistry,
+    tag: &str,
+    params: &ParamStore,
+    n_batches: usize,
+    mut next_batch: impl FnMut(usize) -> Batch,
+) -> Result<(f32, f32)> {
+    let mut loss_sum = 0.0;
+    let mut metric_sum = 0.0;
+    for i in 0..n_batches {
+        let b = next_batch(i);
+        let outs = run_with_params(reg, &format!("{tag}_eval"), params, &b)?;
+        loss_sum += outs[0].item_f32()?;
+        metric_sum += outs[1].item_f32()?;
+    }
+    Ok((loss_sum / n_batches as f32, metric_sum / n_batches as f32))
+}

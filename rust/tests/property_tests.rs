@@ -1,0 +1,240 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! The offline vendor set has no `proptest`, so these are randomized
+//! property sweeps driven by the repo's deterministic PCG32 (seeds printed
+//! on failure via assert messages — rerun with the same seed to reproduce).
+
+use hedgehog::data::{ar::ArTask, corpus, glue, lra, samsum, Pcg32};
+use hedgehog::metrics;
+use hedgehog::serve::{Batcher, Request};
+
+const SWEEPS: u64 = 50;
+
+// ---------------------------------------------------------------------------
+// Batcher invariants (routing / batching / state)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    for seed in 0..SWEEPS {
+        let mut rng = Pcg32::new(seed);
+        let cap = 1 + rng.usize_below(4);
+        let n_req = 1 + rng.usize_below(20);
+        let mut b = Batcher::new(cap, 1024);
+        for id in 0..n_req as u64 {
+            let prompt_len = 1 + rng.usize_below(5);
+            let max_new = rng.usize_below(6);
+            assert!(b.submit(Request {
+                id,
+                prompt: vec![1; prompt_len],
+                max_new,
+                eos: -1,
+            }));
+        }
+        let mut guard = 0;
+        while !b.is_idle() {
+            b.plan_admissions();
+            assert!(b.active() <= cap, "seed {seed}: capacity exceeded");
+            let sampled: Vec<i32> = (0..cap).map(|_| 3 + rng.below(5) as i32).collect();
+            b.record_tokens(&sampled);
+            guard += 1;
+            assert!(guard < 10_000, "seed {seed}: no termination");
+        }
+        // every request completes exactly once
+        let mut ids: Vec<u64> = b.completed.iter().map(|r| r.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n_req, "seed {seed}: lost or duplicated requests");
+        // outputs never exceed max_new
+        for r in &b.completed {
+            assert!(r.output.len() <= 6, "seed {seed}: output over budget");
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_fifo_admission() {
+    // With capacity 1, completion order must equal submission order.
+    for seed in 0..SWEEPS {
+        let mut rng = Pcg32::new(seed ^ 0xfeed);
+        let n_req = 2 + rng.usize_below(8);
+        let mut b = Batcher::new(1, 1024);
+        for id in 0..n_req as u64 {
+            b.submit(Request {
+                id,
+                prompt: vec![1; 1 + rng.usize_below(3)],
+                max_new: rng.usize_below(3),
+                eos: -1,
+            });
+        }
+        while !b.is_idle() {
+            b.plan_admissions();
+            b.record_tokens(&[7]);
+        }
+        let ids: Vec<u64> = b.completed.iter().map(|r| r.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort();
+        assert_eq!(ids, sorted, "seed {seed}: FIFO violated");
+    }
+}
+
+#[test]
+fn prop_batcher_backpressure_bounded() {
+    for seed in 0..SWEEPS {
+        let mut rng = Pcg32::new(seed ^ 0xbeef);
+        let max_q = 1 + rng.usize_below(5);
+        let mut b = Batcher::new(1, max_q);
+        let mut accepted = 0;
+        for id in 0..20u64 {
+            if b.submit(Request { id, prompt: vec![1], max_new: 1, eos: -1 }) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, max_q, "seed {seed}");
+        assert_eq!(b.rejected, 20 - max_q, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metric invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_matthews_bounded_and_symmetric() {
+    for seed in 0..SWEEPS {
+        let mut rng = Pcg32::new(seed);
+        let n = 4 + rng.usize_below(64);
+        let p: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let l: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let m = metrics::matthews(&p, &l);
+        assert!((-1.0..=1.0).contains(&m), "seed {seed}: mc {m}");
+        // symmetry: mc(p, l) == mc(l, p)
+        let m2 = metrics::matthews(&l, &p);
+        assert!((m - m2).abs() < 1e-6, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_spearman_invariant_to_monotone_transform() {
+    for seed in 0..SWEEPS {
+        let mut rng = Pcg32::new(seed);
+        let n = 5 + rng.usize_below(40);
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let r1 = metrics::spearman(&x, &y);
+        // exp() is strictly monotone: ranks unchanged
+        let xe: Vec<f32> = x.iter().map(|v| v.exp()).collect();
+        let r2 = metrics::spearman(&xe, &y);
+        assert!((r1 - r2).abs() < 1e-4, "seed {seed}: {r1} vs {r2}");
+    }
+}
+
+#[test]
+fn prop_rouge_bounds_and_identity() {
+    for seed in 0..SWEEPS {
+        let mut rng = Pcg32::new(seed);
+        let n = 1 + rng.usize_below(12);
+        let a: Vec<i32> = (0..n).map(|_| rng.below(8) as i32).collect();
+        let m = 1 + rng.usize_below(12);
+        let b: Vec<i32> = (0..m).map(|_| rng.below(8) as i32).collect();
+        let (r1, r2, rl) = metrics::rouge_scores(&a, &b);
+        for v in [r1, r2, rl] {
+            assert!((0.0..=100.0 + 1e-3).contains(&v), "seed {seed}: {v}");
+        }
+        let (i1, _, il) = metrics::rouge_scores(&a, &a);
+        assert!((i1 - 100.0).abs() < 1e-3 && (il - 100.0).abs() < 1e-3, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_kl_nonnegative_on_distributions() {
+    for seed in 0..SWEEPS {
+        let mut rng = Pcg32::new(seed);
+        let n = 2 + rng.usize_below(16);
+        let norm = |v: Vec<f32>| {
+            let s: f32 = v.iter().sum();
+            v.into_iter().map(|x| x / s).collect::<Vec<f32>>()
+        };
+        let p = norm((0..n).map(|_| rng.f32() + 0.01).collect());
+        let q = norm((0..n).map(|_| rng.f32() + 0.01).collect());
+        assert!(metrics::kl_div(&p, &q) > -1e-4, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Data-generator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_ar_answer_always_recallable() {
+    let task = ArTask::default_for_family();
+    for seed in 0..SWEEPS {
+        let mut rng = Pcg32::new(seed);
+        let (t, g, m) = task.sample(&mut rng);
+        let pos = m.iter().position(|&x| x == 1.0).expect("one supervised pos");
+        let key = t[pos];
+        let ans = g[pos];
+        let mut found = false;
+        let mut i = 0;
+        while i + 1 < pos {
+            if t[i] == key && t[i + 1] == ans {
+                found = true;
+                break;
+            }
+            i += 2;
+        }
+        assert!(found, "seed {seed}: unanswerable AR sample");
+    }
+}
+
+#[test]
+fn prop_corpus_tokens_in_vocab_and_deterministic() {
+    for seed in 0..20 {
+        let lang = corpus::TinyLanguage::new(256);
+        let mut r1 = Pcg32::new(seed);
+        let mut r2 = Pcg32::new(seed);
+        let a = lang.stream(&mut r1, corpus::Domain::Pretrain, 2048);
+        let b = lang.stream(&mut r2, corpus::Domain::Pretrain, 2048);
+        assert_eq!(a, b, "seed {seed}: nondeterministic corpus");
+        assert!(a.iter().all(|&t| (t as usize) < 256));
+    }
+}
+
+#[test]
+fn prop_glue_labels_match_structure() {
+    // qnli is fully checkable: label <-> query containment
+    for seed in 0..SWEEPS {
+        let mut rng = Pcg32::new(seed);
+        let (t, l) = glue::sample(glue::GlueTask::Qnli, &mut rng);
+        assert_eq!(t[2..].contains(&t[0]), l > 0.5, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_lra_sequences_sized() {
+    for seed in 0..20 {
+        let mut rng = Pcg32::new(seed);
+        for task in lra::ALL_TASKS {
+            let (t, t2, _) = lra::sample(task, &mut rng);
+            assert_eq!(t.len(), task.seq_len());
+            if let Some(t2) = t2 {
+                assert_eq!(t2.len(), task.seq_len());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_samsum_masks_inside_sequence() {
+    for seed in 0..SWEEPS {
+        let mut rng = Pcg32::new(seed);
+        let s = samsum::sample(&mut rng);
+        // supervised positions all fall before the final pad run
+        let last_nonpad = s.tokens.iter().rposition(|&t| t != samsum::PAD).unwrap();
+        for (i, &m) in s.mask.iter().enumerate() {
+            if m > 0.0 {
+                assert!(i <= last_nonpad, "seed {seed}: mask on pure padding");
+            }
+        }
+    }
+}
