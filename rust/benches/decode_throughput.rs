@@ -14,7 +14,17 @@ use hedgehog::serve::Engine;
 use hedgehog::train::session::Session;
 
 fn main() {
-    let reg = ArtifactRegistry::open("artifacts").expect("run `make artifacts`");
+    let reg = ArtifactRegistry::open("artifacts").expect("artifact registry");
+    if reg.backend_name() != "pjrt"
+        || !reg.contains("lm_hedgehog_init")
+        || !reg.contains("lm_hedgehog_decode_step")
+    {
+        eprintln!(
+            "decode_throughput: model graphs need compiled artifacts (`make artifacts`) \
+             and the `pjrt` backend; skipping"
+        );
+        return;
+    }
     // fresh random init is fine for timing
     let s = Session::init(&reg, "lm_hedgehog", 0).unwrap();
     let params = s.params;

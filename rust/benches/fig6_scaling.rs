@@ -12,7 +12,7 @@ use hedgehog::data::Pcg32;
 use hedgehog::runtime::{ArtifactRegistry, Tensor};
 
 fn main() {
-    let reg = ArtifactRegistry::open("artifacts").expect("run `make artifacts`");
+    let reg = ArtifactRegistry::open("artifacts").expect("artifact registry");
     let heads = 4usize;
     let d = 64usize;
     let mut results = Vec::new();

@@ -1,6 +1,8 @@
-//! L1 microbench: standalone Pallas kernel artifacts (linear vs softmax
-//! attention over identical shapes), plus the host<->literal marshalling
-//! overhead that the §Perf pass targets at L3.
+//! L1 microbench: standalone kernel artifacts (linear vs softmax attention
+//! over identical shapes), plus the host marshalling overhead that the
+//! §Perf pass targets at L3. Runs on whichever backend the registry picks:
+//! compiled PJRT artifacts when present, the pure-Rust reference
+//! interpreter otherwise.
 
 mod common;
 
@@ -9,13 +11,16 @@ use hedgehog::data::Pcg32;
 use hedgehog::runtime::{ArtifactRegistry, Tensor};
 
 fn main() {
-    let reg = ArtifactRegistry::open("artifacts").expect("run `make artifacts`");
+    let reg = ArtifactRegistry::open("artifacts").expect("artifact registry");
+    println!("backend: {}", reg.backend_name());
     let mut results = Vec::new();
 
     let shape = [1usize, 2, 128, 16];
     let n: usize = shape.iter().product();
     let mut rng = Pcg32::new(0);
-    let mk = |rng: &mut Pcg32| Tensor::from_f32((0..n).map(|_| rng.normal() * 0.3).collect(), &shape);
+    let mk = |rng: &mut Pcg32| {
+        Tensor::from_f32((0..n).map(|_| rng.normal() * 0.3).collect(), &shape)
+    };
     let inputs = vec![mk(&mut rng), mk(&mut rng), mk(&mut rng)];
 
     for name in ["kernel_linear_attention", "kernel_softmax_attention"] {
@@ -25,12 +30,18 @@ fn main() {
         }));
     }
 
-    // marshalling overhead: tensor -> literal -> tensor round-trip at the
-    // size of one e2e_small parameter set step (~1.8M f32)
+    // marshalling overhead at the size of one e2e_small parameter-set step
+    // (~1.8M f32): literal round-trip under `pjrt`, host copy otherwise.
     let big = Tensor::from_f32(vec![0.5f32; 1_800_000], &[1_800_000]);
+    #[cfg(feature = "pjrt")]
     results.push(bench("literal roundtrip 1.8M f32", 16, || {
-        let lit = big.to_literal();
-        let _ = Tensor::from_literal(&lit).unwrap();
+        let lit = hedgehog::runtime::pjrt::to_literal(&big).unwrap();
+        let _ = hedgehog::runtime::pjrt::from_literal(&lit).unwrap();
+    }));
+    #[cfg(not(feature = "pjrt"))]
+    results.push(bench("host copy roundtrip 1.8M f32", 16, || {
+        let copy = Tensor::from_f32(big.as_f32().unwrap().to_vec(), &big.shape);
+        std::hint::black_box(&copy);
     }));
 
     print_table("kernel micro + marshalling", &results);

@@ -11,7 +11,14 @@ use hedgehog::runtime::ArtifactRegistry;
 use hedgehog::train::session::Session;
 
 fn main() {
-    let reg = ArtifactRegistry::open("artifacts").expect("run `make artifacts`");
+    let reg = ArtifactRegistry::open("artifacts").expect("artifact registry");
+    if reg.backend_name() != "pjrt" {
+        eprintln!(
+            "train_step: model graphs need compiled artifacts (`make artifacts`) \
+             and the `pjrt` backend; skipping"
+        );
+        return;
+    }
     let mut results = Vec::new();
 
     for (tag, desc) in [

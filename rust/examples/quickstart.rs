@@ -44,7 +44,8 @@ fn main() -> Result<()> {
     let tokens_only = Batch {
         slots: b.slots.into_iter().filter(|(n, _)| n == "tokens").collect(),
     };
-    let (teacher_h, student_h, kl) = attn_stats(&reg, "ar_hedgehog", &session.params, &tokens_only)?;
+    let (teacher_h, student_h, kl) =
+        attn_stats(&reg, "ar_hedgehog", &session.params, &tokens_only)?;
     println!(
         "attention entropy: softmax teacher {teacher_h:.3} nats, hedgehog {student_h:.3} nats, \
          KL {kl:.3}"

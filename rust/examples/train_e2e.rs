@@ -5,7 +5,7 @@
 //! Proves all three layers compose: Pallas linear-attention kernel (L1)
 //! inside the JAX training graph (L2), driven step-by-step by the Rust
 //! coordinator over PJRT (L3), with data, schedule, checkpointing and
-//! serving all on the Rust side. Recorded in EXPERIMENTS.md §E2E.
+//! serving all on the Rust side. See rust/DESIGN.md for the layer map.
 //!
 //!     cargo run --release --example train_e2e -- [steps] [family]
 //!     family: e2e_small (default, ~1.8M params) | e2e_medium (~8M params)
@@ -43,7 +43,8 @@ fn main() -> Result<()> {
         session.params.num_elements()
     );
 
-    let sched = Schedule::WarmupCosine { peak: 6e-4, warmup: steps / 10, total: steps, floor: 6e-5 };
+    let sched =
+        Schedule::WarmupCosine { peak: 6e-4, warmup: steps / 10, total: steps, floor: 6e-5 };
     let t0 = std::time::Instant::now();
     let mut curve = String::from("step,loss,ppl,lr\n");
     for step in 0..steps {

@@ -428,7 +428,9 @@ fn tab7(ctx: &Ctx) -> Result<()> {
         })?;
         report.row(vec![variant.into(), f(metrics::perplexity(loss))]);
     }
-    report.note(format!("{steps} steps each; paper Table 7 shape: softmax < hedgehog < prior linear"));
+    report.note(format!(
+        "{steps} steps each; paper Table 7 shape: softmax < hedgehog < prior linear"
+    ));
     report.emit(&ctx.results_dir);
     Ok(())
 }

@@ -26,7 +26,13 @@ pub fn glue_batch(task: glue::GlueTask, rng: &mut Pcg32, b: usize) -> Batch {
     Batch::new().with("tokens", t).with("labels", l)
 }
 
-pub fn lm_batch(lang: &corpus::TinyLanguage, domain: corpus::Domain, rng: &mut Pcg32, b: usize, n: usize) -> Batch {
+pub fn lm_batch(
+    lang: &corpus::TinyLanguage,
+    domain: corpus::Domain,
+    rng: &mut Pcg32,
+    b: usize,
+    n: usize,
+) -> Batch {
     let (t, g, m) = lang.lm_batch(rng, domain, b, n);
     Batch::new().with("tokens", t).with("targets", g).with("loss_mask", m)
 }

@@ -1,5 +1,5 @@
 //! Plain-text table reports: printed to stdout and appended to
-//! `results/<id>.txt` so EXPERIMENTS.md can cite exact runs.
+//! `results/<id>.txt` so experiment write-ups can cite exact runs.
 
 use std::fmt::Write as _;
 use std::path::PathBuf;

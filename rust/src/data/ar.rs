@@ -44,7 +44,8 @@ impl ArTask {
     pub fn sample(&self, rng: &mut Pcg32) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
         let n = self.seq_len;
         // random key->value binding for this sequence
-        let mut binding: Vec<usize> = (0..self.n_keys).map(|_| rng.usize_below(self.n_vals)).collect();
+        let mut binding: Vec<usize> =
+            (0..self.n_keys).map(|_| rng.usize_below(self.n_vals)).collect();
         // ensure the queried key appears at least once in the body
         let n_pairs = (n - 3) / 2; // body pairs; tail: [Q] key answer
         let mut tokens = Vec::with_capacity(n);

@@ -1,7 +1,7 @@
 //! Deterministic PCG32 RNG (the vendored crate set has no `rand`).
 //!
 //! Every dataset generator takes an explicit seed so runs, tests, and
-//! EXPERIMENTS.md numbers are bit-reproducible.
+//! reported experiment numbers are bit-reproducible.
 
 /// PCG-XSH-RR 64/32 (O'Neill 2014).
 #[derive(Debug, Clone)]

@@ -1,7 +1,8 @@
 //! Hedgehog: expressive linear attention with softmax mimicry —
 //! full-system reproduction (Zhang et al., 2024) as a three-layer
-//! Rust + JAX + Pallas stack. See DESIGN.md for the architecture and
-//! EXPERIMENTS.md for paper-vs-measured results.
+//! Rust + JAX + Pallas stack. See rust/DESIGN.md for the architecture,
+//! including the pluggable execution-backend seam (XLA/PJRT behind the
+//! `pjrt` feature vs. the always-available pure-Rust reference backend).
 
 pub mod coordinator;
 pub mod data;

@@ -62,6 +62,7 @@ fn main() -> Result<()> {
         }
         "list" => {
             let reg = ArtifactRegistry::open(&args.artifacts)?;
+            println!("backend: {}", reg.backend_name());
             println!("artifacts ({}):", reg.names().len());
             for n in reg.names() {
                 println!("  {n}");

@@ -1,15 +1,18 @@
-//! ArtifactRegistry: load, compile (once), and execute AOT artifacts.
+//! ArtifactRegistry: discover artifacts, load/compile them once through an
+//! execution `Backend`, and run them.
 //!
 //! `make artifacts` populates `artifacts/` with `<name>.hlo.txt` +
 //! `<name>.json` pairs. The registry scans the directory, parses manifests
-//! eagerly (cheap), and compiles HLO modules lazily on first use, caching
-//! the `PjRtLoadedExecutable` for the life of the process — compilation is
-//! the expensive step and every training loop reuses the same executable.
+//! eagerly (cheap), and loads executables lazily on first use, caching them
+//! for the life of the process — compilation is the expensive step and
+//! every training loop reuses the same executable.
 //!
-//! Executables are invoked with host `Tensor`s; outputs are decomposed from
-//! the return tuple back into `Tensor`s, dtype-checked against the
-//! manifest. All graphs are lowered with `return_tuple=True` on the Python
-//! side, so the result is always a single tuple literal.
+//! Execution is pluggable (see `backend.rs`): with compiled artifacts on
+//! disk and the `pjrt` feature enabled, loading goes through XLA; otherwise
+//! `open` falls back to the pure-Rust `ReferenceBackend`, whose builtin
+//! kernel manifests keep the registry usable with no artifacts directory at
+//! all. Executables are invoked with host `Tensor`s, checked against the
+//! manifest on the way in and out.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -19,16 +22,23 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::backend::{Backend, Executable as BackendExecutable};
 use super::manifest::Manifest;
+use super::reference::ReferenceBackend;
 use super::tensor::Tensor;
 
-/// A compiled artifact, ready to execute.
+/// A loaded artifact, ready to execute: the manifest contract plus the
+/// backend-specific executable behind it.
 pub struct Executable {
     pub manifest: Manifest,
-    exe: xla::PjRtLoadedExecutable,
+    imp: Box<dyn BackendExecutable>,
 }
 
 impl Executable {
+    pub fn new(manifest: Manifest, imp: Box<dyn BackendExecutable>) -> Self {
+        Executable { manifest, imp }
+    }
+
     /// Run the artifact on host tensors; returns outputs in manifest order.
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let refs: Vec<&Tensor> = inputs.iter().collect();
@@ -37,29 +47,19 @@ impl Executable {
 
     /// Borrowed-input variant: the §Perf L3 hot path. Avoids cloning every
     /// parameter tensor per step (the training loop feeds the same params
-    /// back each iteration; only the literal conversion copy remains).
+    /// back each iteration; only the backend's marshalling copy remains).
     pub fn run_refs(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         self.check_inputs(inputs)?;
-        let literals: Vec<xla::Literal> = inputs.iter().map(|t| t.to_literal()).collect();
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.manifest.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result {}: {e:?}", self.manifest.name))?;
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple {}: {e:?}", self.manifest.name))?;
-        if parts.len() != self.manifest.outputs.len() {
+        let outputs = self.imp.execute(inputs)?;
+        if outputs.len() != self.manifest.outputs.len() {
             bail!(
-                "artifact {}: manifest declares {} outputs, got {}",
+                "artifact {}: manifest declares {} outputs, backend returned {}",
                 self.manifest.name,
                 self.manifest.outputs.len(),
-                parts.len()
+                outputs.len()
             );
         }
-        parts.iter().map(Tensor::from_literal).collect()
+        Ok(outputs)
     }
 
     fn check_inputs(&self, inputs: &[&Tensor]) -> Result<()> {
@@ -88,41 +88,83 @@ impl Executable {
     }
 }
 
-/// Directory of artifacts with a compile-once executable cache.
+/// Directory of artifacts with a load-once executable cache.
 pub struct ArtifactRegistry {
     dir: PathBuf,
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
     manifests: HashMap<String, Manifest>,
     cache: RefCell<HashMap<String, Rc<Executable>>>,
-    /// Cumulative compile time, for §Perf accounting.
+    /// Cumulative backend load/compile time, for §Perf accounting.
     pub compile_seconds: RefCell<f64>,
 }
 
 impl ArtifactRegistry {
-    /// Scan `dir` for `<name>.json` manifests and create a CPU PJRT client.
+    /// Open `dir`, picking the best available backend: compiled artifacts
+    /// plus the `pjrt` feature select XLA; otherwise (no artifacts
+    /// directory, or no working PJRT client) the pure-Rust reference
+    /// backend, whose builtin kernel manifests make the registry usable
+    /// with nothing on disk.
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        if dir_has_manifests(&dir) {
+            #[cfg(feature = "pjrt")]
+            {
+                match super::pjrt::PjrtBackend::new() {
+                    Ok(b) => return Self::with_backend(&dir, Box::new(b)),
+                    Err(e) => eprintln!(
+                        "warning: compiled artifacts present but PJRT is unavailable ({e:#}); \
+                         falling back to the reference backend"
+                    ),
+                }
+            }
+            #[cfg(not(feature = "pjrt"))]
+            eprintln!(
+                "note: compiled artifacts present in {} but this build has no `pjrt` \
+                 feature; only kernel artifacts will execute (reference backend)",
+                dir.display()
+            );
+        }
+        Self::with_backend(&dir, Box::new(ReferenceBackend::new()))
+    }
+
+    /// Open with an explicit backend (tests, future sharded/remote backends).
+    pub fn with_backend(dir: impl AsRef<Path>, backend: Box<dyn Backend>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
         let mut manifests = HashMap::new();
-        for entry in std::fs::read_dir(&dir)
-            .with_context(|| format!("artifacts dir {} (run `make artifacts`)", dir.display()))?
-        {
-            let path = entry?.path();
-            if path.extension().and_then(|e| e.to_str()) == Some("json") {
-                let m = Manifest::load(&path)?;
-                manifests.insert(m.name.clone(), m);
+        if dir.is_dir() {
+            for entry in std::fs::read_dir(&dir)
+                .with_context(|| format!("scanning artifacts dir {}", dir.display()))?
+            {
+                let path = entry?.path();
+                if path.extension().and_then(|e| e.to_str()) == Some("json") {
+                    let m = Manifest::load(&path)?;
+                    manifests.insert(m.name.clone(), m);
+                }
             }
         }
+        // On-disk manifests win; builtins fill the gaps (hermetic kernels).
+        for m in backend.builtin_manifests() {
+            manifests.entry(m.name.clone()).or_insert(m);
+        }
         if manifests.is_empty() {
-            bail!("no artifacts found in {} — run `make artifacts`", dir.display());
+            bail!(
+                "no artifacts in {} and backend {:?} provides no builtins — run `make artifacts`",
+                dir.display(),
+                backend.name()
+            );
         }
         Ok(ArtifactRegistry {
             dir,
-            client,
+            backend,
             manifests,
             cache: RefCell::new(HashMap::new()),
             compile_seconds: RefCell::new(0.0),
         })
+    }
+
+    /// Name of the execution backend in use ("pjrt", "reference").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -136,35 +178,70 @@ impl ArtifactRegistry {
     }
 
     pub fn manifest(&self, name: &str) -> Result<&Manifest> {
-        self.manifests
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name:?} (run `make artifacts`?)"))
+        self.manifests.get(name).ok_or_else(|| {
+            anyhow!(
+                "unknown artifact {name:?} — scanned {} with the {} backend \
+                 (run `make artifacts`?)",
+                self.dir.display(),
+                self.backend.name()
+            )
+        })
     }
 
-    /// Get (compiling on first use) the executable for `name`.
+    /// Get (loading/compiling on first use) the executable for `name`.
     pub fn get(&self, name: &str) -> Result<Rc<Executable>> {
         if let Some(e) = self.cache.borrow().get(name) {
             return Ok(e.clone());
         }
         let manifest = self.manifest(name)?.clone();
-        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
-            .map_err(|e| anyhow!("parse {}: {e:?}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        let dt = t0.elapsed().as_secs_f64();
-        *self.compile_seconds.borrow_mut() += dt;
-        let executable = Rc::new(Executable { manifest, exe });
+        let imp = self.backend.load(&self.dir, &manifest).with_context(|| {
+            format!("backend {}: loading artifact {name:?}", self.backend.name())
+        })?;
+        *self.compile_seconds.borrow_mut() += t0.elapsed().as_secs_f64();
+        let executable = Rc::new(Executable::new(manifest, imp));
         self.cache.borrow_mut().insert(name.to_string(), executable.clone());
         Ok(executable)
     }
 
-    /// Convenience: compile + run in one call.
+    /// Convenience: load + run in one call.
     pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         self.get(name)?.run(inputs)
+    }
+}
+
+/// Whether `dir` exists and holds at least one artifact manifest.
+fn dir_has_manifests(dir: &Path) -> bool {
+    std::fs::read_dir(dir)
+        .map(|entries| {
+            entries.flatten().any(|e| {
+                e.path().extension().and_then(|x| x.to_str()) == Some("json")
+            })
+        })
+        .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// With no artifacts directory at all, `open` must fall back to the
+    /// reference backend and still serve the builtin kernel artifacts.
+    #[test]
+    fn open_without_artifacts_dir_uses_builtins() {
+        let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+        assert!(reg.contains("kernel_linear_attention"));
+        assert!(reg.contains("kernel_softmax_attention"));
+        assert!(!reg.contains("ar_softmax_train_step"));
+        assert!(reg.get("kernel_linear_attention").is_ok());
+        assert!(reg.get("no_such_artifact").is_err());
+    }
+
+    #[test]
+    fn executable_is_cached() {
+        let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+        let a = reg.get("kernel_softmax_attention").unwrap();
+        let b = reg.get("kernel_softmax_attention").unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
     }
 }

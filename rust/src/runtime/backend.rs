@@ -1,0 +1,48 @@
+//! Execution backend seam: how artifacts get compiled and run.
+//!
+//! The registry, trainer, server, and coordinator all talk to artifacts
+//! through `artifact::Executable`, which dispatches to one of these trait
+//! objects. Two implementations exist today:
+//!
+//! * `reference::ReferenceBackend` (always built) — interprets the kernel
+//!   artifacts as direct f32 math, numerically matching
+//!   `python/compile/kernels/ref.py`. No XLA, no artifacts directory.
+//! * `pjrt::PjrtBackend` (behind the non-default `pjrt` feature) — compiles
+//!   the AOT HLO text next to each manifest and executes it on the PJRT CPU
+//!   client.
+//!
+//! Future backends (sharded, remote, GPU) slot in behind the same pair of
+//! traits; see rust/DESIGN.md §3.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::manifest::Manifest;
+use super::tensor::Tensor;
+
+/// A loaded/compiled artifact, ready to run. Implementations receive inputs
+/// already checked against the manifest (count, shape, dtype, order) and
+/// must return outputs in manifest order.
+pub trait Executable {
+    fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// An execution strategy: turns a manifest (plus whatever artifact files sit
+/// next to it in the artifacts directory) into an `Executable`.
+pub trait Backend {
+    /// Short identifier for logs and error messages ("pjrt", "reference").
+    fn name(&self) -> &'static str;
+
+    /// Compile or load the artifact described by `manifest`. `dir` is the
+    /// artifacts directory; backends that synthesize their executables (the
+    /// reference interpreter) may ignore it.
+    fn load(&self, dir: &Path, manifest: &Manifest) -> Result<Box<dyn Executable>>;
+
+    /// Manifests this backend can provide when no artifacts directory
+    /// exists. This is what keeps the no-XLA, no-`make artifacts` path
+    /// hermetic: the registry merges these under any on-disk manifests.
+    fn builtin_manifests(&self) -> Vec<Manifest> {
+        Vec::new()
+    }
+}

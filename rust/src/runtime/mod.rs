@@ -1,13 +1,23 @@
-//! PJRT runtime: load AOT artifacts (HLO text + manifest), compile once,
-//! execute from the hot path. See DESIGN.md §2 (L3) and §4 (interchange).
+//! Runtime: load AOT artifacts (manifest + optional HLO text), pick an
+//! execution backend, run from the hot path. See rust/DESIGN.md §1 (the
+//! layer map), §2 (interchange), and §3 (backends).
+//!
+//! The `pjrt` cargo feature (off by default) adds the XLA/PJRT backend;
+//! without it, kernel artifacts run on the pure-Rust `ReferenceBackend`.
 
 pub mod artifact;
+pub mod backend;
 pub mod json;
 pub mod manifest;
 pub mod params;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
 pub mod tensor;
 
 pub use artifact::{ArtifactRegistry, Executable};
+pub use backend::Backend;
 pub use manifest::{Manifest, Slot};
 pub use params::ParamStore;
+pub use reference::ReferenceBackend;
 pub use tensor::{DType, Tensor, TensorData};

@@ -1,0 +1,142 @@
+//! PJRT/XLA execution backend: compile AOT HLO artifacts once, execute from
+//! the hot path. Only built under the non-default `pjrt` cargo feature —
+//! the default build has no XLA dependency at all and runs kernels through
+//! `reference::ReferenceBackend`.
+//!
+//! All graphs are lowered with `return_tuple=True` on the Python side, so
+//! an execution result is always a single tuple literal that decomposes
+//! into the manifest's outputs.
+//!
+//! Note: the `xla` crate this compiles against may be the in-repo
+//! type-check stub (`third_party/xla-stub`), in which case client creation
+//! fails at runtime with a descriptive error and `ArtifactRegistry::open`
+//! falls back to the reference backend.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::backend::{Backend, Executable};
+use super::manifest::Manifest;
+use super::tensor::{DType, Tensor, TensorData};
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client (fails fast when XLA is unavailable).
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtBackend { client })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn load(&self, dir: &Path, manifest: &Manifest) -> Result<Box<dyn Executable>> {
+        let hlo_path = dir.join(format!("{}.hlo.txt", manifest.name));
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", manifest.name))?;
+        Ok(Box::new(PjrtExecutable { name: manifest.name.clone(), exe }))
+    }
+}
+
+struct PjrtExecutable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable for PjrtExecutable {
+    fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| to_literal(t)).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {}: {e:?}", self.name))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple {}: {e:?}", self.name))?;
+        parts.iter().map(from_literal).collect()
+    }
+}
+
+pub fn element_type(dtype: DType) -> xla::ElementType {
+    match dtype {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+        DType::U32 => xla::ElementType::U32,
+    }
+}
+
+/// Convert a host tensor to an XLA literal (host copy).
+pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(
+        element_type(t.dtype()),
+        &t.shape,
+        raw_bytes(t),
+    )
+    .map_err(|e| anyhow!("literal creation: {e:?}"))
+}
+
+/// Convert an XLA literal back into a host tensor.
+pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("{e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = match shape.ty() {
+        xla::ElementType::F32 => {
+            TensorData::F32(lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
+        }
+        xla::ElementType::S32 => {
+            TensorData::I32(lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?)
+        }
+        xla::ElementType::U32 => {
+            TensorData::U32(lit.to_vec::<u32>().map_err(|e| anyhow!("{e:?}"))?)
+        }
+        other => bail!("unsupported literal element type {other:?}"),
+    };
+    Ok(Tensor { shape: dims, data })
+}
+
+/// Reinterpret the tensor's 4-byte-element buffer as bytes (little-endian
+/// host layout, which is what the CPU PJRT client expects).
+fn raw_bytes(t: &Tensor) -> &[u8] {
+    fn cast<T>(v: &[T]) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+    }
+    match &t.data {
+        TensorData::F32(v) => cast(v),
+        TensorData::I32(v) => cast(v),
+        TensorData::U32(v) => cast(v),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::from_f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let lit = to_literal(&t).unwrap();
+        let back = from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_i32_scalar() {
+        let t = Tensor::scalar_i32(-7);
+        let back = from_literal(&to_literal(&t).unwrap()).unwrap();
+        assert_eq!(back.item_i32().unwrap(), -7);
+    }
+}

@@ -1,0 +1,476 @@
+//! Pure-Rust reference backend: interprets the standalone kernel artifacts
+//! as direct f32 math, with no XLA and no compiled artifacts directory.
+//!
+//! The math mirrors `python/compile/kernels/ref.py` (which the Pallas
+//! kernels are themselves validated against in pytest), so the Rust test
+//! suite exercises the same contracts hermetically:
+//!
+//! * `kernel_softmax_attention` — causal softmax attention, scale d^-1/2
+//!   (Eq. 1; the quadratic teacher).
+//! * `kernel_linear_attention` — causal *normalized* linear attention with
+//!   the exp feature map baked in, computed in the recurrent (S, z) state
+//!   form the serving engine carries (Eq. 2).
+//! * `fig6_{softmax,hedgehog,taylor}_n*` — the Fig 6 scaling artifacts:
+//!   softmax, the data-independent Hedgehog map `[exp(x), exp(-x)]`
+//!   (Eq. 6), and 2nd-degree Taylor features (Sec 4.1).
+//!
+//! Model graphs (`*_init`, `*_train_step`, ...) have no reference
+//! interpretation — they need the compiled HLO path (`pjrt` feature).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::backend::{Backend, Executable as BackendExecutable};
+use super::json::Json;
+use super::manifest::{Manifest, Slot};
+use super::tensor::{DType, Tensor};
+
+/// Denominator guard, matching `ref.py` / the Pallas kernels.
+const EPS: f32 = 1e-6;
+
+/// Shape of the builtin `kernel_*` artifacts (see aot.py `export_kernels`).
+const KERNEL_SHAPE: [usize; 4] = [1, 2, 128, 16];
+
+/// Feature maps the linear-attention interpreter supports. Inputs are raw
+/// q/k rows of length d; outputs are the Dp-dimensional positive features.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FeatureMap {
+    /// phi(x) = exp(x) — what `kernel_linear_attention` bakes in.
+    Exp,
+    /// phi(x) = [exp(x), exp(-x)] — Hedgehog's negation map (Eq. 6).
+    Hedgehog,
+    /// phi(x) = [1, x, vec(x x^T)/sqrt(2)] on x pre-scaled by d^-1/4.
+    Taylor,
+}
+
+impl FeatureMap {
+    /// Feature dimension Dp for head dimension d.
+    fn dim(self, d: usize) -> usize {
+        match self {
+            FeatureMap::Exp => d,
+            FeatureMap::Hedgehog => 2 * d,
+            FeatureMap::Taylor => 1 + d + d * d,
+        }
+    }
+
+    /// Apply to one row `x`, replacing the contents of `out`.
+    fn apply(self, x: &[f32], out: &mut Vec<f32>) {
+        out.clear();
+        match self {
+            FeatureMap::Exp => out.extend(x.iter().map(|&v| v.exp())),
+            FeatureMap::Hedgehog => {
+                out.extend(x.iter().map(|&v| v.exp()));
+                out.extend(x.iter().map(|&v| (-v).exp()));
+            }
+            FeatureMap::Taylor => {
+                let s = (x.len() as f32).powf(-0.25);
+                out.push(1.0);
+                out.extend(x.iter().map(|&v| v * s));
+                let isqrt2 = std::f32::consts::FRAC_1_SQRT_2;
+                for &xi in x {
+                    for &xj in x {
+                        out.push(xi * s * xj * s * isqrt2);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The two attention forms the interpreter implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kernel {
+    Softmax,
+    Linear(FeatureMap),
+}
+
+/// Map an artifact name to its reference interpretation, if any.
+fn kernel_for(name: &str) -> Option<Kernel> {
+    match name {
+        "kernel_linear_attention" => Some(Kernel::Linear(FeatureMap::Exp)),
+        "kernel_softmax_attention" => Some(Kernel::Softmax),
+        _ if name.starts_with("fig6_softmax_n") => Some(Kernel::Softmax),
+        _ if name.starts_with("fig6_hedgehog_n") => Some(Kernel::Linear(FeatureMap::Hedgehog)),
+        _ if name.starts_with("fig6_taylor_n") => Some(Kernel::Linear(FeatureMap::Taylor)),
+        _ => None,
+    }
+}
+
+/// Interprets kernel artifacts as direct f32 math. Stateless and cheap to
+/// construct; the registry owns one behind `Box<dyn Backend>`.
+#[derive(Debug, Default)]
+pub struct ReferenceBackend;
+
+impl ReferenceBackend {
+    pub fn new() -> Self {
+        ReferenceBackend
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn load(&self, _dir: &Path, manifest: &Manifest) -> Result<Box<dyn BackendExecutable>> {
+        let kernel = kernel_for(&manifest.name).ok_or_else(|| {
+            anyhow!(
+                "artifact {:?} has no pure-Rust reference interpretation — model graphs \
+                 need compiled artifacts and the `pjrt` feature (run `make artifacts`)",
+                manifest.name
+            )
+        })?;
+        if manifest.inputs.len() != 3 || manifest.outputs.len() != 1 {
+            bail!(
+                "reference kernel {:?}: expected a q,k,v -> out manifest, got {} in / {} out",
+                manifest.name,
+                manifest.inputs.len(),
+                manifest.outputs.len()
+            );
+        }
+        for slot in manifest.inputs.iter().chain(&manifest.outputs) {
+            if slot.shape.len() != 4 || slot.dtype != DType::F32 {
+                bail!(
+                    "reference kernel {:?}: slot {:?} must be rank-4 f32, got {:?}/{}",
+                    manifest.name,
+                    slot.name,
+                    slot.shape,
+                    slot.dtype.name()
+                );
+            }
+        }
+        // The slots must agree with each other (execute slices k/v/out by
+        // q's dims): q == k, and v/out share q's (b, h, n) with a free Dv.
+        let (q, k, v, out) =
+            (&manifest.inputs[0], &manifest.inputs[1], &manifest.inputs[2], &manifest.outputs[0]);
+        if k.shape != q.shape || v.shape[..3] != q.shape[..3] || out.shape != v.shape {
+            bail!(
+                "reference kernel {:?}: inconsistent slot shapes q {:?} k {:?} v {:?} out {:?}",
+                manifest.name,
+                q.shape,
+                k.shape,
+                v.shape,
+                out.shape
+            );
+        }
+        Ok(Box::new(RefKernel { kernel }))
+    }
+
+    fn builtin_manifests(&self) -> Vec<Manifest> {
+        vec![
+            builtin_kernel_manifest("kernel_linear_attention", "linear_attention"),
+            builtin_kernel_manifest("kernel_softmax_attention", "softmax_attention"),
+        ]
+    }
+}
+
+/// Manifest for one builtin `kernel_*` artifact, mirroring the manifests
+/// `python/compile/aot.py::export_kernels` writes to disk.
+fn builtin_kernel_manifest(name: &str, kernel: &str) -> Manifest {
+    let slot = |n: &str| Slot {
+        name: n.to_string(),
+        shape: KERNEL_SHAPE.to_vec(),
+        dtype: DType::F32,
+    };
+    let mut meta = BTreeMap::new();
+    meta.insert("graph".to_string(), Json::Str("kernel".to_string()));
+    meta.insert("kernel".to_string(), Json::Str(kernel.to_string()));
+    meta.insert("backend".to_string(), Json::Str("reference".to_string()));
+    for (key, val) in [("b", 0usize), ("h", 1), ("n", 2), ("d", 3)] {
+        meta.insert(key.to_string(), Json::Num(KERNEL_SHAPE[val] as f64));
+    }
+    Manifest {
+        name: name.to_string(),
+        inputs: vec![slot("q"), slot("k"), slot("v")],
+        outputs: vec![slot("out")],
+        meta,
+    }
+}
+
+struct RefKernel {
+    kernel: Kernel,
+}
+
+impl BackendExecutable for RefKernel {
+    fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != 3 {
+            bail!("reference kernel expects q, k, v inputs, got {}", inputs.len());
+        }
+        let (q, k, v) = (inputs[0], inputs[1], inputs[2]);
+        let (b, h, n, d) = match q.shape[..] {
+            [b, h, n, d] => (b, h, n, d),
+            _ => bail!("reference kernel: q must be rank-4, got {:?}", q.shape),
+        };
+        let dv = v.shape[3];
+        let qs = q.as_f32()?;
+        let ks = k.as_f32()?;
+        let vs = v.as_f32()?;
+
+        let mut out = vec![0.0f32; b * h * n * dv];
+        for bh in 0..b * h {
+            let qh = &qs[bh * n * d..(bh + 1) * n * d];
+            let kh = &ks[bh * n * d..(bh + 1) * n * d];
+            let vh = &vs[bh * n * dv..(bh + 1) * n * dv];
+            let oh = &mut out[bh * n * dv..(bh + 1) * n * dv];
+            match self.kernel {
+                Kernel::Softmax => softmax_head(qh, kh, vh, oh, d, dv),
+                Kernel::Linear(fm) => linear_head(fm, qh, kh, vh, oh, d, dv),
+            }
+        }
+        Ok(vec![Tensor::from_f32(out, &[b, h, n, dv])])
+    }
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Causal softmax attention for one (batch, head): the quadratic teacher,
+/// row-wise with max-subtraction (matches ref.softmax_attention).
+fn softmax_head(q: &[f32], k: &[f32], v: &[f32], out: &mut [f32], d: usize, dv: usize) {
+    let n = q.len() / d;
+    let scale = (d as f32).sqrt().recip();
+    let mut scores = vec![0.0f32; n];
+    for i in 0..n {
+        let qi = &q[i * d..(i + 1) * d];
+        let mut m = f32::NEG_INFINITY;
+        for (j, s) in scores.iter_mut().enumerate().take(i + 1) {
+            *s = dot(qi, &k[j * d..(j + 1) * d]) * scale;
+            m = m.max(*s);
+        }
+        let mut l = 0.0;
+        for s in scores.iter_mut().take(i + 1) {
+            *s = (*s - m).exp();
+            l += *s;
+        }
+        let oi = &mut out[i * dv..(i + 1) * dv];
+        for (j, s) in scores.iter().enumerate().take(i + 1) {
+            let w = s / l;
+            for (o, &x) in oi.iter_mut().zip(&v[j * dv..(j + 1) * dv]) {
+                *o += w * x;
+            }
+        }
+    }
+}
+
+/// Causal normalized linear attention for one (batch, head), in the
+/// recurrent (S, z) state form (matches ref.linear_attention_recurrent,
+/// which is mathematically identical to the quadratic Eq. 2 form).
+fn linear_head(
+    fm: FeatureMap,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    out: &mut [f32],
+    d: usize,
+    dv: usize,
+) {
+    let n = q.len() / d;
+    let dp = fm.dim(d);
+    let mut s = vec![0.0f32; dp * dv]; // running sum of phi(k) v^T
+    let mut z = vec![0.0f32; dp]; // running sum of phi(k)
+    let mut qf = Vec::with_capacity(dp);
+    let mut kf = Vec::with_capacity(dp);
+    for i in 0..n {
+        fm.apply(&k[i * d..(i + 1) * d], &mut kf);
+        let vi = &v[i * dv..(i + 1) * dv];
+        for (p, &kp) in kf.iter().enumerate() {
+            z[p] += kp;
+            for (sp, &ve) in s[p * dv..(p + 1) * dv].iter_mut().zip(vi) {
+                *sp += kp * ve;
+            }
+        }
+        fm.apply(&q[i * d..(i + 1) * d], &mut qf);
+        let den = dot(&qf, &z) + EPS;
+        let oi = &mut out[i * dv..(i + 1) * dv];
+        for (p, &qp) in qf.iter().enumerate() {
+            for (o, &sp) in oi.iter_mut().zip(&s[p * dv..(p + 1) * dv]) {
+                *o += qp * sp;
+            }
+        }
+        for o in oi.iter_mut() {
+            *o /= den;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Pcg32;
+
+    fn rand_tensor(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::from_f32((0..n).map(|_| rng.normal() * 0.3).collect(), shape)
+    }
+
+    fn run_kernel(name: &str, shape: &[usize], inputs: &[Tensor]) -> Tensor {
+        let backend = ReferenceBackend::new();
+        let slot = |n: &str| Slot { name: n.into(), shape: shape.to_vec(), dtype: DType::F32 };
+        let manifest = Manifest {
+            name: name.to_string(),
+            inputs: vec![slot("q"), slot("k"), slot("v")],
+            outputs: vec![slot("out")],
+            meta: BTreeMap::new(),
+        };
+        let exe = backend.load(Path::new("unused"), &manifest).unwrap();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let mut outs = exe.execute(&refs).unwrap();
+        outs.remove(0)
+    }
+
+    /// Quadratic-form oracle for normalized linear attention with the exp
+    /// map (ref.linear_attention on exp features), materialized per row.
+    fn linear_exp_oracle(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * d];
+        for i in 0..n {
+            let qf: Vec<f32> = q[i * d..(i + 1) * d].iter().map(|x| x.exp()).collect();
+            let mut weights = vec![0.0f32; i + 1];
+            let mut den = 0.0;
+            for (j, w) in weights.iter_mut().enumerate() {
+                let kf: Vec<f32> = k[j * d..(j + 1) * d].iter().map(|x| x.exp()).collect();
+                *w = dot(&qf, &kf);
+                den += *w;
+            }
+            den += EPS;
+            for (j, w) in weights.iter().enumerate() {
+                for e in 0..d {
+                    out[i * d + e] += w / den * v[j * d + e];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn linear_exp_matches_quadratic_oracle() {
+        let (n, d) = (32, 8);
+        let shape = [1, 1, n, d];
+        let mut rng = Pcg32::new(7);
+        let q = rand_tensor(&mut rng, &shape);
+        let k = rand_tensor(&mut rng, &shape);
+        let v = rand_tensor(&mut rng, &shape);
+        let out = run_kernel(
+            "kernel_linear_attention",
+            &shape,
+            &[q.clone(), k.clone(), v.clone()],
+        );
+        let oracle = linear_exp_oracle(
+            q.as_f32().unwrap(),
+            k.as_f32().unwrap(),
+            v.as_f32().unwrap(),
+            n,
+            d,
+        );
+        for (a, b) in out.as_f32().unwrap().iter().zip(&oracle) {
+            assert!((a - b).abs() < 1e-4, "recurrent {a} vs quadratic {b}");
+        }
+    }
+
+    #[test]
+    fn attention_rows_are_convex_combinations() {
+        // With all-ones values, any row-normalized attention must output ~1.
+        let shape = [1, 2, 64, 8];
+        let n: usize = shape.iter().product();
+        let mut rng = Pcg32::new(3);
+        let q = rand_tensor(&mut rng, &shape);
+        let k = rand_tensor(&mut rng, &shape);
+        let v = Tensor::from_f32(vec![1.0; n], &shape);
+        for (name, tol) in [
+            ("kernel_softmax_attention", 1e-5),
+            ("kernel_linear_attention", 1e-3),
+            ("fig6_hedgehog_n64", 1e-3),
+            ("fig6_taylor_n64", 1e-3),
+        ] {
+            let out = run_kernel(name, &shape, &[q.clone(), k.clone(), v.clone()]);
+            for &x in out.as_f32().unwrap() {
+                assert!((x - 1.0).abs() < tol, "{name}: got {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn outputs_are_causal() {
+        // Perturbing the last token must leave every earlier output bit-identical.
+        let shape = [1, 1, 16, 4];
+        let mut rng = Pcg32::new(11);
+        let q = rand_tensor(&mut rng, &shape);
+        let k = rand_tensor(&mut rng, &shape);
+        let v = rand_tensor(&mut rng, &shape);
+        for name in ["kernel_softmax_attention", "kernel_linear_attention"] {
+            let base = run_kernel(name, &shape, &[q.clone(), k.clone(), v.clone()]);
+            let mut k2 = k.clone();
+            let mut v2 = v.clone();
+            let last = 15 * 4;
+            for x in &mut k2.as_f32_mut().unwrap()[last..] {
+                *x += 5.0;
+            }
+            for x in &mut v2.as_f32_mut().unwrap()[last..] {
+                *x -= 3.0;
+            }
+            let pert = run_kernel(name, &shape, &[q.clone(), k2, v2]);
+            assert_eq!(
+                &base.as_f32().unwrap()[..last],
+                &pert.as_f32().unwrap()[..last],
+                "{name}: prefix changed"
+            );
+            assert_ne!(
+                &base.as_f32().unwrap()[last..],
+                &pert.as_f32().unwrap()[last..],
+                "{name}: last token insensitive to its own k/v"
+            );
+        }
+    }
+
+    #[test]
+    fn feature_map_dims() {
+        assert_eq!(FeatureMap::Exp.dim(16), 16);
+        assert_eq!(FeatureMap::Hedgehog.dim(16), 32);
+        assert_eq!(FeatureMap::Taylor.dim(16), 1 + 16 + 256);
+        let mut out = Vec::new();
+        FeatureMap::Taylor.apply(&[1.0, -2.0], &mut out);
+        assert_eq!(out.len(), 7);
+        assert_eq!(out[0], 1.0);
+        // Hedgehog features are strictly positive (required by Eq. 2).
+        FeatureMap::Hedgehog.apply(&[-3.0, 0.0, 2.5], &mut out);
+        assert!(out.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn artifact_name_routing() {
+        assert_eq!(kernel_for("kernel_linear_attention"), Some(Kernel::Linear(FeatureMap::Exp)));
+        assert_eq!(kernel_for("kernel_softmax_attention"), Some(Kernel::Softmax));
+        assert_eq!(kernel_for("fig6_softmax_n1024"), Some(Kernel::Softmax));
+        assert_eq!(kernel_for("fig6_hedgehog_n256"), Some(Kernel::Linear(FeatureMap::Hedgehog)));
+        assert_eq!(kernel_for("fig6_taylor_n512"), Some(Kernel::Linear(FeatureMap::Taylor)));
+        assert_eq!(kernel_for("ar_softmax_train_step"), None);
+    }
+
+    #[test]
+    fn model_graphs_rejected() {
+        let backend = ReferenceBackend::new();
+        let manifest = Manifest {
+            name: "ar_softmax_init".to_string(),
+            inputs: vec![],
+            outputs: vec![],
+            meta: BTreeMap::new(),
+        };
+        let err = backend.load(Path::new("unused"), &manifest).unwrap_err();
+        assert!(err.to_string().contains("no pure-Rust reference interpretation"));
+    }
+
+    #[test]
+    fn builtin_manifests_match_aot_export() {
+        let ms = ReferenceBackend::new().builtin_manifests();
+        assert_eq!(ms.len(), 2);
+        for m in &ms {
+            assert_eq!(m.inputs.len(), 3);
+            assert_eq!(m.outputs[0].name, "out");
+            assert_eq!(m.inputs[0].shape, KERNEL_SHAPE.to_vec());
+            assert_eq!(m.meta_str("graph"), Some("kernel"));
+            assert_eq!(m.meta_usize("n"), Some(128));
+        }
+    }
+}

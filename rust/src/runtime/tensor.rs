@@ -1,9 +1,9 @@
-//! Host-side tensor type bridging Rust data and XLA `Literal`s.
+//! Host-side tensor type: a dtype, a shape, and a flat row-major buffer.
 //!
-//! Every value crossing the PJRT boundary is a `Tensor`: a dtype, a shape,
-//! and a flat host buffer. Conversions to/from `xla::Literal` are explicit
-//! and dtype-checked; the rest of the coordinator never touches raw
-//! literals.
+//! Every value crossing an execution backend is a `Tensor`; the conversion
+//! to backend-native formats (e.g. XLA literals, see `pjrt.rs`) lives with
+//! the backend, so the coordinator, trainer, and server stay backend- and
+//! XLA-agnostic.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -30,14 +30,6 @@ impl DType {
             DType::F32 => "f32",
             DType::I32 => "i32",
             DType::U32 => "u32",
-        }
-    }
-
-    pub fn element_type(self) -> xla::ElementType {
-        match self {
-            DType::F32 => xla::ElementType::F32,
-            DType::I32 => xla::ElementType::S32,
-            DType::U32 => xla::ElementType::U32,
         }
     }
 
@@ -152,69 +144,11 @@ impl Tensor {
         }
         Ok(v[0])
     }
-
-    fn raw_bytes(&self) -> &[u8] {
-        match &self.data {
-            TensorData::F32(v) => bytemuck_cast(v),
-            TensorData::I32(v) => bytemuck_cast(v),
-            TensorData::U32(v) => bytemuck_cast(v),
-        }
-    }
-
-    /// Convert to an XLA literal (host copy).
-    pub fn to_literal(&self) -> xla::Literal {
-        xla::Literal::create_from_shape_and_untyped_data(
-            self.dtype().element_type(),
-            &self.shape,
-            self.raw_bytes(),
-        )
-        .expect("literal creation")
-    }
-
-    /// Convert an XLA literal back into a host tensor.
-    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
-        let shape = lit.array_shape().map_err(|e| anyhow!("{e:?}"))?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = match shape.ty() {
-            xla::ElementType::F32 => {
-                TensorData::F32(lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
-            }
-            xla::ElementType::S32 => {
-                TensorData::I32(lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?)
-            }
-            xla::ElementType::U32 => {
-                TensorData::U32(lit.to_vec::<u32>().map_err(|e| anyhow!("{e:?}"))?)
-            }
-            other => bail!("unsupported literal element type {other:?}"),
-        };
-        Ok(Tensor { shape: dims, data })
-    }
-}
-
-/// Reinterpret a 4-byte-element slice as bytes (little-endian host layout,
-/// which is what the CPU PJRT client expects).
-fn bytemuck_cast<T>(v: &[T]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn roundtrip_f32() {
-        let t = Tensor::from_f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
-        let lit = t.to_literal();
-        let back = Tensor::from_literal(&lit).unwrap();
-        assert_eq!(t, back);
-    }
-
-    #[test]
-    fn roundtrip_i32_scalar() {
-        let t = Tensor::scalar_i32(-7);
-        let back = Tensor::from_literal(&t.to_literal()).unwrap();
-        assert_eq!(back.item_i32().unwrap(), -7);
-    }
 
     #[test]
     fn zeros_shape() {
@@ -224,9 +158,54 @@ mod tests {
     }
 
     #[test]
-    fn dtype_parse() {
-        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
-        assert_eq!(DType::parse("i32").unwrap(), DType::I32);
-        assert!(DType::parse("f64").is_err());
+    fn dtype_parse_roundtrips_names() {
+        for dt in [DType::F32, DType::I32, DType::U32] {
+            assert_eq!(DType::parse(dt.name()).unwrap(), dt);
+        }
+    }
+
+    #[test]
+    fn dtype_parse_rejects_unknown() {
+        for bad in ["f64", "bf16", "F32", "int32", ""] {
+            assert!(DType::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_f32_shape_mismatch_panics() {
+        let _ = Tensor::from_f32(vec![1.0, 2.0, 3.0], &[2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_i32_shape_mismatch_panics() {
+        let _ = Tensor::from_i32(vec![1], &[0]);
+    }
+
+    #[test]
+    fn scalars_are_zero_dim_single_element() {
+        let t = Tensor::scalar_u32(9);
+        assert!(t.shape.is_empty());
+        assert_eq!(t.len(), 1);
+        assert_eq!(Tensor::scalar_f32(2.5).item_f32().unwrap(), 2.5);
+        assert_eq!(Tensor::scalar_i32(-7).item_i32().unwrap(), -7);
+    }
+
+    #[test]
+    fn typed_accessors_reject_wrong_dtype() {
+        let f = Tensor::scalar_f32(1.0);
+        let mut i = Tensor::scalar_i32(1);
+        assert!(f.as_i32().is_err());
+        assert!(i.as_f32().is_err());
+        assert!(i.as_f32_mut().is_err());
+        assert!(f.item_i32().is_err());
+        assert!(i.item_f32().is_err());
+    }
+
+    #[test]
+    fn item_rejects_multi_element() {
+        let t = Tensor::from_f32(vec![1.0, 2.0], &[2]);
+        assert!(t.item_f32().is_err());
     }
 }

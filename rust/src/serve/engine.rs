@@ -7,6 +7,9 @@
 //! — no KV cache growth. Slots are independent sequences; `reset_slot`
 //! zeroes one slot's state columns without touching the others (state
 //! isolation is property-tested in rust/tests).
+//!
+//! Execution is backend-agnostic: the engine drives an `Executable` handle
+//! and never sees whether PJRT or the reference backend is underneath.
 
 use std::rc::Rc;
 

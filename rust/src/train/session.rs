@@ -4,7 +4,10 @@
 //! counter, and knows how to assemble an artifact's input vector from them
 //! plus a named `Batch`. The same driver runs task training, distillation,
 //! finetuning, and LoRA (any graph whose manifest follows the
-//! params/m/v/step/lr/wd/batch naming convention from aot.py).
+//! params/m/v/step/lr/wd/batch naming convention from aot.py). It drives
+//! artifacts through the backend-agnostic `Executable` handle, so it needs
+//! compiled artifacts (the `pjrt` path) only because no model graph has a
+//! reference interpretation yet.
 
 use std::rc::Rc;
 

@@ -1,13 +1,28 @@
-//! Integration: load real AOT artifacts, compile on PJRT CPU, execute.
+//! Integration: execute artifacts end-to-end through the registry's
+//! backend seam.
 //!
-//! Requires `make artifacts` to have populated `artifacts/` (the Makefile
-//! test target guarantees this ordering).
+//! Hermetic by default: with no `artifacts/` directory (no XLA, no `make
+//! artifacts`), `ArtifactRegistry::open` falls back to the pure-Rust
+//! `ReferenceBackend`, which provides and interprets the two standalone
+//! kernel artifacts. When compiled artifacts are present (and the `pjrt`
+//! feature is enabled) the same tests exercise the compiled path, and the
+//! model-graph test below stops self-skipping.
 
 use hedgehog::runtime::{ArtifactRegistry, ParamStore, Tensor};
 
 fn registry() -> ArtifactRegistry {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    ArtifactRegistry::open(dir).expect("run `make artifacts` first")
+    ArtifactRegistry::open(dir).expect("registry open must succeed without artifacts/")
+}
+
+#[test]
+fn registry_serves_kernels_without_artifacts_dir() {
+    let reg = registry();
+    let names = reg.names();
+    assert!(names.contains(&"kernel_linear_attention"));
+    assert!(names.contains(&"kernel_softmax_attention"));
+    assert!(reg.manifest("kernel_linear_attention").unwrap().inputs.len() == 3);
+    assert!(reg.get("definitely_not_an_artifact").is_err());
 }
 
 #[test]
@@ -38,8 +53,53 @@ fn kernel_linear_attention_runs_and_is_normalized() {
 }
 
 #[test]
+fn kernel_softmax_attention_rows_are_convex() {
+    let reg = registry();
+    let n = 1 * 2 * 128 * 16;
+    let q: Vec<f32> = (0..n).map(|i| ((i * 41 % 83) as f32 / 83.0) - 0.5).collect();
+    let k: Vec<f32> = (0..n).map(|i| ((i * 59 % 79) as f32 / 79.0) - 0.5).collect();
+    let v = vec![1.0f32; n];
+    let shape = [1usize, 2, 128, 16];
+    let out = reg
+        .run(
+            "kernel_softmax_attention",
+            &[
+                Tensor::from_f32(q, &shape),
+                Tensor::from_f32(k, &shape),
+                Tensor::from_f32(v, &shape),
+            ],
+        )
+        .unwrap();
+    for &x in out[0].as_f32().unwrap() {
+        assert!((x - 1.0).abs() < 1e-3, "got {x}");
+    }
+}
+
+#[test]
+fn manifest_shapes_match_execution() {
+    let reg = registry();
+    let exe = reg.get("kernel_linear_attention").unwrap();
+    // feeding wrong shapes must fail loudly
+    let bad = vec![Tensor::scalar_f32(0.0); exe.manifest.inputs.len()];
+    assert!(exe.run(&bad).is_err());
+    // and so must feeding the wrong input count
+    assert!(exe.run(&[Tensor::scalar_f32(0.0)]).is_err());
+}
+
+/// Model graphs need compiled artifacts (`make artifacts` + `pjrt`); the
+/// test self-skips when they are absent so the suite stays hermetic.
+#[test]
 fn init_train_eval_cycle_decreases_loss() {
     let reg = registry();
+    // Model graphs have no reference interpretation: require the PJRT
+    // backend (not just manifests on disk) before driving them.
+    if reg.backend_name() != "pjrt"
+        || !reg.contains("ar_softmax_init")
+        || !reg.contains("ar_softmax_train_step")
+    {
+        eprintln!("skipping: needs compiled ar_softmax artifacts + the `pjrt` backend");
+        return;
+    }
     let init = reg.get("ar_softmax_init").unwrap();
     let outs = init.run(&[Tensor::scalar_u32(0)]).unwrap();
     let mut params = ParamStore::from_outputs(&init.manifest.outputs, outs);
@@ -101,13 +161,4 @@ fn init_train_eval_cycle_decreases_loss() {
         "loss did not decrease: {first_loss:?} -> {last_loss}"
     );
     assert_eq!(step.item_i32().unwrap(), 5);
-}
-
-#[test]
-fn manifest_shapes_match_execution() {
-    let reg = registry();
-    let eval = reg.get("ar_softmax_eval").unwrap();
-    // feeding wrong shape must fail loudly
-    let bad = vec![Tensor::scalar_f32(0.0); eval.manifest.inputs.len()];
-    assert!(eval.run(&bad).is_err());
 }

@@ -1,0 +1,245 @@
+//! **Type-check stub** for the `xla` PJRT binding.
+//!
+//! The real `xla` crate links against the XLA/PJRT shared libraries, which
+//! CI and most dev machines do not have. This stub mirrors exactly the API
+//! surface `hedgehog`'s `runtime::pjrt` backend uses, so that
+//! `cargo build --features pjrt` type-checks fully offline:
+//!
+//! * `Literal` is a real host-side container (create / inspect / convert
+//!   round-trips work), so literal-marshalling code is unit-testable.
+//! * Everything that would need the XLA runtime (`PjRtClient::cpu`,
+//!   `compile`, `execute`, HLO parsing) returns a descriptive error at
+//!   runtime.
+//!
+//! To run compiled artifacts for real, repoint the `xla` path dependency in
+//! `rust/Cargo.toml` at the actual binding; the call sites compile against
+//! either.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real binding's `{e:?}`-style call sites.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn runtime_unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: the `xla` package in this build is the offline type-check stub \
+         (third_party/xla-stub); link the real PJRT binding to execute compiled artifacts"
+    ))
+}
+
+/// Element types of the subset of XLA dtypes the runtime exchanges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[non_exhaustive]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    Bf16,
+    F16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    fn size_bytes(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::Bf16 | ElementType::F16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Host-native element types that can move in and out of a `Literal`.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+}
+
+/// Array shape of a non-tuple literal: element type + dimensions.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host literal: a typed, shaped byte buffer (fully functional in the stub).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if data.len() != n * ty.size_bytes() {
+            return Err(Error(format!(
+                "literal data length {} does not match shape {dims:?} of {ty:?}",
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { ty: self.ty, dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "literal element type {:?} does not match requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        let size = std::mem::size_of::<T>();
+        let n = self.data.len() / size;
+        let mut out: Vec<T> = Vec::with_capacity(n);
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.data.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                n * size,
+            );
+            out.set_len(n);
+        }
+        Ok(out)
+    }
+
+    /// Decompose a tuple literal. Stub literals are never tuples (tuples only
+    /// come back from `execute`, which the stub cannot perform).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(runtime_unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (opaque; parsing needs the XLA runtime).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(runtime_unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle returned by `execute`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(runtime_unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(runtime_unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(runtime_unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(runtime_unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.0f32, 2.0, 3.0, 4.0];
+        let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &bytes).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &[0; 4])
+            .is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+    }
+}
