@@ -1,0 +1,27 @@
+# Entry points shared by CI and local runs (see rust/DESIGN.md §4-5).
+#
+#   make build        release build (tier-1, no XLA)
+#   make test         tier-1 test suite
+#   make bench        full kernel + fig6 bench sweep -> BENCH_*.json at repo root
+#   make bench-smoke  CI short mode: small n, few reps, parity-gated
+#
+# `make artifacts` (model-graph export) lives in python/compile and needs
+# jax; everything here is hermetic Rust.
+
+.PHONY: build test bench bench-smoke
+
+build:
+	cargo build --release
+
+test: build
+	cargo test -q
+
+# The kernel harness exits nonzero if any chunked configuration diverges
+# from the naive oracle beyond 1e-4 — so `make bench` doubles as a check.
+bench:
+	cargo bench --bench kernel_micro
+	cargo bench --bench fig6_scaling
+
+bench-smoke:
+	BENCH_SMOKE=1 cargo bench --bench kernel_micro
+	BENCH_SMOKE=1 cargo bench --bench fig6_scaling

@@ -1,6 +1,11 @@
 //! Tiny shared bench harness (criterion is not in the offline vendor set):
-//! warmup + repeated timing with mean/min reporting.
+//! warmup + repeated timing with mean/min reporting, plus machine-readable
+//! `BENCH_*.json` emission so CI can track the perf trajectory per PR.
 
+// Each bench binary uses a subset of these helpers.
+#![allow(dead_code)]
+
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 pub struct BenchResult {
@@ -13,6 +18,7 @@ pub struct BenchResult {
 /// Time `f` with one warmup call and `reps` measured calls.
 pub fn bench(name: impl Into<String>, reps: usize, mut f: impl FnMut()) -> BenchResult {
     f(); // warmup
+    let reps = reps.max(1);
     let mut times = Vec::with_capacity(reps);
     for _ in 0..reps {
         let t0 = Instant::now();
@@ -42,4 +48,139 @@ pub fn reps_for(expected_ms: f64) -> usize {
     } else {
         8
     }
+}
+
+/// Short-mode switch for CI: `BENCH_SMOKE=1` shrinks sweeps and rep
+/// counts so the bench-smoke job finishes in seconds while still
+/// exercising every code path (and the parity gate).
+pub fn smoke_mode() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// Where `BENCH_*.json` lands: `$BENCH_OUT_DIR` if set, else the repo
+/// root (one level above the crate, regardless of the cargo invocation
+/// directory — cargo runs bench binaries with cwd = package root).
+pub fn bench_out_path(file: &str) -> PathBuf {
+    match std::env::var("BENCH_OUT_DIR") {
+        Ok(dir) if !dir.is_empty() => PathBuf::from(dir).join(file),
+        _ => Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(file),
+    }
+}
+
+/// One machine-readable perf record. `speedup` and `max_rel_err` are
+/// measured against the document's `baseline` (stated in the JSON
+/// header, since it differs per bench); fields that don't apply to a row
+/// (e.g. speedup for the baseline itself) may be NaN and serialize as
+/// JSON null.
+pub struct BenchRecord {
+    pub kernel: String,
+    pub n: usize,
+    pub threads: usize,
+    pub chunk_size: usize,
+    pub reps: usize,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub ns_per_iter: f64,
+    pub tokens_per_sec: f64,
+    pub speedup: f64,
+    pub max_rel_err: f64,
+}
+
+impl BenchRecord {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        kernel: &str,
+        n: usize,
+        threads: usize,
+        chunk_size: usize,
+        res: &BenchResult,
+        tokens_per_iter: usize,
+        speedup: f64,
+        max_rel_err: f64,
+    ) -> Self {
+        BenchRecord {
+            kernel: kernel.to_string(),
+            n,
+            threads,
+            chunk_size,
+            reps: res.reps,
+            mean_ms: res.mean_ms,
+            min_ms: res.min_ms,
+            ns_per_iter: res.mean_ms * 1e6,
+            tokens_per_sec: tokens_per_iter as f64 / (res.mean_ms / 1000.0),
+            speedup,
+            max_rel_err,
+        }
+    }
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Write records as a small self-describing JSON document (serde is not
+/// in the offline vendor set; names are plain ASCII so Debug-quoting is
+/// JSON-safe). `baseline` states what `speedup` / `max_rel_err` compare
+/// against.
+pub fn write_json(
+    path: &Path,
+    title: &str,
+    baseline: &str,
+    records: &[BenchRecord],
+) -> std::io::Result<()> {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"hedgehog_bench_v2\",\n");
+    s.push_str(&format!("  \"title\": {title:?},\n"));
+    s.push_str(&format!("  \"baseline\": {baseline:?},\n"));
+    s.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
+    s.push_str(&format!("  \"available_parallelism\": {cores},\n"));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kernel\": {:?}, \"n\": {}, \"threads\": {}, \"chunk_size\": {}, \
+             \"reps\": {}, \"mean_ms\": {}, \"min_ms\": {}, \"ns_per_iter\": {}, \
+             \"tokens_per_sec\": {}, \"speedup\": {}, \"max_rel_err\": {}}}{}\n",
+            r.kernel,
+            r.n,
+            r.threads,
+            r.chunk_size,
+            r.reps,
+            json_num(r.mean_ms),
+            json_num(r.min_ms),
+            json_num(r.ns_per_iter),
+            json_num(r.tokens_per_sec),
+            json_num(r.speedup),
+            json_num(r.max_rel_err),
+            if i + 1 == records.len() { "" } else { "," },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)
+}
+
+/// Max elementwise relative error (denominator clamped at 1). Non-finite
+/// elements and length mismatches return infinity — `fold(f64::max)`
+/// would silently drop NaN, and the CI parity gate must trip on
+/// NaN/garbage output, not pass on it.
+pub fn max_rel_err(a: &[f32], b: &[f32]) -> f64 {
+    if a.len() != b.len() {
+        return f64::INFINITY;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let e = ((x - y).abs() / y.abs().max(1.0)) as f64;
+            if e.is_finite() {
+                e
+            } else {
+                f64::INFINITY
+            }
+        })
+        .fold(0.0, f64::max)
 }

@@ -1,21 +1,39 @@
 //! Fig 6 reproduction: attention-layer forward wall-clock vs sequence
 //! length for softmax (O(n^2)), Hedgehog linear (O(n)), and 2nd-degree
-//! Taylor (O(n) with a d'^2 constant). Memory column is the analytic
-//! working-set (the CPU PJRT heap is shared, so tensors are the honest
-//! proxy). Expect the paper's shape: softmax curves up quadratically,
-//! hedgehog stays near-linear, taylor is linear but offset by ~d.
+//! Taylor (O(n) with a d'^2 constant). Hermetic since the reference
+//! backend provides the `fig6_*` manifests as builtins — no artifacts
+//! directory needed. Each point runs chunked serial and chunked with all
+//! cores, so the JSON records the threading win alongside the asymptotic
+//! shape. Expect the paper's curves: softmax quadratic, hedgehog
+//! near-linear, taylor linear with a ~d offset.
 
 mod common;
 
-use common::{bench, print_table, reps_for};
+use common::{bench, bench_out_path, print_table, reps_for, smoke_mode, write_json, BenchRecord};
 use hedgehog::data::Pcg32;
-use hedgehog::runtime::{ArtifactRegistry, Tensor};
+use hedgehog::runtime::{ArtifactRegistry, ExecOptions, Tensor};
 
 fn main() {
     let reg = ArtifactRegistry::open("artifacts").expect("artifact registry");
+    println!("backend: {}", reg.backend_name());
+    let smoke = smoke_mode();
     let heads = 4usize;
     let d = 64usize;
+    let max_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // Exec options only tune the reference backend; under PJRT a
+    // threads sweep would measure the same configuration twice and
+    // record a fabricated speedup, so run a single pass there
+    // (threads = 0 in the JSON means backend-managed).
+    let reference = reg.backend_name() == "reference";
+    let thread_cases: Vec<usize> = if !reference {
+        vec![0]
+    } else if max_threads > 1 {
+        vec![1, max_threads]
+    } else {
+        vec![1]
+    };
     let mut results = Vec::new();
+    let mut records: Vec<BenchRecord> = Vec::new();
     let cases: &[(&str, &[usize])] = &[
         ("softmax", &[256, 512, 1024, 2048, 4096]),
         ("hedgehog", &[256, 512, 1024, 2048, 4096, 8192, 16384]),
@@ -23,6 +41,9 @@ fn main() {
     ];
     for &(attn, lens) in cases {
         for &n in lens {
+            if smoke && n > 512 {
+                continue;
+            }
             let name = format!("fig6_{attn}_n{n}");
             if !reg.contains(&name) {
                 continue;
@@ -41,12 +62,42 @@ fn main() {
             } else {
                 n as f64 / 20.0
             };
-            let reps = reps_for(expected);
-            results.push(bench(format!("{attn:<9} n={n:<6}"), reps, || {
-                exe.run(&inputs).unwrap();
-            }));
+            let reps = if smoke { 2 } else { reps_for(expected) };
+            let mut serial_min = f64::NAN;
+            for &threads in &thread_cases {
+                if threads != 0 {
+                    reg.set_exec_options(ExecOptions::default().with_threads(threads));
+                }
+                let res = bench(format!("{attn:<9} n={n:<6} t={threads}"), reps, || {
+                    exe.run(&inputs).unwrap();
+                });
+                let speedup = serial_min / res.min_ms; // NaN for the serial row itself
+                if threads == 1 {
+                    serial_min = res.min_ms;
+                }
+                records.push(BenchRecord::new(
+                    attn,
+                    n,
+                    threads,
+                    reg.exec_options().chunk_size,
+                    &res,
+                    n,
+                    speedup,
+                    f64::NAN,
+                ));
+                results.push(res);
+            }
         }
     }
     print_table("fig6: attention forward scaling (1 x 4 heads x n x 64)", &results);
     println!("paper shape: softmax ~O(n^2); hedgehog ~O(n); taylor O(n) with large constant");
+    let out_path = bench_out_path("BENCH_fig6.json");
+    write_json(
+        &out_path,
+        "fig6 scaling: chunked reference, serial vs all cores",
+        "chunked serial (threads=1) of the same kernel",
+        &records,
+    )
+    .expect("write BENCH_fig6.json");
+    println!("wrote {}", out_path.display());
 }

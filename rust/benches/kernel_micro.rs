@@ -1,48 +1,169 @@
-//! L1 microbench: standalone kernel artifacts (linear vs softmax attention
-//! over identical shapes), plus the host marshalling overhead that the
-//! §Perf pass targets at L3. Runs on whichever backend the registry picks:
-//! compiled PJRT artifacts when present, the pure-Rust reference
-//! interpreter otherwise.
+//! L1 kernel sweep harness: chunked + threaded reference execution vs the
+//! PR-1 naive row-wise path, over n x threads, for every kernel family the
+//! reference backend interprets.
+//!
+//! Emits `BENCH_kernels.json` at the repo root (ns/iter, tokens/sec,
+//! speedup vs naive) and **gates parity**: each chunked configuration is
+//! compared elementwise against the naive oracle and the process exits
+//! nonzero if any diverges beyond 1e-4 relative — this is what CI's
+//! bench-smoke job runs (`BENCH_SMOKE=1` shrinks the sweep).
+//!
+//! Also times the host marshalling overhead the §Perf pass targets at L3.
 
 mod common;
 
-use common::{bench, print_table};
+use std::path::Path;
+
+use common::{
+    bench, bench_out_path, max_rel_err, print_table, reps_for, smoke_mode, write_json,
+    BenchRecord, BenchResult,
+};
 use hedgehog::data::Pcg32;
-use hedgehog::runtime::{ArtifactRegistry, Tensor};
+use hedgehog::runtime::backend::Executable as _;
+use hedgehog::runtime::reference::kernel_manifest;
+use hedgehog::runtime::{Backend, ExecOptions, ReferenceBackend, Tensor};
+
+/// CI gate: chunked output may not diverge from the naive oracle by more
+/// than this (elementwise relative, denominator clamped at 1).
+const PARITY_TOL: f64 = 1e-4;
+
+/// Sweep geometry (fig6-style heads so threading has head parallelism).
+const HEADS: usize = 4;
+const HEAD_DIM: usize = 64;
+
+fn make_inputs(rng: &mut Pcg32, shape: &[usize]) -> Vec<Tensor> {
+    let n: usize = shape.iter().product();
+    (0..3)
+        .map(|_| Tensor::from_f32((0..n).map(|_| rng.normal() * 0.3).collect(), shape))
+        .collect()
+}
+
+/// Rough naive-path wall-clock estimate (ms at ~1 scalar GFLOP/s), only
+/// used to pick rep counts.
+fn estimate_ms(label: &str, n: usize) -> f64 {
+    let (d, bh) = (HEAD_DIM as f64, HEADS as f64);
+    let flops = match label {
+        "softmax" => (n * n) as f64 * 2.0 * d * bh,
+        "linear_exp" => n as f64 * d * d * 4.0 * bh,
+        "hedgehog" => n as f64 * 2.0 * d * d * 4.0 * bh,
+        "taylor" => n as f64 * (1.0 + d + d * d) * d * 4.0 * bh,
+        _ => 1e6,
+    };
+    flops / 1e6
+}
 
 fn main() {
-    let reg = ArtifactRegistry::open("artifacts").expect("artifact registry");
-    println!("backend: {}", reg.backend_name());
-    let mut results = Vec::new();
+    let smoke = smoke_mode();
+    let ns: &[usize] = if smoke { &[64, 256] } else { &[256, 1024, 4096] };
+    let max_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let thread_cases: Vec<usize> = if max_threads > 1 { vec![1, max_threads] } else { vec![1] };
+    let chunk = ExecOptions::DEFAULT_CHUNK;
 
-    let shape = [1usize, 2, 128, 16];
-    let n: usize = shape.iter().product();
-    let mut rng = Pcg32::new(0);
-    let mk = |rng: &mut Pcg32| {
-        Tensor::from_f32((0..n).map(|_| rng.normal() * 0.3).collect(), &shape)
-    };
-    let inputs = vec![mk(&mut rng), mk(&mut rng), mk(&mut rng)];
+    let backend = ReferenceBackend::new();
+    let mut table: Vec<BenchResult> = Vec::new();
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut parity_failures = 0usize;
+    let mut headline_speedup = f64::NAN; // linear chunked+threads vs naive at max n
 
-    for name in ["kernel_linear_attention", "kernel_softmax_attention"] {
-        let exe = reg.get(name).unwrap();
-        results.push(bench(name, 16, || {
-            exe.run(&inputs).unwrap();
-        }));
+    let families: &[(&str, &str)] = &[
+        ("linear_exp", "kernel_linear_attention"),
+        ("softmax", "kernel_softmax_attention"),
+        ("hedgehog", "fig6_hedgehog"),
+        ("taylor", "fig6_taylor"),
+    ];
+    for &(label, family) in families {
+        for &n in ns {
+            // Taylor's Dp = 1 + d + d^2 makes the naive baseline
+            // prohibitively slow at large n; the scaling story for it
+            // lives in fig6_scaling.
+            if label == "taylor" && n > 1024 {
+                continue;
+            }
+            let artifact = if family.starts_with("fig6_") {
+                format!("{family}_n{n}")
+            } else {
+                family.to_string()
+            };
+            let shape = [1usize, HEADS, n, HEAD_DIM];
+            let manifest = kernel_manifest(&artifact, &shape);
+            let exe = backend.load(Path::new("unused"), &manifest).expect("reference load");
+            let mut rng = Pcg32::new(n as u64);
+            let inputs = make_inputs(&mut rng, &shape);
+            let refs: Vec<&Tensor> = inputs.iter().collect();
+            let reps = if smoke { 2 } else { reps_for(estimate_ms(label, n)) };
+
+            // Naive PR-1 baseline: timed, and kept as the parity oracle.
+            backend.set_exec_options(ExecOptions::naive());
+            let naive_out = exe.execute(&refs).expect("naive execute").remove(0);
+            let naive = bench(format!("{label:<10} n={n:<5} naive"), reps, || {
+                exe.execute(&refs).unwrap();
+            });
+            records.push(BenchRecord::new(label, n, 1, 0, &naive, n, 1.0, 0.0));
+
+            for &threads in &thread_cases {
+                backend.set_exec_options(ExecOptions { threads, chunk_size: chunk });
+                let out = exe.execute(&refs).expect("chunked execute").remove(0);
+                let rel = max_rel_err(out.as_f32().unwrap(), naive_out.as_f32().unwrap());
+                if rel > PARITY_TOL {
+                    parity_failures += 1;
+                    eprintln!(
+                        "PARITY FAILURE: {label} n={n} threads={threads} chunk={chunk}: \
+                         max rel err {rel:.3e} > {PARITY_TOL:.0e} vs naive oracle"
+                    );
+                }
+                let res = bench(
+                    format!("{label:<10} n={n:<5} chunked t={threads}"),
+                    reps.max(if smoke { 2 } else { 3 }),
+                    || {
+                        exe.execute(&refs).unwrap();
+                    },
+                );
+                let speedup = naive.min_ms / res.min_ms;
+                if label == "linear_exp" && n == *ns.last().unwrap() && threads == max_threads {
+                    headline_speedup = speedup;
+                }
+                records.push(BenchRecord::new(label, n, threads, chunk, &res, n, speedup, rel));
+                table.push(res);
+            }
+            table.push(naive);
+        }
     }
 
-    // marshalling overhead at the size of one e2e_small parameter-set step
-    // (~1.8M f32): literal round-trip under `pjrt`, host copy otherwise.
+    // Host marshalling overhead at the size of one e2e_small parameter-set
+    // step (~1.8M f32): literal round-trip under `pjrt`, host copy otherwise.
     let big = Tensor::from_f32(vec![0.5f32; 1_800_000], &[1_800_000]);
     #[cfg(feature = "pjrt")]
-    results.push(bench("literal roundtrip 1.8M f32", 16, || {
+    table.push(bench("literal roundtrip 1.8M f32", 16, || {
         let lit = hedgehog::runtime::pjrt::to_literal(&big).unwrap();
         let _ = hedgehog::runtime::pjrt::from_literal(&lit).unwrap();
     }));
     #[cfg(not(feature = "pjrt"))]
-    results.push(bench("host copy roundtrip 1.8M f32", 16, || {
+    table.push(bench("host copy roundtrip 1.8M f32", 16, || {
         let copy = Tensor::from_f32(big.as_f32().unwrap().to_vec(), &big.shape);
         std::hint::black_box(&copy);
     }));
 
-    print_table("kernel micro + marshalling", &results);
+    print_table("kernel sweep: chunked/threaded vs naive (1 x 4 heads x n x 64)", &table);
+    if headline_speedup.is_finite() {
+        println!(
+            "headline: linear_exp chunked x{max_threads} threads at n={} -> {:.1}x vs naive",
+            ns.last().unwrap(),
+            headline_speedup
+        );
+    }
+
+    let out_path = bench_out_path("BENCH_kernels.json");
+    write_json(
+        &out_path,
+        "kernel sweep: chunked/threaded reference vs naive",
+        "naive row-wise oracle (chunk_size=0, threads=1)",
+        &records,
+    )
+    .expect("write BENCH_kernels.json");
+    println!("wrote {}", out_path.display());
+
+    if parity_failures > 0 {
+        eprintln!("{parity_failures} parity failure(s) vs the naive oracle");
+        std::process::exit(1);
+    }
 }

@@ -9,7 +9,7 @@
 use anyhow::Result;
 use hedgehog::data::{corpus, Pcg32};
 use hedgehog::metrics::Stats;
-use hedgehog::runtime::ArtifactRegistry;
+use hedgehog::runtime::{ArtifactRegistry, ExecOptions};
 use hedgehog::serve::{Batcher, Engine, Request};
 use hedgehog::train::session::{Batch, Session};
 
@@ -20,13 +20,17 @@ fn main() -> Result<()> {
 
     println!("warm-up training (150 steps) so generations aren't noise...");
     let mut rng = Pcg32::new(0);
-    let mut s = Session::init(&reg, "lm_hedgehog", 0)?;
+    // Training is throughput-bound: let the backend use every core.
+    let mut s = Session::init_with_exec_options(&reg, "lm_hedgehog", 0, ExecOptions::default())?;
     s.run(150, |_| 1e-3, 0.01, |_| {
         let (t, g, m) = lang.lm_batch(&mut rng, corpus::Domain::Pretrain, 8, 128);
         Batch::new().with("tokens", t).with("targets", g).with("loss_mask", m)
     })?;
 
-    let mut engine = Engine::new(&reg, "lm_hedgehog", &s.params)?;
+    // Decode steps are latency-bound (one token per call): skip the
+    // fork/join overhead; the batcher provides the parallelism.
+    let mut engine =
+        Engine::with_exec_options(&reg, "lm_hedgehog", &s.params, ExecOptions::serial())?;
     println!("engine: {} slots, vocab {}", engine.batch, engine.vocab);
 
     let mut batcher = Batcher::new(engine.batch, 256);

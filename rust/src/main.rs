@@ -8,7 +8,8 @@
 //!   serve                        — batched decode demo
 //!
 //! Global flags: --artifacts DIR (default ./artifacts), --seed N,
-//! --results DIR (default ./results).
+//! --results DIR (default ./results), --threads N (0 = auto),
+//! --chunk-size C (reference-backend execution tuning; 0 = naive oracle).
 
 use anyhow::{bail, Context, Result};
 use hedgehog::coordinator::{run_experiment, Ctx, EXPERIMENTS};
@@ -22,6 +23,8 @@ struct Args {
     scale: f32,
     seed: u64,
     steps: usize,
+    threads: Option<usize>,
+    chunk_size: Option<usize>,
 }
 
 fn parse_args() -> Result<Args> {
@@ -33,6 +36,8 @@ fn parse_args() -> Result<Args> {
         scale: 1.0,
         seed: 0,
         steps: 200,
+        threads: None,
+        chunk_size: None,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -42,11 +47,31 @@ fn parse_args() -> Result<Args> {
             "--scale" => args.scale = it.next().context("--scale S")?.parse()?,
             "--seed" => args.seed = it.next().context("--seed N")?.parse()?,
             "--steps" => args.steps = it.next().context("--steps N")?.parse()?,
+            "--threads" => args.threads = Some(it.next().context("--threads N")?.parse()?),
+            "--chunk-size" => {
+                args.chunk_size = Some(it.next().context("--chunk-size C")?.parse()?)
+            }
             _ if args.cmd.is_empty() => args.cmd = a,
             _ => args.positional.push(a),
         }
     }
     Ok(args)
+}
+
+/// Open the registry and apply any execution-tuning flags to its backend.
+fn open_registry(args: &Args) -> Result<ArtifactRegistry> {
+    let reg = ArtifactRegistry::open(&args.artifacts)?;
+    if args.threads.is_some() || args.chunk_size.is_some() {
+        let mut opts = reg.exec_options();
+        if let Some(t) = args.threads {
+            opts.threads = t;
+        }
+        if let Some(c) = args.chunk_size {
+            opts.chunk_size = c;
+        }
+        reg.set_exec_options(opts);
+    }
+    Ok(reg)
 }
 
 fn main() -> Result<()> {
@@ -61,7 +86,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "list" => {
-            let reg = ArtifactRegistry::open(&args.artifacts)?;
+            let reg = open_registry(&args)?;
             println!("backend: {}", reg.backend_name());
             println!("artifacts ({}):", reg.names().len());
             for n in reg.names() {
@@ -76,7 +101,7 @@ fn main() -> Result<()> {
         "expt" => {
             let id = args.positional.first().context("expt <id>")?.clone();
             let ctx = Ctx {
-                reg: ArtifactRegistry::open(&args.artifacts)?,
+                reg: open_registry(&args)?,
                 scale: args.scale,
                 results_dir: args.results.clone().into(),
                 seed: args.seed,
@@ -96,7 +121,7 @@ fn main() -> Result<()> {
             use hedgehog::data::{corpus, Pcg32};
             use hedgehog::train::Session;
             let tag = args.positional.first().context("train <tag>")?.clone();
-            let reg = ArtifactRegistry::open(&args.artifacts)?;
+            let reg = open_registry(&args)?;
             let man = reg.manifest(&format!("{tag}_train_step"))?.clone();
             let vocab = man.meta_usize("vocab").unwrap_or(256);
             let b = man.meta_usize("batch_size").unwrap_or(8);
@@ -124,7 +149,7 @@ fn main() -> Result<()> {
         }
         "serve" => {
             let ctx = Ctx {
-                reg: ArtifactRegistry::open(&args.artifacts)?,
+                reg: open_registry(&args)?,
                 scale: args.scale,
                 results_dir: args.results.clone().into(),
                 seed: args.seed,

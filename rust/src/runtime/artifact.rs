@@ -22,7 +22,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::backend::{Backend, Executable as BackendExecutable};
+use super::backend::{Backend, ExecOptions, Executable as BackendExecutable};
 use super::manifest::Manifest;
 use super::reference::ReferenceBackend;
 use super::tensor::Tensor;
@@ -167,6 +167,19 @@ impl ArtifactRegistry {
         self.backend.name()
     }
 
+    /// Retune host-side execution (threads / chunk size). Takes effect on
+    /// the next `execute` of every artifact, including already-cached
+    /// executables — the trainer, server, and benches call this without
+    /// reloading anything.
+    pub fn set_exec_options(&self, opts: ExecOptions) {
+        self.backend.set_exec_options(opts);
+    }
+
+    /// Current host-side execution tuning.
+    pub fn exec_options(&self) -> ExecOptions {
+        self.backend.exec_options()
+    }
+
     pub fn names(&self) -> Vec<&str> {
         let mut v: Vec<&str> = self.manifests.keys().map(|s| s.as_str()).collect();
         v.sort();
@@ -235,6 +248,23 @@ mod tests {
         assert!(!reg.contains("ar_softmax_train_step"));
         assert!(reg.get("kernel_linear_attention").is_ok());
         assert!(reg.get("no_such_artifact").is_err());
+    }
+
+    #[test]
+    fn open_serves_fig6_builtins_hermetically() {
+        let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+        assert!(reg.contains("fig6_softmax_n1024"));
+        assert!(reg.contains("fig6_hedgehog_n4096"));
+        assert!(reg.contains("fig6_taylor_n256"));
+        assert_eq!(reg.manifest("fig6_hedgehog_n4096").unwrap().meta_usize("n"), Some(4096));
+    }
+
+    #[test]
+    fn exec_options_roundtrip_through_registry() {
+        let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+        let tuned = ExecOptions::default().with_threads(2).with_chunk_size(32);
+        reg.set_exec_options(tuned);
+        assert_eq!(reg.exec_options(), tuned);
     }
 
     #[test]

@@ -21,6 +21,65 @@ use anyhow::Result;
 use super::manifest::Manifest;
 use super::tensor::Tensor;
 
+/// Tuning knobs for backends that execute on the host (today: the
+/// reference interpreter). Callers that own a hot path — the serving
+/// engine, training sessions, the bench harness — thread these through
+/// `ArtifactRegistry::set_exec_options` to trade latency for cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecOptions {
+    /// Worker threads for (batch, head) / sequence-span parallelism.
+    /// `0` means auto: use every available core, but keep small problems
+    /// single-threaded so spawn overhead never dominates. Any explicit
+    /// value is honored exactly.
+    pub threads: usize,
+    /// Rows per block in the chunked kernels. `0` selects the naive
+    /// row-by-row PR-1 path, kept as the numerical oracle and the bench
+    /// baseline; it is always single-threaded.
+    pub chunk_size: usize,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { threads: 0, chunk_size: Self::DEFAULT_CHUNK }
+    }
+}
+
+impl ExecOptions {
+    /// Default block size: big enough that the intra-chunk matmuls
+    /// amortize feature computation, small enough that q/k feature blocks
+    /// and a C x C score tile stay L1/L2-resident for fig6 head dims.
+    pub const DEFAULT_CHUNK: usize = 64;
+
+    /// The naive row-wise oracle path (exactly the PR-1 math).
+    pub fn naive() -> Self {
+        ExecOptions { threads: 1, chunk_size: 0 }
+    }
+
+    /// Chunked but single-threaded (deterministic task decomposition).
+    pub fn serial() -> Self {
+        ExecOptions { threads: 1, chunk_size: Self::DEFAULT_CHUNK }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_chunk_size(mut self, chunk_size: usize) -> Self {
+        self.chunk_size = chunk_size;
+        self
+    }
+
+    /// Resolve `threads == 0` to the machine's available parallelism.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads != 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+}
+
 /// A loaded/compiled artifact, ready to run. Implementations receive inputs
 /// already checked against the manifest (count, shape, dtype, order) and
 /// must return outputs in manifest order.
@@ -44,5 +103,34 @@ pub trait Backend {
     /// hermetic: the registry merges these under any on-disk manifests.
     fn builtin_manifests(&self) -> Vec<Manifest> {
         Vec::new()
+    }
+
+    /// Update execution tuning. Applies to executables the backend has
+    /// already handed out (they observe the backend's current options on
+    /// every `execute`). Backends without host-side tuning ignore this.
+    fn set_exec_options(&self, _opts: ExecOptions) {}
+
+    /// Current execution tuning (default for backends without any).
+    fn exec_options(&self) -> ExecOptions {
+        ExecOptions::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_options_defaults_and_presets() {
+        let d = ExecOptions::default();
+        assert_eq!(d.threads, 0);
+        assert_eq!(d.chunk_size, ExecOptions::DEFAULT_CHUNK);
+        assert!(d.effective_threads() >= 1);
+        let n = ExecOptions::naive();
+        assert_eq!((n.threads, n.chunk_size), (1, 0));
+        assert_eq!(n.effective_threads(), 1);
+        let t = ExecOptions::default().with_threads(3).with_chunk_size(16);
+        assert_eq!((t.threads, t.chunk_size), (3, 16));
+        assert_eq!(t.effective_threads(), 3);
     }
 }

@@ -16,7 +16,7 @@ pub mod reference;
 pub mod tensor;
 
 pub use artifact::{ArtifactRegistry, Executable};
-pub use backend::Backend;
+pub use backend::{Backend, ExecOptions};
 pub use manifest::{Manifest, Slot};
 pub use params::ParamStore;
 pub use reference::ReferenceBackend;

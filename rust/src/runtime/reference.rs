@@ -8,21 +8,39 @@
 //! * `kernel_softmax_attention` — causal softmax attention, scale d^-1/2
 //!   (Eq. 1; the quadratic teacher).
 //! * `kernel_linear_attention` — causal *normalized* linear attention with
-//!   the exp feature map baked in, computed in the recurrent (S, z) state
-//!   form the serving engine carries (Eq. 2).
+//!   the exp feature map baked in, computed in the (S, z) state form the
+//!   serving engine carries (Eq. 2).
 //! * `fig6_{softmax,hedgehog,taylor}_n*` — the Fig 6 scaling artifacts:
 //!   softmax, the data-independent Hedgehog map `[exp(x), exp(-x)]`
 //!   (Eq. 6), and 2nd-degree Taylor features (Sec 4.1).
+//!
+//! Two execution strategies per kernel, selected by `ExecOptions` (see
+//! rust/DESIGN.md §5 for the derivation):
+//!
+//! * **Chunked + threaded (default).** Linear attention processes the
+//!   sequence in blocks of `chunk_size` rows, carrying the running
+//!   `(sum phi(k) v^T, sum phi(k))` state between blocks; intra-block work
+//!   is small dense matmuls over contiguous slices. Softmax attention is
+//!   tiled QK^T with row-streaming online softmax (running max / sum
+//!   rescaling). Work parallelizes across (batch, head) and across
+//!   sequence spans within a head on scoped OS threads — the offline
+//!   crate set has no rayon, so a dependency-free fork/join pool lives in
+//!   `run_tasks` below.
+//! * **Naive row-wise (`chunk_size == 0`).** The PR-1 scalar loops, kept
+//!   verbatim as the numerical oracle for parity tests and as the bench
+//!   baseline.
 //!
 //! Model graphs (`*_init`, `*_train_step`, ...) have no reference
 //! interpretation — they need the compiled HLO path (`pjrt` feature).
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::backend::{Backend, Executable as BackendExecutable};
+use super::backend::{Backend, ExecOptions, Executable as BackendExecutable};
 use super::json::Json;
 use super::manifest::{Manifest, Slot};
 use super::tensor::{DType, Tensor};
@@ -32,6 +50,21 @@ const EPS: f32 = 1e-6;
 
 /// Shape of the builtin `kernel_*` artifacts (see aot.py `export_kernels`).
 const KERNEL_SHAPE: [usize; 4] = [1, 2, 128, 16];
+
+/// Fig 6 sweep geometry (1 x 4 heads x n x 64), mirroring
+/// `python/compile/aot.py::export_fig6`. Provided as builtin manifests so
+/// the scaling bench is hermetic with no artifacts directory.
+const FIG6_HEADS: usize = 4;
+const FIG6_D: usize = 64;
+const FIG6_SOFTMAX_NS: &[usize] = &[256, 512, 1024, 2048, 4096];
+const FIG6_HEDGEHOG_NS: &[usize] = &[256, 512, 1024, 2048, 4096, 8192, 16384];
+const FIG6_TAYLOR_NS: &[usize] = &[256, 512, 1024, 2048];
+
+/// Below this estimated flop count, auto threading (`threads == 0`) stays
+/// serial: spawning scoped threads costs tens of microseconds, which would
+/// dominate the tiny builtin [1, 2, 128, 16] kernels. Explicit thread
+/// counts are always honored.
+const MIN_AUTO_PARALLEL_FLOPS: f64 = 8e6;
 
 /// Feature maps the linear-attention interpreter supports. Inputs are raw
 /// q/k rows of length d; outputs are the Dp-dimensional positive features.
@@ -55,23 +88,37 @@ impl FeatureMap {
         }
     }
 
-    /// Apply to one row `x`, replacing the contents of `out`.
-    fn apply(self, x: &[f32], out: &mut Vec<f32>) {
-        out.clear();
+    /// Apply to one row `x`, writing all `dim()` features into `out`.
+    /// Pure slice writes: the hot loops hand in reusable scratch, so
+    /// feature extraction never touches the allocator.
+    fn write(self, x: &[f32], out: &mut [f32]) {
+        let d = x.len();
         match self {
-            FeatureMap::Exp => out.extend(x.iter().map(|&v| v.exp())),
+            FeatureMap::Exp => {
+                for (o, &v) in out.iter_mut().zip(x) {
+                    *o = v.exp();
+                }
+            }
             FeatureMap::Hedgehog => {
-                out.extend(x.iter().map(|&v| v.exp()));
-                out.extend(x.iter().map(|&v| (-v).exp()));
+                let (pos, neg) = out.split_at_mut(d);
+                for ((p, n), &v) in pos.iter_mut().zip(neg).zip(x) {
+                    *p = v.exp();
+                    *n = (-v).exp();
+                }
             }
             FeatureMap::Taylor => {
-                let s = (x.len() as f32).powf(-0.25);
-                out.push(1.0);
-                out.extend(x.iter().map(|&v| v * s));
+                let s = (d as f32).powf(-0.25);
+                out[0] = 1.0;
+                for (o, &v) in out[1..1 + d].iter_mut().zip(x) {
+                    *o = v * s;
+                }
                 let isqrt2 = std::f32::consts::FRAC_1_SQRT_2;
-                for &xi in x {
-                    for &xj in x {
-                        out.push(xi * s * xj * s * isqrt2);
+                let mut idx = 1 + d;
+                for i in 0..d {
+                    let xi = out[1 + i];
+                    for j in 0..d {
+                        out[idx] = xi * out[1 + j] * isqrt2;
+                        idx += 1;
                     }
                 }
             }
@@ -98,14 +145,57 @@ fn kernel_for(name: &str) -> Option<Kernel> {
     }
 }
 
-/// Interprets kernel artifacts as direct f32 math. Stateless and cheap to
-/// construct; the registry owns one behind `Box<dyn Backend>`.
-#[derive(Debug, Default)]
-pub struct ReferenceBackend;
+/// `ExecOptions` behind atomics, shared between the backend and every
+/// executable it has handed out: retuning through the registry applies to
+/// already-cached kernels on their next `execute`.
+#[derive(Debug)]
+struct SharedExecOptions {
+    threads: AtomicUsize,
+    chunk_size: AtomicUsize,
+}
+
+impl SharedExecOptions {
+    fn new(opts: ExecOptions) -> Self {
+        SharedExecOptions {
+            threads: AtomicUsize::new(opts.threads),
+            chunk_size: AtomicUsize::new(opts.chunk_size),
+        }
+    }
+
+    fn store(&self, opts: ExecOptions) {
+        self.threads.store(opts.threads, Ordering::Relaxed);
+        self.chunk_size.store(opts.chunk_size, Ordering::Relaxed);
+    }
+
+    fn load(&self) -> ExecOptions {
+        ExecOptions {
+            threads: self.threads.load(Ordering::Relaxed),
+            chunk_size: self.chunk_size.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Interprets kernel artifacts as direct f32 math. Cheap to construct;
+/// the registry owns one behind `Box<dyn Backend>`.
+#[derive(Debug)]
+pub struct ReferenceBackend {
+    opts: Arc<SharedExecOptions>,
+}
+
+impl Default for ReferenceBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 impl ReferenceBackend {
     pub fn new() -> Self {
-        ReferenceBackend
+        Self::with_options(ExecOptions::default())
+    }
+
+    /// Construct with explicit execution tuning (benches, tests).
+    pub fn with_options(opts: ExecOptions) -> Self {
+        ReferenceBackend { opts: Arc::new(SharedExecOptions::new(opts)) }
     }
 }
 
@@ -155,42 +245,80 @@ impl Backend for ReferenceBackend {
                 out.shape
             );
         }
-        Ok(Box::new(RefKernel { kernel }))
+        Ok(Box::new(RefKernel { kernel, opts: Arc::clone(&self.opts) }))
     }
 
     fn builtin_manifests(&self) -> Vec<Manifest> {
-        vec![
+        let mut ms = vec![
             builtin_kernel_manifest("kernel_linear_attention", "linear_attention"),
             builtin_kernel_manifest("kernel_softmax_attention", "softmax_attention"),
-        ]
+        ];
+        for &(attn, ns) in &[
+            ("softmax", FIG6_SOFTMAX_NS),
+            ("hedgehog", FIG6_HEDGEHOG_NS),
+            ("taylor", FIG6_TAYLOR_NS),
+        ] {
+            for &n in ns {
+                ms.push(builtin_fig6_manifest(attn, n));
+            }
+        }
+        ms
     }
+
+    fn set_exec_options(&self, opts: ExecOptions) {
+        self.opts.store(opts);
+    }
+
+    fn exec_options(&self) -> ExecOptions {
+        self.opts.load()
+    }
+}
+
+/// Experiment metadata shared by every builtin manifest.
+fn builtin_meta(graph: &str, kernel: &str, shape: &[usize]) -> BTreeMap<String, Json> {
+    let mut meta = BTreeMap::new();
+    meta.insert("graph".to_string(), Json::Str(graph.to_string()));
+    meta.insert("kernel".to_string(), Json::Str(kernel.to_string()));
+    meta.insert("backend".to_string(), Json::Str("reference".to_string()));
+    for (key, axis) in [("b", 0usize), ("h", 1), ("n", 2), ("d", 3)] {
+        meta.insert(key.to_string(), Json::Num(shape[axis] as f64));
+    }
+    meta
 }
 
 /// Manifest for one builtin `kernel_*` artifact, mirroring the manifests
 /// `python/compile/aot.py::export_kernels` writes to disk.
 fn builtin_kernel_manifest(name: &str, kernel: &str) -> Manifest {
-    let slot = |n: &str| Slot {
-        name: n.to_string(),
-        shape: KERNEL_SHAPE.to_vec(),
-        dtype: DType::F32,
-    };
-    let mut meta = BTreeMap::new();
-    meta.insert("graph".to_string(), Json::Str("kernel".to_string()));
-    meta.insert("kernel".to_string(), Json::Str(kernel.to_string()));
-    meta.insert("backend".to_string(), Json::Str("reference".to_string()));
-    for (key, val) in [("b", 0usize), ("h", 1), ("n", 2), ("d", 3)] {
-        meta.insert(key.to_string(), Json::Num(KERNEL_SHAPE[val] as f64));
-    }
+    let mut m = kernel_manifest(name, &KERNEL_SHAPE);
+    m.meta = builtin_meta("kernel", kernel, &KERNEL_SHAPE);
+    m
+}
+
+/// Synthetic `q,k,v -> out` manifest for an arbitrary rank-4 shape — the
+/// contract the reference interpreter expects. Benches and integration
+/// tests use this to sweep shapes beyond the builtin artifacts (the name
+/// still has to route via `kernel_for`).
+pub fn kernel_manifest(name: &str, shape: &[usize]) -> Manifest {
+    let slot = |s: &str| Slot { name: s.to_string(), shape: shape.to_vec(), dtype: DType::F32 };
     Manifest {
         name: name.to_string(),
         inputs: vec![slot("q"), slot("k"), slot("v")],
         outputs: vec![slot("out")],
-        meta,
+        meta: BTreeMap::new(),
     }
+}
+
+/// Manifest for one builtin `fig6_<attn>_n<n>` scaling artifact.
+fn builtin_fig6_manifest(attn: &str, n: usize) -> Manifest {
+    let shape = [1, FIG6_HEADS, n, FIG6_D];
+    let mut m = kernel_manifest(&format!("fig6_{attn}_n{n}"), &shape);
+    m.meta = builtin_meta("fig6", attn, &shape);
+    m
 }
 
 struct RefKernel {
     kernel: Kernel,
+    opts: Arc<SharedExecOptions>,
 }
 
 impl BackendExecutable for RefKernel {
@@ -207,17 +335,12 @@ impl BackendExecutable for RefKernel {
         let qs = q.as_f32()?;
         let ks = k.as_f32()?;
         let vs = v.as_f32()?;
+        let opts = self.opts.load();
 
         let mut out = vec![0.0f32; b * h * n * dv];
-        for bh in 0..b * h {
-            let qh = &qs[bh * n * d..(bh + 1) * n * d];
-            let kh = &ks[bh * n * d..(bh + 1) * n * d];
-            let vh = &vs[bh * n * dv..(bh + 1) * n * dv];
-            let oh = &mut out[bh * n * dv..(bh + 1) * n * dv];
-            match self.kernel {
-                Kernel::Softmax => softmax_head(qh, kh, vh, oh, d, dv),
-                Kernel::Linear(fm) => linear_head(fm, qh, kh, vh, oh, d, dv),
-            }
+        match self.kernel {
+            Kernel::Softmax => run_softmax(qs, ks, vs, &mut out, b * h, n, d, dv, opts),
+            Kernel::Linear(fm) => run_linear(fm, qs, ks, vs, &mut out, b * h, n, d, dv, opts),
         }
         Ok(vec![Tensor::from_f32(out, &[b, h, n, dv])])
     }
@@ -227,12 +350,545 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
-/// Causal softmax attention for one (batch, head): the quadratic teacher,
-/// row-wise with max-subtraction (matches ref.softmax_attention).
-fn softmax_head(q: &[f32], k: &[f32], v: &[f32], out: &mut [f32], d: usize, dv: usize) {
+/// y += a * x over contiguous slices — the shape every inner loop below
+/// reduces to, which the autovectorizer turns into SIMD fma lanes.
+fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    for (y, &x) in y.iter_mut().zip(x) {
+        *y += a * x;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Task decomposition (dependency-free fork/join over scoped threads)
+// ---------------------------------------------------------------------------
+
+/// Resolve the thread count for a dispatch: explicit counts are honored,
+/// auto (0) uses all cores but keeps small problems serial.
+fn auto_threads(opts: ExecOptions, estimated_flops: f64) -> usize {
+    let t = opts.effective_threads();
+    if opts.threads == 0 && estimated_flops < MIN_AUTO_PARALLEL_FLOPS {
+        1
+    } else {
+        t
+    }
+}
+
+/// Split `n` rows into at most `spans` contiguous ranges of equal *work*.
+/// Causal softmax cost grows linearly with the row index (`quadratic`
+/// total), so its boundaries follow sqrt spacing; linear-attention cost is
+/// uniform per row. Returns strictly increasing boundaries from 0 to n
+/// (deduped, so fewer spans may come back for tiny n).
+fn span_bounds(n: usize, spans: usize, quadratic: bool) -> Vec<usize> {
+    let spans = spans.clamp(1, n.max(1));
+    let mut bounds: Vec<usize> = (0..=spans)
+        .map(|i| {
+            let frac = i as f64 / spans as f64;
+            let r = if quadratic { frac.sqrt() } else { frac };
+            ((n as f64) * r).round() as usize
+        })
+        .collect();
+    *bounds.last_mut().unwrap() = n;
+    bounds.dedup();
+    bounds
+}
+
+/// Run `tasks` to completion across up to `threads` scoped OS threads.
+/// Tasks are dealt round-robin in order; the planners emit equal-work
+/// spans, so the deal is balanced without a work-stealing queue. With one
+/// thread (or one task) everything runs inline — no spawns, which keeps
+/// the `threads == 1` path allocation-predictable for the no-alloc tests.
+fn run_tasks<T: Send>(threads: usize, tasks: Vec<T>, f: impl Fn(T) + Sync) {
+    let threads = threads.max(1).min(tasks.len().max(1));
+    if threads <= 1 || tasks.len() <= 1 {
+        for t in tasks {
+            f(t);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<T>> = Vec::new();
+    buckets.resize_with(threads, Vec::new);
+    for (i, t) in tasks.into_iter().enumerate() {
+        buckets[i % threads].push(t);
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        for bucket in buckets {
+            scope.spawn(move || {
+                for t in bucket {
+                    f(t);
+                }
+            });
+        }
+    });
+}
+
+/// One span of output rows [r0, r1) of one (batch, head), with exclusive
+/// ownership of its slice of the output buffer.
+struct OutSpan<'a> {
+    head: usize,
+    span: usize,
+    r0: usize,
+    r1: usize,
+    out: &'a mut [f32],
+}
+
+/// Carve the (bh, n, dv) output buffer into per-span disjoint slices, in
+/// (head, span) order, so spans can run on different threads.
+fn split_out_spans<'a>(
+    mut out: &'a mut [f32],
+    bh: usize,
+    dv: usize,
+    bounds: &[usize],
+) -> Vec<OutSpan<'a>> {
+    let mut tasks = Vec::with_capacity(bh * (bounds.len().max(1) - 1));
+    for head in 0..bh {
+        for (span, w) in bounds.windows(2).enumerate() {
+            let tail = std::mem::take(&mut out);
+            let (chunk, rest) = tail.split_at_mut((w[1] - w[0]) * dv);
+            tasks.push(OutSpan { head, span, r0: w[0], r1: w[1], out: chunk });
+            out = rest;
+        }
+    }
+    debug_assert!(out.is_empty(), "span split must consume the output exactly");
+    tasks
+}
+
+// ---------------------------------------------------------------------------
+// Linear attention: chunked (S, z) carry + span-parallel two-pass form
+// ---------------------------------------------------------------------------
+
+/// Phase A work item: accumulate one span's local (S, z) contribution.
+struct StateTask<'a> {
+    head: usize,
+    r0: usize,
+    r1: usize,
+    s: &'a mut [f32],
+    z: &'a mut [f32],
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_linear(
+    fm: FeatureMap,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    out: &mut [f32],
+    bh: usize,
+    n: usize,
+    d: usize,
+    dv: usize,
+    opts: ExecOptions,
+) {
+    if bh == 0 || n == 0 {
+        return;
+    }
+    let dp = fm.dim(d);
+    if opts.chunk_size == 0 {
+        // PR-1 naive row-wise oracle: single-threaded, scratch hoisted so
+        // the per-row loop never allocates.
+        let mut qf = vec![0.0f32; dp];
+        let mut kf = vec![0.0f32; dp];
+        let mut s = vec![0.0f32; dp * dv];
+        let mut z = vec![0.0f32; dp];
+        for i in 0..bh {
+            s.fill(0.0);
+            z.fill(0.0);
+            linear_head_naive(
+                fm,
+                &q[i * n * d..(i + 1) * n * d],
+                &k[i * n * d..(i + 1) * n * d],
+                &v[i * n * dv..(i + 1) * n * dv],
+                &mut out[i * n * dv..(i + 1) * n * dv],
+                d,
+                dv,
+                &mut qf,
+                &mut kf,
+                &mut s,
+                &mut z,
+            );
+        }
+        return;
+    }
+
+    let chunk = opts.chunk_size;
+    let flops = (bh * n * dp * (dv + 2)) as f64 * 2.0;
+    let threads = auto_threads(opts, flops);
+    let bounds = span_bounds(n, threads.div_ceil(bh), false);
+    let nspans = bounds.len() - 1;
+    let block = dp * dv + dp;
+
+    // Phase A (parallel): span-local (S, z) sums. The last span's state is
+    // never read, so only nspans-1 blocks exist. Skipped when single-span.
+    let mut states = vec![0.0f32; bh * (nspans - 1) * block];
+    if nspans > 1 {
+        let mut tasks = Vec::with_capacity(bh * (nspans - 1));
+        let mut rest = states.as_mut_slice();
+        for head in 0..bh {
+            for j in 0..nspans - 1 {
+                let tail = std::mem::take(&mut rest);
+                let (blk, remainder) = tail.split_at_mut(block);
+                rest = remainder;
+                let (s, z) = blk.split_at_mut(dp * dv);
+                tasks.push(StateTask { head, r0: bounds[j], r1: bounds[j + 1], s, z });
+            }
+        }
+        run_tasks(threads, tasks, |t: StateTask| {
+            linear_span_state(
+                fm,
+                &k[t.head * n * d..(t.head + 1) * n * d],
+                &v[t.head * n * dv..(t.head + 1) * n * dv],
+                t.r0,
+                t.r1,
+                t.s,
+                t.z,
+                chunk,
+                d,
+                dv,
+                dp,
+            );
+        });
+        // Serial prefix-sum over the (few) spans: after this, block j-1
+        // holds the full carried-in state for span j.
+        for head in 0..bh {
+            let hbase = head * (nspans - 1) * block;
+            for j in 1..nspans - 1 {
+                let range = hbase + (j - 1) * block..hbase + (j + 1) * block;
+                let (prev, cur) = states[range].split_at_mut(block);
+                for (c, &p) in cur.iter_mut().zip(prev.iter()) {
+                    *c += p;
+                }
+            }
+        }
+    }
+
+    // Phase B (parallel): chunked causal outputs per span, each seeded
+    // with its carried-in prefix state.
+    let zero_state = vec![0.0f32; block];
+    let states = &states[..];
+    let zero_state = &zero_state[..];
+    let tasks = split_out_spans(out, bh, dv, &bounds);
+    run_tasks(threads, tasks, |t: OutSpan| {
+        let prefix = if t.span == 0 {
+            zero_state
+        } else {
+            &states[(t.head * (nspans - 1) + (t.span - 1)) * block..][..block]
+        };
+        let (ps, pz) = prefix.split_at(dp * dv);
+        linear_span_output(
+            fm,
+            &q[t.head * n * d..(t.head + 1) * n * d],
+            &k[t.head * n * d..(t.head + 1) * n * d],
+            &v[t.head * n * dv..(t.head + 1) * n * dv],
+            t.r0,
+            t.r1,
+            ps,
+            pz,
+            t.out,
+            chunk,
+            d,
+            dv,
+            dp,
+        );
+    });
+}
+
+/// Accumulate sum(phi(k) v^T) and sum(phi(k)) over rows [r0, r1) into
+/// (s, z). Features are computed block-wise into reusable scratch.
+#[allow(clippy::too_many_arguments)]
+fn linear_span_state(
+    fm: FeatureMap,
+    k: &[f32],
+    v: &[f32],
+    r0: usize,
+    r1: usize,
+    s: &mut [f32],
+    z: &mut [f32],
+    chunk: usize,
+    d: usize,
+    dv: usize,
+    dp: usize,
+) {
+    let cmax = chunk.min(r1 - r0).max(1);
+    let mut kf = vec![0.0f32; cmax * dp];
+    let mut c0 = r0;
+    while c0 < r1 {
+        let rows = cmax.min(r1 - c0);
+        for r in 0..rows {
+            let t = c0 + r;
+            fm.write(&k[t * d..(t + 1) * d], &mut kf[r * dp..(r + 1) * dp]);
+        }
+        for r in 0..rows {
+            let vr = &v[(c0 + r) * dv..(c0 + r + 1) * dv];
+            let kr = &kf[r * dp..(r + 1) * dp];
+            for (p, &kp) in kr.iter().enumerate() {
+                z[p] += kp;
+                axpy(&mut s[p * dv..(p + 1) * dv], kp, vr);
+            }
+        }
+        c0 += rows;
+    }
+}
+
+/// Chunked causal linear attention over rows [r0, r1), starting from the
+/// carried-in prefix state. Per chunk of C rows:
+///
+///   inter:  y_r  = phi(q_r) . S,        den_r  = phi(q_r) . z
+///   intra:  y_r += sum_{j<=r} (phi(q_r).phi(k_j)) v_j   (lower-tri qf kf^T)
+///           den_r += sum_{j<=r} phi(q_r).phi(k_j)
+///   carry:  S += sum_r phi(k_r) v_r^T,  z += sum_r phi(k_r)
+///
+/// which is the quadratic Eq. 2 form regrouped so every inner loop is a
+/// contiguous dot/axpy.
+#[allow(clippy::too_many_arguments)]
+fn linear_span_output(
+    fm: FeatureMap,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    r0: usize,
+    r1: usize,
+    prefix_s: &[f32],
+    prefix_z: &[f32],
+    out: &mut [f32],
+    chunk: usize,
+    d: usize,
+    dv: usize,
+    dp: usize,
+) {
+    let mut s = prefix_s.to_vec();
+    let mut z = prefix_z.to_vec();
+    let cmax = chunk.min(r1 - r0).max(1);
+    let mut kf = vec![0.0f32; cmax * dp];
+    let mut qf = vec![0.0f32; cmax * dp];
+    let mut den = vec![0.0f32; cmax];
+    let mut c0 = r0;
+    while c0 < r1 {
+        let rows = cmax.min(r1 - c0);
+        for r in 0..rows {
+            let t = c0 + r;
+            fm.write(&k[t * d..(t + 1) * d], &mut kf[r * dp..(r + 1) * dp]);
+            fm.write(&q[t * d..(t + 1) * d], &mut qf[r * dp..(r + 1) * dp]);
+        }
+        // inter-chunk contribution from the carried state
+        for r in 0..rows {
+            let qr = &qf[r * dp..(r + 1) * dp];
+            den[r] = dot(qr, &z);
+            let or = &mut out[(c0 - r0 + r) * dv..(c0 - r0 + r + 1) * dv];
+            or.fill(0.0);
+            for (p, &qp) in qr.iter().enumerate() {
+                axpy(or, qp, &s[p * dv..(p + 1) * dv]);
+            }
+        }
+        // intra-chunk causal (lower-triangular) contribution
+        for r in 0..rows {
+            let qr = &qf[r * dp..(r + 1) * dp];
+            let or = &mut out[(c0 - r0 + r) * dv..(c0 - r0 + r + 1) * dv];
+            for j in 0..=r {
+                let w = dot(qr, &kf[j * dp..(j + 1) * dp]);
+                den[r] += w;
+                axpy(or, w, &v[(c0 + j) * dv..(c0 + j + 1) * dv]);
+            }
+            let inv = (den[r] + EPS).recip();
+            for o in or.iter_mut() {
+                *o *= inv;
+            }
+        }
+        // carry the state across the chunk boundary
+        for r in 0..rows {
+            let vr = &v[(c0 + r) * dv..(c0 + r + 1) * dv];
+            let kr = &kf[r * dp..(r + 1) * dp];
+            for (p, &kp) in kr.iter().enumerate() {
+                z[p] += kp;
+                axpy(&mut s[p * dv..(p + 1) * dv], kp, vr);
+            }
+        }
+        c0 += rows;
+    }
+}
+
+/// PR-1 row-wise causal normalized linear attention for one (batch,
+/// head): the numerical oracle. Scratch (qf/kf/s/z) is hoisted by the
+/// caller; s and z arrive zeroed.
+#[allow(clippy::too_many_arguments)]
+fn linear_head_naive(
+    fm: FeatureMap,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    out: &mut [f32],
+    d: usize,
+    dv: usize,
+    qf: &mut [f32],
+    kf: &mut [f32],
+    s: &mut [f32],
+    z: &mut [f32],
+) {
+    let n = q.len() / d;
+    for i in 0..n {
+        fm.write(&k[i * d..(i + 1) * d], kf);
+        let vi = &v[i * dv..(i + 1) * dv];
+        for (p, &kp) in kf.iter().enumerate() {
+            z[p] += kp;
+            axpy(&mut s[p * dv..(p + 1) * dv], kp, vi);
+        }
+        fm.write(&q[i * d..(i + 1) * d], qf);
+        let den = dot(qf, z) + EPS;
+        let oi = &mut out[i * dv..(i + 1) * dv];
+        oi.fill(0.0);
+        for (p, &qp) in qf.iter().enumerate() {
+            axpy(oi, qp, &s[p * dv..(p + 1) * dv]);
+        }
+        for o in oi.iter_mut() {
+            *o /= den;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Softmax attention: tiled QK^T with row-streaming online softmax
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn run_softmax(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    out: &mut [f32],
+    bh: usize,
+    n: usize,
+    d: usize,
+    dv: usize,
+    opts: ExecOptions,
+) {
+    if bh == 0 || n == 0 {
+        return;
+    }
+    if opts.chunk_size == 0 {
+        // PR-1 naive row-wise oracle: single-threaded, scores hoisted.
+        let mut scores = vec![0.0f32; n];
+        for i in 0..bh {
+            softmax_head_naive(
+                &q[i * n * d..(i + 1) * n * d],
+                &k[i * n * d..(i + 1) * n * d],
+                &v[i * n * dv..(i + 1) * n * dv],
+                &mut out[i * n * dv..(i + 1) * n * dv],
+                d,
+                dv,
+                &mut scores,
+            );
+        }
+        return;
+    }
+
+    let flops = (bh * n * n * (d + dv)) as f64;
+    let threads = auto_threads(opts, flops);
+    // Causal cost grows with the row index: sqrt-spaced span boundaries
+    // equalize per-span work, so a round-robin deal stays balanced.
+    let bounds = span_bounds(n, threads.div_ceil(bh), true);
+    let tasks = split_out_spans(out, bh, dv, &bounds);
+    run_tasks(threads, tasks, |t: OutSpan| {
+        softmax_span(
+            &q[t.head * n * d..(t.head + 1) * n * d],
+            &k[t.head * n * d..(t.head + 1) * n * d],
+            &v[t.head * n * dv..(t.head + 1) * n * dv],
+            t.r0,
+            t.r1,
+            t.out,
+            opts.chunk_size,
+            d,
+            dv,
+        );
+    });
+}
+
+/// Blocked causal softmax over query rows [r0, r1): for each row block,
+/// stream key tiles of width `chunk` with the online-softmax recurrence
+/// (running max m, normalizer l, rescaled accumulator), exactly the
+/// flash-attention reorganization of Eq. 1 in f32.
+#[allow(clippy::too_many_arguments)]
+fn softmax_span(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+    chunk: usize,
+    d: usize,
+    dv: usize,
+) {
+    let n = k.len() / d;
+    let scale = (d as f32).sqrt().recip();
+    let cmax = chunk.min(r1 - r0).max(1);
+    let mut m = vec![f32::NEG_INFINITY; cmax];
+    let mut l = vec![0.0f32; cmax];
+    // Tile width never exceeds n, so clamp the scratch: an absurd
+    // --chunk-size must not translate into an absurd allocation.
+    let mut scores = vec![0.0f32; chunk.min(n).max(1)];
+    let mut c0 = r0;
+    while c0 < r1 {
+        let rows = cmax.min(r1 - c0);
+        m[..rows].fill(f32::NEG_INFINITY);
+        l[..rows].fill(0.0);
+        out[(c0 - r0) * dv..(c0 - r0 + rows) * dv].fill(0.0);
+        let last = c0 + rows - 1;
+        let mut t0 = 0usize;
+        while t0 <= last {
+            let tw = chunk.min(n - t0);
+            for r in 0..rows {
+                let row = c0 + r;
+                if row < t0 {
+                    continue; // tile lies fully beyond this row's causal frontier
+                }
+                let hi = tw.min(row - t0 + 1);
+                let qr = &q[row * d..(row + 1) * d];
+                let mut tile_max = f32::NEG_INFINITY;
+                for (j, sc) in scores[..hi].iter_mut().enumerate() {
+                    *sc = dot(qr, &k[(t0 + j) * d..(t0 + j + 1) * d]) * scale;
+                    tile_max = tile_max.max(*sc);
+                }
+                let new_m = m[r].max(tile_max);
+                let or = &mut out[(c0 - r0 + r) * dv..(c0 - r0 + r + 1) * dv];
+                if m[r] > f32::NEG_INFINITY && new_m > m[r] {
+                    let alpha = (m[r] - new_m).exp();
+                    l[r] *= alpha;
+                    for o in or.iter_mut() {
+                        *o *= alpha;
+                    }
+                }
+                for (j, &sc) in scores[..hi].iter().enumerate() {
+                    let e = (sc - new_m).exp();
+                    l[r] += e;
+                    axpy(or, e, &v[(t0 + j) * dv..(t0 + j + 1) * dv]);
+                }
+                m[r] = new_m;
+            }
+            t0 += tw;
+        }
+        for r in 0..rows {
+            let inv = l[r].recip();
+            for o in out[(c0 - r0 + r) * dv..(c0 - r0 + r + 1) * dv].iter_mut() {
+                *o *= inv;
+            }
+        }
+        c0 += rows;
+    }
+}
+
+/// PR-1 row-wise causal softmax attention for one (batch, head): the
+/// quadratic teacher with max-subtraction, kept as the numerical oracle.
+/// The scores scratch is hoisted by the caller.
+fn softmax_head_naive(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    out: &mut [f32],
+    d: usize,
+    dv: usize,
+    scores: &mut [f32],
+) {
     let n = q.len() / d;
     let scale = (d as f32).sqrt().recip();
-    let mut scores = vec![0.0f32; n];
     for i in 0..n {
         let qi = &q[i * d..(i + 1) * d];
         let mut m = f32::NEG_INFINITY;
@@ -246,52 +902,10 @@ fn softmax_head(q: &[f32], k: &[f32], v: &[f32], out: &mut [f32], d: usize, dv: 
             l += *s;
         }
         let oi = &mut out[i * dv..(i + 1) * dv];
+        oi.fill(0.0);
         for (j, s) in scores.iter().enumerate().take(i + 1) {
             let w = s / l;
-            for (o, &x) in oi.iter_mut().zip(&v[j * dv..(j + 1) * dv]) {
-                *o += w * x;
-            }
-        }
-    }
-}
-
-/// Causal normalized linear attention for one (batch, head), in the
-/// recurrent (S, z) state form (matches ref.linear_attention_recurrent,
-/// which is mathematically identical to the quadratic Eq. 2 form).
-fn linear_head(
-    fm: FeatureMap,
-    q: &[f32],
-    k: &[f32],
-    v: &[f32],
-    out: &mut [f32],
-    d: usize,
-    dv: usize,
-) {
-    let n = q.len() / d;
-    let dp = fm.dim(d);
-    let mut s = vec![0.0f32; dp * dv]; // running sum of phi(k) v^T
-    let mut z = vec![0.0f32; dp]; // running sum of phi(k)
-    let mut qf = Vec::with_capacity(dp);
-    let mut kf = Vec::with_capacity(dp);
-    for i in 0..n {
-        fm.apply(&k[i * d..(i + 1) * d], &mut kf);
-        let vi = &v[i * dv..(i + 1) * dv];
-        for (p, &kp) in kf.iter().enumerate() {
-            z[p] += kp;
-            for (sp, &ve) in s[p * dv..(p + 1) * dv].iter_mut().zip(vi) {
-                *sp += kp * ve;
-            }
-        }
-        fm.apply(&q[i * d..(i + 1) * d], &mut qf);
-        let den = dot(&qf, &z) + EPS;
-        let oi = &mut out[i * dv..(i + 1) * dv];
-        for (p, &qp) in qf.iter().enumerate() {
-            for (o, &sp) in oi.iter_mut().zip(&s[p * dv..(p + 1) * dv]) {
-                *o += qp * sp;
-            }
-        }
-        for o in oi.iter_mut() {
-            *o /= den;
+            axpy(oi, w, &v[j * dv..(j + 1) * dv]);
         }
     }
 }
@@ -306,19 +920,22 @@ mod tests {
         Tensor::from_f32((0..n).map(|_| rng.normal() * 0.3).collect(), shape)
     }
 
-    fn run_kernel(name: &str, shape: &[usize], inputs: &[Tensor]) -> Tensor {
-        let backend = ReferenceBackend::new();
-        let slot = |n: &str| Slot { name: n.into(), shape: shape.to_vec(), dtype: DType::F32 };
-        let manifest = Manifest {
-            name: name.to_string(),
-            inputs: vec![slot("q"), slot("k"), slot("v")],
-            outputs: vec![slot("out")],
-            meta: BTreeMap::new(),
-        };
+    fn run_kernel_with(
+        name: &str,
+        shape: &[usize],
+        inputs: &[Tensor],
+        opts: ExecOptions,
+    ) -> Tensor {
+        let backend = ReferenceBackend::with_options(opts);
+        let manifest = kernel_manifest(name, shape);
         let exe = backend.load(Path::new("unused"), &manifest).unwrap();
         let refs: Vec<&Tensor> = inputs.iter().collect();
         let mut outs = exe.execute(&refs).unwrap();
         outs.remove(0)
+    }
+
+    fn run_kernel(name: &str, shape: &[usize], inputs: &[Tensor]) -> Tensor {
+        run_kernel_with(name, shape, inputs, ExecOptions::default())
     }
 
     /// Quadratic-form oracle for normalized linear attention with the exp
@@ -352,11 +969,6 @@ mod tests {
         let q = rand_tensor(&mut rng, &shape);
         let k = rand_tensor(&mut rng, &shape);
         let v = rand_tensor(&mut rng, &shape);
-        let out = run_kernel(
-            "kernel_linear_attention",
-            &shape,
-            &[q.clone(), k.clone(), v.clone()],
-        );
         let oracle = linear_exp_oracle(
             q.as_f32().unwrap(),
             k.as_f32().unwrap(),
@@ -364,8 +976,46 @@ mod tests {
             n,
             d,
         );
-        for (a, b) in out.as_f32().unwrap().iter().zip(&oracle) {
-            assert!((a - b).abs() < 1e-4, "recurrent {a} vs quadratic {b}");
+        // Both execution strategies must match the materialized form.
+        for opts in [ExecOptions::naive(), ExecOptions::default(), ExecOptions::serial()] {
+            let out = run_kernel_with(
+                "kernel_linear_attention",
+                &shape,
+                &[q.clone(), k.clone(), v.clone()],
+                opts,
+            );
+            for (a, b) in out.as_f32().unwrap().iter().zip(&oracle) {
+                assert!((a - b).abs() < 1e-4, "{opts:?}: {a} vs quadratic {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_matches_naive_all_kernels() {
+        // Dense sweep lives in tests/chunked_parity.rs; this in-module
+        // smoke keeps the invariant visible next to the implementation.
+        let shape = [2, 2, 33, 4];
+        let mut rng = Pcg32::new(17);
+        let q = rand_tensor(&mut rng, &shape);
+        let k = rand_tensor(&mut rng, &shape);
+        let v = rand_tensor(&mut rng, &shape);
+        let inputs = [q, k, v];
+        for name in [
+            "kernel_linear_attention",
+            "kernel_softmax_attention",
+            "fig6_hedgehog_n33",
+            "fig6_taylor_n33",
+        ] {
+            let base = run_kernel_with(name, &shape, &inputs, ExecOptions::naive());
+            let base = base.as_f32().unwrap();
+            for chunk in [1, 7, 64] {
+                let opts = ExecOptions { threads: 2, chunk_size: chunk };
+                let out = run_kernel_with(name, &shape, &inputs, opts);
+                for (a, b) in out.as_f32().unwrap().iter().zip(base) {
+                    let tol = 1e-5 * b.abs().max(1.0);
+                    assert!((a - b).abs() <= tol, "{name} C={chunk}: {a} vs naive {b}");
+                }
+            }
         }
     }
 
@@ -400,27 +1050,30 @@ mod tests {
         let k = rand_tensor(&mut rng, &shape);
         let v = rand_tensor(&mut rng, &shape);
         for name in ["kernel_softmax_attention", "kernel_linear_attention"] {
-            let base = run_kernel(name, &shape, &[q.clone(), k.clone(), v.clone()]);
-            let mut k2 = k.clone();
-            let mut v2 = v.clone();
-            let last = 15 * 4;
-            for x in &mut k2.as_f32_mut().unwrap()[last..] {
-                *x += 5.0;
+            for opts in [ExecOptions::naive(), ExecOptions::serial().with_chunk_size(8)] {
+                let qkv = [q.clone(), k.clone(), v.clone()];
+                let base = run_kernel_with(name, &shape, &qkv, opts);
+                let mut k2 = k.clone();
+                let mut v2 = v.clone();
+                let last = 15 * 4;
+                for x in &mut k2.as_f32_mut().unwrap()[last..] {
+                    *x += 5.0;
+                }
+                for x in &mut v2.as_f32_mut().unwrap()[last..] {
+                    *x -= 3.0;
+                }
+                let pert = run_kernel_with(name, &shape, &[q.clone(), k2, v2], opts);
+                assert_eq!(
+                    &base.as_f32().unwrap()[..last],
+                    &pert.as_f32().unwrap()[..last],
+                    "{name} {opts:?}: prefix changed"
+                );
+                assert_ne!(
+                    &base.as_f32().unwrap()[last..],
+                    &pert.as_f32().unwrap()[last..],
+                    "{name} {opts:?}: last token insensitive to its own k/v"
+                );
             }
-            for x in &mut v2.as_f32_mut().unwrap()[last..] {
-                *x -= 3.0;
-            }
-            let pert = run_kernel(name, &shape, &[q.clone(), k2, v2]);
-            assert_eq!(
-                &base.as_f32().unwrap()[..last],
-                &pert.as_f32().unwrap()[..last],
-                "{name}: prefix changed"
-            );
-            assert_ne!(
-                &base.as_f32().unwrap()[last..],
-                &pert.as_f32().unwrap()[last..],
-                "{name}: last token insensitive to its own k/v"
-            );
         }
     }
 
@@ -429,13 +1082,46 @@ mod tests {
         assert_eq!(FeatureMap::Exp.dim(16), 16);
         assert_eq!(FeatureMap::Hedgehog.dim(16), 32);
         assert_eq!(FeatureMap::Taylor.dim(16), 1 + 16 + 256);
-        let mut out = Vec::new();
-        FeatureMap::Taylor.apply(&[1.0, -2.0], &mut out);
+        let mut out = vec![0.0f32; FeatureMap::Taylor.dim(2)];
+        FeatureMap::Taylor.write(&[1.0, -2.0], &mut out);
         assert_eq!(out.len(), 7);
         assert_eq!(out[0], 1.0);
         // Hedgehog features are strictly positive (required by Eq. 2).
-        FeatureMap::Hedgehog.apply(&[-3.0, 0.0, 2.5], &mut out);
+        let mut out = vec![0.0f32; FeatureMap::Hedgehog.dim(3)];
+        FeatureMap::Hedgehog.write(&[-3.0, 0.0, 2.5], &mut out);
         assert!(out.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn span_bounds_cover_and_balance() {
+        for n in [1usize, 2, 7, 33, 64, 1000] {
+            for spans in [1usize, 2, 4, 9, 100] {
+                for quad in [false, true] {
+                    let b = span_bounds(n, spans, quad);
+                    assert_eq!(*b.first().unwrap(), 0, "n={n} spans={spans}");
+                    assert_eq!(*b.last().unwrap(), n, "n={n} spans={spans}");
+                    assert!(b.windows(2).all(|w| w[0] < w[1]), "not increasing: {b:?}");
+                    assert!(b.len() <= spans + 1);
+                }
+            }
+        }
+        // sqrt spacing front-loads rows: earlier (cheap) spans get more.
+        let b = span_bounds(1024, 4, true);
+        assert!(b[1] > 1024 / 4, "quadratic spans should start wide: {b:?}");
+    }
+
+    #[test]
+    fn exec_options_roundtrip_through_backend() {
+        let backend = ReferenceBackend::new();
+        assert_eq!(backend.exec_options(), ExecOptions::default());
+        let tuned = ExecOptions { threads: 3, chunk_size: 17 };
+        backend.set_exec_options(tuned);
+        assert_eq!(backend.exec_options(), tuned);
+        // Executables observe retuning after load (shared atomics).
+        let m = builtin_kernel_manifest("kernel_linear_attention", "linear_attention");
+        let _exe = backend.load(Path::new("unused"), &m).unwrap();
+        backend.set_exec_options(ExecOptions::naive());
+        assert_eq!(backend.exec_options(), ExecOptions::naive());
     }
 
     #[test]
@@ -464,13 +1150,20 @@ mod tests {
     #[test]
     fn builtin_manifests_match_aot_export() {
         let ms = ReferenceBackend::new().builtin_manifests();
-        assert_eq!(ms.len(), 2);
+        let fig6_count = FIG6_SOFTMAX_NS.len() + FIG6_HEDGEHOG_NS.len() + FIG6_TAYLOR_NS.len();
+        assert_eq!(ms.len(), 2 + fig6_count);
         for m in &ms {
             assert_eq!(m.inputs.len(), 3);
             assert_eq!(m.outputs[0].name, "out");
-            assert_eq!(m.inputs[0].shape, KERNEL_SHAPE.to_vec());
-            assert_eq!(m.meta_str("graph"), Some("kernel"));
-            assert_eq!(m.meta_usize("n"), Some(128));
+            assert!(kernel_for(&m.name).is_some(), "{} must route", m.name);
         }
+        let kernel = ms.iter().find(|m| m.name == "kernel_linear_attention").unwrap();
+        assert_eq!(kernel.inputs[0].shape, KERNEL_SHAPE.to_vec());
+        assert_eq!(kernel.meta_str("graph"), Some("kernel"));
+        assert_eq!(kernel.meta_usize("n"), Some(128));
+        let fig6 = ms.iter().find(|m| m.name == "fig6_hedgehog_n1024").unwrap();
+        assert_eq!(fig6.inputs[0].shape, vec![1, FIG6_HEADS, 1024, FIG6_D]);
+        assert_eq!(fig6.meta_str("kernel"), Some("hedgehog"));
+        assert_eq!(fig6.meta_usize("n"), Some(1024));
     }
 }

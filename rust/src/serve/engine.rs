@@ -15,7 +15,7 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::{ArtifactRegistry, Executable, ParamStore, Tensor};
+use crate::runtime::{ArtifactRegistry, Executable, ExecOptions, ParamStore, Tensor};
 
 pub struct Engine {
     exe: Rc<Executable>,
@@ -36,6 +36,23 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// `new`, after applying execution tuning to the registry's backend.
+    /// NOTE: options are registry-wide (shared by every executable the
+    /// registry serves, including other engines/sessions on it) — this is
+    /// a convenience for processes with one dominant workload, not
+    /// per-engine isolation. Decode steps are latency-bound (n = 1 per
+    /// call), so serving typically wants few backend threads — the
+    /// batcher already provides request parallelism.
+    pub fn with_exec_options(
+        reg: &ArtifactRegistry,
+        tag: &str,
+        params: &ParamStore,
+        opts: ExecOptions,
+    ) -> Result<Engine> {
+        reg.set_exec_options(opts);
+        Engine::new(reg, tag, params)
+    }
+
     pub fn new(reg: &ArtifactRegistry, tag: &str, params: &ParamStore) -> Result<Engine> {
         let exe = reg.get(&format!("{tag}_decode_step"))?;
         let man = exe.manifest.clone();

@@ -13,7 +13,7 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, Result};
 
-use crate::runtime::{ArtifactRegistry, Executable, ParamStore, Tensor};
+use crate::runtime::{ArtifactRegistry, Executable, ExecOptions, ParamStore, Tensor};
 
 /// Named batch tensors, matched to manifest slots by name.
 #[derive(Debug, Clone, Default)]
@@ -49,6 +49,23 @@ pub struct Session {
 }
 
 impl Session {
+    /// `init`, after applying execution tuning to the registry's backend.
+    /// NOTE: options are registry-wide (shared by every executable the
+    /// registry serves, including engines/sessions created earlier) — a
+    /// convenience for processes with one dominant workload, not
+    /// per-session isolation. Training steps are throughput-bound, so
+    /// reference-backend sessions usually want every core
+    /// (`ExecOptions::default()` auto-threads).
+    pub fn init_with_exec_options(
+        reg: &ArtifactRegistry,
+        tag: &str,
+        seed: u32,
+        opts: ExecOptions,
+    ) -> Result<Session> {
+        reg.set_exec_options(opts);
+        Session::init(reg, tag, seed)
+    }
+
     /// Initialize from a `<tag>_init` graph with the given seed.
     pub fn init(reg: &ArtifactRegistry, tag: &str, seed: u32) -> Result<Session> {
         let init = reg.get(&format!("{tag}_init"))?;

@@ -1,0 +1,105 @@
+//! Property sweep: the chunked, threaded reference kernels must match the
+//! naive row-wise PR-1 oracle (`ExecOptions::naive()`) to ~f32 rounding —
+//! across chunk sizes (including 1, a prime, the default, and C >= n so a
+//! single block covers the sequence), thread counts, sequence lengths not
+//! divisible by the chunk size, and every feature map.
+//!
+//! Tolerance is 1e-5 *relative* (denominator clamped at 1): the chunked
+//! form regroups the same f32 sums, so only rounding differs. The bench
+//! harness enforces the same invariant at 1e-4 in CI's bench-smoke job.
+
+use std::path::Path;
+
+use hedgehog::data::Pcg32;
+use hedgehog::runtime::backend::Executable as _;
+use hedgehog::runtime::reference::kernel_manifest;
+use hedgehog::runtime::{Backend, ExecOptions, ReferenceBackend, Tensor};
+
+const REL_TOL: f32 = 1e-5;
+
+fn run(name: &str, shape: &[usize], inputs: &[Tensor], opts: ExecOptions) -> Vec<f32> {
+    let backend = ReferenceBackend::with_options(opts);
+    let exe = backend.load(Path::new("unused"), &kernel_manifest(name, shape)).unwrap();
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    exe.execute(&refs).unwrap().remove(0).as_f32().unwrap().to_vec()
+}
+
+fn rand_inputs(seed: u64, shape: &[usize]) -> Vec<Tensor> {
+    let mut rng = Pcg32::new(seed);
+    let len: usize = shape.iter().product();
+    (0..3)
+        .map(|_| Tensor::from_f32((0..len).map(|_| rng.normal() * 0.3).collect(), shape))
+        .collect()
+}
+
+fn assert_close(name: &str, cfg: &str, got: &[f32], want: &[f32]) {
+    assert_eq!(got.len(), want.len(), "{name} {cfg}: length mismatch");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        let tol = REL_TOL * b.abs().max(1.0);
+        assert!(
+            (a - b).abs() <= tol,
+            "{name} {cfg}: element {i}: chunked {a} vs naive {b} (|diff| {} > tol {tol})",
+            (a - b).abs()
+        );
+    }
+}
+
+/// All kernel families, chunk sizes {1, 7, 64, n}, threads {1, 4},
+/// on shapes whose n is deliberately not a multiple of most chunk sizes.
+#[test]
+fn chunked_matches_naive_oracle_across_chunks_and_threads() {
+    // (b, h, n, d): n = 50 (not divisible by 7 or 64), n = 65 (= 64 + 1,
+    // exercises the one-row tail chunk), multi-batch multi-head.
+    for &shape in &[[1usize, 1, 50, 8], [2, 2, 65, 4], [1, 3, 33, 8]] {
+        let n = shape[2];
+        let inputs = rand_inputs(0xC0FFEE ^ n as u64, &shape);
+        let hedgehog = format!("fig6_hedgehog_n{n}");
+        let taylor = format!("fig6_taylor_n{n}");
+        for kernel in [
+            "kernel_linear_attention",
+            "kernel_softmax_attention",
+            hedgehog.as_str(),
+            taylor.as_str(),
+        ] {
+            let naive = run(kernel, &shape, &inputs, ExecOptions::naive());
+            for chunk in [1usize, 7, 64, n] {
+                for threads in [1usize, 4] {
+                    let opts = ExecOptions { threads, chunk_size: chunk };
+                    let out = run(kernel, &shape, &inputs, opts);
+                    assert_close(kernel, &format!("C={chunk} t={threads}"), &out, &naive);
+                }
+            }
+        }
+    }
+}
+
+/// The decomposition is deterministic for a fixed (threads, chunk)
+/// config: two runs must agree bit-for-bit.
+#[test]
+fn chunked_execution_is_deterministic() {
+    let shape = [1usize, 2, 65, 8];
+    let inputs = rand_inputs(9, &shape);
+    for kernel in ["kernel_linear_attention", "kernel_softmax_attention"] {
+        let opts = ExecOptions { threads: 4, chunk_size: 16 };
+        let a = run(kernel, &shape, &inputs, opts);
+        let b = run(kernel, &shape, &inputs, opts);
+        assert_eq!(a, b, "{kernel}: nondeterministic output");
+    }
+}
+
+/// Thread count changes only the span decomposition, never the math:
+/// explicit thread counts from 1 to more-threads-than-rows all stay
+/// within tolerance of the oracle.
+#[test]
+fn oversubscribed_threads_stay_correct() {
+    let shape = [1usize, 1, 19, 4];
+    let inputs = rand_inputs(42, &shape);
+    for kernel in ["kernel_linear_attention", "kernel_softmax_attention"] {
+        let naive = run(kernel, &shape, &inputs, ExecOptions::naive());
+        for threads in [2usize, 8, 32] {
+            let opts = ExecOptions { threads, chunk_size: 4 };
+            let out = run(kernel, &shape, &inputs, opts);
+            assert_close(kernel, &format!("t={threads}"), &out, &naive);
+        }
+    }
+}
