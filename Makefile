@@ -2,13 +2,15 @@
 #
 #   make build        release build (tier-1, no XLA)
 #   make test         tier-1 test suite
-#   make bench        full kernel + fig6 bench sweep -> BENCH_*.json at repo root
+#   make bench        full kernel + fig6 + decode bench sweep -> BENCH_*.json
 #   make bench-smoke  CI short mode: small n, few reps, parity-gated
+#   make perf-diff    fresh smoke sweep vs the committed BENCH_kernels.json
+#                     snapshot (warn-only, >25% tokens/sec regression)
 #
 # `make artifacts` (model-graph export) lives in python/compile and needs
 # jax; everything here is hermetic Rust.
 
-.PHONY: build test bench bench-smoke
+.PHONY: build test bench bench-smoke perf-diff
 
 build:
 	cargo build --release
@@ -21,7 +23,26 @@ test: build
 bench:
 	cargo bench --bench kernel_micro
 	cargo bench --bench fig6_scaling
+	cargo bench --bench decode_throughput
 
 bench-smoke:
 	BENCH_SMOKE=1 cargo bench --bench kernel_micro
 	BENCH_SMOKE=1 cargo bench --bench fig6_scaling
+
+# Emit a fresh smoke-mode kernel sweep into .bench-fresh/ (so the
+# committed repo-root snapshot is untouched) and compare tokens/sec per
+# chunked config against `git show HEAD:BENCH_kernels.json`. Warn-only:
+# regressions print a WARNING block, the target still exits 0. Set
+# PERF_DIFF_FRESH to reuse an existing emission (CI does this right after
+# bench-smoke instead of running the sweep twice).
+PERF_DIFF_FRESH ?=
+
+perf-diff:
+	@if [ -n "$(PERF_DIFF_FRESH)" ]; then \
+		python3 tools/perf_diff.py "$(PERF_DIFF_FRESH)"; \
+	else \
+		mkdir -p .bench-fresh && \
+		BENCH_SMOKE=1 BENCH_OUT_DIR=$(CURDIR)/.bench-fresh \
+			cargo bench --bench kernel_micro && \
+		python3 tools/perf_diff.py .bench-fresh/BENCH_kernels.json; \
+	fi

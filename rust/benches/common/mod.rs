@@ -125,7 +125,9 @@ fn json_num(x: f64) -> String {
 /// Write records as a small self-describing JSON document (serde is not
 /// in the offline vendor set; names are plain ASCII so Debug-quoting is
 /// JSON-safe). `baseline` states what `speedup` / `max_rel_err` compare
-/// against.
+/// against. `provenance` is always "measured" for harness-emitted files;
+/// the committed repo-root snapshot carries its own value so
+/// `tools/perf_diff.py` can tell a real baseline from a modeled one.
 pub fn write_json(
     path: &Path,
     title: &str,
@@ -138,6 +140,7 @@ pub fn write_json(
     s.push_str("  \"schema\": \"hedgehog_bench_v2\",\n");
     s.push_str(&format!("  \"title\": {title:?},\n"));
     s.push_str(&format!("  \"baseline\": {baseline:?},\n"));
+    s.push_str("  \"provenance\": \"measured\",\n");
     s.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
     s.push_str(&format!("  \"available_parallelism\": {cores},\n"));
     s.push_str("  \"results\": [\n");

@@ -2,18 +2,67 @@
 //!
 //! The linear-attention engine carries an O(1) recurrent state, so the
 //! 200th token costs the same as the 1st. The softmax KV-cache decode
-//! attends over an ever-longer prefix. This bench drives both exported
-//! decode graphs and prints per-token time at several positions.
+//! attends over an ever-longer prefix.
+//!
+//! Two sections:
+//!
+//! * **Hermetic (always runs).** The reference backend's builtin
+//!   `ref_lm_decode_step` through the real `serve::Engine` — the decode
+//!   hot path this repo optimizes (persistent pool, double-buffered
+//!   state, borrowed logits). Reports per-step time at several positions
+//!   (flat, by construction) and slot-tokens/sec.
+//! * **Compiled (self-skips).** The exported model decode graphs under
+//!   PJRT, comparing the linear engine against softmax KV-cache decode.
 
 mod common;
 
 use common::{bench, print_table};
 use hedgehog::data::Pcg32;
-use hedgehog::runtime::{ArtifactRegistry, ParamStore, Tensor};
+use hedgehog::runtime::{
+    ref_lm_demo_params, ArtifactRegistry, ExecOptions, ParamStore, Tensor, REF_LM_TAG,
+};
 use hedgehog::serve::Engine;
 use hedgehog::train::session::Session;
 
-fn main() {
+/// Hermetic section: the reference decode engine, timed at increasing
+/// positions. O(1) state means the rows should be flat.
+fn bench_reference_decode(results: &mut Vec<common::BenchResult>) {
+    let reg = ArtifactRegistry::open("artifacts").expect("artifact registry");
+    if reg.backend_name() != "reference" {
+        return;
+    }
+    reg.set_exec_options(ExecOptions::serial());
+    let params = ref_lm_demo_params();
+    let mut engine = Engine::new(&reg, REF_LM_TAG, &params).expect("builtin decode engine");
+    let b = engine.batch;
+    let toks = vec![1i32; b];
+
+    let mut at_position = |pos: usize, label: String, results: &mut Vec<common::BenchResult>| {
+        while (engine.positions[0] as usize) < pos {
+            engine.step(&toks).unwrap();
+        }
+        results.push(bench(label, 64, || {
+            engine.step(&toks).unwrap();
+        }));
+    };
+    at_position(0, format!("ref_lm  b={b} pos ~0"), results);
+    at_position(100, format!("ref_lm  b={b} pos ~100"), results);
+    at_position(1000, format!("ref_lm  b={b} pos ~1000"), results);
+
+    let t0 = std::time::Instant::now();
+    let before = engine.tokens_processed;
+    for _ in 0..500 {
+        engine.step(&toks).unwrap();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "ref_lm sustained: {:.0} slot-tokens/sec (batch {b}, O(1) state, serial)",
+        (engine.tokens_processed - before) as f64 / secs
+    );
+}
+
+/// Compiled-artifact section: model decode graphs under PJRT.
+fn bench_compiled_decode(results: &mut Vec<common::BenchResult>) {
     let reg = ArtifactRegistry::open("artifacts").expect("artifact registry");
     if reg.backend_name() != "pjrt"
         || !reg.contains("lm_hedgehog_init")
@@ -21,7 +70,7 @@ fn main() {
     {
         eprintln!(
             "decode_throughput: model graphs need compiled artifacts (`make artifacts`) \
-             and the `pjrt` backend; skipping"
+             and the `pjrt` backend; skipping the compiled section"
         );
         return;
     }
@@ -29,8 +78,6 @@ fn main() {
     let s = Session::init(&reg, "lm_hedgehog", 0).unwrap();
     let params = s.params;
     let softmax_params = Session::init(&reg, "lm_softmax", 0).unwrap().params;
-
-    let mut results = Vec::new();
 
     // linear engine: time a step at position ~0 and position ~100
     let mut engine = Engine::new(&reg, "lm_hedgehog", &params).unwrap();
@@ -67,10 +114,15 @@ fn main() {
             exe.run(&inputs).unwrap();
         }));
     };
-    run_at(1, "softmax pos 1", &mut results);
-    run_at(100, "softmax pos 100", &mut results);
+    run_at(1, "softmax pos 1", &mut *results);
+    run_at(100, "softmax pos 100", &mut *results);
+}
 
-    print_table("decode: per-token cost vs position (batch 4)", &results);
+fn main() {
+    let mut results = Vec::new();
+    bench_reference_decode(&mut results);
+    bench_compiled_decode(&mut results);
+    print_table("decode: per-token cost vs position", &results);
     println!("paper shape: linear flat in position; softmax cost grows with prefix");
     let _ = ParamStore::new();
 }

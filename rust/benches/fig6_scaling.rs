@@ -3,9 +3,11 @@
 //! Taylor (O(n) with a d'^2 constant). Hermetic since the reference
 //! backend provides the `fig6_*` manifests as builtins — no artifacts
 //! directory needed. Each point runs chunked serial and chunked with all
-//! cores, so the JSON records the threading win alongside the asymptotic
-//! shape. Expect the paper's curves: softmax quadratic, hedgehog
-//! near-linear, taylor linear with a ~d offset.
+//! cores (on the backend's persistent worker pool — the threads sweep
+//! retunes one backend, so the pool is spawned once and reused across
+//! every point), so the JSON records the threading win alongside the
+//! asymptotic shape. Expect the paper's curves: softmax quadratic,
+//! hedgehog near-linear, taylor linear with a ~d offset.
 
 mod common;
 

@@ -1,5 +1,6 @@
-//! L1 kernel sweep harness: chunked + threaded reference execution vs the
-//! PR-1 naive row-wise path, over n x threads, for every kernel family the
+//! L1 kernel sweep harness: chunked reference execution (persistent
+//! worker pool + explicit 8-lane SIMD micro-kernels) vs the PR-1 naive
+//! row-wise path, over n x threads, for every kernel family the
 //! reference backend interprets.
 //!
 //! Emits `BENCH_kernels.json` at the repo root (ns/iter, tokens/sec,
@@ -7,6 +8,10 @@
 //! compared elementwise against the naive oracle and the process exits
 //! nonzero if any diverges beyond 1e-4 relative — this is what CI's
 //! bench-smoke job runs (`BENCH_SMOKE=1` shrinks the sweep).
+//! `make perf-diff` compares a fresh emission of this file against the
+//! committed repo-root snapshot (threads=4 chunked rows are the
+//! cross-machine reference configs, benched on every box regardless of
+//! core count).
 //!
 //! Also times the host marshalling overhead the §Perf pass targets at L3.
 
@@ -56,7 +61,13 @@ fn main() {
     let smoke = smoke_mode();
     let ns: &[usize] = if smoke { &[64, 256] } else { &[256, 1024, 4096] };
     let max_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let thread_cases: Vec<usize> = if max_threads > 1 { vec![1, max_threads] } else { vec![1] };
+    // 1 (serial), 4 (the fixed cross-machine reference config — benched
+    // even on smaller boxes, where the pool simply oversubscribes), and
+    // every core when that differs.
+    let mut thread_cases: Vec<usize> = vec![1, 4];
+    if max_threads > 1 && !thread_cases.contains(&max_threads) {
+        thread_cases.push(max_threads);
+    }
     let chunk = ExecOptions::DEFAULT_CHUNK;
 
     let backend = ReferenceBackend::new();

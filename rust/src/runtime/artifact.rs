@@ -260,6 +260,19 @@ mod tests {
     }
 
     #[test]
+    fn open_serves_builtin_decode_step_hermetically() {
+        // The serve engine's hermetic hot path: the builtin decode
+        // artifact must resolve and load with nothing on disk.
+        let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+        assert!(reg.contains("ref_lm_decode_step"));
+        let man = reg.manifest("ref_lm_decode_step").unwrap();
+        assert_eq!(man.meta_usize("vocab"), Some(256));
+        assert!(man.input_index("token").is_ok());
+        assert!(man.input_index("s").is_ok());
+        assert!(reg.get("ref_lm_decode_step").is_ok());
+    }
+
+    #[test]
     fn exec_options_roundtrip_through_registry() {
         let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
         let tuned = ExecOptions::default().with_threads(2).with_chunk_size(32);

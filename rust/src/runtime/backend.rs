@@ -27,10 +27,13 @@ use super::tensor::Tensor;
 /// `ArtifactRegistry::set_exec_options` to trade latency for cores.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExecOptions {
-    /// Worker threads for (batch, head) / sequence-span parallelism.
-    /// `0` means auto: use every available core, but keep small problems
-    /// single-threaded so spawn overhead never dominates. Any explicit
-    /// value is honored exactly.
+    /// Worker threads for (batch, head) / sequence-span / decode-slot
+    /// parallelism, executed on the backend's persistent worker pool
+    /// (spawned lazily, resized by this knob, torn down when the backend
+    /// and its executables drop — see `runtime/pool.rs`). `0` means
+    /// auto: use every available core, but keep small problems
+    /// single-threaded so even pooled dispatch overhead never dominates.
+    /// Any explicit value is honored exactly.
     pub threads: usize,
     /// Rows per block in the chunked kernels. `0` selects the naive
     /// row-by-row PR-1 path, kept as the numerical oracle and the bench

@@ -12,12 +12,15 @@ pub mod manifest;
 pub mod params;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod pool;
 pub mod reference;
+pub mod simd;
 pub mod tensor;
 
 pub use artifact::{ArtifactRegistry, Executable};
 pub use backend::{Backend, ExecOptions};
 pub use manifest::{Manifest, Slot};
 pub use params::ParamStore;
-pub use reference::ReferenceBackend;
+pub use pool::WorkerPool;
+pub use reference::{ref_lm_demo_params, ReferenceBackend, REF_LM_TAG};
 pub use tensor::{DType, Tensor, TensorData};

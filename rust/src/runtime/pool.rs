@@ -1,0 +1,487 @@
+//! Persistent worker pool for the reference backend's fork/join work.
+//!
+//! PR 2 parallelized the chunked kernels with `std::thread::scope`, which
+//! pays an OS thread spawn + join (~10-50us) on every `execute`. That
+//! overhead is invisible at n = 4096 but dominates decode, where every
+//! call processes a single token. This pool replaces it: workers are
+//! spawned once (lazily, on first multi-threaded dispatch), parked on a
+//! condvar between jobs, and torn down when the last owner drops the pool
+//! — so steady-state dispatch costs a mutex lock, a condvar broadcast,
+//! and zero allocations.
+//!
+//! Dispatch protocol (`run`): the caller installs a type-erased pointer to
+//! its task closure under the state mutex, bumps the job epoch, and wakes
+//! the workers; tasks are claimed by an atomic counter (`fetch_add`), so
+//! distribution is dynamic — no per-dispatch task queue is built. The
+//! dispatcher participates in claiming (with zero live workers it simply
+//! runs every task itself, so spawn failure degrades to serial execution,
+//! never deadlock). Completion is tracked by an `active` worker count
+//! updated under the mutex: a worker increments it before its first claim
+//! and decrements it after its last, so `active == 0` after the
+//! dispatcher's own claim loop means every claimed task has finished and
+//! no worker can still dereference the closure. Only then does `run`
+//! return — which is exactly what makes the lifetime-erased borrow sound.
+//!
+//! `ExecOptions::threads` resizes the pool lazily: each dispatch ensures
+//! `threads - 1` workers exist, growing on demand. Shrinking is not
+//! needed — parked workers cost nothing but a stack — so a smaller
+//! request simply wakes fewer claims' worth of work; teardown happens in
+//! `Drop` (shutdown flag + broadcast + join).
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A dispatch's task closure with its borrow lifetime erased so it can
+/// park in the shared job slot.
+///
+/// SAFETY contract: the referent outlives every call because the
+/// dispatcher blocks in `run` until `active == 0` (no worker is between
+/// job pickup and its post-claim decrement) before the real borrow ends.
+/// `&(dyn Fn + Sync)` is `Send + Copy` for free, so no unsafe auto-trait
+/// impls are needed — the one unsafe act is the lifetime extension.
+#[derive(Clone, Copy)]
+struct TaskFn(&'static (dyn Fn(usize) + Sync));
+
+struct JobState {
+    /// Current job's closure; `None` between jobs.
+    func: Option<TaskFn>,
+    /// Number of task indices in the current job.
+    num_tasks: usize,
+    /// Bumped per dispatch so parked workers distinguish a new job from a
+    /// spurious wakeup (and never re-enter a job they already left).
+    epoch: u64,
+    /// Workers currently inside a claim loop for the current job.
+    active: usize,
+    /// Per-job worker budget (`threads - 1`; the dispatcher is the +1).
+    /// Surplus workers parked by earlier, larger dispatches wake on the
+    /// broadcast but skip a full job — explicit `ExecOptions::threads`
+    /// counts stay honored exactly, never just "at least".
+    max_workers: usize,
+    /// A worker task panicked during the current job (caught; re-raised
+    /// on the dispatcher after the job fully drains).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolInner {
+    state: Mutex<JobState>,
+    /// Workers park here waiting for a new epoch (or shutdown).
+    work: Condvar,
+    /// The dispatcher parks here waiting for `active == 0`; queued
+    /// dispatchers wait here for the pool to go idle.
+    done: Condvar,
+    /// Claim counter for the current job; reset at install time.
+    next_task: AtomicUsize,
+}
+
+/// Persistent fork/join pool. Cheap to construct (no threads until the
+/// first multi-threaded `run`); clone the owning `Arc` freely — teardown
+/// runs when the last owner drops.
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("workers", &self.worker_count()).finish()
+    }
+}
+
+impl WorkerPool {
+    pub fn new() -> Self {
+        WorkerPool {
+            inner: Arc::new(PoolInner {
+                state: Mutex::new(JobState {
+                    func: None,
+                    num_tasks: 0,
+                    epoch: 0,
+                    active: 0,
+                    max_workers: 0,
+                    panicked: false,
+                    shutdown: false,
+                }),
+                work: Condvar::new(),
+                done: Condvar::new(),
+                next_task: AtomicUsize::new(0),
+            }),
+            workers: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Live worker threads (for tests; the dispatcher is not counted).
+    pub fn worker_count(&self) -> usize {
+        self.workers.lock().unwrap().len()
+    }
+
+    /// Grow to at least `want` workers. Spawn failure is tolerated: the
+    /// dispatcher always participates, so fewer workers only means less
+    /// parallelism, never an incomplete job.
+    fn ensure_workers(&self, want: usize) {
+        let mut workers = self.workers.lock().unwrap();
+        while workers.len() < want {
+            let inner = Arc::clone(&self.inner);
+            let builder =
+                std::thread::Builder::new().name(format!("hedgehog-pool-{}", workers.len()));
+            match builder.spawn(move || worker_loop(inner)) {
+                Ok(h) => workers.push(h),
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Run `num_tasks` tasks, `f(i)` for each `i in 0..num_tasks`, across
+    /// up to `threads` threads (the calling thread included). Returns when
+    /// every task has completed. `threads <= 1` or a single task runs
+    /// inline with no synchronization at all — that path is what keeps
+    /// single-threaded decode allocation- and lock-free.
+    ///
+    /// Panic policy (matches the `std::thread::scope` semantics this pool
+    /// replaced): a panicking task never breaks the protocol. Panics are
+    /// caught on whichever thread claimed the task, the job still drains
+    /// (counters cleaned, closure slot cleared, workers kept alive and
+    /// parked), and the panic is then re-raised on the dispatcher — so a
+    /// buggy kernel panics the `execute` call, not the process-wide pool,
+    /// and the lifetime-erased closure is never dereferenced after `run`
+    /// returns.
+    pub fn run(&self, threads: usize, num_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if num_tasks == 0 {
+            return;
+        }
+        if threads <= 1 || num_tasks == 1 {
+            for i in 0..num_tasks {
+                f(i);
+            }
+            return;
+        }
+        // More threads than tasks can never help, and workers persist for
+        // the pool's lifetime — cap growth at the useful parallelism.
+        self.ensure_workers(threads.min(num_tasks) - 1);
+        let inner = &*self.inner;
+        {
+            let mut st = inner.state.lock().unwrap();
+            // Serialize concurrent dispatchers: wait for the pool to go
+            // idle before installing a new job (counters are shared).
+            while st.func.is_some() || st.active != 0 {
+                st = inner.done.wait(st).unwrap();
+            }
+            inner.next_task.store(0, Ordering::Relaxed);
+            st.panicked = false;
+            // SAFETY: extend the closure borrow to 'static to park it in
+            // shared state; the completion wait below upholds TaskFn's
+            // contract (no call can outlive this stack frame).
+            let func = unsafe {
+                std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+            };
+            st.func = Some(TaskFn(func));
+            st.num_tasks = num_tasks;
+            st.max_workers = threads.min(num_tasks) - 1;
+            st.epoch = st.epoch.wrapping_add(1);
+            inner.work.notify_all();
+        }
+        // The dispatcher claims tasks alongside the workers. A panic is
+        // stashed, not propagated, so the completion wait below always
+        // runs (remaining tasks drain to the workers, or go unclaimed —
+        // the job is failing either way).
+        let mut dispatcher_panic = None;
+        loop {
+            let i = inner.next_task.fetch_add(1, Ordering::Relaxed);
+            if i >= num_tasks {
+                break;
+            }
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                dispatcher_panic = Some(p);
+                break;
+            }
+        }
+        // Wait for straggling workers; their post-task mutex release
+        // happens-before our wakeup, publishing their output writes.
+        let mut st = inner.state.lock().unwrap();
+        while st.active != 0 {
+            st = inner.done.wait(st).unwrap();
+        }
+        st.func = None;
+        let worker_panicked = std::mem::take(&mut st.panicked);
+        drop(st);
+        // Wake any dispatcher queued behind us.
+        inner.done.notify_all();
+        if let Some(p) = dispatcher_panic {
+            resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("WorkerPool: a pooled task panicked (see worker thread's message above)");
+        }
+    }
+
+    /// Fork/join over owned task values: each task runs exactly once, on
+    /// whichever thread claims its index. The planner-facing wrapper the
+    /// reference kernels use (they build per-span task structs holding
+    /// disjoint `&mut` output slices).
+    pub fn run_tasks<T: Send>(&self, threads: usize, tasks: Vec<T>, f: impl Fn(T) + Sync) {
+        if threads <= 1 || tasks.len() <= 1 {
+            for t in tasks {
+                f(t);
+            }
+            return;
+        }
+        let cells: Vec<TaskCell<T>> =
+            tasks.into_iter().map(|t| TaskCell(std::cell::UnsafeCell::new(Some(t)))).collect();
+        self.run(threads, cells.len(), &|i| {
+            // SAFETY: index i is claimed exactly once, so this access is
+            // exclusive for the cell's lifetime.
+            let task = unsafe { (*cells[i].0.get()).take() };
+            f(task.expect("task index claimed twice"));
+        });
+    }
+}
+
+/// One owned task, claimed (and therefore mutated) by exactly one pool
+/// thread — the claim counter hands out each index once.
+struct TaskCell<T>(std::cell::UnsafeCell<Option<T>>);
+
+// SAFETY: see the claim-uniqueness argument on the struct; T crosses
+// threads, hence the Send bound.
+unsafe impl<T: Send> Sync for TaskCell<T> {}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+            self.inner.work.notify_all();
+        }
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<PoolInner>) {
+    let mut seen = 0u64;
+    loop {
+        let (func, num_tasks) = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if st.func.is_some() && st.active < st.max_workers {
+                        let func = st.func.unwrap();
+                        st.active += 1;
+                        break (func, st.num_tasks);
+                    }
+                    // Job gone, or its worker budget is already full
+                    // (this worker was spawned for a wider dispatch):
+                    // skip it and park for the next epoch.
+                }
+                st = inner.work.wait(st).unwrap();
+            }
+        };
+        let mut panicked = false;
+        loop {
+            let i = inner.next_task.fetch_add(1, Ordering::Relaxed);
+            if i >= num_tasks {
+                break;
+            }
+            // A successful claim implies the dispatcher is still blocked
+            // in `run` (it cannot observe active == 0 while this worker
+            // holds an unfinished claim), so the closure is alive. Panics
+            // are caught so `active` is always decremented — a worker
+            // that unwound past the decrement would deadlock every
+            // subsequent dispatch.
+            if catch_unwind(AssertUnwindSafe(|| (func.0)(i))).is_err() {
+                panicked = true;
+                break;
+            }
+        }
+        let mut st = inner.state.lock().unwrap();
+        if panicked {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            inner.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = WorkerPool::new();
+        for threads in [1usize, 2, 4, 9] {
+            for num_tasks in [0usize, 1, 2, 7, 64, 257] {
+                let hits: Vec<AtomicUsize> =
+                    (0..num_tasks).map(|_| AtomicUsize::new(0)).collect();
+                pool.run(threads, num_tasks, &|i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(
+                        h.load(Ordering::Relaxed),
+                        1,
+                        "threads={threads} tasks={num_tasks}: task {i} ran wrong count"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_mut_slices_via_run_tasks() {
+        let pool = WorkerPool::new();
+        let n = 1000usize;
+        let mut buf = vec![0u64; n];
+        let mut tasks = Vec::new();
+        let mut rest = buf.as_mut_slice();
+        let mut base = 0usize;
+        while !rest.is_empty() {
+            let w = rest.len().min(37);
+            let (head, tail) = rest.split_at_mut(w);
+            tasks.push((base, head));
+            base += w;
+            rest = tail;
+        }
+        pool.run_tasks(4, tasks, |(base, slice): (usize, &mut [u64])| {
+            for (i, x) in slice.iter_mut().enumerate() {
+                *x = (base + i) as u64;
+            }
+        });
+        for (i, &x) in buf.iter().enumerate() {
+            assert_eq!(x, i as u64);
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_dispatches() {
+        // Exercises the park/wake cycle: epochs must keep workers from
+        // re-running stale jobs, and counters must reset cleanly.
+        let pool = WorkerPool::new();
+        let total = AtomicUsize::new(0);
+        for round in 0..200 {
+            let tasks = 1 + round % 5;
+            pool.run(3, tasks, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        let expected: usize = (0..200).map(|r| 1 + r % 5).sum();
+        assert_eq!(total.load(Ordering::Relaxed), expected);
+    }
+
+    #[test]
+    fn grows_lazily_and_tears_down_on_drop() {
+        let pool = WorkerPool::new();
+        assert_eq!(pool.worker_count(), 0, "no threads before first dispatch");
+        pool.run(1, 8, &|_| {});
+        assert_eq!(pool.worker_count(), 0, "threads=1 must stay inline");
+        pool.run(3, 8, &|_| {});
+        assert_eq!(pool.worker_count(), 2);
+        pool.run(5, 8, &|_| {});
+        assert_eq!(pool.worker_count(), 4, "pool grows to the largest request");
+        pool.run(2, 8, &|_| {});
+        assert_eq!(pool.worker_count(), 4, "pool never shrinks while live");
+        drop(pool); // must join all 4 workers without hanging
+    }
+
+    #[test]
+    fn drop_with_parked_workers_does_not_hang() {
+        let pool = WorkerPool::new();
+        pool.run(8, 32, &|_| {});
+        drop(pool);
+        // Re-create: a fresh pool after a teardown must work from scratch.
+        let pool = WorkerPool::new();
+        let total = AtomicUsize::new(0);
+        pool.run(8, 32, &|_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn thread_budget_is_honored_after_pool_grew_larger() {
+        // A wide dispatch leaves 7 parked workers; a later threads=2
+        // dispatch must still run at most 2 tasks concurrently (1 worker
+        // + the dispatcher) — surplus workers skip the job.
+        let pool = WorkerPool::new();
+        pool.run(8, 64, &|_| {});
+        assert_eq!(pool.worker_count(), 7);
+        let in_flight = AtomicUsize::new(0);
+        let high_water = AtomicUsize::new(0);
+        pool.run(2, 64, &|_| {
+            let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+            high_water.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            in_flight.fetch_sub(1, Ordering::SeqCst);
+        });
+        let peak = high_water.load(Ordering::SeqCst);
+        assert!(peak <= 2, "threads=2 dispatch ran {peak} tasks concurrently");
+    }
+
+    #[test]
+    fn panicking_task_fails_the_dispatch_but_not_the_pool() {
+        let pool = WorkerPool::new();
+        // A panic on any claimant (dispatcher or worker) must surface as
+        // a panic of `run`...
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, 16, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "task panic was swallowed");
+        // ...and the pool must stay fully usable afterwards: counters
+        // reset, workers alive and parked, no deadlocked dispatch.
+        let total = AtomicUsize::new(0);
+        for _ in 0..5 {
+            pool.run(4, 16, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 80);
+    }
+
+    #[test]
+    fn concurrent_dispatchers_serialize() {
+        // Two threads dispatching into one pool must not corrupt each
+        // other's jobs (the install gate serializes them).
+        let pool = std::sync::Arc::new(WorkerPool::new());
+        let a = AtomicUsize::new(0);
+        let b = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            let p1 = Arc::clone(&pool);
+            let p2 = Arc::clone(&pool);
+            let (ar, br) = (&a, &b);
+            scope.spawn(move || {
+                for _ in 0..50 {
+                    p1.run(2, 5, &|_| {
+                        ar.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+            scope.spawn(move || {
+                for _ in 0..50 {
+                    p2.run(2, 7, &|_| {
+                        br.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+        });
+        assert_eq!(a.load(Ordering::Relaxed), 250);
+        assert_eq!(b.load(Ordering::Relaxed), 350);
+    }
+}

@@ -13,22 +13,26 @@
 //! * `fig6_{softmax,hedgehog,taylor}_n*` — the Fig 6 scaling artifacts:
 //!   softmax, the data-independent Hedgehog map `[exp(x), exp(-x)]`
 //!   (Eq. 6), and 2nd-degree Taylor features (Sec 4.1).
+//! * `ref_lm_decode_step` — a builtin one-layer Hedgehog LM decode step
+//!   (embed -> per-head linear attention over the carried (S, z) state ->
+//!   unembed), so the serving engine, the batcher, and the decode bench
+//!   run hermetically with no compiled model graphs. See `RefDecode`.
 //!
 //! Two execution strategies per kernel, selected by `ExecOptions` (see
 //! rust/DESIGN.md §5 for the derivation):
 //!
-//! * **Chunked + threaded (default).** Linear attention processes the
+//! * **Chunked + pooled + SIMD (default).** Linear attention processes the
 //!   sequence in blocks of `chunk_size` rows, carrying the running
-//!   `(sum phi(k) v^T, sum phi(k))` state between blocks; intra-block work
-//!   is small dense matmuls over contiguous slices. Softmax attention is
-//!   tiled QK^T with row-streaming online softmax (running max / sum
-//!   rescaling). Work parallelizes across (batch, head) and across
-//!   sequence spans within a head on scoped OS threads — the offline
-//!   crate set has no rayon, so a dependency-free fork/join pool lives in
-//!   `run_tasks` below.
+//!   `(sum phi(k) v^T, sum phi(k))` state between blocks; softmax
+//!   attention is tiled QK^T with row-streaming online softmax. Every
+//!   inner loop routes through the explicit 8-lane micro-kernels in
+//!   `runtime/simd.rs`, and work parallelizes across (batch, head) and
+//!   across sequence spans on the backend's persistent `WorkerPool`
+//!   (`runtime/pool.rs`) — spawned once, parked between dispatches, so
+//!   per-`execute` cost no longer includes thread spawn/join.
 //! * **Naive row-wise (`chunk_size == 0`).** The PR-1 scalar loops, kept
-//!   verbatim as the numerical oracle for parity tests and as the bench
-//!   baseline.
+//!   verbatim (strict sequential summation, no pool, no lane regrouping)
+//!   as the numerical oracle for parity tests and as the bench baseline.
 //!
 //! Model graphs (`*_init`, `*_train_step`, ...) have no reference
 //! interpretation — they need the compiled HLO path (`pjrt` feature).
@@ -43,7 +47,11 @@ use anyhow::{anyhow, bail, Result};
 use super::backend::{Backend, ExecOptions, Executable as BackendExecutable};
 use super::json::Json;
 use super::manifest::{Manifest, Slot};
+use super::params::ParamStore;
+use super::pool::WorkerPool;
+use super::simd;
 use super::tensor::{DType, Tensor};
+use crate::data::Pcg32;
 
 /// Denominator guard, matching `ref.py` / the Pallas kernels.
 const EPS: f32 = 1e-6;
@@ -60,10 +68,25 @@ const FIG6_SOFTMAX_NS: &[usize] = &[256, 512, 1024, 2048, 4096];
 const FIG6_HEDGEHOG_NS: &[usize] = &[256, 512, 1024, 2048, 4096, 8192, 16384];
 const FIG6_TAYLOR_NS: &[usize] = &[256, 512, 1024, 2048];
 
+/// Geometry of the builtin `ref_lm_decode_step` artifact: a one-layer,
+/// two-head Hedgehog LM whose decode step the backend interprets natively
+/// (the only model-shaped graph with a reference interpretation). Small
+/// on purpose — it exists to make the serve layer hermetic and to give
+/// the decode hot path something real to execute, not to be a good LM.
+pub const REF_LM_TAG: &str = "ref_lm";
+const REF_LM_NAME: &str = "ref_lm_decode_step";
+const REF_LM_VOCAB: usize = 256;
+const REF_LM_BATCH: usize = 4;
+const REF_LM_HEADS: usize = 2;
+const REF_LM_HEAD_DIM: usize = 16;
+const REF_LM_DIM: usize = REF_LM_HEADS * REF_LM_HEAD_DIM;
+/// Hedgehog features double the head dim: phi(x) = [exp(x), exp(-x)].
+const REF_LM_DP: usize = 2 * REF_LM_HEAD_DIM;
+
 /// Below this estimated flop count, auto threading (`threads == 0`) stays
-/// serial: spawning scoped threads costs tens of microseconds, which would
-/// dominate the tiny builtin [1, 2, 128, 16] kernels. Explicit thread
-/// counts are always honored.
+/// serial: even pooled dispatch costs a lock + wakeup, which would
+/// dominate the tiny builtin [1, 2, 128, 16] kernels and single-token
+/// decode steps. Explicit thread counts are always honored.
 const MIN_AUTO_PARALLEL_FLOPS: f64 = 8e6;
 
 /// Feature maps the linear-attention interpreter supports. Inputs are raw
@@ -89,44 +112,37 @@ impl FeatureMap {
     }
 
     /// Apply to one row `x`, writing all `dim()` features into `out`.
-    /// Pure slice writes: the hot loops hand in reusable scratch, so
-    /// feature extraction never touches the allocator.
+    /// Pure slice writes into caller-hoisted scratch (never touches the
+    /// allocator), routed through the `simd` micro-kernels. Shared by the
+    /// chunked paths AND the naive oracle, so the feature values are
+    /// bit-identical between them by construction.
     fn write(self, x: &[f32], out: &mut [f32]) {
         let d = x.len();
         match self {
-            FeatureMap::Exp => {
-                for (o, &v) in out.iter_mut().zip(x) {
-                    *o = v.exp();
-                }
-            }
+            FeatureMap::Exp => simd::exp_lanes(x, out),
             FeatureMap::Hedgehog => {
                 let (pos, neg) = out.split_at_mut(d);
-                for ((p, n), &v) in pos.iter_mut().zip(neg).zip(x) {
-                    *p = v.exp();
-                    *n = (-v).exp();
-                }
+                simd::exp_pos_neg(x, pos, neg);
             }
             FeatureMap::Taylor => {
                 let s = (d as f32).powf(-0.25);
-                out[0] = 1.0;
-                for (o, &v) in out[1..1 + d].iter_mut().zip(x) {
+                let (head, quad) = out.split_at_mut(1 + d);
+                head[0] = 1.0;
+                for (o, &v) in head[1..].iter_mut().zip(x) {
                     *o = v * s;
                 }
+                let xs = &head[1..];
                 let isqrt2 = std::f32::consts::FRAC_1_SQRT_2;
-                let mut idx = 1 + d;
-                for i in 0..d {
-                    let xi = out[1 + i];
-                    for j in 0..d {
-                        out[idx] = xi * out[1 + j] * isqrt2;
-                        idx += 1;
-                    }
+                for (i, row) in quad.chunks_exact_mut(d).enumerate() {
+                    // row = (x_i / sqrt(2)) * xs — a scaled store
+                    simd::scaled_add(row, 0.0, xs[i] * isqrt2, xs);
                 }
             }
         }
     }
 }
 
-/// The two attention forms the interpreter implements.
+/// The two attention forms the kernel interpreter implements.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Kernel {
     Softmax,
@@ -175,11 +191,15 @@ impl SharedExecOptions {
     }
 }
 
-/// Interprets kernel artifacts as direct f32 math. Cheap to construct;
-/// the registry owns one behind `Box<dyn Backend>`.
+/// Interprets kernel artifacts as direct f32 math. Cheap to construct —
+/// the worker pool spawns no threads until the first multi-threaded
+/// dispatch. The registry owns one behind `Box<dyn Backend>`; every
+/// executable it hands out shares the same options and pool (`Arc`), so
+/// the pool is torn down when the backend AND its executables are gone.
 #[derive(Debug)]
 pub struct ReferenceBackend {
     opts: Arc<SharedExecOptions>,
+    pool: Arc<WorkerPool>,
 }
 
 impl Default for ReferenceBackend {
@@ -195,7 +215,15 @@ impl ReferenceBackend {
 
     /// Construct with explicit execution tuning (benches, tests).
     pub fn with_options(opts: ExecOptions) -> Self {
-        ReferenceBackend { opts: Arc::new(SharedExecOptions::new(opts)) }
+        ReferenceBackend {
+            opts: Arc::new(SharedExecOptions::new(opts)),
+            pool: Arc::new(WorkerPool::new()),
+        }
+    }
+
+    /// Live pool workers (tests: lazy growth / teardown observability).
+    pub fn pool_workers(&self) -> usize {
+        self.pool.worker_count()
     }
 }
 
@@ -205,6 +233,13 @@ impl Backend for ReferenceBackend {
     }
 
     fn load(&self, _dir: &Path, manifest: &Manifest) -> Result<Box<dyn BackendExecutable>> {
+        if manifest.name == REF_LM_NAME {
+            validate_decode_manifest(manifest)?;
+            return Ok(Box::new(RefDecode {
+                opts: Arc::clone(&self.opts),
+                pool: Arc::clone(&self.pool),
+            }));
+        }
         let kernel = kernel_for(&manifest.name).ok_or_else(|| {
             anyhow!(
                 "artifact {:?} has no pure-Rust reference interpretation — model graphs \
@@ -245,13 +280,18 @@ impl Backend for ReferenceBackend {
                 out.shape
             );
         }
-        Ok(Box::new(RefKernel { kernel, opts: Arc::clone(&self.opts) }))
+        Ok(Box::new(RefKernel {
+            kernel,
+            opts: Arc::clone(&self.opts),
+            pool: Arc::clone(&self.pool),
+        }))
     }
 
     fn builtin_manifests(&self) -> Vec<Manifest> {
         let mut ms = vec![
             builtin_kernel_manifest("kernel_linear_attention", "linear_attention"),
             builtin_kernel_manifest("kernel_softmax_attention", "softmax_attention"),
+            builtin_decode_manifest(),
         ];
         for &(attn, ns) in &[
             ("softmax", FIG6_SOFTMAX_NS),
@@ -316,9 +356,99 @@ fn builtin_fig6_manifest(attn: &str, n: usize) -> Manifest {
     m
 }
 
+// ---------------------------------------------------------------------------
+// Builtin decode-step artifact (the serve layer's hermetic hot path)
+// ---------------------------------------------------------------------------
+
+/// Manifest for the builtin `ref_lm_decode_step` artifact, following the
+/// `<tag>_decode_step` contract the serving engine drives: token/pos plus
+/// the per-layer (S, z) recurrent state and named parameter leaves in,
+/// logits plus the advanced state out.
+fn builtin_decode_manifest() -> Manifest {
+    let f = |name: &str, shape: &[usize]| Slot {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: DType::F32,
+    };
+    let i = |name: &str, shape: &[usize]| Slot {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: DType::I32,
+    };
+    let (b, h, d, dp) = (REF_LM_BATCH, REF_LM_HEADS, REF_LM_HEAD_DIM, REF_LM_DP);
+    let s_shape = [1, b, h, dp, d];
+    let z_shape = [1, b, h, dp];
+    let mut meta = BTreeMap::new();
+    for (key, val) in [
+        ("vocab", REF_LM_VOCAB),
+        ("batch", b),
+        ("heads", h),
+        ("d_model", REF_LM_DIM),
+    ] {
+        meta.insert(key.to_string(), Json::Num(val as f64));
+    }
+    meta.insert("graph".to_string(), Json::Str("decode_step".to_string()));
+    meta.insert("kernel".to_string(), Json::Str("hedgehog".to_string()));
+    meta.insert("backend".to_string(), Json::Str("reference".to_string()));
+    Manifest {
+        name: REF_LM_NAME.to_string(),
+        inputs: vec![
+            i("token", &[b]),
+            i("pos", &[b]),
+            f("s", &s_shape),
+            f("z", &z_shape),
+            f("params/embed", &[REF_LM_VOCAB, REF_LM_DIM]),
+            f("params/unembed", &[REF_LM_DIM, REF_LM_VOCAB]),
+        ],
+        outputs: vec![f("logits", &[b, REF_LM_VOCAB]), f("s", &s_shape), f("z", &z_shape)],
+        meta,
+    }
+}
+
+/// The builtin decode step is a fixed-geometry artifact: a manifest under
+/// its name must match the builtin slot-for-slot AND meta-for-meta
+/// (on-disk manifests win name resolution in the registry, so reject
+/// look-alikes loudly instead of misinterpreting them — the engine trusts
+/// meta like `vocab` to slice the logits buffer, so a drifted meta value
+/// would turn into out-of-bounds rows, not just wrong math).
+fn validate_decode_manifest(manifest: &Manifest) -> Result<()> {
+    let want = builtin_decode_manifest();
+    let slots_eq = |a: &[Slot], b: &[Slot]| {
+        a.len() == b.len()
+            && a.iter()
+                .zip(b)
+                .all(|(x, y)| x.name == y.name && x.shape == y.shape && x.dtype == y.dtype)
+    };
+    if !slots_eq(&manifest.inputs, &want.inputs)
+        || !slots_eq(&manifest.outputs, &want.outputs)
+        || manifest.meta != want.meta
+    {
+        bail!(
+            "{REF_LM_NAME}: manifest does not match the builtin decode geometry \
+             (B={REF_LM_BATCH}, H={REF_LM_HEADS}, d={REF_LM_HEAD_DIM}, V={REF_LM_VOCAB})"
+        );
+    }
+    Ok(())
+}
+
+/// Deterministic demo parameters for the builtin `ref_lm` decode
+/// artifact. Not trained: the artifact exists for serving-path tests and
+/// benches, where only the math and the memory behavior matter.
+pub fn ref_lm_demo_params() -> ParamStore {
+    let mut rng = Pcg32::new(0x5EED);
+    let mut randn = |len: usize| -> Vec<f32> { (0..len).map(|_| rng.normal() * 0.3).collect() };
+    let embed = randn(REF_LM_VOCAB * REF_LM_DIM);
+    let unembed = randn(REF_LM_DIM * REF_LM_VOCAB);
+    let mut params = ParamStore::new();
+    params.insert("params/embed", Tensor::from_f32(embed, &[REF_LM_VOCAB, REF_LM_DIM]));
+    params.insert("params/unembed", Tensor::from_f32(unembed, &[REF_LM_DIM, REF_LM_VOCAB]));
+    params
+}
+
 struct RefKernel {
     kernel: Kernel,
     opts: Arc<SharedExecOptions>,
+    pool: Arc<WorkerPool>,
 }
 
 impl BackendExecutable for RefKernel {
@@ -339,27 +469,36 @@ impl BackendExecutable for RefKernel {
 
         let mut out = vec![0.0f32; b * h * n * dv];
         match self.kernel {
-            Kernel::Softmax => run_softmax(qs, ks, vs, &mut out, b * h, n, d, dv, opts),
-            Kernel::Linear(fm) => run_linear(fm, qs, ks, vs, &mut out, b * h, n, d, dv, opts),
+            Kernel::Softmax => {
+                run_softmax(&self.pool, qs, ks, vs, &mut out, b * h, n, d, dv, opts)
+            }
+            Kernel::Linear(fm) => {
+                run_linear(&self.pool, fm, qs, ks, vs, &mut out, b * h, n, d, dv, opts)
+            }
         }
         Ok(vec![Tensor::from_f32(out, &[b, h, n, dv])])
     }
 }
 
-fn dot(a: &[f32], b: &[f32]) -> f32 {
+// ---------------------------------------------------------------------------
+// Naive-oracle scalar primitives (PR-1 loops, strict sequential order)
+// ---------------------------------------------------------------------------
+
+/// Strict left-fold dot — the oracle's summation order. The measured
+/// paths use `simd::dot` (8-lane regrouping) instead.
+fn scalar_dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
-/// y += a * x over contiguous slices — the shape every inner loop below
-/// reduces to, which the autovectorizer turns into SIMD fma lanes.
-fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+/// y += a * x, element order — the oracle's update.
+fn scalar_axpy(y: &mut [f32], a: f32, x: &[f32]) {
     for (y, &x) in y.iter_mut().zip(x) {
         *y += a * x;
     }
 }
 
 // ---------------------------------------------------------------------------
-// Task decomposition (dependency-free fork/join over scoped threads)
+// Task decomposition (planned spans, executed on the persistent pool)
 // ---------------------------------------------------------------------------
 
 /// Resolve the thread count for a dispatch: explicit counts are honored,
@@ -390,36 +529,6 @@ fn span_bounds(n: usize, spans: usize, quadratic: bool) -> Vec<usize> {
     *bounds.last_mut().unwrap() = n;
     bounds.dedup();
     bounds
-}
-
-/// Run `tasks` to completion across up to `threads` scoped OS threads.
-/// Tasks are dealt round-robin in order; the planners emit equal-work
-/// spans, so the deal is balanced without a work-stealing queue. With one
-/// thread (or one task) everything runs inline — no spawns, which keeps
-/// the `threads == 1` path allocation-predictable for the no-alloc tests.
-fn run_tasks<T: Send>(threads: usize, tasks: Vec<T>, f: impl Fn(T) + Sync) {
-    let threads = threads.max(1).min(tasks.len().max(1));
-    if threads <= 1 || tasks.len() <= 1 {
-        for t in tasks {
-            f(t);
-        }
-        return;
-    }
-    let mut buckets: Vec<Vec<T>> = Vec::new();
-    buckets.resize_with(threads, Vec::new);
-    for (i, t) in tasks.into_iter().enumerate() {
-        buckets[i % threads].push(t);
-    }
-    let f = &f;
-    std::thread::scope(|scope| {
-        for bucket in buckets {
-            scope.spawn(move || {
-                for t in bucket {
-                    f(t);
-                }
-            });
-        }
-    });
 }
 
 /// One span of output rows [r0, r1) of one (batch, head), with exclusive
@@ -468,6 +577,7 @@ struct StateTask<'a> {
 
 #[allow(clippy::too_many_arguments)]
 fn run_linear(
+    pool: &WorkerPool,
     fm: FeatureMap,
     q: &[f32],
     k: &[f32],
@@ -532,7 +642,7 @@ fn run_linear(
                 tasks.push(StateTask { head, r0: bounds[j], r1: bounds[j + 1], s, z });
             }
         }
-        run_tasks(threads, tasks, |t: StateTask| {
+        pool.run_tasks(threads, tasks, |t: StateTask| {
             linear_span_state(
                 fm,
                 &k[t.head * n * d..(t.head + 1) * n * d],
@@ -567,7 +677,7 @@ fn run_linear(
     let states = &states[..];
     let zero_state = &zero_state[..];
     let tasks = split_out_spans(out, bh, dv, &bounds);
-    run_tasks(threads, tasks, |t: OutSpan| {
+    pool.run_tasks(threads, tasks, |t: OutSpan| {
         let prefix = if t.span == 0 {
             zero_state
         } else {
@@ -619,11 +729,7 @@ fn linear_span_state(
         }
         for r in 0..rows {
             let vr = &v[(c0 + r) * dv..(c0 + r + 1) * dv];
-            let kr = &kf[r * dp..(r + 1) * dp];
-            for (p, &kp) in kr.iter().enumerate() {
-                z[p] += kp;
-                axpy(&mut s[p * dv..(p + 1) * dv], kp, vr);
-            }
+            simd::rank1_update(s, z, &kf[r * dp..(r + 1) * dp], vr);
         }
         c0 += rows;
     }
@@ -638,7 +744,7 @@ fn linear_span_state(
 ///   carry:  S += sum_r phi(k_r) v_r^T,  z += sum_r phi(k_r)
 ///
 /// which is the quadratic Eq. 2 form regrouped so every inner loop is a
-/// contiguous dot/axpy.
+/// contiguous `simd::dot` / `simd::axpy` / `simd::rank1_update`.
 #[allow(clippy::too_many_arguments)]
 fn linear_span_output(
     fm: FeatureMap,
@@ -669,14 +775,16 @@ fn linear_span_output(
             fm.write(&k[t * d..(t + 1) * d], &mut kf[r * dp..(r + 1) * dp]);
             fm.write(&q[t * d..(t + 1) * d], &mut qf[r * dp..(r + 1) * dp]);
         }
-        // inter-chunk contribution from the carried state
+        // inter-chunk contribution from the carried state: y_r = Qf S.
+        // The first feature overwrites (scaled store), the rest accumulate
+        // — no separate fill pass over the output rows.
         for r in 0..rows {
             let qr = &qf[r * dp..(r + 1) * dp];
-            den[r] = dot(qr, &z);
+            den[r] = simd::dot(qr, &z);
             let or = &mut out[(c0 - r0 + r) * dv..(c0 - r0 + r + 1) * dv];
-            or.fill(0.0);
-            for (p, &qp) in qr.iter().enumerate() {
-                axpy(or, qp, &s[p * dv..(p + 1) * dv]);
+            simd::scaled_add(or, 0.0, qr[0], &s[..dv]);
+            for (p, &qp) in qr.iter().enumerate().skip(1) {
+                simd::axpy(or, qp, &s[p * dv..(p + 1) * dv]);
             }
         }
         // intra-chunk causal (lower-triangular) contribution
@@ -684,31 +792,24 @@ fn linear_span_output(
             let qr = &qf[r * dp..(r + 1) * dp];
             let or = &mut out[(c0 - r0 + r) * dv..(c0 - r0 + r + 1) * dv];
             for j in 0..=r {
-                let w = dot(qr, &kf[j * dp..(j + 1) * dp]);
+                let w = simd::dot(qr, &kf[j * dp..(j + 1) * dp]);
                 den[r] += w;
-                axpy(or, w, &v[(c0 + j) * dv..(c0 + j + 1) * dv]);
+                simd::axpy(or, w, &v[(c0 + j) * dv..(c0 + j + 1) * dv]);
             }
-            let inv = (den[r] + EPS).recip();
-            for o in or.iter_mut() {
-                *o *= inv;
-            }
+            simd::scale(or, (den[r] + EPS).recip());
         }
         // carry the state across the chunk boundary
         for r in 0..rows {
             let vr = &v[(c0 + r) * dv..(c0 + r + 1) * dv];
-            let kr = &kf[r * dp..(r + 1) * dp];
-            for (p, &kp) in kr.iter().enumerate() {
-                z[p] += kp;
-                axpy(&mut s[p * dv..(p + 1) * dv], kp, vr);
-            }
+            simd::rank1_update(&mut s, &mut z, &kf[r * dp..(r + 1) * dp], vr);
         }
         c0 += rows;
     }
 }
 
 /// PR-1 row-wise causal normalized linear attention for one (batch,
-/// head): the numerical oracle. Scratch (qf/kf/s/z) is hoisted by the
-/// caller; s and z arrive zeroed.
+/// head): the numerical oracle, in strict scalar summation order. Scratch
+/// (qf/kf/s/z) is hoisted by the caller; s and z arrive zeroed.
 #[allow(clippy::too_many_arguments)]
 fn linear_head_naive(
     fm: FeatureMap,
@@ -729,14 +830,14 @@ fn linear_head_naive(
         let vi = &v[i * dv..(i + 1) * dv];
         for (p, &kp) in kf.iter().enumerate() {
             z[p] += kp;
-            axpy(&mut s[p * dv..(p + 1) * dv], kp, vi);
+            scalar_axpy(&mut s[p * dv..(p + 1) * dv], kp, vi);
         }
         fm.write(&q[i * d..(i + 1) * d], qf);
-        let den = dot(qf, z) + EPS;
+        let den = scalar_dot(qf, z) + EPS;
         let oi = &mut out[i * dv..(i + 1) * dv];
         oi.fill(0.0);
         for (p, &qp) in qf.iter().enumerate() {
-            axpy(oi, qp, &s[p * dv..(p + 1) * dv]);
+            scalar_axpy(oi, qp, &s[p * dv..(p + 1) * dv]);
         }
         for o in oi.iter_mut() {
             *o /= den;
@@ -750,6 +851,7 @@ fn linear_head_naive(
 
 #[allow(clippy::too_many_arguments)]
 fn run_softmax(
+    pool: &WorkerPool,
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -783,10 +885,10 @@ fn run_softmax(
     let flops = (bh * n * n * (d + dv)) as f64;
     let threads = auto_threads(opts, flops);
     // Causal cost grows with the row index: sqrt-spaced span boundaries
-    // equalize per-span work, so a round-robin deal stays balanced.
+    // equalize per-span work, so dynamic claiming stays balanced.
     let bounds = span_bounds(n, threads.div_ceil(bh), true);
     let tasks = split_out_spans(out, bh, dv, &bounds);
-    run_tasks(threads, tasks, |t: OutSpan| {
+    pool.run_tasks(threads, tasks, |t: OutSpan| {
         softmax_span(
             &q[t.head * n * d..(t.head + 1) * n * d],
             &k[t.head * n * d..(t.head + 1) * n * d],
@@ -804,7 +906,8 @@ fn run_softmax(
 /// Blocked causal softmax over query rows [r0, r1): for each row block,
 /// stream key tiles of width `chunk` with the online-softmax recurrence
 /// (running max m, normalizer l, rescaled accumulator), exactly the
-/// flash-attention reorganization of Eq. 1 in f32.
+/// flash-attention reorganization of Eq. 1 in f32. Inner loops are
+/// `simd::dot` (scores), `simd::scale` (rescale), `simd::axpy` (values).
 #[allow(clippy::too_many_arguments)]
 fn softmax_span(
     q: &[f32],
@@ -844,7 +947,7 @@ fn softmax_span(
                 let qr = &q[row * d..(row + 1) * d];
                 let mut tile_max = f32::NEG_INFINITY;
                 for (j, sc) in scores[..hi].iter_mut().enumerate() {
-                    *sc = dot(qr, &k[(t0 + j) * d..(t0 + j + 1) * d]) * scale;
+                    *sc = simd::dot(qr, &k[(t0 + j) * d..(t0 + j + 1) * d]) * scale;
                     tile_max = tile_max.max(*sc);
                 }
                 let new_m = m[r].max(tile_max);
@@ -852,32 +955,27 @@ fn softmax_span(
                 if m[r] > f32::NEG_INFINITY && new_m > m[r] {
                     let alpha = (m[r] - new_m).exp();
                     l[r] *= alpha;
-                    for o in or.iter_mut() {
-                        *o *= alpha;
-                    }
+                    simd::scale(or, alpha);
                 }
                 for (j, &sc) in scores[..hi].iter().enumerate() {
                     let e = (sc - new_m).exp();
                     l[r] += e;
-                    axpy(or, e, &v[(t0 + j) * dv..(t0 + j + 1) * dv]);
+                    simd::axpy(or, e, &v[(t0 + j) * dv..(t0 + j + 1) * dv]);
                 }
                 m[r] = new_m;
             }
             t0 += tw;
         }
         for r in 0..rows {
-            let inv = l[r].recip();
-            for o in out[(c0 - r0 + r) * dv..(c0 - r0 + r + 1) * dv].iter_mut() {
-                *o *= inv;
-            }
+            simd::scale(&mut out[(c0 - r0 + r) * dv..(c0 - r0 + r + 1) * dv], l[r].recip());
         }
         c0 += rows;
     }
 }
 
 /// PR-1 row-wise causal softmax attention for one (batch, head): the
-/// quadratic teacher with max-subtraction, kept as the numerical oracle.
-/// The scores scratch is hoisted by the caller.
+/// quadratic teacher with max-subtraction, kept as the numerical oracle
+/// in strict scalar order. The scores scratch is hoisted by the caller.
 fn softmax_head_naive(
     q: &[f32],
     k: &[f32],
@@ -893,7 +991,7 @@ fn softmax_head_naive(
         let qi = &q[i * d..(i + 1) * d];
         let mut m = f32::NEG_INFINITY;
         for (j, s) in scores.iter_mut().enumerate().take(i + 1) {
-            *s = dot(qi, &k[j * d..(j + 1) * d]) * scale;
+            *s = scalar_dot(qi, &k[j * d..(j + 1) * d]) * scale;
             m = m.max(*s);
         }
         let mut l = 0.0;
@@ -905,8 +1003,136 @@ fn softmax_head_naive(
         oi.fill(0.0);
         for (j, s) in scores.iter().enumerate().take(i + 1) {
             let w = s / l;
-            axpy(oi, w, &v[j * dv..(j + 1) * dv]);
+            scalar_axpy(oi, w, &v[j * dv..(j + 1) * dv]);
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builtin decode step execution
+// ---------------------------------------------------------------------------
+
+/// Executable for `ref_lm_decode_step`: one token per slot through a
+/// one-layer Hedgehog LM. Per slot b:
+///
+///   x        = embed[token_b]                       (D,)
+///   per head h, on x_h = x[h d .. (h+1) d] with q = k = v = x_h:
+///     phi    = [exp(x_h), exp(-x_h)]                (Dp,)
+///     S_bh  += phi x_h^T,  z_bh += phi              (state advance)
+///     y_h    = (phi . S_bh) / (phi . z_bh + eps)    (d,)
+///   logits_b = concat(y_h) @ unembed                (V,)
+///
+/// — exactly the (S, z) recurrence of `linear_head_naive` specialized to
+/// n = 1, so the engine's O(1)-per-token claim is executed, not simulated.
+/// Slots are independent; with explicit `threads > 1` they run as
+/// parallel tasks on the backend's pool (auto stays serial: a decode step
+/// is far below the parallelism threshold). The `pos` input is accepted
+/// for manifest parity with compiled decode graphs but unused — the
+/// recurrent state, not the position, drives the math.
+struct RefDecode {
+    opts: Arc<SharedExecOptions>,
+    pool: Arc<WorkerPool>,
+}
+
+/// Per-slot decode work item: disjoint views of the slot's state and
+/// logits rows.
+struct DecodeSlot<'a> {
+    token: i32,
+    s: &'a mut [f32],
+    z: &'a mut [f32],
+    logits: &'a mut [f32],
+}
+
+impl BackendExecutable for RefDecode {
+    fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        // Manifest order: token, pos, s, z, params/embed, params/unembed
+        // (shape/dtype already validated by the registry against the
+        // manifest, and the manifest against the builtin at load).
+        if inputs.len() != 6 {
+            bail!("{REF_LM_NAME} expects 6 inputs, got {}", inputs.len());
+        }
+        let token = inputs[0].as_i32()?;
+        let s_in = inputs[2].as_f32()?;
+        let z_in = inputs[3].as_f32()?;
+        let embed = inputs[4].as_f32()?;
+        let unembed = inputs[5].as_f32()?;
+        let b = REF_LM_BATCH;
+        let (h, d, dp, v) = (REF_LM_HEADS, REF_LM_HEAD_DIM, REF_LM_DP, REF_LM_VOCAB);
+
+        // Advance state out-of-place: the engine owns the input tensors
+        // and swaps these outputs in (double-buffering at the serve
+        // layer). Allocation count here is a constant 3 buffers + tasks.
+        let mut s_out = s_in.to_vec();
+        let mut z_out = z_in.to_vec();
+        let mut logits = vec![0.0f32; b * v];
+
+        let opts = self.opts.load();
+        let flops = (b * (h * dp * d * 4 + REF_LM_DIM * v)) as f64;
+        let threads = auto_threads(opts, flops).min(b);
+
+        let mut tasks = Vec::with_capacity(b);
+        {
+            let mut s_rest = s_out.as_mut_slice();
+            let mut z_rest = z_out.as_mut_slice();
+            let mut l_rest = logits.as_mut_slice();
+            for slot in 0..b {
+                let (s_cur, s_tail) = std::mem::take(&mut s_rest).split_at_mut(h * dp * d);
+                let (z_cur, z_tail) = std::mem::take(&mut z_rest).split_at_mut(h * dp);
+                let (l_cur, l_tail) = std::mem::take(&mut l_rest).split_at_mut(v);
+                s_rest = s_tail;
+                z_rest = z_tail;
+                l_rest = l_tail;
+                tasks.push(DecodeSlot { token: token[slot], s: s_cur, z: z_cur, logits: l_cur });
+            }
+        }
+        self.pool.run_tasks(threads, tasks, |t: DecodeSlot| {
+            decode_slot(t.token, embed, unembed, t.s, t.z, t.logits);
+        });
+
+        Ok(vec![
+            Tensor::from_f32(logits, &[b, v]),
+            Tensor::from_f32(s_out, &[1, b, h, dp, d]),
+            Tensor::from_f32(z_out, &[1, b, h, dp]),
+        ])
+    }
+}
+
+/// One slot's decode step (see `RefDecode` for the math). Scratch lives
+/// on the stack (the geometry is const), so this never allocates.
+fn decode_slot(
+    token: i32,
+    embed: &[f32],
+    unembed: &[f32],
+    s: &mut [f32],
+    z: &mut [f32],
+    logits: &mut [f32],
+) {
+    let (hh, d, dp, v) = (REF_LM_HEADS, REF_LM_HEAD_DIM, REF_LM_DP, REF_LM_VOCAB);
+    // Idle batcher slots feed token 0; any in-range id embeds. Wrap
+    // out-of-range ids instead of failing mid-batch.
+    let tok = token.rem_euclid(v as i32) as usize;
+    let x = &embed[tok * REF_LM_DIM..(tok + 1) * REF_LM_DIM];
+    let mut phi = [0.0f32; REF_LM_DP];
+    let mut y = [0.0f32; REF_LM_DIM];
+    for head in 0..hh {
+        let xh = &x[head * d..(head + 1) * d];
+        FeatureMap::Hedgehog.write(xh, &mut phi);
+        let sh = &mut s[head * dp * d..(head + 1) * dp * d];
+        let zh = &mut z[head * dp..(head + 1) * dp];
+        // State advances first: the current token attends to itself,
+        // matching the naive oracle's fold-then-read order.
+        simd::rank1_update(sh, zh, &phi, xh);
+        let den = simd::dot(&phi, zh) + EPS;
+        let yh = &mut y[head * d..(head + 1) * d];
+        simd::scaled_add(yh, 0.0, phi[0], &sh[..d]);
+        for (p, &qp) in phi.iter().enumerate().skip(1) {
+            simd::axpy(yh, qp, &sh[p * d..(p + 1) * d]);
+        }
+        simd::scale(yh, den.recip());
+    }
+    simd::scaled_add(logits, 0.0, y[0], &unembed[..v]);
+    for (j, &yj) in y.iter().enumerate().skip(1) {
+        simd::axpy(logits, yj, &unembed[j * v..(j + 1) * v]);
     }
 }
 
@@ -948,7 +1174,7 @@ mod tests {
             let mut den = 0.0;
             for (j, w) in weights.iter_mut().enumerate() {
                 let kf: Vec<f32> = k[j * d..(j + 1) * d].iter().map(|x| x.exp()).collect();
-                *w = dot(&qf, &kf);
+                *w = scalar_dot(&qf, &kf);
                 den += *w;
             }
             den += EPS;
@@ -1125,6 +1351,26 @@ mod tests {
     }
 
     #[test]
+    fn pool_spawns_lazily_and_only_when_parallel() {
+        let backend = ReferenceBackend::with_options(ExecOptions::serial());
+        let m = builtin_kernel_manifest("kernel_linear_attention", "linear_attention");
+        let exe = backend.load(Path::new("unused"), &m).unwrap();
+        let shape = KERNEL_SHAPE;
+        let mut rng = Pcg32::new(5);
+        let inputs: Vec<Tensor> = (0..3).map(|_| rand_tensor(&mut rng, &shape)).collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        exe.execute(&refs).unwrap();
+        assert_eq!(backend.pool_workers(), 0, "serial execution must not spawn");
+        backend.set_exec_options(ExecOptions { threads: 3, chunk_size: 16 });
+        exe.execute(&refs).unwrap();
+        assert_eq!(backend.pool_workers(), 2, "threads=3 -> 2 pool workers + dispatcher");
+        // Same executable, retuned down: pool persists (parked, not torn down).
+        backend.set_exec_options(ExecOptions::serial());
+        exe.execute(&refs).unwrap();
+        assert_eq!(backend.pool_workers(), 2);
+    }
+
+    #[test]
     fn artifact_name_routing() {
         assert_eq!(kernel_for("kernel_linear_attention"), Some(Kernel::Linear(FeatureMap::Exp)));
         assert_eq!(kernel_for("kernel_softmax_attention"), Some(Kernel::Softmax));
@@ -1132,6 +1378,7 @@ mod tests {
         assert_eq!(kernel_for("fig6_hedgehog_n256"), Some(Kernel::Linear(FeatureMap::Hedgehog)));
         assert_eq!(kernel_for("fig6_taylor_n512"), Some(Kernel::Linear(FeatureMap::Taylor)));
         assert_eq!(kernel_for("ar_softmax_train_step"), None);
+        assert_eq!(kernel_for(REF_LM_NAME), None, "decode routes via its own branch");
     }
 
     #[test]
@@ -1148,11 +1395,31 @@ mod tests {
     }
 
     #[test]
+    fn decode_manifest_lookalikes_rejected() {
+        let backend = ReferenceBackend::new();
+        let mut m = builtin_decode_manifest();
+        m.inputs[2].shape = vec![1, REF_LM_BATCH, REF_LM_HEADS, REF_LM_DP, 99];
+        let err = backend.load(Path::new("unused"), &m).unwrap_err();
+        assert!(err.to_string().contains("builtin decode geometry"), "{err:#}");
+        // Meta drift is just as dangerous: the engine slices logits by
+        // the manifest's `vocab`, so a wrong value must not load.
+        let mut m = builtin_decode_manifest();
+        m.meta.insert("vocab".to_string(), Json::Num(512.0));
+        let err = backend.load(Path::new("unused"), &m).unwrap_err();
+        assert!(err.to_string().contains("builtin decode geometry"), "{err:#}");
+        // The unmodified builtin, of course, loads.
+        assert!(backend.load(Path::new("unused"), &builtin_decode_manifest()).is_ok());
+    }
+
+    #[test]
     fn builtin_manifests_match_aot_export() {
         let ms = ReferenceBackend::new().builtin_manifests();
         let fig6_count = FIG6_SOFTMAX_NS.len() + FIG6_HEDGEHOG_NS.len() + FIG6_TAYLOR_NS.len();
-        assert_eq!(ms.len(), 2 + fig6_count);
+        assert_eq!(ms.len(), 3 + fig6_count);
         for m in &ms {
+            if m.name == REF_LM_NAME {
+                continue; // the decode step has its own slot contract
+            }
             assert_eq!(m.inputs.len(), 3);
             assert_eq!(m.outputs[0].name, "out");
             assert!(kernel_for(&m.name).is_some(), "{} must route", m.name);
@@ -1165,5 +1432,125 @@ mod tests {
         assert_eq!(fig6.inputs[0].shape, vec![1, FIG6_HEADS, 1024, FIG6_D]);
         assert_eq!(fig6.meta_str("kernel"), Some("hedgehog"));
         assert_eq!(fig6.meta_usize("n"), Some(1024));
+        let dec = ms.iter().find(|m| m.name == REF_LM_NAME).unwrap();
+        assert_eq!(dec.inputs.len(), 6);
+        assert_eq!(dec.outputs.len(), 3);
+        assert_eq!(dec.meta_usize("vocab"), Some(REF_LM_VOCAB));
+        assert_eq!(dec.inputs[0].shape, vec![REF_LM_BATCH]);
+    }
+
+    /// Run T decode steps for one slot through RefDecode and return its
+    /// logits rows, threading the state tensors through the steps.
+    fn decode_rollout(tokens: &[i32], opts: ExecOptions) -> Vec<Vec<f32>> {
+        let backend = ReferenceBackend::with_options(opts);
+        let m = builtin_decode_manifest();
+        let exe = backend.load(Path::new("unused"), &m).unwrap();
+        let params = ref_lm_demo_params();
+        let mut s = Tensor::zeros(DType::F32, &m.inputs[2].shape);
+        let mut z = Tensor::zeros(DType::F32, &m.inputs[3].shape);
+        let mut rows = Vec::new();
+        for (step, &t) in tokens.iter().enumerate() {
+            let token = Tensor::from_i32(vec![t, 0, 0, 0], &[REF_LM_BATCH]);
+            let pos = Tensor::from_i32(vec![step as i32; REF_LM_BATCH], &[REF_LM_BATCH]);
+            let embed = params.get("params/embed").unwrap();
+            let unembed = params.get("params/unembed").unwrap();
+            let refs: Vec<&Tensor> = vec![&token, &pos, &s, &z, embed, unembed];
+            let mut outs = exe.execute(&refs).unwrap();
+            z = outs.pop().unwrap();
+            s = outs.pop().unwrap();
+            let logits = outs.pop().unwrap();
+            rows.push(logits.as_f32().unwrap()[..REF_LM_VOCAB].to_vec());
+        }
+        rows
+    }
+
+    #[test]
+    fn decode_step_matches_sequence_oracle() {
+        // Driving the recurrence token-by-token must equal running the
+        // naive whole-sequence linear attention (hedgehog features,
+        // q = k = v = the token embeddings) followed by the unembed.
+        let tokens: Vec<i32> = vec![3, 250, 17, 17, 99, 0, 42, 128, 7, 64];
+        let tlen = tokens.len();
+        let params = ref_lm_demo_params();
+        let embed = params.get("params/embed").unwrap().as_f32().unwrap();
+        let unembed = params.get("params/unembed").unwrap().as_f32().unwrap();
+        let (hh, d, dim, v) = (REF_LM_HEADS, REF_LM_HEAD_DIM, REF_LM_DIM, REF_LM_VOCAB);
+
+        // oracle: per head, naive linear attention over the embedding rows
+        let mut y = vec![0.0f32; tlen * dim];
+        let dp = FeatureMap::Hedgehog.dim(d);
+        let mut qf = vec![0.0f32; dp];
+        let mut kf = vec![0.0f32; dp];
+        let mut s = vec![0.0f32; dp * d];
+        let mut zst = vec![0.0f32; dp];
+        for head in 0..hh {
+            let xs: Vec<f32> = tokens
+                .iter()
+                .flat_map(|&t| {
+                    embed[t as usize * dim + head * d..t as usize * dim + (head + 1) * d]
+                        .iter()
+                        .copied()
+                        .collect::<Vec<f32>>()
+                })
+                .collect();
+            let mut out_h = vec![0.0f32; tlen * d];
+            s.fill(0.0);
+            zst.fill(0.0);
+            linear_head_naive(
+                FeatureMap::Hedgehog,
+                &xs,
+                &xs,
+                &xs,
+                &mut out_h,
+                d,
+                d,
+                &mut qf,
+                &mut kf,
+                &mut s,
+                &mut zst,
+            );
+            for t in 0..tlen {
+                y[t * dim + head * d..t * dim + (head + 1) * d]
+                    .copy_from_slice(&out_h[t * d..(t + 1) * d]);
+            }
+        }
+        let mut want = vec![0.0f32; tlen * v];
+        for t in 0..tlen {
+            for j in 0..dim {
+                scalar_axpy(
+                    &mut want[t * v..(t + 1) * v],
+                    y[t * dim + j],
+                    &unembed[j * v..(j + 1) * v],
+                );
+            }
+        }
+
+        for opts in [ExecOptions::serial(), ExecOptions::default().with_threads(4)] {
+            let rows = decode_rollout(&tokens, opts);
+            for (t, row) in rows.iter().enumerate() {
+                for (a, b) in row.iter().zip(&want[t * v..(t + 1) * v]) {
+                    let tol = 1e-4 * b.abs().max(1.0);
+                    assert!(
+                        (a - b).abs() <= tol,
+                        "{opts:?} step {t}: decode {a} vs oracle {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_slots_are_isolated_and_deterministic() {
+        // Slot 0 sees a changing token stream; slots 1-3 always feed 0.
+        // Idle slots must produce identical logits at every step (their
+        // state evolves only from token 0), and two rollouts must agree
+        // bit-for-bit.
+        let tokens = vec![5, 9, 200, 31];
+        let a = decode_rollout(&tokens, ExecOptions::serial());
+        let b = decode_rollout(&tokens, ExecOptions::serial());
+        assert_eq!(a, b, "decode must be deterministic");
+        // Thread count must not change the math (per-slot tasks).
+        let c = decode_rollout(&tokens, ExecOptions::serial().with_threads(4));
+        assert_eq!(a, c, "slot-parallel decode changed the output");
     }
 }

@@ -128,6 +128,13 @@ impl Tensor {
         }
     }
 
+    pub fn as_i32_mut(&mut self) -> Result<&mut [i32]> {
+        match &mut self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
     /// Scalar extraction (0-d or 1-element tensors).
     pub fn item_f32(&self) -> Result<f32> {
         let v = self.as_f32()?;
@@ -194,13 +201,15 @@ mod tests {
 
     #[test]
     fn typed_accessors_reject_wrong_dtype() {
-        let f = Tensor::scalar_f32(1.0);
+        let mut f = Tensor::scalar_f32(1.0);
         let mut i = Tensor::scalar_i32(1);
         assert!(f.as_i32().is_err());
         assert!(i.as_f32().is_err());
         assert!(i.as_f32_mut().is_err());
+        assert!(f.as_i32_mut().is_err());
         assert!(f.item_i32().is_err());
         assert!(i.item_f32().is_err());
+        assert!(i.as_i32_mut().is_ok());
     }
 
     #[test]

@@ -114,9 +114,17 @@ impl Batcher {
     /// The token each slot feeds this step (idle slots feed 0).
     /// During prefill the next prompt token; during decode the last output.
     pub fn input_tokens(&self) -> Vec<i32> {
-        self.slots
-            .iter()
-            .map(|s| match s {
+        let mut out = vec![0; self.capacity];
+        self.fill_input_tokens(&mut out);
+        out
+    }
+
+    /// `input_tokens` into a caller-owned buffer — the decode-loop form,
+    /// so the per-step hot path allocates nothing here.
+    pub fn fill_input_tokens(&self, out: &mut [i32]) {
+        assert_eq!(out.len(), self.capacity);
+        for (o, s) in out.iter_mut().zip(&self.slots) {
+            *o = match s {
                 None => 0,
                 Some(a) => {
                     if a.fed < a.req.prompt.len() {
@@ -125,8 +133,8 @@ impl Batcher {
                         *a.output.last().unwrap_or(&0)
                     }
                 }
-            })
-            .collect()
+            };
+        }
     }
 
     /// Record the sampled token for each active slot; completes requests on
@@ -170,18 +178,27 @@ impl Batcher {
     }
 
     /// Drive a real engine until every submitted request completes.
-    /// Returns (results, total engine steps, wall seconds).
+    /// Returns (total engine steps, wall seconds); the per-request
+    /// results accumulate in `self.completed`. The loop reuses its
+    /// token/sample buffers and reads logits by borrowed slice, so each
+    /// iteration costs one engine step and no batcher-side allocations
+    /// (beyond per-request output growth).
     pub fn run_to_completion(&mut self, engine: &mut Engine) -> Result<(usize, f64)> {
         assert_eq!(engine.batch, self.capacity, "engine batch != batcher capacity");
         let t0 = Instant::now();
         let mut steps = 0;
+        let mut tokens = vec![0i32; self.capacity];
+        let mut sampled = vec![0i32; self.capacity];
+        let vocab = engine.vocab;
         while !self.is_idle() {
             for slot in self.plan_admissions() {
                 engine.reset_slot(slot)?;
             }
-            let tokens = self.input_tokens();
+            self.fill_input_tokens(&mut tokens);
             let logits = engine.step(&tokens)?;
-            let sampled: Vec<i32> = logits.iter().map(|row| argmax(row)).collect();
+            for (b, s) in sampled.iter_mut().enumerate() {
+                *s = argmax(&logits[b * vocab..(b + 1) * vocab]);
+            }
             self.record_tokens(&sampled);
             steps += 1;
         }

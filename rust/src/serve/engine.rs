@@ -10,10 +10,23 @@
 //!
 //! Execution is backend-agnostic: the engine drives an `Executable` handle
 //! and never sees whether PJRT or the reference backend is underneath.
+//! With no compiled artifacts, the reference backend's builtin
+//! `ref_lm_decode_step` (tag `ref_lm`, demo params from
+//! `runtime::ref_lm_demo_params`) gives the engine a hermetic hot path.
+//!
+//! The step loop is engineered to be allocation-light and
+//! position-independent (O(1) allocations per token, enforced by
+//! `rust/tests/alloc_probe.rs`):
+//!
+//! * token/pos feed persistent i32 tensors mutated in place;
+//! * the backend's (S, z) outputs are double-buffered — moved into the
+//!   engine's state slots (the previous buffers drop), never cloned;
+//! * logits are returned as a borrowed `&[f32]` view of the engine's
+//!   last-step tensor instead of a freshly allocated `Vec<Vec<f32>>`.
 
 use std::rc::Rc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::{ArtifactRegistry, Executable, ExecOptions, ParamStore, Tensor};
 
@@ -25,8 +38,13 @@ pub struct Engine {
     pos_idx: usize,
     s_idx: usize,
     z_idx: usize,
+    /// persistent (B,) i32 input buffers, overwritten each step
+    token_t: Tensor,
+    pos_t: Tensor,
     pub s: Tensor,
     pub z: Tensor,
+    /// last step's (B, vocab) logits — the buffer `step` hands out views of
+    logits: Tensor,
     pub batch: usize,
     pub vocab: usize,
     /// per-slot next position
@@ -41,8 +59,9 @@ impl Engine {
     /// registry serves, including other engines/sessions on it) — this is
     /// a convenience for processes with one dominant workload, not
     /// per-engine isolation. Decode steps are latency-bound (n = 1 per
-    /// call), so serving typically wants few backend threads — the
-    /// batcher already provides request parallelism.
+    /// call); the persistent pool makes explicit `threads > 1`
+    /// slot-parallel decode viable, but auto (0) deliberately stays
+    /// serial for these tiny per-step problems.
     pub fn with_exec_options(
         reg: &ArtifactRegistry,
         tag: &str,
@@ -62,6 +81,13 @@ impl Engine {
         let z_idx = man.input_index("z")?;
         let batch = man.inputs[token_idx].shape[0];
         let vocab = man.meta_usize("vocab").ok_or_else(|| anyhow!("manifest missing vocab"))?;
+        if man.outputs.len() != 3 {
+            bail!(
+                "decode artifact {}: expected logits, s, z outputs, got {}",
+                man.name,
+                man.outputs.len()
+            );
+        }
 
         let mut param_inputs = vec![None; man.inputs.len()];
         for (i, slot) in man.inputs.iter().enumerate() {
@@ -71,6 +97,9 @@ impl Engine {
         }
         let s = Tensor::zeros(man.inputs[s_idx].dtype, &man.inputs[s_idx].shape);
         let z = Tensor::zeros(man.inputs[z_idx].dtype, &man.inputs[z_idx].shape);
+        let token_t = Tensor::zeros(man.inputs[token_idx].dtype, &man.inputs[token_idx].shape);
+        let pos_t = Tensor::zeros(man.inputs[pos_idx].dtype, &man.inputs[pos_idx].shape);
+        let logits = Tensor::zeros(man.outputs[0].dtype, &man.outputs[0].shape);
         Ok(Engine {
             exe,
             param_inputs,
@@ -78,8 +107,11 @@ impl Engine {
             pos_idx,
             s_idx,
             z_idx,
+            token_t,
+            pos_t,
             s,
             z,
+            logits,
             batch,
             vocab,
             positions: vec![0; batch],
@@ -97,20 +129,23 @@ impl Engine {
     }
 
     /// Advance every slot by one token. `tokens[b]` is the input token for
-    /// slot b (idle slots can feed 0). Returns the (B, vocab) logits.
-    pub fn step(&mut self, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+    /// slot b (idle slots can feed 0). Returns a view of the flat
+    /// (B, vocab) logits — row b is `&logits[b * vocab..(b + 1) * vocab]`,
+    /// or use `logits_row`. The view is valid until the next `step`.
+    pub fn step(&mut self, tokens: &[i32]) -> Result<&[f32]> {
         assert_eq!(tokens.len(), self.batch);
-        let token_t = Tensor::from_i32(tokens.to_vec(), &[self.batch]);
-        let pos_t = Tensor::from_i32(self.positions.clone(), &[self.batch]);
-        // borrowed inputs: params + state are never cloned per token (§Perf L3)
+        self.token_t.as_i32_mut()?.copy_from_slice(tokens);
+        self.pos_t.as_i32_mut()?.copy_from_slice(&self.positions);
+        // borrowed inputs: params, state, and the token/pos buffers are
+        // never cloned per token (§Perf L3)
         let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.param_inputs.len());
         for (i, p) in self.param_inputs.iter().enumerate() {
             let t: &Tensor = if let Some(p) = p {
                 p
             } else if i == self.token_idx {
-                &token_t
+                &self.token_t
             } else if i == self.pos_idx {
-                &pos_t
+                &self.pos_t
             } else if i == self.s_idx {
                 &self.s
             } else if i == self.z_idx {
@@ -120,19 +155,24 @@ impl Engine {
             };
             inputs.push(t);
         }
-        let outs = self.exe.run_refs(&inputs)?;
-        // outputs: logits, s, z (manifest order)
-        let logits_t = &outs[0];
-        self.s = outs[1].clone();
-        self.z = outs[2].clone();
+        let mut outs = self.exe.run_refs(&inputs)?;
+        // outputs: logits, s, z (manifest order, validated at
+        // construction). Double-buffer: move the backend's buffers in and
+        // let the previous step's drop — no elementwise clone.
+        self.z = outs.pop().expect("decode outputs");
+        self.s = outs.pop().expect("decode outputs");
+        self.logits = outs.pop().expect("decode outputs");
         for p in &mut self.positions {
             *p += 1;
         }
         self.tokens_processed += self.batch;
+        self.logits.as_f32()
+    }
 
-        let flat = logits_t.as_f32()?;
-        let v = self.vocab;
-        Ok((0..self.batch).map(|b| flat[b * v..(b + 1) * v].to_vec()).collect())
+    /// Slot `b`'s row of the last step's logits.
+    pub fn logits_row(&self, b: usize) -> Result<&[f32]> {
+        assert!(b < self.batch);
+        Ok(&self.logits.as_f32()?[b * self.vocab..(b + 1) * self.vocab])
     }
 
     /// Greedy-decode a single prompt in slot 0 (other slots idle).
@@ -144,22 +184,25 @@ impl Engine {
         eos: i32,
     ) -> Result<Vec<i32>> {
         self.reset_slot(0)?;
-        let mut logits_row: Vec<f32> = Vec::new();
+        // Hoisted: the slice `step` returns keeps `self` mutably
+        // borrowed, so `self.vocab` can't be read past that call.
+        let vocab = self.vocab;
+        let mut toks = vec![0i32; self.batch];
+        let mut next = 0i32;
         for &t in prompt {
-            let mut toks = vec![0; self.batch];
+            toks.fill(0);
             toks[0] = t;
-            logits_row = self.step(&toks)?.swap_remove(0);
+            next = argmax(&self.step(&toks)?[..vocab]);
         }
         let mut out = Vec::new();
         for _ in 0..max_new {
-            let next = argmax(&logits_row);
             if next == eos {
                 break;
             }
             out.push(next);
-            let mut toks = vec![0; self.batch];
+            toks.fill(0);
             toks[0] = next;
-            logits_row = self.step(&toks)?.swap_remove(0);
+            next = argmax(&self.step(&toks)?[..vocab]);
         }
         Ok(out)
     }
@@ -197,6 +240,7 @@ fn zero_slot(t: &mut Tensor, axis: usize, slot: usize) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::{ref_lm_demo_params, ArtifactRegistry, REF_LM_TAG};
 
     #[test]
     fn argmax_picks_max() {
@@ -216,5 +260,58 @@ mod tests {
         // slots 0 and 2 untouched
         assert!(d[0..4].iter().all(|&x| x != 0.0));
         assert!(d[8..12].iter().all(|&x| x != 0.0));
+    }
+
+    fn ref_engine() -> Engine {
+        let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+        Engine::new(&reg, REF_LM_TAG, &ref_lm_demo_params()).unwrap()
+    }
+
+    #[test]
+    fn step_advances_positions_and_returns_flat_logits() {
+        let mut engine = ref_engine();
+        let b = engine.batch;
+        let logits_len = b * engine.vocab;
+        let first = engine.step(&vec![1i32; b]).unwrap().to_vec();
+        assert_eq!(first.len(), logits_len);
+        assert!(first.iter().all(|x| x.is_finite()));
+        assert_eq!(engine.positions, vec![1; b]);
+        assert_eq!(engine.tokens_processed, b);
+        // logits_row views agree with the flat slice
+        let second = engine.step(&vec![2i32; b]).unwrap().to_vec();
+        for slot in 0..b {
+            let v = engine.vocab;
+            assert_eq!(engine.logits_row(slot).unwrap(), &second[slot * v..(slot + 1) * v]);
+        }
+        // same token in every slot with identical (fresh) state:
+        // identical rows — the decode math is slot-independent
+        for slot in 1..b {
+            assert_eq!(engine.logits_row(slot).unwrap(), engine.logits_row(0).unwrap());
+        }
+    }
+
+    #[test]
+    fn reset_slot_restores_fresh_state() {
+        let mut engine = ref_engine();
+        let b = engine.batch;
+        let fresh = engine.step(&vec![7i32; b]).unwrap().to_vec();
+        // run slot 0 forward a few tokens, then reset it
+        engine.step(&vec![9i32; b]).unwrap();
+        engine.step(&vec![11i32; b]).unwrap();
+        engine.reset_slot(0).unwrap();
+        let v = engine.vocab;
+        let after = engine.step(&vec![7i32; b]).unwrap().to_vec();
+        assert_eq!(&after[..v], &fresh[..v], "reset slot must replay its first step");
+        assert_ne!(&after[v..2 * v], &fresh[v..2 * v], "unreset slots keep their state");
+    }
+
+    #[test]
+    fn generate_greedy_is_deterministic_and_bounded() {
+        let mut a = ref_engine();
+        let out1 = a.generate_greedy(&[3, 5, 7], 12, -1).unwrap();
+        let mut b = ref_engine();
+        let out2 = b.generate_greedy(&[3, 5, 7], 12, -1).unwrap();
+        assert_eq!(out1, out2);
+        assert!(out1.len() <= 12);
     }
 }

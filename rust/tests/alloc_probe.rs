@@ -1,14 +1,16 @@
 //! Heap probe for the reference backend's hot loops: execution may
-//! allocate a bounded number of buffers (the output tensor, per-task
+//! allocate a bounded number of buffers (the output tensors, per-task
 //! scratch), but the number of allocations must NOT scale with sequence
-//! length — feature extraction and the per-row/per-chunk loops are
-//! allocation-free by construction (`FeatureMap::write` into hoisted
-//! scratch).
+//! length or decode position — feature extraction and the per-row /
+//! per-chunk / per-token loops are allocation-free by construction
+//! (`FeatureMap::write` into hoisted scratch, persistent token/pos
+//! buffers and double-buffered (S, z) in `serve::Engine`).
 //!
-//! Single test in its own binary: the counting allocator is process-global
-//! and libtest runs tests in that process concurrently, so isolating the
-//! probe keeps the counts deterministic (everything runs with threads=1 —
-//! the inline path spawns nothing).
+//! Single `#[test]` in its own binary: the counting allocator is
+//! process-global and libtest runs tests in one process concurrently, so
+//! keeping every probe inside one sequential test function keeps the
+//! counts deterministic (everything runs with threads=1 — the inline
+//! pool path spawns nothing and takes no locks).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::Path;
@@ -16,7 +18,11 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use hedgehog::runtime::backend::Executable as _;
 use hedgehog::runtime::reference::kernel_manifest;
-use hedgehog::runtime::{Backend, ExecOptions, ReferenceBackend, Tensor};
+use hedgehog::runtime::{
+    ref_lm_demo_params, ArtifactRegistry, Backend, ExecOptions, ReferenceBackend, Tensor,
+    REF_LM_TAG,
+};
+use hedgehog::serve::Engine;
 
 struct CountingAlloc;
 
@@ -69,8 +75,7 @@ fn allocs_for(kernel: &str, n: usize, opts: ExecOptions) -> usize {
     })
 }
 
-#[test]
-fn execute_allocations_do_not_scale_with_sequence_length() {
+fn kernel_probe() {
     for kernel in ["kernel_linear_attention", "kernel_softmax_attention"] {
         // Chunked path, fixed chunk size: 4x the rows, 4x the chunks —
         // same number of allocator calls.
@@ -92,4 +97,49 @@ fn execute_allocations_do_not_scale_with_sequence_length() {
         // Sanity: the counter actually observes this workload.
         assert!(small > 0, "{kernel}: counting allocator saw nothing");
     }
+}
+
+/// Allocation calls for one `Engine::step` after the engine has already
+/// advanced to `position` (every slot fed the same token stream).
+fn decode_allocs_at(engine: &mut Engine, position: usize) -> usize {
+    let toks = vec![3i32; engine.batch];
+    while (engine.positions[0] as usize) < position {
+        engine.step(&toks).unwrap();
+    }
+    alloc_calls_during(|| {
+        let logits = engine.step(&toks).unwrap();
+        std::hint::black_box(logits);
+    })
+}
+
+fn decode_probe() {
+    let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+    reg.set_exec_options(ExecOptions::serial());
+    let params = ref_lm_demo_params();
+    let mut engine = Engine::new(&reg, REF_LM_TAG, &params).unwrap();
+    let early = decode_allocs_at(&mut engine, 8);
+    let mid = decode_allocs_at(&mut engine, 64);
+    let late = decode_allocs_at(&mut engine, 512);
+    assert_eq!(
+        early, mid,
+        "Engine::step allocations grew with position (pos 8: {early}, pos 64: {mid})"
+    );
+    assert_eq!(
+        mid, late,
+        "Engine::step allocations grew with position (pos 64: {mid}, pos 512: {late})"
+    );
+    // O(1) and small: the step's only allocations are the backend's three
+    // output buffers (+ tensor/task bookkeeping), not per-token copies of
+    // params, state, or a Vec<Vec<f32>> logits transpose.
+    assert!(early > 0, "decode probe: counting allocator saw nothing");
+    assert!(
+        early <= 32,
+        "Engine::step allocates {early} times per token — the decode hot path regressed"
+    );
+}
+
+#[test]
+fn execute_allocations_do_not_scale_with_sequence_length_or_position() {
+    kernel_probe();
+    decode_probe();
 }

@@ -87,6 +87,49 @@ fn chunked_execution_is_deterministic() {
     }
 }
 
+/// Pooled execution vs single-threaded (inline, no pool dispatch) vs the
+/// naive oracle, across thread counts and chunk sizes, with a full
+/// drop/re-create cycle of the backend between rounds. The span
+/// decomposition is a pure function of (n, threads, chunk), so for a
+/// fixed config the pooled output must be *bit-identical* to the inline
+/// output and to a fresh backend's output — this is what proves the pool
+/// distributes exactly the planned tasks (and that teardown + respawn is
+/// clean: round 2 runs on a brand-new pool after round 1's workers were
+/// joined in `Drop`).
+#[test]
+fn pool_matches_inline_and_naive_across_backend_recreate() {
+    let shape = [1usize, 2, 65, 8];
+    let inputs = rand_inputs(0xD00D, &shape);
+    for kernel in ["kernel_linear_attention", "kernel_softmax_attention", "fig6_hedgehog_n65"] {
+        let naive = run(kernel, &shape, &inputs, ExecOptions::naive());
+        for chunk in [1usize, 7, 64] {
+            for threads in [1usize, 2, 8] {
+                let opts = ExecOptions { threads, chunk_size: chunk };
+                // threads=1 runs inline on the dispatcher — the pool is
+                // never woken. The same opts on a pooled run must agree
+                // bit-for-bit because task planning is thread-count (not
+                // worker-count) determined.
+                let first = run(kernel, &shape, &inputs, opts);
+                // `run` constructs a fresh backend per call, so this is a
+                // full drop (join workers) + re-create (respawn) cycle.
+                let second = run(kernel, &shape, &inputs, opts);
+                assert_eq!(
+                    first, second,
+                    "{kernel} C={chunk} t={threads}: backend re-create changed the output"
+                );
+                assert_close(kernel, &format!("pool C={chunk} t={threads}"), &first, &naive);
+            }
+        }
+    }
+    // Repeated pooled runs of one config must agree bit-for-bit even
+    // though task->worker assignment is dynamic: the task -> span -> math
+    // mapping is fixed, only who runs each task differs.
+    let opts = ExecOptions { threads: 2, chunk_size: 16 };
+    let a = run("kernel_linear_attention", &shape, &inputs, opts);
+    let b = run("kernel_linear_attention", &shape, &inputs, opts);
+    assert_eq!(a, b, "pooled execution is nondeterministic");
+}
+
 /// Thread count changes only the span decomposition, never the math:
 /// explicit thread counts from 1 to more-threads-than-rows all stay
 /// within tolerance of the oracle.

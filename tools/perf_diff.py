@@ -1,0 +1,145 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_kernels.json against the committed snapshot.
+
+Usage:
+    python3 tools/perf_diff.py <fresh.json> [--baseline <path-or-git>]
+
+The baseline defaults to `git show HEAD:BENCH_kernels.json` (the committed
+snapshot), falling back to the working-tree file if git is unavailable.
+Records are matched on (kernel, n, threads, chunk_size); only chunked
+configs (chunk_size > 0) are compared — the naive oracle rows are a
+correctness baseline, not a perf target.
+
+Warn-only by construction: a >25% tokens/sec regression on any matching
+config prints a WARNING block (picked up in the CI log and the uploaded
+artifact) but the exit code stays 0. Exit 2 is reserved for unusable
+inputs (missing/unparseable files), which means the harness itself broke.
+
+Absolute numbers are machine-dependent; the report prints both sides'
+core counts, smoke flags, and provenance so a cross-machine comparison
+reads as context, not ground truth. A baseline whose provenance is not
+"measured" (e.g. the modeled pre-CI seed snapshot) is reported as
+informational only.
+"""
+
+import json
+import subprocess
+import sys
+
+REGRESSION_RATIO = 0.75  # warn when fresh < 75% of baseline tokens/sec
+
+
+def load_json(text, label):
+    try:
+        return json.loads(text)
+    except json.JSONDecodeError as e:
+        print(f"perf-diff: cannot parse {label}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def load_baseline(spec):
+    if spec is not None:
+        with open(spec) as f:
+            return load_json(f.read(), spec), spec
+    try:
+        out = subprocess.run(
+            ["git", "show", "HEAD:BENCH_kernels.json"],
+            capture_output=True,
+            text=True,
+            check=True,
+        )
+        return load_json(out.stdout, "git HEAD:BENCH_kernels.json"), "git HEAD:BENCH_kernels.json"
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        try:
+            with open("BENCH_kernels.json") as f:
+                return load_json(f.read(), "BENCH_kernels.json"), "BENCH_kernels.json (worktree)"
+        except OSError:
+            print(
+                "perf-diff: no committed BENCH_kernels.json snapshot to compare against",
+                file=sys.stderr,
+            )
+            sys.exit(2)
+
+
+def key(r):
+    return (r["kernel"], r["n"], r["threads"], r["chunk_size"])
+
+
+def main(argv):
+    fresh_path = None
+    baseline_spec = None
+    it = iter(argv[1:])
+    for a in it:
+        if a == "--baseline":
+            baseline_spec = next(it, None)
+        elif fresh_path is None:
+            fresh_path = a
+        else:
+            print(__doc__, file=sys.stderr)
+            return 2
+    if fresh_path is None:
+        print(__doc__, file=sys.stderr)
+        return 2
+
+    try:
+        with open(fresh_path) as f:
+            fresh = load_json(f.read(), fresh_path)
+    except OSError as e:
+        print(f"perf-diff: cannot read fresh file: {e}", file=sys.stderr)
+        return 2
+    base, base_label = load_baseline(baseline_spec)
+
+    base_prov = base.get("provenance", "unknown")
+    informational = base_prov != "measured"
+    print(f"perf-diff: fresh={fresh_path} vs baseline={base_label}")
+    for side, doc in (("fresh", fresh), ("baseline", base)):
+        print(
+            f"  {side:>8}: cores={doc.get('available_parallelism', '?')} "
+            f"smoke={doc.get('smoke', '?')} provenance={doc.get('provenance', 'unknown')}"
+        )
+    if informational:
+        print(
+            f"  NOTE: baseline provenance is {base_prov!r} (not a measured run) — "
+            "comparison is informational only; commit the first CI artifact to arm the gate"
+        )
+
+    base_by_key = {key(r): r for r in base.get("results", [])}
+    compared = 0
+    warnings = []
+    for r in fresh.get("results", []):
+        if r["chunk_size"] == 0:
+            continue
+        b = base_by_key.get(key(r))
+        if b is None or not b.get("tokens_per_sec") or not r.get("tokens_per_sec"):
+            continue
+        compared += 1
+        ratio = r["tokens_per_sec"] / b["tokens_per_sec"]
+        line = (
+            f"  {r['kernel']:<12} n={r['n']:<6} t={r['threads']:<3} C={r['chunk_size']:<4} "
+            f"{b['tokens_per_sec']:>14.0f} -> {r['tokens_per_sec']:>14.0f} tok/s "
+            f"({ratio:5.2f}x)"
+        )
+        print(line)
+        if ratio < REGRESSION_RATIO:
+            warnings.append(line)
+
+    if compared == 0:
+        print("perf-diff: no overlapping chunked configs between fresh and baseline")
+        return 0
+    if warnings and not informational:
+        print(
+            f"\nWARNING: {len(warnings)} config(s) regressed below "
+            f"{REGRESSION_RATIO:.0%} of the committed tokens/sec:"
+        )
+        for w in warnings:
+            print(w)
+        print("(warn-only: not failing the build — investigate before committing a new snapshot)")
+    elif warnings:
+        print(f"\n{len(warnings)} config(s) below threshold vs the modeled baseline (informational)")
+    else:
+        print(f"\nperf-diff: all {compared} chunked configs within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
