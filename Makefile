@@ -20,14 +20,18 @@ test: build
 
 # The kernel harness exits nonzero if any chunked configuration diverges
 # from the naive oracle beyond 1e-4 — so `make bench` doubles as a check.
+# train_step's reference section is hermetic (builtin ref_lm graphs) and
+# emits BENCH_train.json.
 bench:
 	cargo bench --bench kernel_micro
 	cargo bench --bench fig6_scaling
 	cargo bench --bench decode_throughput
+	cargo bench --bench train_step
 
 bench-smoke:
 	BENCH_SMOKE=1 cargo bench --bench kernel_micro
 	BENCH_SMOKE=1 cargo bench --bench fig6_scaling
+	BENCH_SMOKE=1 cargo bench --bench train_step
 
 # Emit a fresh smoke-mode kernel sweep into .bench-fresh/ (so the
 # committed repo-root snapshot is untouched) and compare tokens/sec per

@@ -1,25 +1,112 @@
-//! Train-step latency per model family/variant — the end-to-end cost
-//! behind every table: softmax vs hedgehog (Pallas linear attention) vs
-//! the subquadratic baselines, plus per-family scaling (ar -> lm -> e2e).
+//! Train-step latency — the end-to-end cost behind every table.
+//!
+//! Two sections:
+//!
+//! * **Reference (always on).** The builtin `ref_lm` training path
+//!   (runtime/ref_lm.rs): train and distill steps through the generic
+//!   `Session` driver, swept over the naive scalar oracle
+//!   (`chunk_size = 0`) and the pooled + SIMD path at 1 and 4 threads.
+//!   Emits `BENCH_train.json` (same record schema as the kernel sweep;
+//!   tokens/sec counts batch x seq tokens per step) so CI tracks the
+//!   hermetic train-path trajectory next to the kernel numbers.
+//! * **Compiled model graphs (needs `make artifacts` + the `pjrt`
+//!   feature).** Softmax vs hedgehog vs the subquadratic baselines,
+//!   unchanged from the original bench; skipped with a note otherwise.
 
 mod common;
 
-use common::{bench, print_table, reps_for};
+use common::{
+    bench, bench_out_path, print_table, reps_for, smoke_mode, write_json, BenchRecord,
+    BenchResult,
+};
 use hedgehog::coordinator::glue_runner as gr;
 use hedgehog::data::{corpus, Pcg32};
-use hedgehog::runtime::ArtifactRegistry;
-use hedgehog::train::session::Session;
+use hedgehog::runtime::{ArtifactRegistry, ExecOptions, ReferenceBackend};
+use hedgehog::train::session::{ref_lm_demo_batch, Session};
 
-fn main() {
-    let reg = ArtifactRegistry::open("artifacts").expect("artifact registry");
+/// Always-on section: the hermetic reference training path.
+fn bench_reference(table: &mut Vec<BenchResult>) {
+    let reg = ArtifactRegistry::with_backend(
+        "/nonexistent-artifacts",
+        Box::new(ReferenceBackend::new()),
+    )
+    .expect("reference registry");
+    let man = reg.manifest("ref_lm_train_step").expect("builtin train graph").clone();
+    let b = man.meta_usize("batch_size").unwrap_or(4);
+    let n = man.meta_usize("seq_len").unwrap_or(32);
+    let tokens_per_step = b * n;
+    let smoke = smoke_mode();
+    let reps = if smoke { 2 } else { 16 };
+    let mut records: Vec<BenchRecord> = Vec::new();
+
+    for (label, step_artifact, tokens_only) in [
+        ("ref_lm_train", "ref_lm_train_step", false),
+        ("ref_lm_distill", "ref_lm_distill_step", true),
+    ] {
+        let batch = ref_lm_demo_batch(0, tokens_only);
+        // naive scalar oracle baseline
+        reg.set_exec_options(ExecOptions::naive());
+        let init = Session::init(&reg, "ref_lm", 0).expect("ref_lm init");
+        let mut session = Session::with_step_artifact(&reg, step_artifact, init.params)
+            .expect("ref_lm step session");
+        let naive = bench(format!("{label:<15} naive"), reps, || {
+            session.train_step(1e-3, 0.0, &batch).unwrap();
+        });
+        // max_rel_err is NaN -> JSON null on every row: this bench times
+        // steps, it does not re-measure oracle parity (the ref_lm unit
+        // suite gates that); writing 0.0 would fabricate a measurement.
+        records.push(
+            BenchRecord::new(label, n, 1, 0, &naive, tokens_per_step, f64::NAN, f64::NAN),
+        );
+
+        for threads in [1usize, 4] {
+            reg.set_exec_options(ExecOptions { threads, chunk_size: ExecOptions::DEFAULT_CHUNK });
+            let res = bench(format!("{label:<15} simd t={threads}"), reps, || {
+                session.train_step(1e-3, 0.0, &batch).unwrap();
+            });
+            let speedup = naive.min_ms / res.min_ms;
+            records.push(BenchRecord::new(
+                label,
+                n,
+                threads,
+                ExecOptions::DEFAULT_CHUNK,
+                &res,
+                tokens_per_step,
+                speedup,
+                f64::NAN,
+            ));
+            table.push(res);
+        }
+        table.push(naive);
+    }
+
+    let out_path = bench_out_path("BENCH_train.json");
+    write_json(
+        &out_path,
+        "reference train/distill step latency (builtin ref_lm)",
+        "naive scalar training oracle (chunk_size=0, threads=1)",
+        &records,
+    )
+    .expect("write BENCH_train.json");
+    println!("wrote {}", out_path.display());
+}
+
+/// Compiled-artifact section: per model family/variant, pjrt only.
+fn bench_compiled(table: &mut Vec<BenchResult>) {
+    let reg = match ArtifactRegistry::open("artifacts") {
+        Ok(reg) => reg,
+        Err(e) => {
+            eprintln!("train_step: cannot open artifacts registry ({e:#}); skipping");
+            return;
+        }
+    };
     if reg.backend_name() != "pjrt" {
         eprintln!(
-            "train_step: model graphs need compiled artifacts (`make artifacts`) \
-             and the `pjrt` backend; skipping"
+            "train_step: compiled model graphs need `make artifacts` and the `pjrt` \
+             backend; reference section above is the hermetic baseline"
         );
         return;
     }
-    let mut results = Vec::new();
 
     for (tag, desc) in [
         ("ar_softmax", "ar  softmax"),
@@ -48,7 +135,7 @@ fn main() {
             gr::lm_batch(&lang, corpus::Domain::Pretrain, &mut rng, b, n)
         };
         let reps = reps_for(150.0);
-        results.push(bench(
+        table.push(bench(
             format!("{desc} (b{b} n{n}, {}p)", session.params.num_elements()),
             reps,
             || {
@@ -56,5 +143,11 @@ fn main() {
             },
         ));
     }
-    print_table("train_step latency per variant", &results);
+}
+
+fn main() {
+    let mut table = Vec::new();
+    bench_reference(&mut table);
+    bench_compiled(&mut table);
+    print_table("train_step latency (reference ref_lm + compiled variants)", &table);
 }

@@ -64,10 +64,14 @@ pub fn pearson(x: &[f32], y: &[f32]) -> f32 {
     }
 }
 
-/// Ranks with average tie handling.
+/// Ranks with average tie handling. Callers must filter NaN first
+/// (`spearman` does): `total_cmp` makes the sort deterministic for any
+/// input, but a NaN's rank is not meaningful — under the old
+/// `partial_cmp(..).unwrap_or(Equal)` sort it even depended on the
+/// *input order*, silently skewing Spearman.
 fn ranks(x: &[f32]) -> Vec<f32> {
     let mut idx: Vec<usize> = (0..x.len()).collect();
-    idx.sort_by(|&a, &b| x[a].partial_cmp(&x[b]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.sort_by(|&a, &b| x[a].total_cmp(&x[b]));
     let mut out = vec![0.0f32; x.len()];
     let mut i = 0;
     while i < idx.len() {
@@ -86,7 +90,16 @@ fn ranks(x: &[f32]) -> Vec<f32> {
 
 /// Spearman rank correlation — the monotonicity diagnostic for Fig 3:
 /// rho(q.k dot products, attention weights) ~ 1 for softmax/Hedgehog.
+///
+/// NaN in either series propagates explicitly: rank correlation is
+/// undefined for unordered values, and quietly ranking NaNs made the
+/// result depend on input order. A NaN result is visible in reports
+/// (and a sign the upstream probe produced garbage), not a plausible
+/// wrong number.
 pub fn spearman(x: &[f32], y: &[f32]) -> f32 {
+    if x.iter().chain(y).any(|v| v.is_nan()) {
+        return f32::NAN;
+    }
     pearson(&ranks(x), &ranks(y))
 }
 
@@ -254,6 +267,20 @@ mod tests {
         let x = [1.0, 1.0, 2.0, 3.0];
         let y = [1.0, 1.0, 2.0, 3.0];
         assert!((spearman(&x, &y) - 1.0).abs() < 1e-5);
+    }
+
+    /// Regression: a NaN used to get a quiet, input-order-dependent rank
+    /// (`partial_cmp(..).unwrap_or(Equal)`); now it propagates.
+    #[test]
+    fn spearman_propagates_nan_independent_of_order() {
+        let y = [1.0, 2.0, 3.0, 4.0];
+        let a = [1.0, f32::NAN, 3.0, 4.0];
+        let b = [f32::NAN, 1.0, 3.0, 4.0]; // same values, NaN moved first
+        assert!(spearman(&a, &y).is_nan());
+        assert!(spearman(&b, &y).is_nan());
+        assert!(spearman(&y, &a).is_nan(), "NaN in y must propagate too");
+        // clean inputs are unaffected by the total_cmp sort change
+        assert!((spearman(&y, &y) - 1.0).abs() < 1e-6);
     }
 
     #[test]

@@ -23,6 +23,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::backend::{Backend, ExecOptions, Executable as BackendExecutable};
+use super::json::Json;
 use super::manifest::Manifest;
 use super::reference::ReferenceBackend;
 use super::tensor::Tensor;
@@ -136,9 +137,29 @@ impl ArtifactRegistry {
                 .with_context(|| format!("scanning artifacts dir {}", dir.display()))?
             {
                 let path = entry?.path();
-                if path.extension().and_then(|e| e.to_str()) == Some("json") {
-                    let m = Manifest::load(&path)?;
-                    manifests.insert(m.name.clone(), m);
+                if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                    continue;
+                }
+                let text = std::fs::read_to_string(&path)
+                    .with_context(|| format!("reading manifest {}", path.display()))?;
+                match Manifest::parse(&text) {
+                    Ok(m) => {
+                        manifests.insert(m.name.clone(), m);
+                    }
+                    // Stray JSON in the artifacts dir (a bench emission, a
+                    // tool's scratch file) must not brick `open` — but a
+                    // file that *does* look like a manifest (top-level
+                    // `name` + `inputs`) and still fails to parse is a
+                    // malformed artifact, which stays a hard error.
+                    Err(e) if json_looks_like_manifest(&text) => {
+                        return Err(e.context(format!("parsing {}", path.display())));
+                    }
+                    Err(_) => {
+                        eprintln!(
+                            "warning: ignoring non-manifest JSON {} in the artifacts dir",
+                            path.display()
+                        );
+                    }
                 }
             }
         }
@@ -223,6 +244,20 @@ impl ArtifactRegistry {
     }
 }
 
+/// Whether a JSON document is *shaped* like an artifact manifest, used to
+/// tell "malformed manifest" (hard error) from "unrelated JSON" (skip
+/// with a warning). Parses when possible (object with `name` + `inputs`);
+/// when the file is not even valid JSON (truncation, merge damage), falls
+/// back to a substring probe for the manifest keys — a corrupted manifest
+/// must stay a hard `open` failure, not a skip that quietly resolves the
+/// name to a builtin instead.
+fn json_looks_like_manifest(text: &str) -> bool {
+    match Json::parse(text) {
+        Ok(j) => j.get("name").is_some() && j.get("inputs").is_some(),
+        Err(_) => text.contains("\"name\"") && text.contains("\"inputs\""),
+    }
+}
+
 /// Whether `dir` exists and holds at least one artifact manifest.
 fn dir_has_manifests(dir: &Path) -> bool {
     std::fs::read_dir(dir)
@@ -278,6 +313,53 @@ mod tests {
         let tuned = ExecOptions::default().with_threads(2).with_chunk_size(32);
         reg.set_exec_options(tuned);
         assert_eq!(reg.exec_options(), tuned);
+    }
+
+    /// A stray non-manifest `.json` (e.g. a bench emission) in the
+    /// artifacts dir must be skipped with a warning, while real manifests
+    /// next to it keep loading; a *malformed* file that looks like a
+    /// manifest stays a hard `open` failure.
+    #[test]
+    fn stray_json_is_skipped_but_malformed_manifests_fail() {
+        let dir = std::env::temp_dir().join(format!("hh_stray_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("BENCH_kernels.json"),
+            r#"{"schema": "hedgehog_bench_v2", "results": [1, 2, 3]}"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("notes.json"), "not json at all {{{").unwrap();
+        std::fs::write(
+            dir.join("tiny.json"),
+            r#"{"name": "tiny_kernel", "inputs": [], "outputs": [], "meta": {}}"#,
+        )
+        .unwrap();
+        let reg =
+            ArtifactRegistry::with_backend(&dir, Box::new(ReferenceBackend::new())).unwrap();
+        assert!(reg.contains("tiny_kernel"), "valid manifest next to junk must load");
+        assert!(reg.contains("kernel_linear_attention"), "builtins still merged");
+
+        // manifest-shaped but malformed (bad dtype) -> hard error
+        std::fs::write(
+            dir.join("broken.json"),
+            r#"{"name": "broken", "inputs": [{"name": "q", "shape": [1], "dtype": "f64"}],
+                "outputs": [], "meta": {}}"#,
+        )
+        .unwrap();
+        let err = ArtifactRegistry::with_backend(&dir, Box::new(ReferenceBackend::new()));
+        assert!(err.is_err(), "malformed manifest-shaped JSON must fail open");
+        std::fs::remove_file(dir.join("broken.json")).unwrap();
+
+        // truncated manifest (not even valid JSON) -> still a hard error,
+        // not a skip that would quietly fall back to a builtin
+        std::fs::write(
+            dir.join("truncated.json"),
+            r#"{"name": "kernel_linear_attention", "inputs": [{"na"#,
+        )
+        .unwrap();
+        let err = ArtifactRegistry::with_backend(&dir, Box::new(ReferenceBackend::new()));
+        assert!(err.is_err(), "truncated manifest must fail open");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

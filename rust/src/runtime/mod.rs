@@ -13,6 +13,7 @@ pub mod params;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod pool;
+pub(crate) mod ref_lm;
 pub mod reference;
 pub mod simd;
 pub mod tensor;

@@ -1,0 +1,1147 @@
+//! Native training path for the builtin `ref_lm` hedgehog LM.
+//!
+//! PR 3 gave the reference backend a decode-step interpretation of a
+//! one-layer, two-head hedgehog LM (`ref_lm_decode_step`); this module
+//! closes the loop by interpreting the matching *training* graphs as
+//! hand-written forward + backward + AdamW, so the train layer
+//! (`Session`, `evaluate`, the two-stage `convert()` pipeline) runs
+//! hermetically — no XLA, no `make artifacts`:
+//!
+//! * `ref_lm_init` — seed -> `params/{embed, unembed}`, the exact layout
+//!   (and, for the fixed demo seed, the exact values) of
+//!   `ref_lm_demo_params()`, so a trained `ParamStore` drops straight
+//!   into `serve::Engine`.
+//! * `ref_lm_train_step` — masked next-token cross-entropy through the
+//!   causal hedgehog linear attention, one AdamW step. Manifest follows
+//!   the aot.py `params/ m/ v/ step/lr/wd/batch` convention, so the
+//!   generic `Session` driver needs no special cases.
+//! * `ref_lm_distill_step` — paper Eq. 4 attention distillation on this
+//!   testbed: soft-label cross-entropy between the hedgehog (student)
+//!   attention map and the softmax (teacher) map computed from the same
+//!   embeddings, trained with AdamW. Mirrors jax `value_and_grad` of the
+//!   loss as computed: the gradient flows through both the student and
+//!   the teacher map into `params/embed` (in the full-size graphs the
+//!   teacher path is structurally zero for the `fm` leaves; here the
+//!   embedding plays both roles). `params/unembed` has a structurally
+//!   zero gradient — it still receives its AdamW decay, exactly like a
+//!   gradient-masked leaf in `python/compile/distill.py`.
+//! * `ref_lm_eval` — (loss, masked accuracy), matching
+//!   `train.make_eval` for decoder configs.
+//!
+//! The forward math is the inclusive-causal (S, z) recurrence the decode
+//! step executes, materialized in its quadratic form (q = k = v = the
+//! per-head embedding slice, phi = [exp(x), exp(-x)], denominator + EPS).
+//! Backward is derived by hand from that form; see rust/DESIGN.md §7 for
+//! the derivation and the oracle/tolerance policy.
+//!
+//! Execution strategies mirror the kernel interpreters: the default path
+//! routes every reduction through the 8-lane `simd` micro-kernels and
+//! runs the per-(batch, head) forward/backward loops as tasks on the
+//! backend's persistent `WorkerPool`; `chunk_size == 0` selects a strict
+//! scalar, single-threaded oracle (same code, scalar op table). Parity
+//! between the two is gated at 1e-5 on the forward loss; gradients are
+//! checked against f32 central finite differences (tolerance: relative
+//! 1e-2 against `max(|fd|, |grad|, 0.05)` — measured worst ~4e-4).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::backend::{ExecOptions, Executable as BackendExecutable};
+use super::json::Json;
+use super::manifest::{Manifest, Slot};
+use super::params::ParamStore;
+use super::pool::WorkerPool;
+use super::reference::{
+    auto_threads, scalar_axpy, scalar_dot, FeatureMap, SharedExecOptions, EPS,
+    REF_LM_DIM as DIM, REF_LM_DP as DP, REF_LM_HEADS as HEADS, REF_LM_HEAD_DIM as HD,
+    REF_LM_VOCAB as VOCAB,
+};
+use super::simd;
+use super::tensor::{DType, Tensor};
+use crate::data::Pcg32;
+
+/// Fixed training-batch geometry of the builtin graphs (manifest shapes).
+pub(crate) const TRAIN_BATCH: usize = 4;
+pub(crate) const TRAIN_SEQ: usize = 32;
+
+/// AdamW hyperparameters, matching `python/compile/train.py`.
+const B1: f32 = 0.9;
+const B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+
+/// Rough per-step flop count (attention fwd+bwd + the unembed matmuls)
+/// for the auto-threading heuristic.
+const STEP_FLOPS: f64 = 1.5e7;
+
+// ---------------------------------------------------------------------------
+// Graph registry: names, manifests, validation
+// ---------------------------------------------------------------------------
+
+/// The four training-side graphs of the `ref_lm` family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum TrainGraph {
+    Init,
+    Train,
+    Distill,
+    Eval,
+}
+
+impl TrainGraph {
+    fn name(self) -> &'static str {
+        match self {
+            TrainGraph::Init => "ref_lm_init",
+            TrainGraph::Train => "ref_lm_train_step",
+            TrainGraph::Distill => "ref_lm_distill_step",
+            TrainGraph::Eval => "ref_lm_eval",
+        }
+    }
+}
+
+/// Map an artifact name to its `ref_lm` training graph, if any.
+pub(crate) fn graph_for(name: &str) -> Option<TrainGraph> {
+    match name {
+        "ref_lm_init" => Some(TrainGraph::Init),
+        "ref_lm_train_step" => Some(TrainGraph::Train),
+        "ref_lm_distill_step" => Some(TrainGraph::Distill),
+        "ref_lm_eval" => Some(TrainGraph::Eval),
+        _ => None,
+    }
+}
+
+fn f_slot(name: impl Into<String>, shape: &[usize]) -> Slot {
+    Slot { name: name.into(), shape: shape.to_vec(), dtype: DType::F32 }
+}
+
+fn i_slot(name: impl Into<String>, shape: &[usize]) -> Slot {
+    Slot { name: name.into(), shape: shape.to_vec(), dtype: DType::I32 }
+}
+
+/// The two parameter leaves under `prefix/`, in aot.py (sorted tree-path)
+/// order — the one layout shared by init, train, distill, eval, and the
+/// decode step.
+fn leaf_slots(prefix: &str) -> Vec<Slot> {
+    vec![
+        f_slot(format!("{prefix}/embed"), &[VOCAB, DIM]),
+        f_slot(format!("{prefix}/unembed"), &[DIM, VOCAB]),
+    ]
+}
+
+fn train_meta(graph: &str) -> BTreeMap<String, Json> {
+    let mut meta = BTreeMap::new();
+    for (key, val) in [("family", "ref_lm"), ("graph", graph), ("kernel", "hedgehog")] {
+        meta.insert(key.to_string(), Json::Str(val.to_string()));
+    }
+    meta.insert("backend".to_string(), Json::Str("reference".to_string()));
+    for (key, val) in [
+        ("vocab", VOCAB),
+        ("n_layers", 1),
+        ("heads", HEADS),
+        ("d_head", HD),
+        ("d_model", DIM),
+        ("batch_size", TRAIN_BATCH),
+        ("seq_len", TRAIN_SEQ),
+    ] {
+        meta.insert(key.to_string(), Json::Num(val as f64));
+    }
+    meta
+}
+
+/// Build the builtin manifest for one training graph, following the
+/// aot.py input/output ordering conventions (`export_model_variant`).
+pub(crate) fn builtin_manifest(graph: TrainGraph) -> Manifest {
+    let (b, n) = (TRAIN_BATCH, TRAIN_SEQ);
+    let batch_full = vec![
+        i_slot("tokens", &[b, n]),
+        i_slot("targets", &[b, n]),
+        f_slot("loss_mask", &[b, n]),
+    ];
+    let opt_slots = || -> Vec<Slot> {
+        let mut v = leaf_slots("m");
+        v.extend(leaf_slots("v"));
+        v.push(i_slot("step", &[]));
+        v.push(f_slot("lr", &[]));
+        v.push(f_slot("wd", &[]));
+        v
+    };
+    let step_outputs = || -> Vec<Slot> {
+        let mut v = leaf_slots("params");
+        v.extend(leaf_slots("m"));
+        v.extend(leaf_slots("v"));
+        v.push(i_slot("step", &[]));
+        v.push(f_slot("loss", &[]));
+        v
+    };
+    let (inputs, outputs, gname) = match graph {
+        TrainGraph::Init => {
+            let seed = Slot { name: "seed".to_string(), shape: vec![], dtype: DType::U32 };
+            (vec![seed], leaf_slots("params"), "init")
+        }
+        TrainGraph::Train => {
+            let mut ins = leaf_slots("params");
+            ins.extend(opt_slots());
+            ins.extend(batch_full.clone());
+            (ins, step_outputs(), "train_step")
+        }
+        TrainGraph::Distill => {
+            let mut ins = leaf_slots("params");
+            ins.extend(opt_slots());
+            ins.push(batch_full[0].clone()); // tokens only
+            (ins, step_outputs(), "distill_step")
+        }
+        TrainGraph::Eval => {
+            let mut ins = leaf_slots("params");
+            ins.extend(batch_full);
+            (ins, vec![f_slot("loss", &[]), f_slot("metric", &[])], "eval")
+        }
+    };
+    Manifest { name: graph.name().to_string(), inputs, outputs, meta: train_meta(gname) }
+}
+
+/// All four builtin training manifests (registered by the backend).
+pub(crate) fn builtin_train_manifests() -> Vec<Manifest> {
+    [TrainGraph::Init, TrainGraph::Train, TrainGraph::Distill, TrainGraph::Eval]
+        .into_iter()
+        .map(builtin_manifest)
+        .collect()
+}
+
+/// The training graphs are fixed-geometry artifacts: an on-disk manifest
+/// under one of their names must match the builtin slot-for-slot and
+/// meta-for-meta (same rationale as the decode step: the interpreter
+/// trusts the geometry, so look-alikes must fail at load, not misrun).
+pub(crate) fn validate_manifest(graph: TrainGraph, manifest: &Manifest) -> Result<()> {
+    let want = builtin_manifest(graph);
+    let slots_eq = |a: &[Slot], b: &[Slot]| {
+        a.len() == b.len()
+            && a.iter()
+                .zip(b)
+                .all(|(x, y)| x.name == y.name && x.shape == y.shape && x.dtype == y.dtype)
+    };
+    if !slots_eq(&manifest.inputs, &want.inputs)
+        || !slots_eq(&manifest.outputs, &want.outputs)
+        || manifest.meta != want.meta
+    {
+        bail!(
+            "{}: manifest does not match the builtin ref_lm training geometry \
+             (B={TRAIN_BATCH}, N={TRAIN_SEQ}, H={HEADS}, d={HD}, V={VOCAB})",
+            graph.name()
+        );
+    }
+    Ok(())
+}
+
+/// Instantiate the executable for one training graph.
+pub(crate) fn load_graph(
+    graph: TrainGraph,
+    opts: Arc<SharedExecOptions>,
+    pool: Arc<WorkerPool>,
+) -> Box<dyn BackendExecutable> {
+    match graph {
+        TrainGraph::Init => Box::new(RefLmInit),
+        graph => Box::new(RefLmStep { graph, opts, pool }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Init
+// ---------------------------------------------------------------------------
+
+/// Seeded parameter construction shared by `ref_lm_init` and
+/// `ref_lm_demo_params()` (which is this with seed 0x5EED): one rng
+/// stream, embed drawn before unembed, N(0, 0.3^2) entries.
+pub(crate) fn init_param_store(seed: u64) -> ParamStore {
+    let mut rng = Pcg32::new(seed);
+    let mut randn = |len: usize| -> Vec<f32> { (0..len).map(|_| rng.normal() * 0.3).collect() };
+    let embed = randn(VOCAB * DIM);
+    let unembed = randn(DIM * VOCAB);
+    let mut params = ParamStore::new();
+    params.insert("params/embed", Tensor::from_f32(embed, &[VOCAB, DIM]));
+    params.insert("params/unembed", Tensor::from_f32(unembed, &[DIM, VOCAB]));
+    params
+}
+
+struct RefLmInit;
+
+impl BackendExecutable for RefLmInit {
+    fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != 1 {
+            bail!("ref_lm_init expects a single seed input, got {}", inputs.len());
+        }
+        let seed = inputs[0].item_u32()?;
+        let params = init_param_store(seed as u64);
+        // manifest order: params/embed, params/unembed
+        Ok(vec![params.get("params/embed")?.clone(), params.get("params/unembed")?.clone()])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar-vs-SIMD op table
+// ---------------------------------------------------------------------------
+
+/// Reduction primitives, swapped as a unit: the measured path uses the
+/// 8-lane micro-kernels, the `chunk_size == 0` oracle the strict scalar
+/// loops — every other instruction is shared, so the two paths cannot
+/// drift structurally.
+#[derive(Clone, Copy)]
+struct Ops {
+    dot: fn(&[f32], &[f32]) -> f32,
+    axpy: fn(&mut [f32], f32, &[f32]),
+}
+
+const SIMD_OPS: Ops = Ops { dot: simd::dot, axpy: simd::axpy };
+const SCALAR_OPS: Ops = Ops { dot: scalar_dot, axpy: scalar_axpy };
+
+fn resolve(opts: ExecOptions) -> (Ops, usize) {
+    if opts.chunk_size == 0 {
+        (SCALAR_OPS, 1)
+    } else {
+        (SIMD_OPS, auto_threads(opts, STEP_FLOPS))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward: embed gather + per-head causal hedgehog linear attention
+// ---------------------------------------------------------------------------
+
+/// Materialized per-head activations for one batch. Layouts are
+/// (B, H, N, ...) so every (batch, head) slice is contiguous and the
+/// pool tasks own disjoint `&mut` regions.
+struct Activations {
+    /// (B, H, N, d) — per-head embedding rows (q = k = v)
+    xh: Vec<f32>,
+    /// (B, H, N, Dp) — hedgehog features
+    phi: Vec<f32>,
+    /// (B, H, N, N) — *normalized* causal attention weights (rows j <= t)
+    p: Vec<f32>,
+    /// (B, H, N) — denominators (sum of raw scores + EPS)
+    den: Vec<f32>,
+    /// (B, H, N, d) — attention outputs per head
+    yh: Vec<f32>,
+}
+
+struct FwdTask<'a> {
+    xh: &'a [f32],
+    phi: &'a mut [f32],
+    p: &'a mut [f32],
+    den: &'a mut [f32],
+    yh: &'a mut [f32],
+}
+
+/// One (batch, head)'s forward: features, raw scores, normalization, and
+/// the attention output — the quadratic form of the decode recurrence.
+fn fwd_head(ops: Ops, t: FwdTask) {
+    let FwdTask { xh, phi, p, den, yh } = t;
+    let (n, d, dp) = (TRAIN_SEQ, HD, DP);
+    for i in 0..n {
+        FeatureMap::Hedgehog.write(&xh[i * d..(i + 1) * d], &mut phi[i * dp..(i + 1) * dp]);
+    }
+    for i in 0..n {
+        let prow = &mut p[i * n..(i + 1) * n];
+        let mut sum = 0.0f32;
+        for j in 0..=i {
+            let a = (ops.dot)(&phi[i * dp..(i + 1) * dp], &phi[j * dp..(j + 1) * dp]);
+            prow[j] = a;
+            sum += a;
+        }
+        let dn = sum + EPS;
+        den[i] = dn;
+        let inv = dn.recip();
+        let yrow = &mut yh[i * d..(i + 1) * d];
+        yrow.fill(0.0);
+        for j in 0..=i {
+            prow[j] *= inv;
+            (ops.axpy)(yrow, prow[j], &xh[j * d..(j + 1) * d]);
+        }
+    }
+}
+
+/// Gather + attention forward over the whole batch, (batch, head)
+/// parallel on the pool.
+fn forward_attention(
+    ops: Ops,
+    pool: &WorkerPool,
+    threads: usize,
+    tokens: &[i32],
+    embed: &[f32],
+) -> Activations {
+    let (b, n, d, dp) = (TRAIN_BATCH, TRAIN_SEQ, HD, DP);
+    let bh = b * HEADS;
+    let mut xh = vec![0.0f32; bh * n * d];
+    for bi in 0..b {
+        for t in 0..n {
+            let tok = tokens[bi * n + t].rem_euclid(VOCAB as i32) as usize;
+            let x = &embed[tok * DIM..(tok + 1) * DIM];
+            for h in 0..HEADS {
+                let dst = ((bi * HEADS + h) * n + t) * d;
+                xh[dst..dst + d].copy_from_slice(&x[h * d..(h + 1) * d]);
+            }
+        }
+    }
+    let mut acts = Activations {
+        xh,
+        phi: vec![0.0f32; bh * n * dp],
+        p: vec![0.0f32; bh * n * n],
+        den: vec![0.0f32; bh * n],
+        yh: vec![0.0f32; bh * n * d],
+    };
+    let mut tasks = Vec::with_capacity(bh);
+    {
+        let xh = &acts.xh;
+        let mut phi_rest = acts.phi.as_mut_slice();
+        let mut p_rest = acts.p.as_mut_slice();
+        let mut den_rest = acts.den.as_mut_slice();
+        let mut yh_rest = acts.yh.as_mut_slice();
+        for i in 0..bh {
+            let (phi, r) = std::mem::take(&mut phi_rest).split_at_mut(n * dp);
+            phi_rest = r;
+            let (p, r) = std::mem::take(&mut p_rest).split_at_mut(n * n);
+            p_rest = r;
+            let (den, r) = std::mem::take(&mut den_rest).split_at_mut(n);
+            den_rest = r;
+            let (yh, r) = std::mem::take(&mut yh_rest).split_at_mut(n * d);
+            yh_rest = r;
+            tasks.push(FwdTask { xh: &xh[i * n * d..(i + 1) * n * d], phi, p, den, yh });
+        }
+        pool.run_tasks(threads, tasks, |t: FwdTask| fwd_head(ops, t));
+    }
+    acts
+}
+
+// ---------------------------------------------------------------------------
+// LM head: logits, cross-entropy, and its backward
+// ---------------------------------------------------------------------------
+
+struct HeadTask<'a> {
+    /// this batch row's (H, N, d) attention outputs
+    yh: &'a [f32],
+    targets: &'a [i32],
+    mask: &'a [f32],
+    /// outputs (train only; empty slices in eval mode)
+    dyh: &'a mut [f32],
+    dun: &'a mut [f32],
+    loss: &'a mut f64,
+    correct: &'a mut f64,
+}
+
+/// One batch row through the unembed + softmax CE head. With `grads`,
+/// also produces dL/dyh for this row and a per-row partial dL/dunembed
+/// (summed serially afterwards — V x D is tiny).
+fn head_row(ops: Ops, grads: bool, mask_den: f32, unembed: &[f32], task: HeadTask) {
+    let HeadTask { yh, targets, mask, dyh, dun, loss, correct } = task;
+    let (n, d) = (TRAIN_SEQ, HD);
+    let mut logits = vec![0.0f32; VOCAB];
+    let mut y = [0.0f32; DIM];
+    let mut loss_sum = 0.0f64;
+    let mut correct_sum = 0.0f64;
+    for t in 0..n {
+        for h in 0..HEADS {
+            y[h * d..(h + 1) * d].copy_from_slice(&yh[(h * n + t) * d..(h * n + t + 1) * d]);
+        }
+        logits.fill(0.0);
+        for (j, &yj) in y.iter().enumerate() {
+            (ops.axpy)(&mut logits, yj, &unembed[j * VOCAB..(j + 1) * VOCAB]);
+        }
+        let mut m = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (i, &l) in logits.iter().enumerate() {
+            if l > m {
+                m = l;
+                argmax = i;
+            }
+        }
+        let tgt = targets[t].rem_euclid(VOCAB as i32) as usize;
+        let target_logit = logits[tgt];
+        let mut sum = 0.0f32;
+        for l in logits.iter_mut() {
+            *l = (*l - m).exp();
+            sum += *l;
+        }
+        let logp = target_logit - m - sum.ln();
+        let mk = mask[t];
+        loss_sum += mk as f64 * -(logp as f64);
+        if argmax == tgt {
+            correct_sum += mk as f64;
+        }
+        if grads {
+            // dlogits = (softmax - onehot(target)) * mask / mask_den,
+            // built in place over the exp() values.
+            let w = mk / mask_den;
+            let scale = w / sum;
+            for l in logits.iter_mut() {
+                *l *= scale;
+            }
+            logits[tgt] -= w;
+            for (j, &yj) in y.iter().enumerate() {
+                (ops.axpy)(&mut dun[j * VOCAB..(j + 1) * VOCAB], yj, &logits);
+                let g = (ops.dot)(&unembed[j * VOCAB..(j + 1) * VOCAB], &logits);
+                let (h, e) = (j / d, j % d);
+                dyh[(h * n + t) * d + e] = g;
+            }
+        }
+    }
+    *loss = loss_sum;
+    *correct = correct_sum;
+}
+
+// ---------------------------------------------------------------------------
+// Attention backward (shared by the LM and distillation losses)
+// ---------------------------------------------------------------------------
+
+struct BwdTask<'a> {
+    xh: &'a [f32],
+    phi: &'a [f32],
+    p: &'a [f32],
+    den: &'a [f32],
+    yh: &'a [f32],
+    dyh: &'a [f32],
+    dxh: &'a mut [f32],
+}
+
+/// One (batch, head)'s backward through the normalized linear attention
+/// and the hedgehog features, given dL/dyh. Derivation (DESIGN.md §7):
+/// with p_tj the normalized weights and den_t the guarded denominator,
+///   w_tj       = (g_t . v_j - g_t . y_t) / den_t
+///   dphi_t    += sum_j w_tj phi_j,   dphi_j += w_tj phi_t
+///   dv_j      += p_tj g_t
+///   dxh (feat) = dphi_pos * phi_pos - dphi_neg * phi_neg
+/// where q = k = v = xh, so all three roles accumulate into dxh.
+fn bwd_head(ops: Ops, t: BwdTask) {
+    let BwdTask { xh, phi, p, den, yh, dyh, dxh } = t;
+    let (n, d, dp) = (TRAIN_SEQ, HD, DP);
+    let mut dphi = vec![0.0f32; n * dp];
+    let mut dphit = vec![0.0f32; dp];
+    for i in 0..n {
+        let g = &dyh[i * d..(i + 1) * d];
+        let gy = (ops.dot)(g, &yh[i * d..(i + 1) * d]);
+        let inv = den[i].recip();
+        let prow = &p[i * n..(i + 1) * n];
+        dphit.fill(0.0);
+        for j in 0..=i {
+            let w = ((ops.dot)(g, &xh[j * d..(j + 1) * d]) - gy) * inv;
+            (ops.axpy)(&mut dphit, w, &phi[j * dp..(j + 1) * dp]);
+            if j < i {
+                (ops.axpy)(&mut dphi[j * dp..(j + 1) * dp], w, &phi[i * dp..(i + 1) * dp]);
+            } else {
+                // j == i: the k-role also lands on row i (d a_ii / d phi_i
+                // = 2 phi_i), accumulated locally to avoid aliasing.
+                (ops.axpy)(&mut dphit, w, &phi[i * dp..(i + 1) * dp]);
+            }
+            (ops.axpy)(&mut dxh[j * d..(j + 1) * d], prow[j], g);
+        }
+        (ops.axpy)(&mut dphi[i * dp..(i + 1) * dp], 1.0, &dphit);
+    }
+    for i in 0..n {
+        let ph = &phi[i * dp..(i + 1) * dp];
+        let dph = &dphi[i * dp..(i + 1) * dp];
+        simd::grad_pos_neg(&mut dxh[i * d..(i + 1) * d], &dph[..d], &dph[d..], &ph[..d], &ph[d..]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Distillation loss + backward (teacher map from the same embeddings)
+// ---------------------------------------------------------------------------
+
+struct DistillTask<'a> {
+    xh: &'a [f32],
+    phi: &'a [f32],
+    p: &'a [f32],
+    den: &'a [f32],
+    dxh: &'a mut [f32],
+    loss: &'a mut f64,
+}
+
+/// One (batch, head)'s distillation loss and backward. Teacher rows are
+/// causal softmax over raw q.k scores at scale 1.0 (exactly
+/// `distill.py`'s `softmax_attention_weights(..., scale=1.0)`); the loss
+/// is the Eq. 4 soft cross-entropy -sum_j T_tj ln(P_tj + EPS), summed
+/// here and averaged over (B, H, N) by the caller via `inv_m`. The
+/// gradient includes both the student path (through phi) and the teacher
+/// path (through the raw scores) — jax `value_and_grad` semantics.
+fn distill_head(ops: Ops, inv_m: f32, task: DistillTask) {
+    let DistillTask { xh, phi, p, den, dxh, loss } = task;
+    let (n, d, dp) = (TRAIN_SEQ, HD, DP);
+    let mut dphi = vec![0.0f32; n * dp];
+    let mut dphit = vec![0.0f32; dp];
+    let mut trow = vec![0.0f32; n];
+    let mut lp = vec![0.0f32; n];
+    let mut dpr = vec![0.0f32; n];
+    let mut loss_sum = 0.0f64;
+    for i in 0..n {
+        let xi = &xh[i * d..(i + 1) * d];
+        let prow = &p[i * n..(i + 1) * n];
+        // teacher: causal softmax over raw scores (max-subtracted)
+        let mut m = f32::NEG_INFINITY;
+        for j in 0..=i {
+            trow[j] = (ops.dot)(xi, &xh[j * d..(j + 1) * d]);
+            m = m.max(trow[j]);
+        }
+        let mut tsum = 0.0f32;
+        for t in trow[..=i].iter_mut() {
+            *t = (*t - m).exp();
+            tsum += *t;
+        }
+        let tinv = tsum.recip();
+        let mut row_loss = 0.0f32;
+        for j in 0..=i {
+            trow[j] *= tinv;
+            lp[j] = (prow[j] + EPS).ln();
+            row_loss += trow[j] * -lp[j];
+        }
+        loss_sum += row_loss as f64;
+        // teacher path: dL/dscore_ij = T_ij * (-lp_j - L_i) * inv_m,
+        // then score_ij = xh_i . xh_j fans out to both rows.
+        for j in 0..=i {
+            let dsc = trow[j] * (-lp[j] - row_loss) * inv_m;
+            (ops.axpy)(&mut dxh[i * d..(i + 1) * d], dsc, &xh[j * d..(j + 1) * d]);
+            (ops.axpy)(&mut dxh[j * d..(j + 1) * d], dsc, xi);
+        }
+        // student path: dL/dP_ij = -T_ij / (P_ij + EPS) * inv_m, pushed
+        // through the normalization exactly as in `bwd_head`.
+        let mut c = 0.0f32;
+        for j in 0..=i {
+            dpr[j] = -trow[j] / (prow[j] + EPS) * inv_m;
+            c += dpr[j] * prow[j];
+        }
+        let inv = den[i].recip();
+        dphit.fill(0.0);
+        for j in 0..=i {
+            let w = (dpr[j] - c) * inv;
+            (ops.axpy)(&mut dphit, w, &phi[j * dp..(j + 1) * dp]);
+            if j < i {
+                (ops.axpy)(&mut dphi[j * dp..(j + 1) * dp], w, &phi[i * dp..(i + 1) * dp]);
+            } else {
+                (ops.axpy)(&mut dphit, w, &phi[i * dp..(i + 1) * dp]);
+            }
+        }
+        (ops.axpy)(&mut dphi[i * dp..(i + 1) * dp], 1.0, &dphit);
+    }
+    for i in 0..n {
+        let ph = &phi[i * dp..(i + 1) * dp];
+        let dph = &dphi[i * dp..(i + 1) * dp];
+        simd::grad_pos_neg(&mut dxh[i * d..(i + 1) * d], &dph[..d], &dph[d..], &ph[..d], &ph[d..]);
+    }
+    *loss = loss_sum;
+}
+
+// ---------------------------------------------------------------------------
+// Whole-step loss + gradients (the unit the tests finite-difference)
+// ---------------------------------------------------------------------------
+
+/// Which loss a step computes.
+pub(crate) enum StepKind<'a> {
+    /// Masked next-token cross-entropy (train_step / eval).
+    Lm { targets: &'a [i32], mask: &'a [f32] },
+    /// Attention-map distillation (distill_step).
+    Distill,
+}
+
+/// Forward + backward for one batch: returns (loss, metric, dL/dembed,
+/// dL/dunembed). `metric` is masked accuracy for `Lm` and NaN for
+/// `Distill` (it has no labels). The distillation loss never touches the
+/// unembed, so its gradient comes back exactly zero.
+pub(crate) fn loss_and_grads(
+    pool: &WorkerPool,
+    opts: ExecOptions,
+    embed: &[f32],
+    unembed: &[f32],
+    tokens: &[i32],
+    kind: StepKind,
+) -> (f32, f32, Vec<f32>, Vec<f32>) {
+    let (ops, threads) = resolve(opts);
+    let (b, n, d) = (TRAIN_BATCH, TRAIN_SEQ, HD);
+    let bh = b * HEADS;
+    let acts = forward_attention(ops, pool, threads, tokens, embed);
+    let mut dxh = vec![0.0f32; bh * n * d];
+    let mut dembed = vec![0.0f32; VOCAB * DIM];
+    let mut dunembed = vec![0.0f32; DIM * VOCAB];
+    let loss;
+    let mut metric = f32::NAN;
+
+    match kind {
+        StepKind::Lm { targets, mask } => {
+            let mask_den = mask.iter().map(|&m| m as f64).sum::<f64>() as f32 + 1e-6;
+            // per-batch-row head pass: loss, accuracy, dyh, partial dun
+            let mut dyh = vec![0.0f32; bh * n * d];
+            let mut dun_partials = vec![0.0f32; b * DIM * VOCAB];
+            let mut stats = vec![(0.0f64, 0.0f64); b];
+            {
+                let yh = &acts.yh;
+                let mut tasks = Vec::with_capacity(b);
+                let mut dyh_rest = dyh.as_mut_slice();
+                let mut dun_rest = dun_partials.as_mut_slice();
+                let mut stats_rest = stats.as_mut_slice();
+                for bi in 0..b {
+                    let (dyh_b, r) = std::mem::take(&mut dyh_rest).split_at_mut(HEADS * n * d);
+                    dyh_rest = r;
+                    let (dun_b, r) = std::mem::take(&mut dun_rest).split_at_mut(DIM * VOCAB);
+                    dun_rest = r;
+                    let (stat, r) = std::mem::take(&mut stats_rest).split_at_mut(1);
+                    stats_rest = r;
+                    let s = &mut stat[0];
+                    tasks.push(HeadTask {
+                        yh: &yh[bi * HEADS * n * d..(bi + 1) * HEADS * n * d],
+                        targets: &targets[bi * n..(bi + 1) * n],
+                        mask: &mask[bi * n..(bi + 1) * n],
+                        dyh: dyh_b,
+                        dun: dun_b,
+                        loss: &mut s.0,
+                        correct: &mut s.1,
+                    });
+                }
+                pool.run_tasks(threads, tasks, |t: HeadTask| {
+                    head_row(ops, true, mask_den, unembed, t)
+                });
+            }
+            let loss_sum: f64 = stats.iter().map(|s| s.0).sum();
+            let correct_sum: f64 = stats.iter().map(|s| s.1).sum();
+            loss = (loss_sum / mask_den as f64) as f32;
+            metric = (correct_sum / mask_den as f64) as f32;
+            for part in dun_partials.chunks_exact(DIM * VOCAB) {
+                (ops.axpy)(&mut dunembed, 1.0, part);
+            }
+            // attention backward per (batch, head)
+            let mut tasks = Vec::with_capacity(bh);
+            let mut dxh_rest = dxh.as_mut_slice();
+            for i in 0..bh {
+                let (dxh_i, r) = std::mem::take(&mut dxh_rest).split_at_mut(n * d);
+                dxh_rest = r;
+                tasks.push(BwdTask {
+                    xh: &acts.xh[i * n * d..(i + 1) * n * d],
+                    phi: &acts.phi[i * n * DP..(i + 1) * n * DP],
+                    p: &acts.p[i * n * n..(i + 1) * n * n],
+                    den: &acts.den[i * n..(i + 1) * n],
+                    yh: &acts.yh[i * n * d..(i + 1) * n * d],
+                    dyh: &dyh[i * n * d..(i + 1) * n * d],
+                    dxh: dxh_i,
+                });
+            }
+            pool.run_tasks(threads, tasks, |t: BwdTask| bwd_head(ops, t));
+        }
+        StepKind::Distill => {
+            let inv_m = 1.0f32 / (bh * n) as f32;
+            let mut losses = vec![0.0f64; bh];
+            {
+                let mut tasks = Vec::with_capacity(bh);
+                let mut dxh_rest = dxh.as_mut_slice();
+                let mut loss_rest = losses.as_mut_slice();
+                for i in 0..bh {
+                    let (dxh_i, r) = std::mem::take(&mut dxh_rest).split_at_mut(n * d);
+                    dxh_rest = r;
+                    let (loss_i, r) = std::mem::take(&mut loss_rest).split_at_mut(1);
+                    loss_rest = r;
+                    tasks.push(DistillTask {
+                        xh: &acts.xh[i * n * d..(i + 1) * n * d],
+                        phi: &acts.phi[i * n * DP..(i + 1) * n * DP],
+                        p: &acts.p[i * n * n..(i + 1) * n * n],
+                        den: &acts.den[i * n..(i + 1) * n],
+                        dxh: dxh_i,
+                        loss: &mut loss_i[0],
+                    });
+                }
+                pool.run_tasks(threads, tasks, |t: DistillTask| distill_head(ops, inv_m, t));
+            }
+            loss = (losses.iter().sum::<f64>() * inv_m as f64) as f32;
+        }
+    }
+
+    // scatter the per-head embedding gradients back by token id (serial:
+    // different (b, t) may hit the same embedding row)
+    for bi in 0..b {
+        for t in 0..n {
+            let tok = tokens[bi * n + t].rem_euclid(VOCAB as i32) as usize;
+            for h in 0..HEADS {
+                let src = ((bi * HEADS + h) * n + t) * d;
+                (ops.axpy)(
+                    &mut dembed[tok * DIM + h * d..tok * DIM + (h + 1) * d],
+                    1.0,
+                    &dxh[src..src + d],
+                );
+            }
+        }
+    }
+    (loss, metric, dembed, dunembed)
+}
+
+/// Loss + metric only (the eval graph): same forward, no backward.
+pub(crate) fn eval_loss_metric(
+    pool: &WorkerPool,
+    opts: ExecOptions,
+    embed: &[f32],
+    unembed: &[f32],
+    tokens: &[i32],
+    targets: &[i32],
+    mask: &[f32],
+) -> (f32, f32) {
+    let (ops, threads) = resolve(opts);
+    let (b, n, d) = (TRAIN_BATCH, TRAIN_SEQ, HD);
+    let acts = forward_attention(ops, pool, threads, tokens, embed);
+    let mask_den = mask.iter().map(|&m| m as f64).sum::<f64>() as f32 + 1e-6;
+    let mut stats = vec![(0.0f64, 0.0f64); b];
+    let mut tasks = Vec::with_capacity(b);
+    let mut stats_rest = stats.as_mut_slice();
+    for bi in 0..b {
+        let (stat, r) = std::mem::take(&mut stats_rest).split_at_mut(1);
+        stats_rest = r;
+        let s = &mut stat[0];
+        tasks.push(HeadTask {
+            yh: &acts.yh[bi * HEADS * n * d..(bi + 1) * HEADS * n * d],
+            targets: &targets[bi * n..(bi + 1) * n],
+            mask: &mask[bi * n..(bi + 1) * n],
+            dyh: &mut [],
+            dun: &mut [],
+            loss: &mut s.0,
+            correct: &mut s.1,
+        });
+    }
+    pool.run_tasks(threads, tasks, |t: HeadTask| head_row(ops, false, mask_den, unembed, t));
+    let loss_sum: f64 = stats.iter().map(|s| s.0).sum();
+    let correct_sum: f64 = stats.iter().map(|s| s.1).sum();
+    ((loss_sum / mask_den as f64) as f32, (correct_sum / mask_den as f64) as f32)
+}
+
+// ---------------------------------------------------------------------------
+// AdamW (matching python/compile/train.py adamw_update)
+// ---------------------------------------------------------------------------
+
+/// One decoupled-weight-decay Adam step for one leaf. `step_new` is the
+/// incremented (1-based) step index used for bias correction.
+fn adamw_leaf(
+    p: &[f32],
+    g: &[f32],
+    m: &[f32],
+    v: &[f32],
+    step_new: i32,
+    lr: f32,
+    wd: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let b1t = 1.0 - B1.powi(step_new);
+    let b2t = 1.0 - B2.powi(step_new);
+    let len = p.len();
+    let mut p_new = vec![0.0f32; len];
+    let mut m_new = vec![0.0f32; len];
+    let mut v_new = vec![0.0f32; len];
+    for i in 0..len {
+        let mn = B1 * m[i] + (1.0 - B1) * g[i];
+        let vn = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
+        let mhat = mn / b1t;
+        let vhat = vn / b2t;
+        p_new[i] = p[i] - lr * (mhat / (vhat.sqrt() + ADAM_EPS) + wd * p[i]);
+        m_new[i] = mn;
+        v_new[i] = vn;
+    }
+    (p_new, m_new, v_new)
+}
+
+// ---------------------------------------------------------------------------
+// The step/eval executable
+// ---------------------------------------------------------------------------
+
+/// Executable for `ref_lm_train_step`, `ref_lm_distill_step`, and
+/// `ref_lm_eval` (init is `RefLmInit`). Shares the backend's options and
+/// worker pool with every other reference executable.
+struct RefLmStep {
+    graph: TrainGraph,
+    opts: Arc<SharedExecOptions>,
+    pool: Arc<WorkerPool>,
+}
+
+impl BackendExecutable for RefLmStep {
+    fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let opts = self.opts.load();
+        match self.graph {
+            TrainGraph::Eval => {
+                // manifest order: params/embed, params/unembed, tokens,
+                // targets, loss_mask (shapes pre-checked by the registry)
+                if inputs.len() != 5 {
+                    bail!("ref_lm_eval expects 5 inputs, got {}", inputs.len());
+                }
+                let (loss, metric) = eval_loss_metric(
+                    &self.pool,
+                    opts,
+                    inputs[0].as_f32()?,
+                    inputs[1].as_f32()?,
+                    inputs[2].as_i32()?,
+                    inputs[3].as_i32()?,
+                    inputs[4].as_f32()?,
+                );
+                Ok(vec![Tensor::scalar_f32(loss), Tensor::scalar_f32(metric)])
+            }
+            TrainGraph::Train | TrainGraph::Distill => {
+                // manifest order: params x2, m x2, v x2, step, lr, wd, batch
+                let want = if self.graph == TrainGraph::Train { 12 } else { 10 };
+                if inputs.len() != want {
+                    bail!("{} expects {want} inputs, got {}", self.graph.name(), inputs.len());
+                }
+                let embed = inputs[0].as_f32()?;
+                let unembed = inputs[1].as_f32()?;
+                let (m_embed, m_unembed) = (inputs[2].as_f32()?, inputs[3].as_f32()?);
+                let (v_embed, v_unembed) = (inputs[4].as_f32()?, inputs[5].as_f32()?);
+                let step = inputs[6].item_i32()?;
+                let lr = inputs[7].item_f32()?;
+                let wd = inputs[8].item_f32()?;
+                let tokens = inputs[9].as_i32()?;
+                let kind = if self.graph == TrainGraph::Train {
+                    StepKind::Lm { targets: inputs[10].as_i32()?, mask: inputs[11].as_f32()? }
+                } else {
+                    StepKind::Distill
+                };
+                let (loss, _metric, dembed, dunembed) =
+                    loss_and_grads(&self.pool, opts, embed, unembed, tokens, kind);
+                let step_new = step + 1;
+                let (pe, me, ve) = adamw_leaf(embed, &dembed, m_embed, v_embed, step_new, lr, wd);
+                let (pu, mu, vu) =
+                    adamw_leaf(unembed, &dunembed, m_unembed, v_unembed, step_new, lr, wd);
+                Ok(vec![
+                    Tensor::from_f32(pe, &[VOCAB, DIM]),
+                    Tensor::from_f32(pu, &[DIM, VOCAB]),
+                    Tensor::from_f32(me, &[VOCAB, DIM]),
+                    Tensor::from_f32(mu, &[DIM, VOCAB]),
+                    Tensor::from_f32(ve, &[VOCAB, DIM]),
+                    Tensor::from_f32(vu, &[DIM, VOCAB]),
+                    Tensor::scalar_i32(step_new),
+                    Tensor::scalar_f32(loss),
+                ])
+            }
+            TrainGraph::Init => unreachable!("init is handled by RefLmInit"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ArtifactRegistry;
+    use crate::train::session::{evaluate, ref_lm_demo_batch, Batch, Session};
+
+    /// The shared demo batch (`ref_lm_demo_batch`) as raw buffers, for
+    /// driving `loss_and_grads` directly — same data distribution as the
+    /// integration tests, the train bench, and the refconv experiment.
+    fn cyclic_batch() -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let b = ref_lm_demo_batch(0, false);
+        (
+            b.get("tokens").unwrap().as_i32().unwrap().to_vec(),
+            b.get("targets").unwrap().as_i32().unwrap().to_vec(),
+            b.get("loss_mask").unwrap().as_f32().unwrap().to_vec(),
+        )
+    }
+
+    fn session_batch() -> Batch {
+        ref_lm_demo_batch(0, false)
+    }
+
+    fn tokens_only_batch() -> Batch {
+        ref_lm_demo_batch(0, true)
+    }
+
+    fn demo_vecs() -> (Vec<f32>, Vec<f32>) {
+        let params = init_param_store(1234);
+        (
+            params.get("params/embed").unwrap().as_f32().unwrap().to_vec(),
+            params.get("params/unembed").unwrap().as_f32().unwrap().to_vec(),
+        )
+    }
+
+    /// Sample indices: the strongest-gradient entries plus deterministic
+    /// pseudo-random ones (so zero-gradient regions get covered too).
+    fn sample_indices(grad: &[f32], count: usize, seed: u64) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..grad.len()).collect();
+        order.sort_by(|&a, &b| grad[b].abs().total_cmp(&grad[a].abs()));
+        let mut idx: Vec<usize> = order[..count / 2].to_vec();
+        let mut rng = Pcg32::new(seed);
+        while idx.len() < count {
+            idx.push(rng.usize_below(grad.len()));
+        }
+        idx
+    }
+
+    /// Documented FD tolerance: relative 1e-2 against max(|fd|, |g|, 0.05)
+    /// (f32 forward, f64 loss accumulation; measured worst ~4e-4).
+    const FD_TOL: f32 = 1e-2;
+    const FD_H: f32 = 1e-2;
+
+    fn fd_check(
+        label: &str,
+        make_loss: &dyn Fn(&[f32], &[f32]) -> f32,
+        embed: &[f32],
+        unembed: &[f32],
+        which: usize, // 0 = embed, 1 = unembed
+        grad: &[f32],
+    ) {
+        let idx = sample_indices(grad, 16, 42 + which as u64);
+        for &i in &idx {
+            let mut e = embed.to_vec();
+            let mut u = unembed.to_vec();
+            let leaf: &mut Vec<f32> = if which == 0 { &mut e } else { &mut u };
+            let orig = leaf[i];
+            leaf[i] = orig + FD_H;
+            let lp = make_loss(&e, &u);
+            let leaf: &mut Vec<f32> = if which == 0 { &mut e } else { &mut u };
+            leaf[i] = orig - FD_H;
+            let lm = make_loss(&e, &u);
+            let fd = (lp - lm) / (2.0 * FD_H);
+            let g = grad[i];
+            let denom = fd.abs().max(g.abs()).max(0.05);
+            assert!(
+                (fd - g).abs() <= FD_TOL * denom,
+                "{label}[{i}]: fd {fd} vs analytic {g} (rel {})",
+                (fd - g).abs() / denom
+            );
+        }
+    }
+
+    #[test]
+    fn finite_difference_gradient_check_train_step() {
+        let pool = WorkerPool::new();
+        let opts = ExecOptions::naive();
+        let (embed, unembed) = demo_vecs();
+        let (tokens, targets, mask) = cyclic_batch();
+        let (loss, metric, dembed, dunembed) = loss_and_grads(
+            &pool,
+            opts,
+            &embed,
+            &unembed,
+            &tokens,
+            StepKind::Lm { targets: &targets, mask: &mask },
+        );
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=1.0).contains(&metric));
+        let make_loss = |e: &[f32], u: &[f32]| -> f32 {
+            loss_and_grads(
+                &pool,
+                opts,
+                e,
+                u,
+                &tokens,
+                StepKind::Lm { targets: &targets, mask: &mask },
+            )
+            .0
+        };
+        fd_check("train/embed", &make_loss, &embed, &unembed, 0, &dembed);
+        fd_check("train/unembed", &make_loss, &embed, &unembed, 1, &dunembed);
+        // embedding rows no batch token touches must have exactly zero grad
+        let unused = 200usize;
+        assert!(tokens.iter().all(|&t| t != unused as i32));
+        assert!(dembed[unused * DIM..(unused + 1) * DIM].iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn finite_difference_gradient_check_distill_step() {
+        let pool = WorkerPool::new();
+        let opts = ExecOptions::naive();
+        let (embed, unembed) = demo_vecs();
+        let (tokens, _, _) = cyclic_batch();
+        let (loss, _, dembed, dunembed) =
+            loss_and_grads(&pool, opts, &embed, &unembed, &tokens, StepKind::Distill);
+        assert!(loss.is_finite() && loss > 0.0);
+        // the distillation loss never reads the unembed: structural zero
+        assert!(dunembed.iter().all(|&g| g == 0.0));
+        let make_loss = |e: &[f32], u: &[f32]| -> f32 {
+            loss_and_grads(&pool, opts, e, u, &tokens, StepKind::Distill).0
+        };
+        fd_check("distill/embed", &make_loss, &embed, &unembed, 0, &dembed);
+    }
+
+    /// Forward-loss parity gated at 1e-5 relative, gradients at 1e-5
+    /// absolute (magnitudes are <= ~1e-2; the lane regrouping measures
+    /// ~1e-7 relative).
+    fn assert_oracle_parity(run: impl Fn(ExecOptions) -> (f32, f32, Vec<f32>, Vec<f32>)) {
+        let (loss0, _, de0, du0) = run(ExecOptions::naive());
+        for opts in [ExecOptions::serial(), ExecOptions::serial().with_threads(4)] {
+            let (loss1, _, de1, du1) = run(opts);
+            assert!(
+                (loss1 - loss0).abs() <= 1e-5 * loss0.abs().max(1.0),
+                "{opts:?}: loss {loss1} vs oracle {loss0}"
+            );
+            for (a, b) in de1.iter().zip(&de0).chain(du1.iter().zip(&du0)) {
+                assert!((a - b).abs() <= 1e-5, "{opts:?}: grad {a} vs oracle {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_simd_path_matches_scalar_oracle() {
+        let pool = WorkerPool::new();
+        let (embed, unembed) = demo_vecs();
+        let (tokens, targets, mask) = cyclic_batch();
+        assert_oracle_parity(|o| {
+            loss_and_grads(
+                &pool,
+                o,
+                &embed,
+                &unembed,
+                &tokens,
+                StepKind::Lm { targets: &targets, mask: &mask },
+            )
+        });
+        assert_oracle_parity(|o| {
+            loss_and_grads(&pool, o, &embed, &unembed, &tokens, StepKind::Distill)
+        });
+    }
+
+    #[test]
+    fn registry_serves_and_validates_train_graphs() {
+        let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+        for name in ["ref_lm_init", "ref_lm_train_step", "ref_lm_distill_step", "ref_lm_eval"] {
+            assert!(reg.contains(name), "{name} missing");
+            assert!(reg.get(name).is_ok(), "{name} failed to load");
+        }
+        let man = reg.manifest("ref_lm_train_step").unwrap();
+        assert_eq!(man.meta_usize("batch_size"), Some(TRAIN_BATCH));
+        assert_eq!(man.meta_usize("seq_len"), Some(TRAIN_SEQ));
+        assert_eq!(man.meta_usize("vocab"), Some(VOCAB));
+        assert_eq!(man.inputs.len(), 12);
+        assert_eq!(man.outputs.len(), 8);
+        // geometry look-alikes must be rejected at load
+        let mut bad = builtin_manifest(TrainGraph::Train);
+        bad.inputs[0].shape = vec![VOCAB, 99];
+        let backend = crate::runtime::ReferenceBackend::new();
+        let err = crate::runtime::Backend::load(&backend, std::path::Path::new("x"), &bad)
+            .err()
+            .expect("geometry look-alike must fail to load");
+        assert!(err.to_string().contains("training geometry"), "{err:#}");
+    }
+
+    #[test]
+    fn init_matches_demo_params_layout_and_seed() {
+        let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+        let s = Session::init(&reg, "ref_lm", 0x5EED).unwrap();
+        let demo = crate::runtime::ref_lm_demo_params();
+        assert_eq!(s.params.tensors, demo.tensors, "init(0x5EED) must equal the demo params");
+    }
+
+    #[test]
+    fn train_loss_decreases_over_50_steps() {
+        let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+        let mut s = Session::init(&reg, "ref_lm", 7).unwrap();
+        let batch = session_batch();
+        let last = s.run(50, |_| 1e-2, 0.0, |_| batch.clone()).unwrap();
+        assert!(s.losses.iter().all(|l| l.is_finite()));
+        assert!(last < s.losses[0] * 0.8, "loss did not decrease: {} -> {last}", s.losses[0]);
+        assert_eq!(s.step, 50);
+        // the eval graph agrees with training progress: finite, bounded metric
+        let (loss, acc) = evaluate(&reg, "ref_lm", &s.params, 2, |_| session_batch()).unwrap();
+        assert!(loss.is_finite());
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn distill_loss_decreases_over_50_steps() {
+        let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+        let init = Session::init(&reg, "ref_lm", 9).unwrap();
+        let mut s =
+            Session::with_step_artifact(&reg, "ref_lm_distill_step", init.params).unwrap();
+        let batch = tokens_only_batch();
+        for _ in 0..50 {
+            s.train_step(1e-2, 0.0, &batch).unwrap();
+        }
+        let first: f32 = s.losses[..10].iter().sum::<f32>() / 10.0;
+        let trailing = s.trailing_loss(10);
+        assert!(s.losses.iter().all(|l| l.is_finite()));
+        assert!(
+            trailing < first - 0.05,
+            "distill loss did not decrease: first10 {first} vs last10 {trailing}"
+        );
+    }
+}

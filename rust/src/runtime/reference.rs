@@ -34,8 +34,14 @@
 //!   verbatim (strict sequential summation, no pool, no lane regrouping)
 //!   as the numerical oracle for parity tests and as the bench baseline.
 //!
-//! Model graphs (`*_init`, `*_train_step`, ...) have no reference
-//! interpretation — they need the compiled HLO path (`pjrt` feature).
+//! The `ref_lm` model additionally has a native *training* path
+//! (`runtime/ref_lm.rs`): builtin `ref_lm_init`, `ref_lm_train_step`,
+//! `ref_lm_distill_step`, and `ref_lm_eval` artifacts interpreted as a
+//! hand-written forward + backward + AdamW over the same parameter layout
+//! the decode step serves — so `Session`, `evaluate`, and the two-stage
+//! `convert()` pipeline run hermetically (see rust/DESIGN.md §7). Every
+//! *other* model graph (`ar_*`, `glue*`, `lm_*`, ...) still needs the
+//! compiled HLO path (`pjrt` feature).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -51,10 +57,9 @@ use super::params::ParamStore;
 use super::pool::WorkerPool;
 use super::simd;
 use super::tensor::{DType, Tensor};
-use crate::data::Pcg32;
 
 /// Denominator guard, matching `ref.py` / the Pallas kernels.
-const EPS: f32 = 1e-6;
+pub(crate) const EPS: f32 = 1e-6;
 
 /// Shape of the builtin `kernel_*` artifacts (see aot.py `export_kernels`).
 const KERNEL_SHAPE: [usize; 4] = [1, 2, 128, 16];
@@ -75,13 +80,13 @@ const FIG6_TAYLOR_NS: &[usize] = &[256, 512, 1024, 2048];
 /// the decode hot path something real to execute, not to be a good LM.
 pub const REF_LM_TAG: &str = "ref_lm";
 const REF_LM_NAME: &str = "ref_lm_decode_step";
-const REF_LM_VOCAB: usize = 256;
-const REF_LM_BATCH: usize = 4;
-const REF_LM_HEADS: usize = 2;
-const REF_LM_HEAD_DIM: usize = 16;
-const REF_LM_DIM: usize = REF_LM_HEADS * REF_LM_HEAD_DIM;
+pub(crate) const REF_LM_VOCAB: usize = 256;
+pub(crate) const REF_LM_BATCH: usize = 4;
+pub(crate) const REF_LM_HEADS: usize = 2;
+pub(crate) const REF_LM_HEAD_DIM: usize = 16;
+pub(crate) const REF_LM_DIM: usize = REF_LM_HEADS * REF_LM_HEAD_DIM;
 /// Hedgehog features double the head dim: phi(x) = [exp(x), exp(-x)].
-const REF_LM_DP: usize = 2 * REF_LM_HEAD_DIM;
+pub(crate) const REF_LM_DP: usize = 2 * REF_LM_HEAD_DIM;
 
 /// Below this estimated flop count, auto threading (`threads == 0`) stays
 /// serial: even pooled dispatch costs a lock + wakeup, which would
@@ -92,7 +97,7 @@ const MIN_AUTO_PARALLEL_FLOPS: f64 = 8e6;
 /// Feature maps the linear-attention interpreter supports. Inputs are raw
 /// q/k rows of length d; outputs are the Dp-dimensional positive features.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum FeatureMap {
+pub(crate) enum FeatureMap {
     /// phi(x) = exp(x) — what `kernel_linear_attention` bakes in.
     Exp,
     /// phi(x) = [exp(x), exp(-x)] — Hedgehog's negation map (Eq. 6).
@@ -103,7 +108,7 @@ enum FeatureMap {
 
 impl FeatureMap {
     /// Feature dimension Dp for head dimension d.
-    fn dim(self, d: usize) -> usize {
+    pub(crate) fn dim(self, d: usize) -> usize {
         match self {
             FeatureMap::Exp => d,
             FeatureMap::Hedgehog => 2 * d,
@@ -116,7 +121,7 @@ impl FeatureMap {
     /// allocator), routed through the `simd` micro-kernels. Shared by the
     /// chunked paths AND the naive oracle, so the feature values are
     /// bit-identical between them by construction.
-    fn write(self, x: &[f32], out: &mut [f32]) {
+    pub(crate) fn write(self, x: &[f32], out: &mut [f32]) {
         let d = x.len();
         match self {
             FeatureMap::Exp => simd::exp_lanes(x, out),
@@ -165,7 +170,7 @@ fn kernel_for(name: &str) -> Option<Kernel> {
 /// executable it has handed out: retuning through the registry applies to
 /// already-cached kernels on their next `execute`.
 #[derive(Debug)]
-struct SharedExecOptions {
+pub(crate) struct SharedExecOptions {
     threads: AtomicUsize,
     chunk_size: AtomicUsize,
 }
@@ -183,7 +188,7 @@ impl SharedExecOptions {
         self.chunk_size.store(opts.chunk_size, Ordering::Relaxed);
     }
 
-    fn load(&self) -> ExecOptions {
+    pub(crate) fn load(&self) -> ExecOptions {
         ExecOptions {
             threads: self.threads.load(Ordering::Relaxed),
             chunk_size: self.chunk_size.load(Ordering::Relaxed),
@@ -240,10 +245,19 @@ impl Backend for ReferenceBackend {
                 pool: Arc::clone(&self.pool),
             }));
         }
+        if let Some(graph) = super::ref_lm::graph_for(&manifest.name) {
+            super::ref_lm::validate_manifest(graph, manifest)?;
+            return Ok(super::ref_lm::load_graph(
+                graph,
+                Arc::clone(&self.opts),
+                Arc::clone(&self.pool),
+            ));
+        }
         let kernel = kernel_for(&manifest.name).ok_or_else(|| {
             anyhow!(
                 "artifact {:?} has no pure-Rust reference interpretation — model graphs \
-                 need compiled artifacts and the `pjrt` feature (run `make artifacts`)",
+                 other than the builtin `ref_lm` family need compiled artifacts and the \
+                 `pjrt` feature (run `make artifacts`)",
                 manifest.name
             )
         })?;
@@ -302,6 +316,7 @@ impl Backend for ReferenceBackend {
                 ms.push(builtin_fig6_manifest(attn, n));
             }
         }
+        ms.extend(super::ref_lm::builtin_train_manifests());
         ms
     }
 
@@ -433,16 +448,11 @@ fn validate_decode_manifest(manifest: &Manifest) -> Result<()> {
 
 /// Deterministic demo parameters for the builtin `ref_lm` decode
 /// artifact. Not trained: the artifact exists for serving-path tests and
-/// benches, where only the math and the memory behavior matter.
+/// benches, where only the math and the memory behavior matter. Exactly
+/// `ref_lm_init` with a fixed seed, so the demo layout and the trained
+/// layout are the same by construction.
 pub fn ref_lm_demo_params() -> ParamStore {
-    let mut rng = Pcg32::new(0x5EED);
-    let mut randn = |len: usize| -> Vec<f32> { (0..len).map(|_| rng.normal() * 0.3).collect() };
-    let embed = randn(REF_LM_VOCAB * REF_LM_DIM);
-    let unembed = randn(REF_LM_DIM * REF_LM_VOCAB);
-    let mut params = ParamStore::new();
-    params.insert("params/embed", Tensor::from_f32(embed, &[REF_LM_VOCAB, REF_LM_DIM]));
-    params.insert("params/unembed", Tensor::from_f32(unembed, &[REF_LM_DIM, REF_LM_VOCAB]));
-    params
+    super::ref_lm::init_param_store(0x5EED)
 }
 
 struct RefKernel {
@@ -485,13 +495,14 @@ impl BackendExecutable for RefKernel {
 // ---------------------------------------------------------------------------
 
 /// Strict left-fold dot — the oracle's summation order. The measured
-/// paths use `simd::dot` (8-lane regrouping) instead.
-fn scalar_dot(a: &[f32], b: &[f32]) -> f32 {
+/// paths use `simd::dot` (8-lane regrouping) instead. Shared with the
+/// `ref_lm` training interpreter's `chunk_size == 0` oracle.
+pub(crate) fn scalar_dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
 /// y += a * x, element order — the oracle's update.
-fn scalar_axpy(y: &mut [f32], a: f32, x: &[f32]) {
+pub(crate) fn scalar_axpy(y: &mut [f32], a: f32, x: &[f32]) {
     for (y, &x) in y.iter_mut().zip(x) {
         *y += a * x;
     }
@@ -503,7 +514,7 @@ fn scalar_axpy(y: &mut [f32], a: f32, x: &[f32]) {
 
 /// Resolve the thread count for a dispatch: explicit counts are honored,
 /// auto (0) uses all cores but keeps small problems serial.
-fn auto_threads(opts: ExecOptions, estimated_flops: f64) -> usize {
+pub(crate) fn auto_threads(opts: ExecOptions, estimated_flops: f64) -> usize {
     let t = opts.effective_threads();
     if opts.threads == 0 && estimated_flops < MIN_AUTO_PARALLEL_FLOPS {
         1
@@ -1415,10 +1426,11 @@ mod tests {
     fn builtin_manifests_match_aot_export() {
         let ms = ReferenceBackend::new().builtin_manifests();
         let fig6_count = FIG6_SOFTMAX_NS.len() + FIG6_HEDGEHOG_NS.len() + FIG6_TAYLOR_NS.len();
-        assert_eq!(ms.len(), 3 + fig6_count);
+        // 3 kernel/decode manifests + fig6 sweep + the 4 ref_lm train graphs
+        assert_eq!(ms.len(), 3 + fig6_count + 4);
         for m in &ms {
-            if m.name == REF_LM_NAME {
-                continue; // the decode step has its own slot contract
+            if m.name.starts_with(REF_LM_TAG) {
+                continue; // decode + train graphs have their own slot contracts
             }
             assert_eq!(m.inputs.len(), 3);
             assert_eq!(m.outputs[0].name, "out");

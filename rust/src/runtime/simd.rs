@@ -147,6 +147,23 @@ pub fn exp_pos_neg(x: &[f32], pos: &mut [f32], neg: &mut [f32]) {
     }
 }
 
+/// Backward of the hedgehog feature pair (the `ref_lm` training path's
+/// feature-map kernel): dx[i] += dpos[i] * pos[i] - dneg[i] * neg[i],
+/// which is the chain rule through phi(x) = [exp(x), exp(-x)] using the
+/// stored forward features. Purely elementwise — no reduction — so the
+/// lane structure cannot change results, and the scalar training oracle
+/// shares this function (it is its own specification).
+#[inline]
+pub fn grad_pos_neg(dx: &mut [f32], dpos: &[f32], dneg: &[f32], pos: &[f32], neg: &[f32]) {
+    debug_assert_eq!(dx.len(), dpos.len());
+    debug_assert_eq!(dx.len(), dneg.len());
+    debug_assert_eq!(dx.len(), pos.len());
+    debug_assert_eq!(dx.len(), neg.len());
+    for i in 0..dx.len() {
+        dx[i] += dpos[i] * pos[i] - dneg[i] * neg[i];
+    }
+}
+
 /// Fused rank-1 state update: S += phi(k) v^T and z += phi(k), the
 /// (S, z) carry every linear-attention path (chunked, naive-shaped
 /// decode) performs per key row. `s` is row-major (Dp, Dv).
@@ -281,6 +298,22 @@ mod tests {
             for e in 0..dv {
                 assert_eq!(s[p * dv + e], s0[p * dv + e] + kf[p] * v[e]);
             }
+        }
+    }
+
+    #[test]
+    fn grad_pos_neg_matches_chain_rule() {
+        let x = seq(21, 0.8);
+        let mut pos = vec![0.0f32; 21];
+        let mut neg = vec![0.0f32; 21];
+        exp_pos_neg(&x, &mut pos, &mut neg);
+        let dpos = seq(21, 1.3);
+        let dneg = seq(21, 2.9);
+        let mut dx = seq(21, 0.1);
+        let dx0 = dx.clone();
+        grad_pos_neg(&mut dx, &dpos, &dneg, &pos, &neg);
+        for i in 0..21 {
+            assert_eq!(dx[i], dx0[i] + dpos[i] * pos[i] - dneg[i] * neg[i]);
         }
     }
 

@@ -121,6 +121,13 @@ impl Tensor {
         }
     }
 
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match &self.data {
+            TensorData::U32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not u32")),
+        }
+    }
+
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match &mut self.data {
             TensorData::F32(v) => Ok(v),
@@ -148,6 +155,14 @@ impl Tensor {
         let v = self.as_i32()?;
         if v.len() != 1 {
             bail!("item_i32 on tensor with {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    pub fn item_u32(&self) -> Result<u32> {
+        let v = self.as_u32()?;
+        if v.len() != 1 {
+            bail!("item_u32 on tensor with {} elements", v.len());
         }
         Ok(v[0])
     }

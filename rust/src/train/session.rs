@@ -5,9 +5,12 @@
 //! plus a named `Batch`. The same driver runs task training, distillation,
 //! finetuning, and LoRA (any graph whose manifest follows the
 //! params/m/v/step/lr/wd/batch naming convention from aot.py). It drives
-//! artifacts through the backend-agnostic `Executable` handle, so it needs
-//! compiled artifacts (the `pjrt` path) only because no model graph has a
-//! reference interpretation yet.
+//! artifacts through the backend-agnostic `Executable` handle: compiled
+//! model graphs via the `pjrt` feature, or — hermetically, with nothing on
+//! disk — the reference backend's builtin `ref_lm` training graphs
+//! (`runtime/ref_lm.rs`: native forward + backward + AdamW), which is what
+//! keeps the train-loop integration test, the conversion pipeline, and the
+//! train bench running in CI without `make artifacts`.
 
 use std::rc::Rc;
 
@@ -136,17 +139,23 @@ impl Session {
             inputs.push(t);
         }
         let outs = exe.run_refs(&inputs)?;
-        let mut loss = f32::NAN;
+        let mut loss = None;
         for (slot, t) in man.outputs.iter().zip(outs) {
             match slot.name.as_str() {
                 "step" => self.step = t.item_i32()?,
-                "loss" => loss = t.item_f32()?,
+                "loss" => loss = Some(t.item_f32()?),
                 name if name.starts_with("m/") || name.starts_with("v/") => {
                     self.opt.insert(name.to_string(), t)
                 }
                 name => self.params.insert(name.to_string(), t),
             }
         }
+        // A step graph that declares no `loss` output is not a train step
+        // (silently recording NaN would poison every downstream trailing
+        // mean and loss-decrease gate) — fail loudly, naming the artifact.
+        let loss = loss.ok_or_else(|| {
+            anyhow!("step artifact {:?} declares no `loss` output", man.name)
+        })?;
         self.losses.push(loss);
         Ok(loss)
     }
@@ -177,6 +186,32 @@ impl Session {
     }
 }
 
+/// Deterministic, learnable batch for the builtin `ref_lm` training
+/// graphs: cyclic next-token sequences over a 64-token sub-vocabulary at
+/// the graphs' fixed (batch, seq) geometry, one rotation per batch row.
+/// `offset` rotates all rows (pass an rng draw to de-correlate steps);
+/// `tokens_only` matches the distill graph's batch (no labels). Shared by
+/// the integration tests, the train bench, and the `refconv` experiment
+/// so they all exercise the same data distribution.
+pub fn ref_lm_demo_batch(offset: usize, tokens_only: bool) -> Batch {
+    let (b, n) = (crate::runtime::ref_lm::TRAIN_BATCH, crate::runtime::ref_lm::TRAIN_SEQ);
+    let mut tokens = Vec::with_capacity(b * n);
+    let mut targets = Vec::with_capacity(b * n);
+    for bi in 0..b {
+        for t in 0..n {
+            tokens.push((((t + bi * 5 + offset) * 7) % 64) as i32);
+            targets.push((((t + 1 + bi * 5 + offset) * 7) % 64) as i32);
+        }
+    }
+    let mut batch = Batch::new().with("tokens", Tensor::from_i32(tokens, &[b, n]));
+    if !tokens_only {
+        batch = batch
+            .with("targets", Tensor::from_i32(targets, &[b, n]))
+            .with("loss_mask", Tensor::from_f32(vec![1.0; b * n], &[b, n]));
+    }
+    batch
+}
+
 /// Run a non-training artifact (eval / logits / stats) against a parameter
 /// store plus a batch, matching inputs by name.
 pub fn run_with_params(
@@ -201,7 +236,9 @@ pub fn run_with_params(
     exe.run_refs(&inputs)
 }
 
-/// Evaluate `<tag>_eval` over `n_batches`, returning (mean loss, mean metric).
+/// Evaluate `<tag>_eval` over `n_batches`, returning (mean loss, mean
+/// metric). `n_batches` must be positive — a 0-batch evaluation would
+/// return (NaN, NaN) from the 0/0 division and silently poison reports.
 pub fn evaluate(
     reg: &ArtifactRegistry,
     tag: &str,
@@ -209,6 +246,9 @@ pub fn evaluate(
     n_batches: usize,
     mut next_batch: impl FnMut(usize) -> Batch,
 ) -> Result<(f32, f32)> {
+    if n_batches == 0 {
+        return Err(anyhow!("evaluate({tag:?}): n_batches must be > 0"));
+    }
     let mut loss_sum = 0.0;
     let mut metric_sum = 0.0;
     for i in 0..n_batches {
@@ -218,4 +258,81 @@ pub fn evaluate(
         metric_sum += outs[1].item_f32()?;
     }
     Ok((loss_sum / n_batches as f32, metric_sum / n_batches as f32))
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+    use std::path::Path;
+
+    use super::*;
+    use crate::runtime::backend::{Backend, Executable as BackendExecutable};
+    use crate::runtime::{DType, Manifest, Slot};
+
+    /// A backend whose only artifact is a "train step" that echoes its
+    /// parameter and declares no `loss` output — the misdeclared-graph
+    /// case `train_step` must reject instead of recording NaN.
+    struct NoLossBackend;
+
+    struct NoLossExe;
+
+    impl BackendExecutable for NoLossExe {
+        fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+            Ok(vec![inputs[0].clone(), Tensor::scalar_i32(1)])
+        }
+    }
+
+    fn no_loss_manifest() -> Manifest {
+        let w = |name: &str| Slot { name: name.to_string(), shape: vec![2], dtype: DType::F32 };
+        let scalar = |name: &str, dtype| Slot { name: name.to_string(), shape: vec![], dtype };
+        Manifest {
+            name: "noloss_train_step".to_string(),
+            inputs: vec![
+                w("params/w"),
+                scalar("step", DType::I32),
+                scalar("lr", DType::F32),
+                scalar("wd", DType::F32),
+            ],
+            outputs: vec![w("params/w"), scalar("step", DType::I32)],
+            meta: BTreeMap::new(),
+        }
+    }
+
+    impl Backend for NoLossBackend {
+        fn name(&self) -> &'static str {
+            "no-loss-test"
+        }
+
+        fn load(&self, _dir: &Path, _manifest: &Manifest) -> Result<Box<dyn BackendExecutable>> {
+            Ok(Box::new(NoLossExe))
+        }
+
+        fn builtin_manifests(&self) -> Vec<Manifest> {
+            vec![no_loss_manifest()]
+        }
+    }
+
+    #[test]
+    fn train_step_errors_when_graph_declares_no_loss() {
+        let reg =
+            ArtifactRegistry::with_backend("/nonexistent-dir", Box::new(NoLossBackend)).unwrap();
+        let mut params = ParamStore::new();
+        params.insert("params/w", Tensor::from_f32(vec![1.0, 2.0], &[2]));
+        let mut s = Session::with_step_artifact(&reg, "noloss_train_step", params).unwrap();
+        let err = s.train_step(1e-3, 0.0, &Batch::new()).unwrap_err();
+        assert!(
+            err.to_string().contains("noloss_train_step")
+                && err.to_string().contains("no `loss` output"),
+            "{err:#}"
+        );
+        assert!(s.losses.is_empty(), "a failed step must not record a loss");
+    }
+
+    #[test]
+    fn evaluate_rejects_zero_batches() {
+        let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+        let params = crate::runtime::ref_lm_demo_params();
+        let err = evaluate(&reg, "ref_lm", &params, 0, |_| Batch::new()).unwrap_err();
+        assert!(err.to_string().contains("n_batches"), "{err:#}");
+    }
 }

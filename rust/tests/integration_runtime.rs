@@ -3,19 +3,31 @@
 //!
 //! Hermetic by default: with no `artifacts/` directory (no XLA, no `make
 //! artifacts`), `ArtifactRegistry::open` falls back to the pure-Rust
-//! `ReferenceBackend`, which provides and interprets the two standalone
-//! kernel artifacts. When compiled artifacts are present (and the `pjrt`
-//! feature is enabled) the same tests exercise the compiled path, and the
-//! model-graph test below stops self-skipping.
+//! `ReferenceBackend`, which provides the standalone kernel artifacts,
+//! the `ref_lm` decode step, AND (since PR 4) the `ref_lm` training
+//! graphs — so the train-loop and conversion tests below run everywhere
+//! instead of self-skipping. When compiled artifacts are present (and
+//! the `pjrt` feature is enabled) the kernel tests exercise the compiled
+//! path; the train-loop tests pin an explicit `ReferenceBackend` so they
+//! stay hermetic in that environment too.
 
 use hedgehog::runtime::{
-    ref_lm_demo_params, ArtifactRegistry, ExecOptions, ParamStore, Tensor, REF_LM_TAG,
+    ref_lm_demo_params, ArtifactRegistry, ExecOptions, ReferenceBackend, Tensor, REF_LM_TAG,
 };
 use hedgehog::serve::{Batcher, Engine, Request};
+use hedgehog::train::session::{evaluate, ref_lm_demo_batch, Batch, Session};
+use hedgehog::train::{convert, ConversionSpec};
 
 fn registry() -> ArtifactRegistry {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     ArtifactRegistry::open(dir).expect("registry open must succeed without artifacts/")
+}
+
+/// A registry pinned to the reference backend: the builtin `ref_lm`
+/// graphs exist regardless of what (if anything) is on disk.
+fn ref_registry() -> ArtifactRegistry {
+    ArtifactRegistry::with_backend("/nonexistent-artifacts", Box::new(ReferenceBackend::new()))
+        .expect("reference registry must open with nothing on disk")
 }
 
 #[test]
@@ -134,13 +146,95 @@ fn serve_stack_runs_hermetically_on_reference_decode() {
     assert_eq!(serial, pooled, "slot-parallel decode changed the generated tokens");
 }
 
-/// Model graphs need compiled artifacts (`make artifacts` + `pjrt`); the
-/// test self-skips when they are absent so the suite stays hermetic.
+/// The train loop end-to-end through the generic `Session` driver on the
+/// builtin `ref_lm` graphs — init -> train_step x N -> eval — with no
+/// artifacts directory and no XLA. This test used to self-skip without
+/// compiled artifacts; the reference training path (runtime/ref_lm.rs)
+/// makes it unconditional.
 #[test]
 fn init_train_eval_cycle_decreases_loss() {
+    let reg = ref_registry();
+    assert_eq!(reg.backend_name(), "reference");
+    let mut s = Session::init(&reg, REF_LM_TAG, 0).unwrap();
+    assert_eq!(s.params.len(), 2, "ref_lm has exactly embed + unembed");
+
+    let steps = 40;
+    let last = s.run(steps, |_| 1e-2, 0.0, |i| ref_lm_demo_batch(i % 3, false)).unwrap();
+    assert_eq!(s.step, steps as i32, "step counter must thread through the graph");
+    assert_eq!(s.losses.len(), steps);
+    assert!(s.losses.iter().all(|l| l.is_finite()), "losses must stay finite");
+    let first = s.losses[0];
+    assert!(
+        last < first * 0.8,
+        "train loss did not decrease: {first} -> {last}"
+    );
+
+    // the eval graph runs against the trained params
+    let (eval_loss, acc) = evaluate(&reg, REF_LM_TAG, &s.params, 2, |i| {
+        ref_lm_demo_batch(i, false)
+    })
+    .unwrap();
+    assert!(eval_loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+    assert!(
+        eval_loss < first,
+        "eval loss {eval_loss} should beat the untrained first loss {first}"
+    );
+}
+
+/// The two-stage conversion pipeline (paper A.3) hermetically: teacher
+/// train -> stage 1 attention distillation (loss decreasing over the
+/// run) -> stage 2 finetune -> converted params drop straight into the
+/// serve engine (train -> eval -> serve, one parameter layout).
+#[test]
+fn conversion_pipeline_runs_hermetically() {
+    let reg = ref_registry();
+    let mut teacher = Session::init(&reg, REF_LM_TAG, 1).unwrap();
+    teacher.run(20, |_| 1e-2, 0.0, |_| ref_lm_demo_batch(0, false)).unwrap();
+
+    let mut spec = ConversionSpec::new(REF_LM_TAG);
+    spec.distill_steps = 50;
+    spec.distill_lr = 1e-2;
+    spec.finetune_steps = 20;
+    spec.finetune_lr = 5e-3;
+    spec.seed = 2;
+    let conv = convert(
+        &reg,
+        &teacher.params,
+        &spec,
+        |_| ref_lm_demo_batch(0, true),
+        |_| ref_lm_demo_batch(0, false),
+    )
+    .unwrap();
+
+    assert_eq!(conv.shared_leaves, 2, "teacher and student share embed + unembed");
+    assert_eq!(conv.distill_losses.len(), 50);
+    assert_eq!(conv.finetune_losses.len(), 20);
+    assert!(conv.distill_losses.iter().chain(&conv.finetune_losses).all(|l| l.is_finite()));
+    let first10: f32 = conv.distill_losses[..10].iter().sum::<f32>() / 10.0;
+    let last10: f32 = conv.distill_losses[40..].iter().sum::<f32>() / 10.0;
+    assert!(
+        last10 < first10,
+        "distill loss did not decrease over the run: first10 {first10} vs last10 {last10}"
+    );
+
+    // converted params serve directly (decode shares the layout)
+    let mut engine = Engine::new(&reg, REF_LM_TAG, &conv.params).unwrap();
+    let (batch, vocab) = (engine.batch, engine.vocab);
+    let tokens = vec![3i32; batch];
+    let logits = engine.step(&tokens).unwrap();
+    assert_eq!(logits.len(), batch * vocab);
+    assert!(logits.iter().all(|l| l.is_finite()), "served logits must be finite");
+}
+
+/// Compiled-path coverage (needs `make artifacts` + the `pjrt` feature):
+/// the same `Session` driver over the exported `ar_softmax` graphs, so
+/// the compiled train plumbing keeps a test even though the hermetic
+/// `ref_lm` tests above now cover the reference path unconditionally.
+/// Self-skips everywhere else.
+#[test]
+fn compiled_model_graph_train_cycle() {
     let reg = registry();
-    // Model graphs have no reference interpretation: require the PJRT
-    // backend (not just manifests on disk) before driving them.
     if reg.backend_name() != "pjrt"
         || !reg.contains("ar_softmax_init")
         || !reg.contains("ar_softmax_train_step")
@@ -148,65 +242,17 @@ fn init_train_eval_cycle_decreases_loss() {
         eprintln!("skipping: needs compiled ar_softmax artifacts + the `pjrt` backend");
         return;
     }
-    let init = reg.get("ar_softmax_init").unwrap();
-    let outs = init.run(&[Tensor::scalar_u32(0)]).unwrap();
-    let mut params = ParamStore::from_outputs(&init.manifest.outputs, outs);
-    assert!(params.num_elements() > 10_000);
-
-    let step_exe = reg.get("ar_softmax_train_step").unwrap();
-    let man = &step_exe.manifest;
-
-    // zeroed optimizer state
-    let mut opt = ParamStore::new();
-    for slot in &man.inputs {
-        if slot.name.starts_with("m/") || slot.name.starts_with("v/") {
-            opt.insert(slot.name.clone(), Tensor::zeros(slot.dtype, &slot.shape));
-        }
-    }
-
-    // trivial AR-ish batch: predict a constant token
-    let b = 32;
-    let nseq = 64;
-    let tokens = Tensor::from_i32(vec![1; b * nseq], &[b, nseq]);
-    let targets = Tensor::from_i32(vec![1; b * nseq], &[b, nseq]);
-    let mask = Tensor::from_f32(vec![1.0; b * nseq], &[b, nseq]);
-
-    let mut step = Tensor::scalar_i32(0);
-    let mut first_loss = None;
-    let mut last_loss = 0.0;
-    for _ in 0..5 {
-        let mut inputs = Vec::new();
-        for slot in &man.inputs {
-            let t = match slot.name.as_str() {
-                "step" => step.clone(),
-                "lr" => Tensor::scalar_f32(1e-3),
-                "wd" => Tensor::scalar_f32(0.0),
-                "tokens" => tokens.clone(),
-                "targets" => targets.clone(),
-                "loss_mask" => mask.clone(),
-                name if name.starts_with("params/") => params.get(name).unwrap().clone(),
-                name => opt.get(name).unwrap().clone(),
-            };
-            inputs.push(t);
-        }
-        let outs = step_exe.run(&inputs).unwrap();
-        // scatter params + opt back, read loss
-        for (slot, t) in man.outputs.iter().zip(&outs) {
-            if slot.name.starts_with("params/") {
-                params.insert(slot.name.clone(), t.clone());
-            } else if slot.name.starts_with("m/") || slot.name.starts_with("v/") {
-                opt.insert(slot.name.clone(), t.clone());
-            } else if slot.name == "step" {
-                step = t.clone();
-            } else if slot.name == "loss" {
-                last_loss = t.item_f32().unwrap();
-                first_loss.get_or_insert(last_loss);
-            }
-        }
-    }
-    assert!(
-        last_loss < first_loss.unwrap(),
-        "loss did not decrease: {first_loss:?} -> {last_loss}"
-    );
-    assert_eq!(step.item_i32().unwrap(), 5);
+    let mut s = Session::init(&reg, "ar_softmax", 0).unwrap();
+    assert!(s.params.num_elements() > 10_000);
+    let man = reg.manifest("ar_softmax_train_step").unwrap();
+    let b = man.meta_usize("batch_size").unwrap_or(32);
+    let n = man.meta_usize("seq_len").unwrap_or(64);
+    // trivial batch: predict a constant token — loss must fall fast
+    let batch = Batch::new()
+        .with("tokens", Tensor::from_i32(vec![1; b * n], &[b, n]))
+        .with("targets", Tensor::from_i32(vec![1; b * n], &[b, n]))
+        .with("loss_mask", Tensor::from_f32(vec![1.0; b * n], &[b, n]));
+    let last = s.run(5, |_| 1e-3, 0.0, |_| batch.clone()).unwrap();
+    assert!(last < s.losses[0], "compiled train loss did not decrease");
+    assert_eq!(s.step, 5);
 }

@@ -1,0 +1,559 @@
+/* C port of rust/benches/kernel_micro.rs used ONCE to produce a *measured*
+ * repo-root BENCH_kernels.json from a container that has no Rust toolchain
+ * (the PR-4 authoring environment). It mirrors, loop for loop:
+ *
+ *   - the PR-1 naive scalar oracle (strict sequential dot/axpy, per-head
+ *     row-wise (S, z) recurrence / row softmax with max subtraction);
+ *   - the PR-3 measured path (8-lane f32 accumulator dot/axpy/scaled_add/
+ *     rank1_update, chunk C=64 (S, z) carry, tiled online softmax), with
+ *     per-(batch, head) tasks claimed from a persistent parked worker
+ *     pool via an atomic counter;
+ *   - the sweep geometry (1 x 4 heads x n x 64, n in {256, 1024, 4096},
+ *     taylor capped at 1024), rep policy, and record fields.
+ *
+ * Also measures a "PR-2 style" variant (scalar non-reassociated dot +
+ * thread spawn/join per execute) at n=4096 t=4 so the pool+SIMD delta
+ * can be recorded in CHANGES.md. Build:
+ *   gcc -O3 -o /tmp/kmp tools/kernel_micro_port.c -lpthread -lm
+ * Output: CSV records on stdout (kernel,n,threads,chunk,reps,mean_ms,
+ * min_ms,tokens_per_sec,speedup,max_rel_err); tools/make_bench_json.py
+ * wraps them in the hedgehog_bench_v2 schema.
+ */
+#include <math.h>
+#include <pthread.h>
+#include <stdatomic.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+#define HEADS 4
+#define HEAD_DIM 64
+#define CHUNK 64
+#define EPS 1e-6f
+#define LANES 8
+
+/* ------------------------------------------------------------------ */
+/* PCG32 (matching rust/src/data/rng.rs) for input data               */
+/* ------------------------------------------------------------------ */
+typedef struct { uint64_t state, inc; } pcg32;
+
+static uint32_t pcg_next(pcg32 *r) {
+    uint64_t old = r->state;
+    r->state = old * 6364136223846793005ULL + r->inc;
+    uint32_t xs = (uint32_t)(((old >> 18) ^ old) >> 27);
+    uint32_t rot = (uint32_t)(old >> 59);
+    return (xs >> rot) | (xs << ((-rot) & 31));
+}
+static pcg32 pcg_new(uint64_t seed) {
+    pcg32 r = {0, (0xda3e39cb94b95bdbULL << 1) | 1};
+    pcg_next(&r);
+    r.state += seed;
+    pcg_next(&r);
+    return r;
+}
+static float pcg_f32(pcg32 *r) { return (pcg_next(r) >> 8) / (float)(1u << 24); }
+static float pcg_normal(pcg32 *r) {
+    float u1 = pcg_f32(r);
+    if (u1 < 1e-7f) u1 = 1e-7f;
+    float u2 = pcg_f32(r);
+    return sqrtf(-2.0f * logf(u1)) * cosf(2.0f * (float)M_PI * u2);
+}
+
+/* ------------------------------------------------------------------ */
+/* scalar oracle primitives (strict order)                            */
+/* ------------------------------------------------------------------ */
+static float sdot(const float *a, const float *b, int n) {
+    float s = 0.0f;
+    for (int i = 0; i < n; i++) s += a[i] * b[i];
+    return s;
+}
+static void saxpy(float *y, float a, const float *x, int n) {
+    for (int i = 0; i < n; i++) y[i] += a * x[i];
+}
+
+/* ------------------------------------------------------------------ */
+/* 8-lane primitives (mirroring runtime/simd.rs)                      */
+/* ------------------------------------------------------------------ */
+static float ldot(const float *a, const float *b, int n) {
+    int split = n - n % LANES;
+    float acc[LANES] = {0};
+    for (int i = 0; i < split; i += LANES)
+        for (int l = 0; l < LANES; l++) acc[l] += a[i + l] * b[i + l];
+    float tail = 0.0f;
+    for (int i = split; i < n; i++) tail += a[i] * b[i];
+    return ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7])) +
+           tail;
+}
+static void laxpy(float *y, float a, const float *x, int n) {
+    int split = n - n % LANES;
+    for (int i = 0; i < split; i += LANES)
+        for (int l = 0; l < LANES; l++) y[i + l] += a * x[i + l];
+    for (int i = split; i < n; i++) y[i] += a * x[i];
+}
+static void lscaled_add(float *y, float c, float a, const float *x, int n) {
+    int split = n - n % LANES;
+    for (int i = 0; i < split; i += LANES)
+        for (int l = 0; l < LANES; l++) y[i + l] = c * y[i + l] + a * x[i + l];
+    for (int i = split; i < n; i++) y[i] = c * y[i] + a * x[i];
+}
+static void lscale(float *y, float c, int n) {
+    for (int i = 0; i < n; i++) y[i] *= c;
+}
+static void rank1_update(float *s, float *z, const float *kf, const float *v, int dp, int dv) {
+    for (int p = 0; p < dp; p++) {
+        z[p] += kf[p];
+        laxpy(s + p * dv, kf[p], v, dv);
+    }
+}
+
+/* ------------------------------------------------------------------ */
+/* feature maps (exp / hedgehog / taylor), shared by both paths       */
+/* ------------------------------------------------------------------ */
+typedef enum { FM_EXP, FM_HEDGEHOG, FM_TAYLOR } fmap;
+
+static int fm_dim(fmap f, int d) {
+    switch (f) {
+        case FM_EXP: return d;
+        case FM_HEDGEHOG: return 2 * d;
+        default: return 1 + d + d * d;
+    }
+}
+static void fm_write(fmap f, const float *x, float *out, int d) {
+    if (f == FM_EXP) {
+        for (int i = 0; i < d; i++) out[i] = expf(x[i]);
+    } else if (f == FM_HEDGEHOG) {
+        for (int i = 0; i < d; i++) {
+            float e = expf(x[i]);
+            out[i] = e;
+            out[d + i] = 1.0f / e;
+        }
+    } else {
+        float s = powf((float)d, -0.25f);
+        out[0] = 1.0f;
+        for (int i = 0; i < d; i++) out[1 + i] = x[i] * s;
+        const float isqrt2 = 0.70710678118654752440f;
+        for (int i = 0; i < d; i++)
+            lscaled_add(out + 1 + d + i * d, 0.0f, out[1 + i] * isqrt2, out + 1, d);
+    }
+}
+
+/* ------------------------------------------------------------------ */
+/* naive per-head kernels (the oracle)                                */
+/* ------------------------------------------------------------------ */
+static void linear_head_naive(fmap fm, const float *q, const float *k, const float *v,
+                              float *out, int n, int d, int dv, float *qf, float *kf, float *s,
+                              float *z) {
+    int dp = fm_dim(fm, d);
+    memset(s, 0, sizeof(float) * dp * dv);
+    memset(z, 0, sizeof(float) * dp);
+    for (int i = 0; i < n; i++) {
+        fm_write(fm, k + i * d, kf, d);
+        const float *vi = v + i * dv;
+        for (int p = 0; p < dp; p++) {
+            z[p] += kf[p];
+            saxpy(s + p * dv, kf[p], vi, dv);
+        }
+        fm_write(fm, q + i * d, qf, d);
+        float den = sdot(qf, z, dp) + EPS;
+        float *oi = out + i * dv;
+        memset(oi, 0, sizeof(float) * dv);
+        for (int p = 0; p < dp; p++) saxpy(oi, qf[p], s + p * dv, dv);
+        for (int e = 0; e < dv; e++) oi[e] /= den;
+    }
+}
+
+static void softmax_head_naive(const float *q, const float *k, const float *v, float *out,
+                               int n, int d, int dv, float *scores) {
+    float scale = 1.0f / sqrtf((float)d);
+    for (int i = 0; i < n; i++) {
+        const float *qi = q + i * d;
+        float m = -INFINITY;
+        for (int j = 0; j <= i; j++) {
+            scores[j] = sdot(qi, k + j * d, d) * scale;
+            if (scores[j] > m) m = scores[j];
+        }
+        float l = 0.0f;
+        for (int j = 0; j <= i; j++) {
+            scores[j] = expf(scores[j] - m);
+            l += scores[j];
+        }
+        float *oi = out + i * dv;
+        memset(oi, 0, sizeof(float) * dv);
+        for (int j = 0; j <= i; j++) saxpy(oi, scores[j] / l, v + j * dv, dv);
+    }
+}
+
+/* ------------------------------------------------------------------ */
+/* chunked per-head kernels (the measured path)                       */
+/* ------------------------------------------------------------------ */
+static void linear_head_chunked(fmap fm, const float *q, const float *k, const float *v,
+                                float *out, int n, int d, int dv, float *qf, float *kf,
+                                float *s, float *z, float *den) {
+    int dp = fm_dim(fm, d);
+    memset(s, 0, sizeof(float) * dp * dv);
+    memset(z, 0, sizeof(float) * dp);
+    for (int c0 = 0; c0 < n; c0 += CHUNK) {
+        int rows = (n - c0 < CHUNK) ? n - c0 : CHUNK;
+        for (int r = 0; r < rows; r++) {
+            fm_write(fm, k + (c0 + r) * d, kf + r * dp, d);
+            fm_write(fm, q + (c0 + r) * d, qf + r * dp, d);
+        }
+        for (int r = 0; r < rows; r++) {
+            const float *qr = qf + r * dp;
+            den[r] = ldot(qr, z, dp);
+            float *or_ = out + (c0 + r) * dv;
+            lscaled_add(or_, 0.0f, qr[0], s, dv);
+            for (int p = 1; p < dp; p++) laxpy(or_, qr[p], s + p * dv, dv);
+        }
+        for (int r = 0; r < rows; r++) {
+            const float *qr = qf + r * dp;
+            float *or_ = out + (c0 + r) * dv;
+            for (int j = 0; j <= r; j++) {
+                float w = ldot(qr, kf + j * dp, dp);
+                den[r] += w;
+                laxpy(or_, w, v + (c0 + j) * dv, dv);
+            }
+            lscale(or_, 1.0f / (den[r] + EPS), dv);
+        }
+        for (int r = 0; r < rows; r++)
+            rank1_update(s, z, kf + r * dp, v + (c0 + r) * dv, dp, dv);
+    }
+}
+
+static void softmax_head_chunked(const float *q, const float *k, const float *v, float *out,
+                                 int n, int d, int dv, float *m, float *l, float *scores) {
+    float scale = 1.0f / sqrtf((float)d);
+    for (int c0 = 0; c0 < n; c0 += CHUNK) {
+        int rows = (n - c0 < CHUNK) ? n - c0 : CHUNK;
+        for (int r = 0; r < rows; r++) {
+            m[r] = -INFINITY;
+            l[r] = 0.0f;
+            memset(out + (c0 + r) * dv, 0, sizeof(float) * dv);
+        }
+        int last = c0 + rows - 1;
+        for (int t0 = 0; t0 <= last; t0 += CHUNK) {
+            int tw = (n - t0 < CHUNK) ? n - t0 : CHUNK;
+            for (int r = 0; r < rows; r++) {
+                int row = c0 + r;
+                if (row < t0) continue;
+                int hi = (row - t0 + 1 < tw) ? row - t0 + 1 : tw;
+                const float *qr = q + row * d;
+                float tile_max = -INFINITY;
+                for (int j = 0; j < hi; j++) {
+                    scores[j] = ldot(qr, k + (t0 + j) * d, d) * scale;
+                    if (scores[j] > tile_max) tile_max = scores[j];
+                }
+                float new_m = (m[r] > tile_max) ? m[r] : tile_max;
+                float *or_ = out + row * dv;
+                if (m[r] > -INFINITY && new_m > m[r]) {
+                    float alpha = expf(m[r] - new_m);
+                    l[r] *= alpha;
+                    lscale(or_, alpha, dv);
+                }
+                for (int j = 0; j < hi; j++) {
+                    float e = expf(scores[j] - new_m);
+                    l[r] += e;
+                    laxpy(or_, e, v + (t0 + j) * dv, dv);
+                }
+                m[r] = new_m;
+            }
+        }
+        for (int r = 0; r < rows; r++) lscale(out + (c0 + r) * dv, 1.0f / l[r], dv);
+    }
+}
+
+/* ------------------------------------------------------------------ */
+/* persistent worker pool (parked on a condvar, atomic task claiming) */
+/* ------------------------------------------------------------------ */
+typedef void (*taskfn)(int head, void *ctx);
+
+static pthread_mutex_t pool_mu = PTHREAD_MUTEX_INITIALIZER;
+static pthread_cond_t pool_cv = PTHREAD_COND_INITIALIZER;
+static pthread_cond_t done_cv = PTHREAD_COND_INITIALIZER;
+static atomic_int next_task;
+static taskfn job_fn;
+static void *job_ctx;
+static int job_tasks, job_epoch, job_active, job_budget, pool_shutdown;
+
+static void *worker_main(void *arg) {
+    (void)arg;
+    int seen = 0;
+    for (;;) {
+        pthread_mutex_lock(&pool_mu);
+        while (!pool_shutdown && (job_epoch == seen || job_fn == NULL || job_active >= job_budget))
+            pthread_cond_wait(&pool_cv, &pool_mu);
+        if (pool_shutdown) {
+            pthread_mutex_unlock(&pool_mu);
+            return NULL;
+        }
+        seen = job_epoch;
+        job_active++;
+        taskfn fn = job_fn;
+        void *ctx = job_ctx;
+        int tasks = job_tasks;
+        pthread_mutex_unlock(&pool_mu);
+        for (;;) {
+            int i = atomic_fetch_add(&next_task, 1);
+            if (i >= tasks) break;
+            fn(i, ctx);
+        }
+        pthread_mutex_lock(&pool_mu);
+        job_active--;
+        if (job_active == 0) pthread_cond_signal(&done_cv);
+        pthread_mutex_unlock(&pool_mu);
+    }
+}
+
+static void pool_run(int threads, int tasks, taskfn fn, void *ctx) {
+    if (threads <= 1 || tasks <= 1) {
+        for (int i = 0; i < tasks; i++) fn(i, ctx);
+        return;
+    }
+    pthread_mutex_lock(&pool_mu);
+    atomic_store(&next_task, 0);
+    job_fn = fn;
+    job_ctx = ctx;
+    job_tasks = tasks;
+    job_budget = (threads < tasks ? threads : tasks) - 1;
+    job_epoch++;
+    pthread_cond_broadcast(&pool_cv);
+    pthread_mutex_unlock(&pool_mu);
+    for (;;) {
+        int i = atomic_fetch_add(&next_task, 1);
+        if (i >= tasks) break;
+        fn(i, ctx);
+    }
+    pthread_mutex_lock(&pool_mu);
+    while (job_active != 0) pthread_cond_wait(&done_cv, &pool_mu);
+    job_fn = NULL;
+    pthread_mutex_unlock(&pool_mu);
+}
+
+/* ------------------------------------------------------------------ */
+/* execute = all (b*h) heads of one kernel config                     */
+/* ------------------------------------------------------------------ */
+typedef struct {
+    int kind; /* 0 = linear naive, 1 = linear chunked, 2 = softmax naive, 3 = softmax chunked,
+                 4 = linear chunked PR2-style (scalar dot, for the CHANGES delta) */
+    fmap fm;
+    int n, d, dv;
+    const float *q, *k, *v;
+    float *out;
+} exec_ctx;
+
+static void head_task(int h, void *p) {
+    exec_ctx *c = (exec_ctx *)p;
+    int n = c->n, d = c->d, dv = c->dv;
+    int dp = fm_dim(c->fm, d);
+    const float *q = c->q + (size_t)h * n * d;
+    const float *k = c->k + (size_t)h * n * d;
+    const float *v = c->v + (size_t)h * n * dv;
+    float *out = c->out + (size_t)h * n * dv;
+    if (c->kind == 0 || c->kind == 1 || c->kind == 4) {
+        int rows = (c->kind == 0) ? 1 : CHUNK;
+        float *qf = malloc(sizeof(float) * (size_t)rows * dp);
+        float *kf = malloc(sizeof(float) * (size_t)rows * dp);
+        float *s = malloc(sizeof(float) * (size_t)dp * dv);
+        float *z = malloc(sizeof(float) * dp);
+        float *den = malloc(sizeof(float) * CHUNK);
+        if (c->kind == 0)
+            linear_head_naive(c->fm, q, k, v, out, n, d, dv, qf, kf, s, z);
+        else if (c->kind == 1)
+            linear_head_chunked(c->fm, q, k, v, out, n, d, dv, qf, kf, s, z, den);
+        else {
+            /* PR2-style: chunked structure, strict scalar reductions */
+            memset(s, 0, sizeof(float) * (size_t)dp * dv);
+            memset(z, 0, sizeof(float) * dp);
+            for (int c0 = 0; c0 < n; c0 += CHUNK) {
+                int rr = (n - c0 < CHUNK) ? n - c0 : CHUNK;
+                for (int r = 0; r < rr; r++) {
+                    fm_write(c->fm, k + (c0 + r) * d, kf + r * dp, d);
+                    fm_write(c->fm, q + (c0 + r) * d, qf + r * dp, d);
+                }
+                for (int r = 0; r < rr; r++) {
+                    const float *qr = qf + r * dp;
+                    den[r] = sdot(qr, z, dp);
+                    float *or_ = out + (c0 + r) * dv;
+                    memset(or_, 0, sizeof(float) * dv);
+                    for (int p2 = 0; p2 < dp; p2++) saxpy(or_, qr[p2], s + p2 * dv, dv);
+                }
+                for (int r = 0; r < rr; r++) {
+                    const float *qr = qf + r * dp;
+                    float *or_ = out + (c0 + r) * dv;
+                    for (int j = 0; j <= r; j++) {
+                        float w = sdot(qr, kf + j * dp, dp);
+                        den[r] += w;
+                        saxpy(or_, w, v + (c0 + j) * dv, dv);
+                    }
+                    float inv = 1.0f / (den[r] + EPS);
+                    for (int e = 0; e < dv; e++) or_[e] *= inv;
+                }
+                for (int r = 0; r < rr; r++)
+                    for (int p2 = 0; p2 < dp; p2++) {
+                        z[p2] += kf[r * dp + p2];
+                        saxpy(s + p2 * dv, kf[r * dp + p2], v + (c0 + r) * dv, dv);
+                    }
+            }
+        }
+        free(qf); free(kf); free(s); free(z); free(den);
+    } else if (c->kind == 2) {
+        float *scores = malloc(sizeof(float) * n);
+        softmax_head_naive(q, k, v, out, n, d, dv, scores);
+        free(scores);
+    } else {
+        float *m = malloc(sizeof(float) * CHUNK);
+        float *l = malloc(sizeof(float) * CHUNK);
+        float *scores = malloc(sizeof(float) * CHUNK);
+        softmax_head_chunked(q, k, v, out, n, d, dv, m, l, scores);
+        free(m); free(l); free(scores);
+    }
+}
+
+static double now_ms(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec * 1000.0 + ts.tv_nsec / 1e6;
+}
+
+/* spawn/join per execute (the PR-2 dispatch this repo retired in PR 3) */
+typedef struct { exec_ctx *c; } spawn_arg;
+static void *spawn_main(void *p) {
+    exec_ctx *c = ((spawn_arg *)p)->c;
+    for (;;) {
+        int i = atomic_fetch_add(&next_task, 1);
+        if (i >= HEADS) break;
+        head_task(i, c);
+    }
+    return NULL;
+}
+static void execute_spawn_join(int threads, exec_ctx *c) {
+    atomic_store(&next_task, 0);
+    pthread_t th[8];
+    int nth = (threads < HEADS ? threads : HEADS) - 1;
+    spawn_arg a = {c};
+    for (int i = 0; i < nth; i++) pthread_create(&th[i], NULL, spawn_main, &a);
+    for (;;) {
+        int i = atomic_fetch_add(&next_task, 1);
+        if (i >= HEADS) break;
+        head_task(i, c);
+    }
+    for (int i = 0; i < nth; i++) pthread_join(th[i], NULL);
+}
+
+typedef struct { double mean_ms, min_ms; int reps; } timing;
+
+static timing run_bench(int reps, int threads, exec_ctx *c, int spawn_join) {
+    if (spawn_join)
+        execute_spawn_join(threads, c); /* warmup */
+    else
+        pool_run(threads, HEADS, head_task, c);
+    timing t = {0, 1e30, reps};
+    for (int r = 0; r < reps; r++) {
+        double t0 = now_ms();
+        if (spawn_join)
+            execute_spawn_join(threads, c);
+        else
+            pool_run(threads, HEADS, head_task, c);
+        double dt = now_ms() - t0;
+        t.mean_ms += dt;
+        if (dt < t.min_ms) t.min_ms = dt;
+    }
+    t.mean_ms /= reps;
+    return t;
+}
+
+static int reps_for(double expected_ms) {
+    if (expected_ms > 2000.0) return 1;
+    if (expected_ms > 200.0) return 3;
+    return 8;
+}
+
+static double estimate_ms(const char *label, int n) {
+    double d = HEAD_DIM, bh = HEADS;
+    double flops;
+    if (!strcmp(label, "softmax")) flops = (double)n * n * 2.0 * d * bh;
+    else if (!strcmp(label, "linear_exp")) flops = (double)n * d * d * 4.0 * bh;
+    else if (!strcmp(label, "hedgehog")) flops = (double)n * 2.0 * d * d * 4.0 * bh;
+    else flops = (double)n * (1.0 + d + d * d) * d * 4.0 * bh;
+    return flops / 1e6;
+}
+
+static double max_rel_err(const float *a, const float *b, size_t n) {
+    double worst = 0.0;
+    for (size_t i = 0; i < n; i++) {
+        double den = fabs(b[i]) > 1.0 ? fabs(b[i]) : 1.0;
+        double e = fabs((double)a[i] - b[i]) / den;
+        if (e > worst) worst = e;
+    }
+    return worst;
+}
+
+int main(void) {
+    pthread_t workers[3];
+    for (int i = 0; i < 3; i++) pthread_create(&workers[i], NULL, worker_main, NULL);
+
+    struct { const char *label; fmap fm; int softmax; } fams[] = {
+        {"linear_exp", FM_EXP, 0},
+        {"softmax", FM_EXP, 1},
+        {"hedgehog", FM_HEDGEHOG, 0},
+        {"taylor", FM_TAYLOR, 0},
+    };
+    int ns[] = {256, 1024, 4096};
+    int thread_cases[] = {1, 4, 2};
+    int d = HEAD_DIM;
+
+    for (int fi = 0; fi < 4; fi++) {
+        for (int ni = 0; ni < 3; ni++) {
+            int n = ns[ni];
+            if (!strcmp(fams[fi].label, "taylor") && n > 1024) continue;
+            size_t elems = (size_t)HEADS * n * d;
+            float *q = malloc(sizeof(float) * elems);
+            float *k = malloc(sizeof(float) * elems);
+            float *v = malloc(sizeof(float) * elems);
+            float *out_naive = malloc(sizeof(float) * elems);
+            float *out = malloc(sizeof(float) * elems);
+            pcg32 rng = pcg_new(n);
+            for (size_t i = 0; i < elems; i++) q[i] = pcg_normal(&rng) * 0.3f;
+            for (size_t i = 0; i < elems; i++) k[i] = pcg_normal(&rng) * 0.3f;
+            for (size_t i = 0; i < elems; i++) v[i] = pcg_normal(&rng) * 0.3f;
+            int reps = reps_for(estimate_ms(fams[fi].label, n));
+
+            exec_ctx c = {fams[fi].softmax ? 2 : 0, fams[fi].fm, n, d, d, q, k, v, out_naive};
+            timing naive = run_bench(reps, 1, &c, 0);
+            printf("%s,%d,1,0,%d,%.6f,%.6f,%.6f,,\n", fams[fi].label, n, reps, naive.mean_ms,
+                   naive.min_ms, n / (naive.mean_ms / 1000.0));
+            fflush(stdout);
+
+            int creps = reps > 3 ? reps : 3;
+            for (int ti = 0; ti < 3; ti++) {
+                int threads = thread_cases[ti];
+                exec_ctx cc = {fams[fi].softmax ? 3 : 1, fams[fi].fm, n, d, d, q, k, v, out};
+                timing ch = run_bench(creps, threads, &cc, 0);
+                double rel = max_rel_err(out, out_naive, elems);
+                printf("%s,%d,%d,%d,%d,%.6f,%.6f,%.6f,%.6f,%.9g\n", fams[fi].label, n, threads,
+                       CHUNK, creps, ch.mean_ms, ch.min_ms, n / (ch.mean_ms / 1000.0),
+                       naive.min_ms / ch.min_ms, rel);
+                fflush(stdout);
+            }
+
+            /* PR-2 style reference point for CHANGES.md (stderr only) */
+            if (!fams[fi].softmax && !strcmp(fams[fi].label, "linear_exp") && n == 4096) {
+                exec_ctx c2 = {4, fams[fi].fm, n, d, d, q, k, v, out};
+                timing pr2 = run_bench(3, 4, &c2, 1);
+                fprintf(stderr, "PR2-style linear_exp n=4096 t=4: mean %.3f ms min %.3f ms "
+                                "(%.0f tok/s)\n",
+                        pr2.mean_ms, pr2.min_ms, n / (pr2.mean_ms / 1000.0));
+            }
+            free(q); free(k); free(v); free(out); free(out_naive);
+        }
+    }
+
+    pthread_mutex_lock(&pool_mu);
+    pool_shutdown = 1;
+    pthread_cond_broadcast(&pool_cv);
+    pthread_mutex_unlock(&pool_mu);
+    for (int i = 0; i < 3; i++) pthread_join(workers[i], NULL);
+    return 0;
+}

@@ -1,0 +1,59 @@
+#!/usr/bin/env python3
+"""Wrap kernel_micro_port.c's CSV records into the hedgehog_bench_v2 JSON
+schema (same field set and ordering as rust/benches/common/mod.rs
+write_json), for committing a *measured* BENCH_kernels.json snapshot from
+an authoring container that has no Rust toolchain.
+
+Usage: python3 tools/make_bench_json.py records.csv cores > BENCH_kernels.json
+"""
+
+import sys
+
+
+def num(x):
+    return f"{float(x):.6f}" if x != "" else "null"
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    cores = int(argv[2])
+    rows = []
+    with open(argv[1]) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            kernel, n, threads, chunk, reps, mean_ms, min_ms, tok, speedup, rel = (
+                line.split(",")
+            )
+            rows.append(
+                f'    {{"kernel": "{kernel}", "n": {n}, "threads": {threads}, '
+                f'"chunk_size": {chunk}, "reps": {reps}, "mean_ms": {num(mean_ms)}, '
+                f'"min_ms": {num(min_ms)}, "ns_per_iter": {num(float(mean_ms) * 1e6)}, '
+                f'"tokens_per_sec": {num(tok)}, "speedup": {num(speedup)}, '
+                f'"max_rel_err": {rel if rel else "null"}}}'
+            )
+    body = ",\n".join(rows)
+    print("{")
+    print('  "schema": "hedgehog_bench_v2",')
+    print('  "title": "kernel sweep: chunked/threaded reference vs naive",')
+    print('  "baseline": "naive row-wise oracle (chunk_size=0, threads=1)",')
+    print('  "provenance": "measured",')
+    print(
+        '  "measured_by": "tools/kernel_micro_port.c (C port of benches/kernel_micro.rs, '
+        "same loop structure and data; authoring container had no Rust toolchain — "
+        'replace with the first CI-emitted artifact for an in-harness baseline)",'
+    )
+    print('  "smoke": false,')
+    print(f'  "available_parallelism": {cores},')
+    print('  "results": [')
+    print(body)
+    print("  ]")
+    print("}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
