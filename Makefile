@@ -10,7 +10,7 @@
 # `make artifacts` (model-graph export) lives in python/compile and needs
 # jax; everything here is hermetic Rust.
 
-.PHONY: build test bench bench-smoke perf-diff
+.PHONY: build test bench bench-smoke refconv-smoke perf-diff
 
 build:
 	cargo build --release
@@ -28,10 +28,19 @@ bench:
 	cargo bench --bench decode_throughput
 	cargo bench --bench train_step
 
-bench-smoke:
+bench-smoke: refconv-smoke
 	BENCH_SMOKE=1 cargo bench --bench kernel_micro
 	BENCH_SMOKE=1 cargo bench --bench fig6_scaling
 	BENCH_SMOKE=1 cargo bench --bench train_step
+
+# End-to-end conversion smoke on every builtin config (including the
+# 2-layer learnable ref_lm2), artifact-less: teacher train -> per-layer
+# distill -> finetune -> eval -> serve on the reference backend. Reports
+# land in .bench-fresh/ (gitignored).
+refconv-smoke:
+	mkdir -p .bench-fresh
+	cargo run --release -- expt refconv --scale 0.2 \
+		--artifacts /nonexistent-artifacts --results .bench-fresh
 
 # Emit a fresh smoke-mode kernel sweep into .bench-fresh/ (so the
 # committed repo-root snapshot is untouched) and compare tokens/sec per

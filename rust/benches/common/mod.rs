@@ -84,6 +84,10 @@ pub struct BenchRecord {
     pub tokens_per_sec: f64,
     pub speedup: f64,
     pub max_rel_err: f64,
+    /// Model geometry (e.g. "L2_H2_d16") for model-shaped benches, so
+    /// `tools/perf_diff.py` never compares across shapes; None (JSON
+    /// null) for the fixed-shape kernel sweeps.
+    pub geometry: Option<String>,
 }
 
 impl BenchRecord {
@@ -110,7 +114,14 @@ impl BenchRecord {
             tokens_per_sec: tokens_per_iter as f64 / (res.mean_ms / 1000.0),
             speedup,
             max_rel_err,
+            geometry: None,
         }
+    }
+
+    /// Stamp the model geometry on a record (builder style).
+    pub fn with_geometry(mut self, geometry: &str) -> Self {
+        self.geometry = Some(geometry.to_string());
+        self
     }
 }
 
@@ -145,14 +156,20 @@ pub fn write_json(
     s.push_str(&format!("  \"available_parallelism\": {cores},\n"));
     s.push_str("  \"results\": [\n");
     for (i, r) in records.iter().enumerate() {
+        let geometry = match &r.geometry {
+            Some(g) => format!("{g:?}"),
+            None => "null".to_string(),
+        };
         s.push_str(&format!(
             "    {{\"kernel\": {:?}, \"n\": {}, \"threads\": {}, \"chunk_size\": {}, \
-             \"reps\": {}, \"mean_ms\": {}, \"min_ms\": {}, \"ns_per_iter\": {}, \
-             \"tokens_per_sec\": {}, \"speedup\": {}, \"max_rel_err\": {}}}{}\n",
+             \"geometry\": {}, \"reps\": {}, \"mean_ms\": {}, \"min_ms\": {}, \
+             \"ns_per_iter\": {}, \"tokens_per_sec\": {}, \"speedup\": {}, \
+             \"max_rel_err\": {}}}{}\n",
             r.kernel,
             r.n,
             r.threads,
             r.chunk_size,
+            geometry,
             r.reps,
             json_num(r.mean_ms),
             json_num(r.min_ms),

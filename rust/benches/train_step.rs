@@ -21,70 +21,88 @@ use common::{
 };
 use hedgehog::coordinator::glue_runner as gr;
 use hedgehog::data::{corpus, Pcg32};
-use hedgehog::runtime::{ArtifactRegistry, ExecOptions, ReferenceBackend};
+use hedgehog::runtime::{ArtifactRegistry, ExecOptions, ModelConfig, ReferenceBackend};
 use hedgehog::train::session::{ref_lm_demo_batch, Session};
 
-/// Always-on section: the hermetic reference training path.
+/// Always-on section: the hermetic reference training path, once per
+/// builtin `ModelConfig` tag. Every record carries the model geometry
+/// (layers/heads/head_dim) so `tools/perf_diff.py` never compares
+/// tokens/sec across shapes.
 fn bench_reference(table: &mut Vec<BenchResult>) {
     let reg = ArtifactRegistry::with_backend(
         "/nonexistent-artifacts",
         Box::new(ReferenceBackend::new()),
     )
     .expect("reference registry");
-    let man = reg.manifest("ref_lm_train_step").expect("builtin train graph").clone();
-    let b = man.meta_usize("batch_size").unwrap_or(4);
-    let n = man.meta_usize("seq_len").unwrap_or(32);
-    let tokens_per_step = b * n;
     let smoke = smoke_mode();
     let reps = if smoke { 2 } else { 16 };
     let mut records: Vec<BenchRecord> = Vec::new();
 
-    for (label, step_artifact, tokens_only) in [
-        ("ref_lm_train", "ref_lm_train_step", false),
-        ("ref_lm_distill", "ref_lm_distill_step", true),
-    ] {
-        let batch = ref_lm_demo_batch(0, tokens_only);
-        // naive scalar oracle baseline
-        reg.set_exec_options(ExecOptions::naive());
-        let init = Session::init(&reg, "ref_lm", 0).expect("ref_lm init");
-        let mut session = Session::with_step_artifact(&reg, step_artifact, init.params)
-            .expect("ref_lm step session");
-        let naive = bench(format!("{label:<15} naive"), reps, || {
-            session.train_step(1e-3, 0.0, &batch).unwrap();
-        });
-        // max_rel_err is NaN -> JSON null on every row: this bench times
-        // steps, it does not re-measure oracle parity (the ref_lm unit
-        // suite gates that); writing 0.0 would fabricate a measurement.
-        records.push(
-            BenchRecord::new(label, n, 1, 0, &naive, tokens_per_step, f64::NAN, f64::NAN),
-        );
+    for tag in ModelConfig::builtin_tags() {
+        let cfg = ModelConfig::for_tag(tag).expect("builtin tag");
+        let geometry = cfg.geometry();
+        let man = reg
+            .manifest(&format!("{tag}_train_step"))
+            .expect("builtin train graph")
+            .clone();
+        let b = man.meta_usize("batch_size").unwrap_or(4);
+        let n = man.meta_usize("seq_len").unwrap_or(32);
+        let tokens_per_step = b * n;
 
-        for threads in [1usize, 4] {
-            reg.set_exec_options(ExecOptions { threads, chunk_size: ExecOptions::DEFAULT_CHUNK });
-            let res = bench(format!("{label:<15} simd t={threads}"), reps, || {
+        for (kind, tokens_only) in [("train", false), ("distill", true)] {
+            let label = format!("{tag}_{kind}");
+            let step_artifact = format!("{tag}_{kind}_step");
+            let batch = ref_lm_demo_batch(0, tokens_only);
+            // naive scalar oracle baseline
+            reg.set_exec_options(ExecOptions::naive());
+            let init = Session::init(&reg, tag, 0).expect("builtin init");
+            let mut session = Session::with_step_artifact(&reg, &step_artifact, init.params)
+                .expect("builtin step session");
+            let naive = bench(format!("{label:<16} naive"), reps, || {
                 session.train_step(1e-3, 0.0, &batch).unwrap();
             });
-            let speedup = naive.min_ms / res.min_ms;
-            records.push(BenchRecord::new(
-                label,
-                n,
-                threads,
-                ExecOptions::DEFAULT_CHUNK,
-                &res,
-                tokens_per_step,
-                speedup,
-                f64::NAN,
-            ));
-            table.push(res);
+            // max_rel_err is NaN -> JSON null on every row: this bench
+            // times steps, it does not re-measure oracle parity (the
+            // ref_lm unit suite gates that); writing 0.0 would fabricate
+            // a measurement.
+            records.push(
+                BenchRecord::new(&label, n, 1, 0, &naive, tokens_per_step, f64::NAN, f64::NAN)
+                    .with_geometry(&geometry),
+            );
+
+            for threads in [1usize, 4] {
+                reg.set_exec_options(ExecOptions {
+                    threads,
+                    chunk_size: ExecOptions::DEFAULT_CHUNK,
+                });
+                let res = bench(format!("{label:<16} simd t={threads}"), reps, || {
+                    session.train_step(1e-3, 0.0, &batch).unwrap();
+                });
+                let speedup = naive.min_ms / res.min_ms;
+                records.push(
+                    BenchRecord::new(
+                        &label,
+                        n,
+                        threads,
+                        ExecOptions::DEFAULT_CHUNK,
+                        &res,
+                        tokens_per_step,
+                        speedup,
+                        f64::NAN,
+                    )
+                    .with_geometry(&geometry),
+                );
+                table.push(res);
+            }
+            table.push(naive);
         }
-        table.push(naive);
     }
 
     let out_path = bench_out_path("BENCH_train.json");
     write_json(
         &out_path,
-        "reference train/distill step latency (builtin ref_lm)",
-        "naive scalar training oracle (chunk_size=0, threads=1)",
+        "reference train/distill step latency (builtin ref_lm configs)",
+        "naive scalar training oracle (chunk_size=0, threads=1) per geometry",
         &records,
     )
     .expect("write BENCH_train.json");

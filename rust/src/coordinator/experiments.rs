@@ -51,7 +51,11 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("tab11", "LoRA summarization (ROUGE)"),
     ("tab15", "conversion task transfer"),
     ("serve", "batched serving demo on the decode engine"),
-    ("refconv", "hermetic ref_lm conversion: distill -> finetune -> serve (reference backend)"),
+    (
+        "refconv",
+        "hermetic conversion on every builtin config (ref_lm fixed-exp, ref_lm2 2-layer \
+         learnable): distill -> finetune -> serve (reference backend)",
+    ),
 ];
 
 pub fn run_experiment(ctx: &Ctx, id: &str) -> Result<()> {
@@ -773,25 +777,37 @@ fn rouge_eval(
 // refconv: the hermetic distill -> finetune -> serve loop on ref_lm
 // ---------------------------------------------------------------------------
 
-/// The full paper loop on the hermetic testbed: train a `ref_lm`
-/// "teacher", run the two-stage `convert()` (attention distillation, then
-/// task finetuning), evaluate, and drop the converted params into the
-/// decode engine — train -> eval -> serve with no compiled artifacts.
-/// Skips (with a note) when a compiled-artifact backend is active, since
-/// the builtin training graphs only exist on the reference backend.
+/// The full paper loop on the hermetic testbed, once per builtin
+/// `ModelConfig` tag: train a teacher, run the two-stage `convert()`
+/// (per-layer attention distillation, then task finetuning), evaluate,
+/// and drop the converted params into the decode engine — train -> eval
+/// -> serve with no compiled artifacts. The `ref_lm2` pass is the one
+/// that exercises the paper's learnable machinery: per-layer projections
+/// and trainable feature maps distilled against each layer's softmax
+/// teacher map. Skips (with a note) when a compiled-artifact backend is
+/// active, since the builtin training graphs only exist on the reference
+/// backend.
 fn refconv(ctx: &Ctx) -> Result<()> {
     if !ctx.reg.contains("ref_lm_train_step") {
         println!("refconv: builtin ref_lm training graphs need the reference backend; skipping");
         return Ok(());
     }
+    for tag in crate::runtime::ModelConfig::builtin_tags() {
+        refconv_tag(ctx, tag)?;
+    }
+    Ok(())
+}
+
+fn refconv_tag(ctx: &Ctx, tag: &str) -> Result<()> {
+    let cfg = crate::runtime::ModelConfig::for_tag(tag).expect("builtin tag");
     let mut rng = Pcg32::new(ctx.seed);
-    let mut teacher = Session::init(&ctx.reg, "ref_lm", ctx.seed as u32)?;
+    let mut teacher = Session::init(&ctx.reg, tag, ctx.seed as u32)?;
     let teacher_steps = ctx.steps(60);
     teacher.run(teacher_steps, |_| 1e-2, 0.0, |_| {
         ref_lm_demo_batch(rng.usize_below(64), false)
     })?;
 
-    let mut spec = ConversionSpec::new("ref_lm");
+    let mut spec = ConversionSpec::new(tag);
     spec.distill_steps = ctx.steps(40);
     spec.finetune_steps = ctx.steps(40);
     spec.distill_lr = 1e-2;
@@ -807,20 +823,25 @@ fn refconv(ctx: &Ctx) -> Result<()> {
         |_| ref_lm_demo_batch(frng.usize_below(64), false),
     )?;
     let mut erng = Pcg32::with_stream(ctx.seed, 123);
-    let (loss, acc) = evaluate(&ctx.reg, "ref_lm", &conv.params, 4, |_| {
+    let (loss, acc) = evaluate(&ctx.reg, tag, &conv.params, 4, |_| {
         ref_lm_demo_batch(erng.usize_below(64), false)
     })?;
 
     // converted params drop straight into the decode engine (shared layout)
-    let mut engine = crate::serve::Engine::new(&ctx.reg, "ref_lm", &conv.params)?;
+    let mut engine = crate::serve::Engine::new(&ctx.reg, tag, &conv.params)?;
     let step_tokens = vec![1i32; engine.batch];
     let first_logit = {
         let logits = engine.step(&step_tokens)?;
         logits[0]
     };
 
-    let mut report = Report::new("refconv", "hermetic ref_lm conversion (reference backend)");
+    let mut report = Report::new(
+        format!("refconv_{tag}"),
+        format!("hermetic {tag} conversion (reference backend)"),
+    );
     report.header(&["stage", "value"]);
+    report.row(vec!["geometry".into(), cfg.geometry()]);
+    report.row(vec!["feature map".into(), cfg.feature.name().to_string()]);
     report.row(vec!["teacher trailing loss".into(), f(teacher.trailing_loss(5))]);
     report.row(vec!["shared leaves".into(), conv.shared_leaves.to_string()]);
     report.row(vec![
@@ -843,7 +864,7 @@ fn refconv(ctx: &Ctx) -> Result<()> {
     report.row(vec!["eval acc %".into(), f1(100.0 * acc)]);
     report.row(vec!["serve logits[0]".into(), f(first_logit)]);
     report.note("paper A.3 two-stage conversion, end-to-end on the hermetic testbed: \
-                 distill loss decreases, converted params serve via the decode engine");
+                 per-layer distill loss decreases, converted params serve via the decode engine");
     report.emit(&ctx.results_dir);
     Ok(())
 }

@@ -63,6 +63,44 @@ impl Executable {
         Ok(outputs)
     }
 
+    /// In-place variant: write the outputs into caller-owned tensors
+    /// (manifest order). Backends with an `execute_into` fast path (the
+    /// reference decode step) fill the buffers directly — zero
+    /// steady-state allocations; others fall back to `execute` and move
+    /// the results in. The caller allocates `outputs` once from the
+    /// manifest's output slots and reuses them every call
+    /// (`serve::Engine` double-buffers its state this way).
+    pub fn run_refs_into(&self, inputs: &[&Tensor], outputs: &mut [Tensor]) -> Result<()> {
+        self.check_inputs(inputs)?;
+        if outputs.len() != self.manifest.outputs.len() {
+            bail!(
+                "artifact {}: manifest declares {} outputs, caller provided {} buffers",
+                self.manifest.name,
+                self.manifest.outputs.len(),
+                outputs.len()
+            );
+        }
+        // Backends overriding `execute_into` write through these buffers
+        // by slice index, trusting the documented precondition — so hold
+        // shapes/dtypes to the manifest here, like `check_inputs` does
+        // for the inputs (comparisons only; nothing allocates on the
+        // success path).
+        for (t, slot) in outputs.iter().zip(&self.manifest.outputs) {
+            if t.shape != slot.shape || t.dtype() != slot.dtype {
+                bail!(
+                    "artifact {} output {:?}: expected {:?}/{}, got buffer {:?}/{}",
+                    self.manifest.name,
+                    slot.name,
+                    slot.shape,
+                    slot.dtype.name(),
+                    t.shape,
+                    t.dtype().name()
+                );
+            }
+        }
+        self.imp.execute_into(inputs, outputs)
+    }
+
     fn check_inputs(&self, inputs: &[&Tensor]) -> Result<()> {
         if inputs.len() != self.manifest.inputs.len() {
             bail!(
@@ -213,9 +251,24 @@ impl ArtifactRegistry {
 
     pub fn manifest(&self, name: &str) -> Result<&Manifest> {
         self.manifests.get(name).ok_or_else(|| {
+            // Name the builtin model tags (several exist now): "unknown
+            // artifact" against the reference backend is usually a tag
+            // typo, and "run `make artifacts`" alone sent people
+            // compiling XLA to fix a misspelling.
+            let mut tags: Vec<&str> = self
+                .manifests
+                .keys()
+                .filter_map(|n| n.strip_suffix("_init"))
+                .collect();
+            tags.sort_unstable();
+            let hint = if tags.is_empty() {
+                String::from("no builtin model tags are registered")
+            } else {
+                format!("builtin model tags: [{}]", tags.join(", "))
+            };
             anyhow!(
-                "unknown artifact {name:?} — scanned {} with the {} backend \
-                 (run `make artifacts`?)",
+                "unknown artifact {name:?} — scanned {} with the {} backend; {hint}; \
+                 model graphs beyond the builtins need `make artifacts` + the `pjrt` feature",
                 self.dir.display(),
                 self.backend.name()
             )
@@ -283,6 +336,17 @@ mod tests {
         assert!(!reg.contains("ar_softmax_train_step"));
         assert!(reg.get("kernel_linear_attention").is_ok());
         assert!(reg.get("no_such_artifact").is_err());
+    }
+
+    /// The unknown-artifact error must name the available builtin tags
+    /// (a tag typo should not read as "go compile XLA").
+    #[test]
+    fn unknown_artifact_error_lists_builtin_tags() {
+        let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+        let err = reg.manifest("ref_lm3_train_step").unwrap_err().to_string();
+        assert!(err.contains("builtin model tags"), "{err}");
+        assert!(err.contains("ref_lm"), "{err}");
+        assert!(err.contains("ref_lm2"), "{err}");
     }
 
     #[test]

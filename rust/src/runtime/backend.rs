@@ -88,6 +88,28 @@ impl ExecOptions {
 /// must return outputs in manifest order.
 pub trait Executable {
     fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Write the outputs into caller-owned tensors (manifest order and
+    /// shapes, pre-checked by the registry wrapper). Backends with an
+    /// in-place fast path override this to make steady-state hot loops
+    /// allocation-free — the reference decode step does, which is what
+    /// drops `serve::Engine::step` to zero allocations per token. The
+    /// default falls back to `execute` and moves the results in, so
+    /// every backend supports the calling convention.
+    fn execute_into(&self, inputs: &[&Tensor], outputs: &mut [Tensor]) -> Result<()> {
+        let outs = self.execute(inputs)?;
+        if outs.len() != outputs.len() {
+            anyhow::bail!(
+                "execute_into: backend returned {} outputs, caller provided {} buffers",
+                outs.len(),
+                outputs.len()
+            );
+        }
+        for (dst, src) in outputs.iter_mut().zip(outs) {
+            *dst = src;
+        }
+        Ok(())
+    }
 }
 
 /// An execution strategy: turns a manifest (plus whatever artifact files sit

@@ -1,0 +1,313 @@
+//! `ModelConfig`: the single source of truth for the geometry and
+//! feature-map contract of every `ref_lm`-family graph the reference
+//! backend interprets natively (init / train_step / distill_step / eval /
+//! decode_step).
+//!
+//! Until PR 5 the native training and decode paths hardcoded one shape
+//! (1 layer, 2 heads, d = 16, projection-free, fixed exp map) in loose
+//! `REF_LM_*` constants. This module replaces those with a value every
+//! consumer — manifest generation, the interpreter, the decode step,
+//! params init, benches, tests — derives from, so adding a model shape is
+//! one new config, not a hand-synchronized edit across six files.
+//!
+//! Two builtin configs exist:
+//!
+//! * [`ModelConfig::ref_lm`] (tag `ref_lm`) — the legacy shape, kept
+//!   byte-compatible with PR 3/4: `FeatureKind::FixedExp`, one layer, no
+//!   projections, leaves `params/{embed, unembed}` drawn in the same rng
+//!   order and scale as before (`ref_lm_init(0x5EED)` still equals
+//!   `ref_lm_demo_params()`).
+//! * [`ModelConfig::ref_lm2`] (tag `ref_lm2`) — the paper-shaped model:
+//!   two layers, per-layer q/k/v/o projections, *learnable* per-head
+//!   Hedgehog feature maps (`fm_q`, `fm_k`), residual stacking. This is
+//!   the config the per-layer Eq. 4 distillation actually exercises.
+//!
+//! **Leaf naming scheme** (aot.py sorted-tree-path convention — manifests
+//! list leaves in sorted name order, and `ParamStore`'s BTreeMap agrees by
+//! construction):
+//!
+//! ```text
+//! params/embed                  (V, D)
+//! params/layer{i}/fm_k          (H, d, d)   learnable only
+//! params/layer{i}/fm_q          (H, d, d)   learnable only
+//! params/layer{i}/wk            (D, D)      learnable only
+//! params/layer{i}/wo            (D, D)      learnable only
+//! params/layer{i}/wq            (D, D)      learnable only
+//! params/layer{i}/wv            (D, D)      learnable only
+//! params/unembed                (D, V)
+//! ```
+//!
+//! `layer{i}` sorts lexicographically, which equals numeric order only for
+//! `layers <= 10` — enforced in `validate`, revisit the naming (zero
+//! padding) before anyone builds an 11-layer config.
+
+use anyhow::{bail, Result};
+
+use super::manifest::Slot;
+use super::params::ParamStore;
+use super::tensor::{DType, Tensor};
+use crate::data::Pcg32;
+
+/// Which feature map the attention uses — and, with it, the architecture
+/// family (the two are deliberately coupled so the legacy shape stays
+/// bit-stable while the learnable shape gets the paper's structure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureKind {
+    /// Projection-free legacy model: q = k = v = the per-head slice of
+    /// the layer input, phi(x) = [exp(x), exp(-x)] fixed (Eq. 6 with
+    /// W = I). Layers stack by replacement (`x_{l+1} = y_l`); with
+    /// `layers == 1` this is exactly the PR-3/PR-4 `ref_lm` model.
+    FixedExp,
+    /// Paper §4.2: per-layer q/k/v/o projections and a trainable per-head
+    /// feature map phi(x) = [exp(Wx), exp(-Wx)] (the `fm_q` / `fm_k`
+    /// leaves), residual stacking (`x_{l+1} = x_l + y_l wo`).
+    Learnable,
+}
+
+impl FeatureKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FeatureKind::FixedExp => "fixed_exp",
+            FeatureKind::Learnable => "learnable",
+        }
+    }
+}
+
+/// Geometry + feature contract of one `ref_lm`-family model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    /// Training-batch sequence length (manifest shapes of the train graphs).
+    pub seq: usize,
+    /// Training/decode batch size (the decode step serves `batch` slots).
+    pub batch: usize,
+    pub feature: FeatureKind,
+}
+
+/// Per-layer leaf basenames in sorted (manifest) order.
+pub(crate) const LAYER_LEAVES: [&str; 6] = ["fm_k", "fm_q", "wk", "wo", "wq", "wv"];
+
+impl ModelConfig {
+    /// The legacy builtin (tag `ref_lm`): 1-layer, 2-head, d = 16,
+    /// projection-free fixed-exp model, byte-compatible with PR 3/4.
+    pub fn ref_lm() -> Self {
+        ModelConfig {
+            layers: 1,
+            heads: 2,
+            head_dim: 16,
+            vocab: 256,
+            seq: 32,
+            batch: 4,
+            feature: FeatureKind::FixedExp,
+        }
+    }
+
+    /// The learnable builtin (tag `ref_lm2`): 2-layer, 2-head, d = 16,
+    /// per-layer projections + trainable Hedgehog feature maps.
+    pub fn ref_lm2() -> Self {
+        ModelConfig { layers: 2, feature: FeatureKind::Learnable, ..Self::ref_lm() }
+    }
+
+    /// The builtin tags, in registration order.
+    pub fn builtin_tags() -> [&'static str; 2] {
+        ["ref_lm", "ref_lm2"]
+    }
+
+    /// Resolve a builtin tag to its config.
+    pub fn for_tag(tag: &str) -> Option<ModelConfig> {
+        match tag {
+            "ref_lm" => Some(Self::ref_lm()),
+            "ref_lm2" => Some(Self::ref_lm2()),
+            _ => None,
+        }
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Hedgehog feature dimension: phi doubles the head dim.
+    pub fn dp(&self) -> usize {
+        2 * self.head_dim
+    }
+
+    pub fn learnable(&self) -> bool {
+        self.feature == FeatureKind::Learnable
+    }
+
+    /// Leaves under `prefix/` (e.g. "params", "m", "v"), in sorted name
+    /// order — the one layout shared by init, train, distill, eval, and
+    /// the decode step.
+    pub fn leaf_slots(&self, prefix: &str) -> Vec<Slot> {
+        let f = |name: String, shape: &[usize]| Slot {
+            name,
+            shape: shape.to_vec(),
+            dtype: DType::F32,
+        };
+        let (v, dm, h, hd) = (self.vocab, self.d_model(), self.heads, self.head_dim);
+        let mut slots = vec![f(format!("{prefix}/embed"), &[v, dm])];
+        if self.learnable() {
+            for i in 0..self.layers {
+                for leaf in LAYER_LEAVES {
+                    let name = format!("{prefix}/layer{i}/{leaf}");
+                    let slot = if leaf.starts_with("fm") {
+                        f(name, &[h, hd, hd])
+                    } else {
+                        f(name, &[dm, dm])
+                    };
+                    slots.push(slot);
+                }
+            }
+        }
+        slots.push(f(format!("{prefix}/unembed"), &[dm, v]));
+        slots
+    }
+
+    /// Number of parameter leaves (`leaf_slots(..).len()` without building).
+    pub fn n_leaves(&self) -> usize {
+        if self.learnable() {
+            2 + LAYER_LEAVES.len() * self.layers
+        } else {
+            2
+        }
+    }
+
+    /// Seeded parameter construction: ONE rng stream, draws in the fixed
+    /// order embed, then per layer (wq, wk, wv, wo, fm_q, fm_k), then
+    /// unembed. For `FixedExp` this is exactly the PR-4 `ref_lm_init`
+    /// (embed before unembed, N(0, 0.3^2) entries), so the fixed demo
+    /// seed keeps producing bit-identical parameters. Projections draw
+    /// N(0, 1/D) and feature maps N(0, 1/d) — variance-preserving, so
+    /// activations stay in the well-conditioned range of exp(+-x) at
+    /// init (validated in an f32 prototype of the exact model).
+    pub fn init_params(&self, seed: u64) -> ParamStore {
+        let mut rng = Pcg32::new(seed);
+        let mut randn = |len: usize, scale: f32| -> Vec<f32> {
+            (0..len).map(|_| rng.normal() * scale).collect()
+        };
+        let (v, dm, h, hd) = (self.vocab, self.d_model(), self.heads, self.head_dim);
+        let mut params = ParamStore::new();
+        params.insert("params/embed", Tensor::from_f32(randn(v * dm, 0.3), &[v, dm]));
+        if self.learnable() {
+            let proj_scale = (dm as f32).sqrt().recip();
+            let fm_scale = (hd as f32).sqrt().recip();
+            for i in 0..self.layers {
+                for leaf in ["wq", "wk", "wv", "wo"] {
+                    params.insert(
+                        format!("params/layer{i}/{leaf}"),
+                        Tensor::from_f32(randn(dm * dm, proj_scale), &[dm, dm]),
+                    );
+                }
+                for leaf in ["fm_q", "fm_k"] {
+                    params.insert(
+                        format!("params/layer{i}/{leaf}"),
+                        Tensor::from_f32(randn(h * hd * hd, fm_scale), &[h, hd, hd]),
+                    );
+                }
+            }
+        }
+        params.insert("params/unembed", Tensor::from_f32(randn(dm * v, 0.3), &[dm, v]));
+        params
+    }
+
+    /// Internal invariants the interpreter relies on.
+    pub fn validate(&self) -> Result<()> {
+        if self.layers == 0 || self.heads == 0 || self.head_dim == 0 {
+            bail!("ModelConfig: layers/heads/head_dim must be positive: {self:?}");
+        }
+        if self.layers > 10 {
+            bail!("ModelConfig: layer{{i}} leaf names sort lexicographically — layers > 10 \
+                   needs a zero-padded naming scheme first");
+        }
+        if self.feature == FeatureKind::FixedExp && self.layers != 1 {
+            // Defined (stack-by-replacement) but unexercised; keep the
+            // surface small until something needs it.
+            bail!("ModelConfig: FixedExp is the legacy single-layer contract (got {} layers)",
+                  self.layers);
+        }
+        Ok(())
+    }
+
+    /// Short geometry string for bench records and reports, e.g. "L2_H2_d16".
+    pub fn geometry(&self) -> String {
+        format!("L{}_H{}_d{}", self.layers, self.heads, self.head_dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_configs_validate() {
+        for tag in ModelConfig::builtin_tags() {
+            let cfg = ModelConfig::for_tag(tag).unwrap();
+            cfg.validate().unwrap();
+            assert_eq!(cfg.dp(), 2 * cfg.head_dim);
+            assert_eq!(cfg.d_model(), cfg.heads * cfg.head_dim);
+        }
+        assert!(ModelConfig::for_tag("ref_lm99").is_none());
+    }
+
+    #[test]
+    fn leaf_slots_are_sorted_and_complete() {
+        let cfg = ModelConfig::ref_lm2();
+        let slots = cfg.leaf_slots("params");
+        assert_eq!(slots.len(), cfg.n_leaves());
+        assert_eq!(slots.len(), 2 + 6 * cfg.layers);
+        let names: Vec<&str> = slots.iter().map(|s| s.name.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted, "leaf slots must follow sorted tree-path order");
+        assert_eq!(names[0], "params/embed");
+        assert_eq!(names[1], "params/layer0/fm_k");
+        assert_eq!(*names.last().unwrap(), "params/unembed");
+        // fixed-exp config has no layer leaves
+        let legacy = ModelConfig::ref_lm().leaf_slots("params");
+        assert_eq!(legacy.len(), 2);
+    }
+
+    #[test]
+    fn init_params_matches_leaf_slots_and_is_deterministic() {
+        for tag in ModelConfig::builtin_tags() {
+            let cfg = ModelConfig::for_tag(tag).unwrap();
+            let a = cfg.init_params(7);
+            let b = cfg.init_params(7);
+            assert_eq!(a.tensors, b.tensors, "{tag}: init must be deterministic");
+            let slots = cfg.leaf_slots("params");
+            assert_eq!(a.len(), slots.len());
+            for s in &slots {
+                assert_eq!(a.get(&s.name).unwrap().shape, s.shape, "{tag}: {}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_exp_init_draw_order_is_legacy() {
+        // embed is drawn before unembed from one stream: the first V*D
+        // normals (scaled 0.3) land in embed — the PR-4 byte-compat
+        // contract behind `ref_lm_init(0x5EED) == ref_lm_demo_params()`.
+        let cfg = ModelConfig::ref_lm();
+        let params = cfg.init_params(0x5EED);
+        let mut rng = Pcg32::new(0x5EED);
+        let want: Vec<f32> =
+            (0..cfg.vocab * cfg.d_model()).map(|_| rng.normal() * 0.3).collect();
+        assert_eq!(params.get("params/embed").unwrap().as_f32().unwrap(), &want[..]);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut cfg = ModelConfig::ref_lm();
+        cfg.layers = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ModelConfig::ref_lm();
+        cfg.layers = 2; // FixedExp multi-layer is not a supported contract
+        assert!(cfg.validate().is_err());
+        let mut cfg = ModelConfig::ref_lm2();
+        cfg.layers = 11;
+        assert!(cfg.validate().is_err());
+    }
+}

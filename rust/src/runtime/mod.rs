@@ -7,6 +7,7 @@
 
 pub mod artifact;
 pub mod backend;
+pub mod config;
 pub mod json;
 pub mod manifest;
 pub mod params;
@@ -20,8 +21,9 @@ pub mod tensor;
 
 pub use artifact::{ArtifactRegistry, Executable};
 pub use backend::{Backend, ExecOptions};
+pub use config::{FeatureKind, ModelConfig};
 pub use manifest::{Manifest, Slot};
 pub use params::ParamStore;
 pub use pool::WorkerPool;
-pub use reference::{ref_lm_demo_params, ReferenceBackend, REF_LM_TAG};
+pub use reference::{ref_lm_demo_params, ReferenceBackend, REF_LM2_TAG, REF_LM_TAG};
 pub use tensor::{DType, Tensor, TensorData};

@@ -1,47 +1,50 @@
-//! Native training path for the builtin `ref_lm` hedgehog LM.
+//! Native training path for the builtin `ref_lm`-family hedgehog LMs.
 //!
-//! PR 3 gave the reference backend a decode-step interpretation of a
-//! one-layer, two-head hedgehog LM (`ref_lm_decode_step`); this module
-//! closes the loop by interpreting the matching *training* graphs as
-//! hand-written forward + backward + AdamW, so the train layer
-//! (`Session`, `evaluate`, the two-stage `convert()` pipeline) runs
-//! hermetically — no XLA, no `make artifacts`:
+//! PR 4 interpreted the training graphs of ONE hardcoded shape (1 layer,
+//! 2 heads, projection-free, fixed exp map). PR 5 rebuilds the module
+//! around [`ModelConfig`]: the forward/backward now handle L residual
+//! layers with per-layer q/k/v/o projections and *learnable* per-head
+//! Hedgehog feature maps phi(x) = [exp(Wx), exp(-Wx)] (paper §4.2), and
+//! the distillation loss is the **per-layer** Eq. 4 objective (soft
+//! cross-entropy against each layer's softmax teacher map, summed over
+//! layers, full backprop through the stack — jax `value_and_grad`
+//! semantics). Two builtin tags exist:
 //!
-//! * `ref_lm_init` — seed -> `params/{embed, unembed}`, the exact layout
-//!   (and, for the fixed demo seed, the exact values) of
-//!   `ref_lm_demo_params()`, so a trained `ParamStore` drops straight
-//!   into `serve::Engine`.
-//! * `ref_lm_train_step` — masked next-token cross-entropy through the
-//!   causal hedgehog linear attention, one AdamW step. Manifest follows
-//!   the aot.py `params/ m/ v/ step/lr/wd/batch` convention, so the
-//!   generic `Session` driver needs no special cases.
-//! * `ref_lm_distill_step` — paper Eq. 4 attention distillation on this
-//!   testbed: soft-label cross-entropy between the hedgehog (student)
-//!   attention map and the softmax (teacher) map computed from the same
-//!   embeddings, trained with AdamW. Mirrors jax `value_and_grad` of the
-//!   loss as computed: the gradient flows through both the student and
-//!   the teacher map into `params/embed` (in the full-size graphs the
-//!   teacher path is structurally zero for the `fm` leaves; here the
-//!   embedding plays both roles). `params/unembed` has a structurally
-//!   zero gradient — it still receives its AdamW decay, exactly like a
-//!   gradient-masked leaf in `python/compile/distill.py`.
-//! * `ref_lm_eval` — (loss, masked accuracy), matching
-//!   `train.make_eval` for decoder configs.
+//! * `ref_lm` — the legacy fixed-exp shape, byte-compatible with PR 4
+//!   (`ref_lm_init(0x5EED) == ref_lm_demo_params()`, leaves
+//!   `params/{embed, unembed}`).
+//! * `ref_lm2` — 2 layers, learnable: leaves `params/embed`,
+//!   `params/layer{i}/{fm_k, fm_q, wk, wo, wq, wv}`, `params/unembed`
+//!   (sorted tree-path order, see `runtime/config.rs`).
 //!
-//! The forward math is the inclusive-causal (S, z) recurrence the decode
-//! step executes, materialized in its quadratic form (q = k = v = the
-//! per-head embedding slice, phi = [exp(x), exp(-x)], denominator + EPS).
-//! Backward is derived by hand from that form; see rust/DESIGN.md §7 for
-//! the derivation and the oracle/tolerance policy.
+//! Per tag the backend registers `<tag>_init`, `<tag>_train_step`,
+//! `<tag>_distill_step`, `<tag>_eval` (manifests follow aot.py's
+//! `params/ m/ v/ step/lr/wd/batch` conventions, so the generic `Session`
+//! driver needs no special cases), and `reference.rs` serves the matching
+//! `<tag>_decode_step` over the same parameter layout — train -> eval ->
+//! serve stays one `ParamStore`.
 //!
-//! Execution strategies mirror the kernel interpreters: the default path
-//! routes every reduction through the 8-lane `simd` micro-kernels and
-//! runs the per-(batch, head) forward/backward loops as tasks on the
-//! backend's persistent `WorkerPool`; `chunk_size == 0` selects a strict
-//! scalar, single-threaded oracle (same code, scalar op table). Parity
-//! between the two is gated at 1e-5 on the forward loss; gradients are
-//! checked against f32 central finite differences (tolerance: relative
-//! 1e-2 against `max(|fd|, |grad|, 0.05)` — measured worst ~4e-4).
+//! **Model.** x0 = embed[tokens]; per layer: q/k/v = x wq/wk/wv (or
+//! q = k = v = x for `FixedExp`), per head phi_q/phi_k from the feature
+//! map, causal normalized linear attention in quadratic form
+//! (a_tj = phi_q_t . phi_k_j for j <= t, den_t = sum + EPS,
+//! y_t = sum_j p_tj v_j), heads concatenated, then
+//! x_{l+1} = x_l + y wo (Learnable) or x_{l+1} = y (FixedExp); logits =
+//! x_L unembed, masked softmax cross-entropy. Backward is hand-derived
+//! (see rust/DESIGN.md §8): normalization chain
+//! w_tj = (g.v_j - g.y_t)/den_t into dphi_q/dphi_k/dv, the learnable-phi
+//! chain dpre = dpos*pos - dneg*neg then dW += dpre x^T and
+//! dx += W^T dpre, projection grads as per-row outer products, residual
+//! passthrough. The whole derivation was validated against central
+//! finite differences in an f64 prototype of the exact loop structure
+//! (worst relative error ~8e-8) before being ported here.
+//!
+//! Execution strategies mirror PR 4: the default path routes reductions
+//! through the 8-lane `simd` micro-kernels and runs per-(batch, head)
+//! forward/backward loops as `WorkerPool` tasks; `chunk_size == 0`
+//! selects the strict scalar single-threaded oracle via the shared op
+//! table. Parity between the two is gated at 1e-5; gradients are checked
+//! against f32 central finite differences on EVERY leaf of both configs.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -49,20 +52,16 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use super::backend::{ExecOptions, Executable as BackendExecutable};
+use super::config::ModelConfig;
 use super::json::Json;
 use super::manifest::{Manifest, Slot};
-use super::params::ParamStore;
 use super::pool::WorkerPool;
-use super::reference::{
-    auto_threads, scalar_axpy, scalar_dot, FeatureMap, SharedExecOptions, EPS,
-    REF_LM_DIM as DIM, REF_LM_DP as DP, REF_LM_HEADS as HEADS, REF_LM_HEAD_DIM as HD,
-    REF_LM_VOCAB as VOCAB,
-};
+use super::reference::{auto_threads, scalar_axpy, scalar_dot, SharedExecOptions, EPS};
 use super::simd;
 use super::tensor::{DType, Tensor};
-use crate::data::Pcg32;
 
-/// Fixed training-batch geometry of the builtin graphs (manifest shapes).
+/// Fixed training-batch geometry shared by both builtin configs (the
+/// demo batch and the train bench rely on it).
 pub(crate) const TRAIN_BATCH: usize = 4;
 pub(crate) const TRAIN_SEQ: usize = 32;
 
@@ -71,15 +70,11 @@ const B1: f32 = 0.9;
 const B2: f32 = 0.999;
 const ADAM_EPS: f32 = 1e-8;
 
-/// Rough per-step flop count (attention fwd+bwd + the unembed matmuls)
-/// for the auto-threading heuristic.
-const STEP_FLOPS: f64 = 1.5e7;
-
 // ---------------------------------------------------------------------------
 // Graph registry: names, manifests, validation
 // ---------------------------------------------------------------------------
 
-/// The four training-side graphs of the `ref_lm` family.
+/// The four training-side graphs of a `ref_lm`-family tag.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub(crate) enum TrainGraph {
     Init,
@@ -89,25 +84,39 @@ pub(crate) enum TrainGraph {
 }
 
 impl TrainGraph {
-    fn name(self) -> &'static str {
+    fn suffix(self) -> &'static str {
         match self {
-            TrainGraph::Init => "ref_lm_init",
-            TrainGraph::Train => "ref_lm_train_step",
-            TrainGraph::Distill => "ref_lm_distill_step",
-            TrainGraph::Eval => "ref_lm_eval",
+            TrainGraph::Init => "_init",
+            TrainGraph::Train => "_train_step",
+            TrainGraph::Distill => "_distill_step",
+            TrainGraph::Eval => "_eval",
+        }
+    }
+
+    fn meta_name(self) -> &'static str {
+        match self {
+            TrainGraph::Init => "init",
+            TrainGraph::Train => "train_step",
+            TrainGraph::Distill => "distill_step",
+            TrainGraph::Eval => "eval",
         }
     }
 }
 
-/// Map an artifact name to its `ref_lm` training graph, if any.
-pub(crate) fn graph_for(name: &str) -> Option<TrainGraph> {
-    match name {
-        "ref_lm_init" => Some(TrainGraph::Init),
-        "ref_lm_train_step" => Some(TrainGraph::Train),
-        "ref_lm_distill_step" => Some(TrainGraph::Distill),
-        "ref_lm_eval" => Some(TrainGraph::Eval),
-        _ => None,
+/// Map an artifact name to its builtin config + training graph, if any.
+pub(crate) fn graph_for(name: &str) -> Option<(&'static str, ModelConfig, TrainGraph)> {
+    for tag in ModelConfig::builtin_tags() {
+        let Some(rest) = name.strip_prefix(tag) else { continue };
+        let graph = match rest {
+            "_init" => TrainGraph::Init,
+            "_train_step" => TrainGraph::Train,
+            "_distill_step" => TrainGraph::Distill,
+            "_eval" => TrainGraph::Eval,
+            _ => continue,
+        };
+        return Some((tag, ModelConfig::for_tag(tag).unwrap(), graph));
     }
+    None
 }
 
 fn f_slot(name: impl Into<String>, shape: &[usize]) -> Slot {
@@ -118,101 +127,112 @@ fn i_slot(name: impl Into<String>, shape: &[usize]) -> Slot {
     Slot { name: name.into(), shape: shape.to_vec(), dtype: DType::I32 }
 }
 
-/// The two parameter leaves under `prefix/`, in aot.py (sorted tree-path)
-/// order — the one layout shared by init, train, distill, eval, and the
-/// decode step.
-fn leaf_slots(prefix: &str) -> Vec<Slot> {
-    vec![
-        f_slot(format!("{prefix}/embed"), &[VOCAB, DIM]),
-        f_slot(format!("{prefix}/unembed"), &[DIM, VOCAB]),
-    ]
-}
-
-fn train_meta(graph: &str) -> BTreeMap<String, Json> {
+fn train_meta(cfg: &ModelConfig, tag: &str, graph: &str) -> BTreeMap<String, Json> {
     let mut meta = BTreeMap::new();
-    for (key, val) in [("family", "ref_lm"), ("graph", graph), ("kernel", "hedgehog")] {
+    for (key, val) in [
+        ("family", tag),
+        ("graph", graph),
+        ("kernel", "hedgehog"),
+        ("feature", cfg.feature.name()),
+        ("backend", "reference"),
+    ] {
         meta.insert(key.to_string(), Json::Str(val.to_string()));
     }
-    meta.insert("backend".to_string(), Json::Str("reference".to_string()));
     for (key, val) in [
-        ("vocab", VOCAB),
-        ("n_layers", 1),
-        ("heads", HEADS),
-        ("d_head", HD),
-        ("d_model", DIM),
-        ("batch_size", TRAIN_BATCH),
-        ("seq_len", TRAIN_SEQ),
+        ("vocab", cfg.vocab),
+        ("n_layers", cfg.layers),
+        ("heads", cfg.heads),
+        ("d_head", cfg.head_dim),
+        ("d_model", cfg.d_model()),
+        ("batch_size", cfg.batch),
+        ("seq_len", cfg.seq),
     ] {
         meta.insert(key.to_string(), Json::Num(val as f64));
     }
     meta
 }
 
-/// Build the builtin manifest for one training graph, following the
-/// aot.py input/output ordering conventions (`export_model_variant`).
-pub(crate) fn builtin_manifest(graph: TrainGraph) -> Manifest {
-    let (b, n) = (TRAIN_BATCH, TRAIN_SEQ);
+/// Build the builtin manifest for one training graph of one tag,
+/// following the aot.py input/output ordering conventions.
+pub(crate) fn builtin_manifest(cfg: &ModelConfig, tag: &str, graph: TrainGraph) -> Manifest {
+    let (b, n) = (cfg.batch, cfg.seq);
     let batch_full = vec![
         i_slot("tokens", &[b, n]),
         i_slot("targets", &[b, n]),
         f_slot("loss_mask", &[b, n]),
     ];
     let opt_slots = || -> Vec<Slot> {
-        let mut v = leaf_slots("m");
-        v.extend(leaf_slots("v"));
+        let mut v = cfg.leaf_slots("m");
+        v.extend(cfg.leaf_slots("v"));
         v.push(i_slot("step", &[]));
         v.push(f_slot("lr", &[]));
         v.push(f_slot("wd", &[]));
         v
     };
     let step_outputs = || -> Vec<Slot> {
-        let mut v = leaf_slots("params");
-        v.extend(leaf_slots("m"));
-        v.extend(leaf_slots("v"));
+        let mut v = cfg.leaf_slots("params");
+        v.extend(cfg.leaf_slots("m"));
+        v.extend(cfg.leaf_slots("v"));
         v.push(i_slot("step", &[]));
         v.push(f_slot("loss", &[]));
         v
     };
-    let (inputs, outputs, gname) = match graph {
+    let (inputs, outputs) = match graph {
         TrainGraph::Init => {
             let seed = Slot { name: "seed".to_string(), shape: vec![], dtype: DType::U32 };
-            (vec![seed], leaf_slots("params"), "init")
+            (vec![seed], cfg.leaf_slots("params"))
         }
         TrainGraph::Train => {
-            let mut ins = leaf_slots("params");
+            let mut ins = cfg.leaf_slots("params");
             ins.extend(opt_slots());
             ins.extend(batch_full.clone());
-            (ins, step_outputs(), "train_step")
+            (ins, step_outputs())
         }
         TrainGraph::Distill => {
-            let mut ins = leaf_slots("params");
+            let mut ins = cfg.leaf_slots("params");
             ins.extend(opt_slots());
             ins.push(batch_full[0].clone()); // tokens only
-            (ins, step_outputs(), "distill_step")
+            (ins, step_outputs())
         }
         TrainGraph::Eval => {
-            let mut ins = leaf_slots("params");
+            let mut ins = cfg.leaf_slots("params");
             ins.extend(batch_full);
-            (ins, vec![f_slot("loss", &[]), f_slot("metric", &[])], "eval")
+            (ins, vec![f_slot("loss", &[]), f_slot("metric", &[])])
         }
     };
-    Manifest { name: graph.name().to_string(), inputs, outputs, meta: train_meta(gname) }
+    Manifest {
+        name: format!("{tag}{}", graph.suffix()),
+        inputs,
+        outputs,
+        meta: train_meta(cfg, tag, graph.meta_name()),
+    }
 }
 
-/// All four builtin training manifests (registered by the backend).
+/// All builtin training manifests (registered by the backend): four
+/// graphs per builtin tag.
 pub(crate) fn builtin_train_manifests() -> Vec<Manifest> {
-    [TrainGraph::Init, TrainGraph::Train, TrainGraph::Distill, TrainGraph::Eval]
-        .into_iter()
-        .map(builtin_manifest)
-        .collect()
+    let mut ms = Vec::new();
+    for tag in ModelConfig::builtin_tags() {
+        let cfg = ModelConfig::for_tag(tag).unwrap();
+        for graph in [TrainGraph::Init, TrainGraph::Train, TrainGraph::Distill, TrainGraph::Eval]
+        {
+            ms.push(builtin_manifest(&cfg, tag, graph));
+        }
+    }
+    ms
 }
 
 /// The training graphs are fixed-geometry artifacts: an on-disk manifest
 /// under one of their names must match the builtin slot-for-slot and
-/// meta-for-meta (same rationale as the decode step: the interpreter
-/// trusts the geometry, so look-alikes must fail at load, not misrun).
-pub(crate) fn validate_manifest(graph: TrainGraph, manifest: &Manifest) -> Result<()> {
-    let want = builtin_manifest(graph);
+/// meta-for-meta (the interpreter trusts the geometry, so look-alikes
+/// must fail at load, not misrun).
+pub(crate) fn validate_manifest(
+    tag: &str,
+    cfg: &ModelConfig,
+    graph: TrainGraph,
+    manifest: &Manifest,
+) -> Result<()> {
+    let want = builtin_manifest(cfg, tag, graph);
     let slots_eq = |a: &[Slot], b: &[Slot]| {
         a.len() == b.len()
             && a.iter()
@@ -224,9 +244,15 @@ pub(crate) fn validate_manifest(graph: TrainGraph, manifest: &Manifest) -> Resul
         || manifest.meta != want.meta
     {
         bail!(
-            "{}: manifest does not match the builtin ref_lm training geometry \
-             (B={TRAIN_BATCH}, N={TRAIN_SEQ}, H={HEADS}, d={HD}, V={VOCAB})",
-            graph.name()
+            "{}: manifest does not match the builtin {tag} training geometry \
+             (L={}, H={}, d={}, V={}, B={}, N={})",
+            manifest.name,
+            cfg.layers,
+            cfg.heads,
+            cfg.head_dim,
+            cfg.vocab,
+            cfg.batch,
+            cfg.seq
         );
     }
     Ok(())
@@ -234,13 +260,15 @@ pub(crate) fn validate_manifest(graph: TrainGraph, manifest: &Manifest) -> Resul
 
 /// Instantiate the executable for one training graph.
 pub(crate) fn load_graph(
+    tag: &'static str,
+    cfg: ModelConfig,
     graph: TrainGraph,
     opts: Arc<SharedExecOptions>,
     pool: Arc<WorkerPool>,
 ) -> Box<dyn BackendExecutable> {
     match graph {
-        TrainGraph::Init => Box::new(RefLmInit),
-        graph => Box::new(RefLmStep { graph, opts, pool }),
+        TrainGraph::Init => Box::new(RefLmInit { cfg }),
+        graph => Box::new(RefLmStep { tag, cfg, graph, opts, pool }),
     }
 }
 
@@ -248,31 +276,23 @@ pub(crate) fn load_graph(
 // Init
 // ---------------------------------------------------------------------------
 
-/// Seeded parameter construction shared by `ref_lm_init` and
-/// `ref_lm_demo_params()` (which is this with seed 0x5EED): one rng
-/// stream, embed drawn before unembed, N(0, 0.3^2) entries.
-pub(crate) fn init_param_store(seed: u64) -> ParamStore {
-    let mut rng = Pcg32::new(seed);
-    let mut randn = |len: usize| -> Vec<f32> { (0..len).map(|_| rng.normal() * 0.3).collect() };
-    let embed = randn(VOCAB * DIM);
-    let unembed = randn(DIM * VOCAB);
-    let mut params = ParamStore::new();
-    params.insert("params/embed", Tensor::from_f32(embed, &[VOCAB, DIM]));
-    params.insert("params/unembed", Tensor::from_f32(unembed, &[DIM, VOCAB]));
-    params
+struct RefLmInit {
+    cfg: ModelConfig,
 }
-
-struct RefLmInit;
 
 impl BackendExecutable for RefLmInit {
     fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         if inputs.len() != 1 {
-            bail!("ref_lm_init expects a single seed input, got {}", inputs.len());
+            bail!("ref_lm init expects a single seed input, got {}", inputs.len());
         }
         let seed = inputs[0].item_u32()?;
-        let params = init_param_store(seed as u64);
-        // manifest order: params/embed, params/unembed
-        Ok(vec![params.get("params/embed")?.clone(), params.get("params/unembed")?.clone()])
+        let params = self.cfg.init_params(seed as u64);
+        // manifest order == sorted leaf order == ParamStore iteration order
+        self.cfg
+            .leaf_slots("params")
+            .iter()
+            .map(|s| Ok(params.get(&s.name)?.clone()))
+            .collect()
     }
 }
 
@@ -293,37 +313,291 @@ struct Ops {
 const SIMD_OPS: Ops = Ops { dot: simd::dot, axpy: simd::axpy };
 const SCALAR_OPS: Ops = Ops { dot: scalar_dot, axpy: scalar_axpy };
 
-fn resolve(opts: ExecOptions) -> (Ops, usize) {
+/// Rough per-step flop count for the auto-threading heuristic: attention
+/// fwd+bwd per layer plus the unembed matmuls.
+fn step_flops(cfg: &ModelConfig) -> f64 {
+    let (b, n) = (cfg.batch, cfg.seq);
+    let attn = cfg.layers * b * cfg.heads * n * n * cfg.dp() * 6;
+    let head = b * n * cfg.d_model() * cfg.vocab * 4;
+    (attn + head) as f64
+}
+
+fn resolve(cfg: &ModelConfig, opts: ExecOptions) -> (Ops, usize) {
     if opts.chunk_size == 0 {
         (SCALAR_OPS, 1)
     } else {
-        (SIMD_OPS, auto_threads(opts, STEP_FLOPS))
+        (SIMD_OPS, auto_threads(opts, step_flops(cfg)))
     }
 }
 
 // ---------------------------------------------------------------------------
-// Forward: embed gather + per-head causal hedgehog linear attention
+// Small dense helpers (row vector x matrix), routed through the op table
 // ---------------------------------------------------------------------------
 
-/// Materialized per-head activations for one batch. Layouts are
-/// (B, H, N, ...) so every (batch, head) slice is contiguous and the
-/// pool tasks own disjoint `&mut` regions.
-struct Activations {
-    /// (B, H, N, d) — per-head embedding rows (q = k = v)
-    xh: Vec<f32>,
-    /// (B, H, N, Dp) — hedgehog features
-    phi: Vec<f32>,
-    /// (B, H, N, N) — *normalized* causal attention weights (rows j <= t)
-    p: Vec<f32>,
-    /// (B, H, N) — denominators (sum of raw scores + EPS)
-    den: Vec<f32>,
-    /// (B, H, N, d) — attention outputs per head
-    yh: Vec<f32>,
+/// out = x W, W row-major (x.len(), out.len()): out = sum_i x_i W[i, :].
+fn vec_mat(ops: Ops, x: &[f32], w: &[f32], out: &mut [f32]) {
+    let e = out.len();
+    out.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        (ops.axpy)(out, xi, &w[i * e..(i + 1) * e]);
+    }
 }
 
+/// out += x W (accumulating variant of `vec_mat`).
+fn vec_mat_acc(ops: Ops, x: &[f32], w: &[f32], out: &mut [f32]) {
+    let e = out.len();
+    for (i, &xi) in x.iter().enumerate() {
+        (ops.axpy)(out, xi, &w[i * e..(i + 1) * e]);
+    }
+}
+
+/// out = x W^T, W row-major (out.len(), x.len()): out_i = x . W[i, :].
+fn vec_mat_t(ops: Ops, x: &[f32], w: &[f32], out: &mut [f32]) {
+    let c = x.len();
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = (ops.dot)(x, &w[i * c..(i + 1) * c]);
+    }
+}
+
+/// out += x W^T (accumulating variant of `vec_mat_t`).
+fn vec_mat_t_acc(ops: Ops, x: &[f32], w: &[f32], out: &mut [f32]) {
+    let c = x.len();
+    for (i, o) in out.iter_mut().enumerate() {
+        *o += (ops.dot)(x, &w[i * c..(i + 1) * c]);
+    }
+}
+
+/// dw += x g^T, dw row-major (x.len(), g.len()): dw[i, :] += x_i g.
+fn outer_acc(ops: Ops, x: &[f32], g: &[f32], dw: &mut [f32]) {
+    let e = g.len();
+    for (i, &xi) in x.iter().enumerate() {
+        (ops.axpy)(&mut dw[i * e..(i + 1) * e], xi, g);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parameter views and gradients, in the sorted leaf order of the manifests
+// ---------------------------------------------------------------------------
+
+/// Per-layer parameter views (Learnable configs only).
+pub(crate) struct LayerParams<'a> {
+    pub(crate) wq: &'a [f32],
+    pub(crate) wk: &'a [f32],
+    pub(crate) wv: &'a [f32],
+    pub(crate) wo: &'a [f32],
+    pub(crate) fm_q: &'a [f32],
+    pub(crate) fm_k: &'a [f32],
+}
+
+/// Borrowed views of one parameter set, resolved from the manifest's
+/// sorted leaf order (embed, per layer [fm_k, fm_q, wk, wo, wq, wv],
+/// unembed). Shared by the training interpreter and the decode step.
+pub(crate) struct ModelParams<'a> {
+    pub(crate) embed: &'a [f32],
+    pub(crate) unembed: &'a [f32],
+    pub(crate) layers: Vec<LayerParams<'a>>,
+}
+
+impl<'a> ModelParams<'a> {
+    /// `leaves` must be in the manifest's sorted leaf order.
+    pub(crate) fn from_leaves(cfg: &ModelConfig, leaves: &[&'a [f32]]) -> Result<ModelParams<'a>> {
+        if leaves.len() != cfg.n_leaves() {
+            bail!("expected {} parameter leaves, got {}", cfg.n_leaves(), leaves.len());
+        }
+        let mut layers = Vec::new();
+        if cfg.learnable() {
+            for l in 0..cfg.layers {
+                // sorted per-layer order: fm_k, fm_q, wk, wo, wq, wv
+                let b = 1 + 6 * l;
+                layers.push(LayerParams {
+                    fm_k: leaves[b],
+                    fm_q: leaves[b + 1],
+                    wk: leaves[b + 2],
+                    wo: leaves[b + 3],
+                    wq: leaves[b + 4],
+                    wv: leaves[b + 5],
+                });
+            }
+        }
+        Ok(ModelParams { embed: leaves[0], unembed: leaves[leaves.len() - 1], layers })
+    }
+
+    /// Resolve directly from manifest-ordered tensors (the decode step's
+    /// hot path: for `FixedExp` this allocates nothing — `Vec::new()` is
+    /// allocation-free — which keeps `Engine::step` at zero steady-state
+    /// allocations). NOTE: keep the per-layer index map in sync with
+    /// `from_leaves` above; the duplication is deliberate, so this path
+    /// can stay slice-free for the allocation contract.
+    pub(crate) fn from_tensors(
+        cfg: &ModelConfig,
+        tensors: &[&'a Tensor],
+    ) -> Result<ModelParams<'a>> {
+        if tensors.len() != cfg.n_leaves() {
+            bail!("expected {} parameter leaves, got {}", cfg.n_leaves(), tensors.len());
+        }
+        let mut layers = Vec::new();
+        if cfg.learnable() {
+            layers.reserve(cfg.layers);
+            for l in 0..cfg.layers {
+                let b = 1 + 6 * l;
+                layers.push(LayerParams {
+                    fm_k: tensors[b].as_f32()?,
+                    fm_q: tensors[b + 1].as_f32()?,
+                    wk: tensors[b + 2].as_f32()?,
+                    wo: tensors[b + 3].as_f32()?,
+                    wq: tensors[b + 4].as_f32()?,
+                    wv: tensors[b + 5].as_f32()?,
+                });
+            }
+        }
+        Ok(ModelParams {
+            embed: tensors[0].as_f32()?,
+            unembed: tensors[tensors.len() - 1].as_f32()?,
+            layers,
+        })
+    }
+}
+
+/// Per-layer gradient buffers, mirroring `LayerParams`.
+pub(crate) struct LayerGrads {
+    dwq: Vec<f32>,
+    dwk: Vec<f32>,
+    dwv: Vec<f32>,
+    dwo: Vec<f32>,
+    dfm_q: Vec<f32>,
+    dfm_k: Vec<f32>,
+}
+
+/// Full gradient set of one loss evaluation.
+pub(crate) struct Grads {
+    pub(crate) dembed: Vec<f32>,
+    layers: Vec<LayerGrads>,
+    pub(crate) dunembed: Vec<f32>,
+}
+
+impl Grads {
+    /// Flatten into the manifest's sorted leaf order.
+    pub(crate) fn into_leaves(self) -> Vec<Vec<f32>> {
+        let mut out = vec![self.dembed];
+        for lg in self.layers {
+            // sorted per-layer order: fm_k, fm_q, wk, wo, wq, wv
+            out.push(lg.dfm_k);
+            out.push(lg.dfm_q);
+            out.push(lg.dwk);
+            out.push(lg.dwo);
+            out.push(lg.dwq);
+            out.push(lg.dwv);
+        }
+        out.push(self.dunembed);
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward: per-layer projections, features, causal attention, residual
+// ---------------------------------------------------------------------------
+
+/// Materialized activations of one layer. Head-space buffers are laid out
+/// (B, H, N, ...) so every (batch, head) slice is contiguous and the pool
+/// tasks own disjoint `&mut` regions. For `FixedExp`, q = k = v = the
+/// gathered head slices (`qh` holds them; `kh`/`vh`/`phi_k` stay empty
+/// and the accessors alias `qh`/`phi_q`).
+struct LayerActs {
+    /// (B, N, D) layer input
+    x: Vec<f32>,
+    /// (B, H, N, d) per-head queries (FixedExp: the shared x head slices)
+    qh: Vec<f32>,
+    kh: Vec<f32>,
+    vh: Vec<f32>,
+    /// (B, H, N, Dp) hedgehog features of the (possibly learned) pre-acts
+    phi_q: Vec<f32>,
+    phi_k: Vec<f32>,
+    /// (B, H, N, N) normalized causal attention weights (rows j <= t)
+    p: Vec<f32>,
+    /// (B, H, N) denominators (sum of raw scores + EPS)
+    den: Vec<f32>,
+    /// (B, H, N, d) attention outputs per head
+    yh: Vec<f32>,
+    /// (B, N, D) heads merged (FixedExp: this IS the layer output)
+    y: Vec<f32>,
+    /// (B, N, D) layer output x + y wo (Learnable only; else empty)
+    out: Vec<f32>,
+}
+
+impl LayerActs {
+    fn k_heads(&self) -> &[f32] {
+        if self.kh.is_empty() {
+            &self.qh
+        } else {
+            &self.kh
+        }
+    }
+
+    fn v_heads(&self) -> &[f32] {
+        if self.vh.is_empty() {
+            &self.qh
+        } else {
+            &self.vh
+        }
+    }
+
+    fn phi_k_view(&self) -> &[f32] {
+        if self.phi_k.is_empty() {
+            &self.phi_q
+        } else {
+            &self.phi_k
+        }
+    }
+
+    /// This layer's output. Only meaningful for the FINAL layer after
+    /// `forward_model`: intermediate layers' `out` buffers are moved
+    /// into the next layer's `x` (no copy), leaving them empty — which
+    /// this accessor would mis-resolve to `y`.
+    fn out_view(&self) -> &[f32] {
+        if self.out.is_empty() {
+            &self.y
+        } else {
+            &self.out
+        }
+    }
+}
+
+/// Write hedgehog features for every row of `x` (n rows of width d) into
+/// `phi` (n rows of width 2d). With `fm`, rows pass through the learned
+/// per-head map first (pre = fm x). `exp_pos_neg` is shared with every
+/// other path, so features stay bit-identical between oracle and SIMD
+/// executions of the same pre-activations.
+fn write_features(ops: Ops, fm: Option<&[f32]>, x: &[f32], phi: &mut [f32], d: usize) {
+    let dp = 2 * d;
+    let n = x.len() / d;
+    match fm {
+        None => {
+            for i in 0..n {
+                let (pos, neg) = phi[i * dp..(i + 1) * dp].split_at_mut(d);
+                simd::exp_pos_neg(&x[i * d..(i + 1) * d], pos, neg);
+            }
+        }
+        Some(fm) => {
+            let mut pre = vec![0.0f32; d];
+            for i in 0..n {
+                vec_mat_t(ops, &x[i * d..(i + 1) * d], fm, &mut pre);
+                let (pos, neg) = phi[i * dp..(i + 1) * dp].split_at_mut(d);
+                simd::exp_pos_neg(&pre, pos, neg);
+            }
+        }
+    }
+}
+
+/// One (batch, head)'s forward work item.
 struct FwdTask<'a> {
-    xh: &'a [f32],
-    phi: &'a mut [f32],
+    qh: &'a [f32],
+    kh: &'a [f32],
+    vh: &'a [f32],
+    fm_q: Option<&'a [f32]>,
+    fm_k: Option<&'a [f32]>,
+    phi_q: &'a mut [f32],
+    /// `None` for FixedExp (phi_k == phi_q by construction)
+    phi_k: Option<&'a mut [f32]>,
     p: &'a mut [f32],
     den: &'a mut [f32],
     yh: &'a mut [f32],
@@ -331,17 +605,23 @@ struct FwdTask<'a> {
 
 /// One (batch, head)'s forward: features, raw scores, normalization, and
 /// the attention output — the quadratic form of the decode recurrence.
-fn fwd_head(ops: Ops, t: FwdTask) {
-    let FwdTask { xh, phi, p, den, yh } = t;
-    let (n, d, dp) = (TRAIN_SEQ, HD, DP);
-    for i in 0..n {
-        FeatureMap::Hedgehog.write(&xh[i * d..(i + 1) * d], &mut phi[i * dp..(i + 1) * dp]);
+fn fwd_head(ops: Ops, n: usize, d: usize, t: FwdTask) {
+    let FwdTask { qh, kh, vh, fm_q, fm_k, phi_q, mut phi_k, p, den, yh } = t;
+    let dp = 2 * d;
+    write_features(ops, fm_q, qh, phi_q, d);
+    if let Some(pk) = phi_k.as_deref_mut() {
+        write_features(ops, fm_k, kh, pk, d);
     }
+    let phi_k: &[f32] = match phi_k.as_deref() {
+        Some(pk) => pk,
+        None => phi_q,
+    };
     for i in 0..n {
         let prow = &mut p[i * n..(i + 1) * n];
+        let qf = &phi_q[i * dp..(i + 1) * dp];
         let mut sum = 0.0f32;
         for j in 0..=i {
-            let a = (ops.dot)(&phi[i * dp..(i + 1) * dp], &phi[j * dp..(j + 1) * dp]);
+            let a = (ops.dot)(qf, &phi_k[j * dp..(j + 1) * dp]);
             prow[j] = a;
             sum += a;
         }
@@ -352,59 +632,176 @@ fn fwd_head(ops: Ops, t: FwdTask) {
         yrow.fill(0.0);
         for j in 0..=i {
             prow[j] *= inv;
-            (ops.axpy)(yrow, prow[j], &xh[j * d..(j + 1) * d]);
+            (ops.axpy)(yrow, prow[j], &vh[j * d..(j + 1) * d]);
         }
     }
 }
 
-/// Gather + attention forward over the whole batch, (batch, head)
-/// parallel on the pool.
-fn forward_attention(
+/// One layer's forward over the whole batch; consumes the layer input.
+#[allow(clippy::too_many_arguments)]
+fn forward_layer(
+    cfg: &ModelConfig,
     ops: Ops,
     pool: &WorkerPool,
     threads: usize,
-    tokens: &[i32],
-    embed: &[f32],
-) -> Activations {
-    let (b, n, d, dp) = (TRAIN_BATCH, TRAIN_SEQ, HD, DP);
-    let bh = b * HEADS;
-    let mut xh = vec![0.0f32; bh * n * d];
-    for bi in 0..b {
-        for t in 0..n {
-            let tok = tokens[bi * n + t].rem_euclid(VOCAB as i32) as usize;
-            let x = &embed[tok * DIM..(tok + 1) * DIM];
-            for h in 0..HEADS {
-                let dst = ((bi * HEADS + h) * n + t) * d;
-                xh[dst..dst + d].copy_from_slice(&x[h * d..(h + 1) * d]);
+    lp: Option<&LayerParams>,
+    x: Vec<f32>,
+) -> LayerActs {
+    let (b, n, h, d) = (cfg.batch, cfg.seq, cfg.heads, cfg.head_dim);
+    let (dp, dm, dd) = (cfg.dp(), cfg.d_model(), cfg.head_dim * cfg.head_dim);
+    let bh = b * h;
+    let mut qh = vec![0.0f32; bh * n * d];
+    let (mut kh, mut vh) = (Vec::new(), Vec::new());
+    match lp {
+        Some(lp) => {
+            kh = vec![0.0f32; bh * n * d];
+            vh = vec![0.0f32; bh * n * d];
+            let mut qrow = vec![0.0f32; dm];
+            let mut krow = vec![0.0f32; dm];
+            let mut vrow = vec![0.0f32; dm];
+            for bi in 0..b {
+                for t in 0..n {
+                    let xr = &x[(bi * n + t) * dm..(bi * n + t + 1) * dm];
+                    vec_mat(ops, xr, lp.wq, &mut qrow);
+                    vec_mat(ops, xr, lp.wk, &mut krow);
+                    vec_mat(ops, xr, lp.wv, &mut vrow);
+                    for hh in 0..h {
+                        let dst = ((bi * h + hh) * n + t) * d;
+                        qh[dst..dst + d].copy_from_slice(&qrow[hh * d..(hh + 1) * d]);
+                        kh[dst..dst + d].copy_from_slice(&krow[hh * d..(hh + 1) * d]);
+                        vh[dst..dst + d].copy_from_slice(&vrow[hh * d..(hh + 1) * d]);
+                    }
+                }
+            }
+        }
+        None => {
+            for bi in 0..b {
+                for t in 0..n {
+                    let xr = &x[(bi * n + t) * dm..(bi * n + t + 1) * dm];
+                    for hh in 0..h {
+                        let dst = ((bi * h + hh) * n + t) * d;
+                        qh[dst..dst + d].copy_from_slice(&xr[hh * d..(hh + 1) * d]);
+                    }
+                }
             }
         }
     }
-    let mut acts = Activations {
-        xh,
-        phi: vec![0.0f32; bh * n * dp],
-        p: vec![0.0f32; bh * n * n],
-        den: vec![0.0f32; bh * n],
-        yh: vec![0.0f32; bh * n * d],
-    };
-    let mut tasks = Vec::with_capacity(bh);
+
+    let mut phi_q = vec![0.0f32; bh * n * dp];
+    let mut phi_k = if lp.is_some() { vec![0.0f32; bh * n * dp] } else { Vec::new() };
+    let mut p = vec![0.0f32; bh * n * n];
+    let mut den = vec![0.0f32; bh * n];
+    let mut yh = vec![0.0f32; bh * n * d];
     {
-        let xh = &acts.xh;
-        let mut phi_rest = acts.phi.as_mut_slice();
-        let mut p_rest = acts.p.as_mut_slice();
-        let mut den_rest = acts.den.as_mut_slice();
-        let mut yh_rest = acts.yh.as_mut_slice();
+        let mut tasks = Vec::with_capacity(bh);
+        let mut pq_rest = phi_q.as_mut_slice();
+        let mut pk_rest = phi_k.as_mut_slice();
+        let mut p_rest = p.as_mut_slice();
+        let mut den_rest = den.as_mut_slice();
+        let mut yh_rest = yh.as_mut_slice();
         for i in 0..bh {
-            let (phi, r) = std::mem::take(&mut phi_rest).split_at_mut(n * dp);
-            phi_rest = r;
-            let (p, r) = std::mem::take(&mut p_rest).split_at_mut(n * n);
+            let hh = i % h;
+            let (pq, r) = std::mem::take(&mut pq_rest).split_at_mut(n * dp);
+            pq_rest = r;
+            let pk = if lp.is_some() {
+                let (pk, r) = std::mem::take(&mut pk_rest).split_at_mut(n * dp);
+                pk_rest = r;
+                Some(pk)
+            } else {
+                None
+            };
+            let (pr, r) = std::mem::take(&mut p_rest).split_at_mut(n * n);
             p_rest = r;
-            let (den, r) = std::mem::take(&mut den_rest).split_at_mut(n);
+            let (dn, r) = std::mem::take(&mut den_rest).split_at_mut(n);
             den_rest = r;
-            let (yh, r) = std::mem::take(&mut yh_rest).split_at_mut(n * d);
+            let (yr, r) = std::mem::take(&mut yh_rest).split_at_mut(n * d);
             yh_rest = r;
-            tasks.push(FwdTask { xh: &xh[i * n * d..(i + 1) * n * d], phi, p, den, yh });
+            tasks.push(FwdTask {
+                qh: &qh[i * n * d..(i + 1) * n * d],
+                kh: if kh.is_empty() {
+                    &qh[i * n * d..(i + 1) * n * d]
+                } else {
+                    &kh[i * n * d..(i + 1) * n * d]
+                },
+                vh: if vh.is_empty() {
+                    &qh[i * n * d..(i + 1) * n * d]
+                } else {
+                    &vh[i * n * d..(i + 1) * n * d]
+                },
+                fm_q: lp.map(|lp| &lp.fm_q[hh * dd..(hh + 1) * dd]),
+                fm_k: lp.map(|lp| &lp.fm_k[hh * dd..(hh + 1) * dd]),
+                phi_q: pq,
+                phi_k: pk,
+                p: pr,
+                den: dn,
+                yh: yr,
+            });
         }
-        pool.run_tasks(threads, tasks, |t: FwdTask| fwd_head(ops, t));
+        pool.run_tasks(threads, tasks, |t: FwdTask| fwd_head(ops, n, d, t));
+    }
+
+    // merge heads
+    let mut y = vec![0.0f32; b * n * dm];
+    for bi in 0..b {
+        for hh in 0..h {
+            for t in 0..n {
+                let src = ((bi * h + hh) * n + t) * d;
+                let dst = (bi * n + t) * dm + hh * d;
+                y[dst..dst + d].copy_from_slice(&yh[src..src + d]);
+            }
+        }
+    }
+    // layer output: residual + output projection (Learnable only)
+    let out = match lp {
+        Some(lp) => {
+            let mut out = x.clone();
+            for r in 0..b * n {
+                vec_mat_acc(ops, &y[r * dm..(r + 1) * dm], lp.wo, &mut out[r * dm..(r + 1) * dm]);
+            }
+            out
+        }
+        None => Vec::new(),
+    };
+    LayerActs { x, qh, kh, vh, phi_q, phi_k, p, den, yh, y, out }
+}
+
+/// Full model forward: embedding gather + every layer.
+fn forward_model(
+    cfg: &ModelConfig,
+    ops: Ops,
+    pool: &WorkerPool,
+    threads: usize,
+    mp: &ModelParams,
+    tokens: &[i32],
+) -> Vec<LayerActs> {
+    let (b, n, dm, v) = (cfg.batch, cfg.seq, cfg.d_model(), cfg.vocab);
+    let mut x = vec![0.0f32; b * n * dm];
+    for bi in 0..b {
+        for t in 0..n {
+            let tok = tokens[bi * n + t].rem_euclid(v as i32) as usize;
+            x[(bi * n + t) * dm..(bi * n + t + 1) * dm]
+                .copy_from_slice(&mp.embed[tok * dm..(tok + 1) * dm]);
+        }
+    }
+    let mut acts = Vec::with_capacity(cfg.layers);
+    for l in 0..cfg.layers {
+        let xl = if l == 0 {
+            std::mem::take(&mut x)
+        } else {
+            // hand the previous layer's output over without a copy;
+            // backward only reads acts[l].x / y, never intermediate outs
+            // (see `out_view`). FixedExp stacks by replacement (out is
+            // empty, the output IS y) — unreachable for multi-layer
+            // configs today (the validator pins FixedExp to one layer),
+            // but kept correct rather than assumed away.
+            let prev = &mut acts[l - 1];
+            if prev.out.is_empty() {
+                prev.y.clone()
+            } else {
+                std::mem::take(&mut prev.out)
+            }
+        };
+        acts.push(forward_layer(cfg, ops, pool, threads, mp.layers.get(l), xl));
     }
     acts
 }
@@ -414,34 +811,40 @@ fn forward_attention(
 // ---------------------------------------------------------------------------
 
 struct HeadTask<'a> {
-    /// this batch row's (H, N, d) attention outputs
-    yh: &'a [f32],
+    /// this batch row's (N, D) final activations
+    x: &'a [f32],
     targets: &'a [i32],
     mask: &'a [f32],
     /// outputs (train only; empty slices in eval mode)
-    dyh: &'a mut [f32],
+    dx: &'a mut [f32],
     dun: &'a mut [f32],
     loss: &'a mut f64,
     correct: &'a mut f64,
 }
 
 /// One batch row through the unembed + softmax CE head. With `grads`,
-/// also produces dL/dyh for this row and a per-row partial dL/dunembed
+/// also produces dL/dx for this row and a per-row partial dL/dunembed
 /// (summed serially afterwards — V x D is tiny).
-fn head_row(ops: Ops, grads: bool, mask_den: f32, unembed: &[f32], task: HeadTask) {
-    let HeadTask { yh, targets, mask, dyh, dun, loss, correct } = task;
-    let (n, d) = (TRAIN_SEQ, HD);
-    let mut logits = vec![0.0f32; VOCAB];
-    let mut y = [0.0f32; DIM];
+#[allow(clippy::too_many_arguments)]
+fn head_row(
+    ops: Ops,
+    n: usize,
+    dm: usize,
+    vocab: usize,
+    grads: bool,
+    mask_den: f32,
+    unembed: &[f32],
+    task: HeadTask,
+) {
+    let HeadTask { x, targets, mask, dx, dun, loss, correct } = task;
+    let mut logits = vec![0.0f32; vocab];
     let mut loss_sum = 0.0f64;
     let mut correct_sum = 0.0f64;
     for t in 0..n {
-        for h in 0..HEADS {
-            y[h * d..(h + 1) * d].copy_from_slice(&yh[(h * n + t) * d..(h * n + t + 1) * d]);
-        }
+        let y = &x[t * dm..(t + 1) * dm];
         logits.fill(0.0);
         for (j, &yj) in y.iter().enumerate() {
-            (ops.axpy)(&mut logits, yj, &unembed[j * VOCAB..(j + 1) * VOCAB]);
+            (ops.axpy)(&mut logits, yj, &unembed[j * vocab..(j + 1) * vocab]);
         }
         let mut m = f32::NEG_INFINITY;
         let mut argmax = 0usize;
@@ -451,7 +854,7 @@ fn head_row(ops: Ops, grads: bool, mask_den: f32, unembed: &[f32], task: HeadTas
                 argmax = i;
             }
         }
-        let tgt = targets[t].rem_euclid(VOCAB as i32) as usize;
+        let tgt = targets[t].rem_euclid(vocab as i32) as usize;
         let target_logit = logits[tgt];
         let mut sum = 0.0f32;
         for l in logits.iter_mut() {
@@ -474,10 +877,8 @@ fn head_row(ops: Ops, grads: bool, mask_den: f32, unembed: &[f32], task: HeadTas
             }
             logits[tgt] -= w;
             for (j, &yj) in y.iter().enumerate() {
-                (ops.axpy)(&mut dun[j * VOCAB..(j + 1) * VOCAB], yj, &logits);
-                let g = (ops.dot)(&unembed[j * VOCAB..(j + 1) * VOCAB], &logits);
-                let (h, e) = (j / d, j % d);
-                dyh[(h * n + t) * d + e] = g;
+                (ops.axpy)(&mut dun[j * vocab..(j + 1) * vocab], yj, &logits);
+                dx[t * dm + j] = (ops.dot)(&unembed[j * vocab..(j + 1) * vocab], &logits);
             }
         }
     }
@@ -486,143 +887,388 @@ fn head_row(ops: Ops, grads: bool, mask_den: f32, unembed: &[f32], task: HeadTas
 }
 
 // ---------------------------------------------------------------------------
-// Attention backward (shared by the LM and distillation losses)
+// Backward (shared by the LM and per-layer distillation losses)
 // ---------------------------------------------------------------------------
 
 struct BwdTask<'a> {
-    xh: &'a [f32],
-    phi: &'a [f32],
+    qh: &'a [f32],
+    kh: &'a [f32],
+    vh: &'a [f32],
+    phi_q: &'a [f32],
+    phi_k: &'a [f32],
     p: &'a [f32],
     den: &'a [f32],
     yh: &'a [f32],
+    fm_q: Option<&'a [f32]>,
+    fm_k: Option<&'a [f32]>,
+    /// incoming dL/dyh; empty when the layer-output gradient is zero
+    /// (the topmost layer of a pure distillation backward)
     dyh: &'a [f32],
-    dxh: &'a mut [f32],
-}
-
-/// One (batch, head)'s backward through the normalized linear attention
-/// and the hedgehog features, given dL/dyh. Derivation (DESIGN.md §7):
-/// with p_tj the normalized weights and den_t the guarded denominator,
-///   w_tj       = (g_t . v_j - g_t . y_t) / den_t
-///   dphi_t    += sum_j w_tj phi_j,   dphi_j += w_tj phi_t
-///   dv_j      += p_tj g_t
-///   dxh (feat) = dphi_pos * phi_pos - dphi_neg * phi_neg
-/// where q = k = v = xh, so all three roles accumulate into dxh.
-fn bwd_head(ops: Ops, t: BwdTask) {
-    let BwdTask { xh, phi, p, den, yh, dyh, dxh } = t;
-    let (n, d, dp) = (TRAIN_SEQ, HD, DP);
-    let mut dphi = vec![0.0f32; n * dp];
-    let mut dphit = vec![0.0f32; dp];
-    for i in 0..n {
-        let g = &dyh[i * d..(i + 1) * d];
-        let gy = (ops.dot)(g, &yh[i * d..(i + 1) * d]);
-        let inv = den[i].recip();
-        let prow = &p[i * n..(i + 1) * n];
-        dphit.fill(0.0);
-        for j in 0..=i {
-            let w = ((ops.dot)(g, &xh[j * d..(j + 1) * d]) - gy) * inv;
-            (ops.axpy)(&mut dphit, w, &phi[j * dp..(j + 1) * dp]);
-            if j < i {
-                (ops.axpy)(&mut dphi[j * dp..(j + 1) * dp], w, &phi[i * dp..(i + 1) * dp]);
-            } else {
-                // j == i: the k-role also lands on row i (d a_ii / d phi_i
-                // = 2 phi_i), accumulated locally to avoid aliasing.
-                (ops.axpy)(&mut dphit, w, &phi[i * dp..(i + 1) * dp]);
-            }
-            (ops.axpy)(&mut dxh[j * d..(j + 1) * d], prow[j], g);
-        }
-        (ops.axpy)(&mut dphi[i * dp..(i + 1) * dp], 1.0, &dphit);
-    }
-    for i in 0..n {
-        let ph = &phi[i * dp..(i + 1) * dp];
-        let dph = &dphi[i * dp..(i + 1) * dp];
-        simd::grad_pos_neg(&mut dxh[i * d..(i + 1) * d], &dph[..d], &dph[d..], &ph[..d], &ph[d..]);
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Distillation loss + backward (teacher map from the same embeddings)
-// ---------------------------------------------------------------------------
-
-struct DistillTask<'a> {
-    xh: &'a [f32],
-    phi: &'a [f32],
-    p: &'a [f32],
-    den: &'a [f32],
-    dxh: &'a mut [f32],
+    /// Some(inv_m) adds this layer's Eq. 4 map loss + its gradients
+    distill: Option<f32>,
+    dqh: &'a mut [f32],
+    dkh: &'a mut [f32],
+    dvh: &'a mut [f32],
+    /// per-task partials of the feature-map grads (empty when FixedExp)
+    dfm_q: &'a mut [f32],
+    dfm_k: &'a mut [f32],
     loss: &'a mut f64,
 }
 
-/// One (batch, head)'s distillation loss and backward. Teacher rows are
-/// causal softmax over raw q.k scores at scale 1.0 (exactly
-/// `distill.py`'s `softmax_attention_weights(..., scale=1.0)`); the loss
-/// is the Eq. 4 soft cross-entropy -sum_j T_tj ln(P_tj + EPS), summed
-/// here and averaged over (B, H, N) by the caller via `inv_m`. The
-/// gradient includes both the student path (through phi) and the teacher
-/// path (through the raw scores) — jax `value_and_grad` semantics.
-fn distill_head(ops: Ops, inv_m: f32, task: DistillTask) {
-    let DistillTask { xh, phi, p, den, dxh, loss } = task;
-    let (n, d, dp) = (TRAIN_SEQ, HD, DP);
-    let mut dphi = vec![0.0f32; n * dp];
-    let mut dphit = vec![0.0f32; dp];
-    let mut trow = vec![0.0f32; n];
-    let mut lp = vec![0.0f32; n];
-    let mut dpr = vec![0.0f32; n];
-    let mut loss_sum = 0.0f64;
-    for i in 0..n {
-        let xi = &xh[i * d..(i + 1) * d];
-        let prow = &p[i * n..(i + 1) * n];
-        // teacher: causal softmax over raw scores (max-subtracted)
-        let mut m = f32::NEG_INFINITY;
-        for j in 0..=i {
-            trow[j] = (ops.dot)(xi, &xh[j * d..(j + 1) * d]);
-            m = m.max(trow[j]);
-        }
-        let mut tsum = 0.0f32;
-        for t in trow[..=i].iter_mut() {
-            *t = (*t - m).exp();
-            tsum += *t;
-        }
-        let tinv = tsum.recip();
-        let mut row_loss = 0.0f32;
-        for j in 0..=i {
-            trow[j] *= tinv;
-            lp[j] = (prow[j] + EPS).ln();
-            row_loss += trow[j] * -lp[j];
-        }
-        loss_sum += row_loss as f64;
-        // teacher path: dL/dscore_ij = T_ij * (-lp_j - L_i) * inv_m,
-        // then score_ij = xh_i . xh_j fans out to both rows.
-        for j in 0..=i {
-            let dsc = trow[j] * (-lp[j] - row_loss) * inv_m;
-            (ops.axpy)(&mut dxh[i * d..(i + 1) * d], dsc, &xh[j * d..(j + 1) * d]);
-            (ops.axpy)(&mut dxh[j * d..(j + 1) * d], dsc, xi);
-        }
-        // student path: dL/dP_ij = -T_ij / (P_ij + EPS) * inv_m, pushed
-        // through the normalization exactly as in `bwd_head`.
-        let mut c = 0.0f32;
-        for j in 0..=i {
-            dpr[j] = -trow[j] / (prow[j] + EPS) * inv_m;
-            c += dpr[j] * prow[j];
-        }
-        let inv = den[i].recip();
-        dphit.fill(0.0);
-        for j in 0..=i {
-            let w = (dpr[j] - c) * inv;
-            (ops.axpy)(&mut dphit, w, &phi[j * dp..(j + 1) * dp]);
-            if j < i {
-                (ops.axpy)(&mut dphi[j * dp..(j + 1) * dp], w, &phi[i * dp..(i + 1) * dp]);
-            } else {
-                (ops.axpy)(&mut dphit, w, &phi[i * dp..(i + 1) * dp]);
+/// One (batch, head)'s backward through the normalized linear attention,
+/// the optional per-layer distillation loss, and the feature map.
+/// Derivation (DESIGN.md §8): with p_tj the normalized weights and den_t
+/// the guarded denominator,
+///   w_tj        = (g_t . v_j - g_t . y_t) / den_t
+///   dphi_q_t   += sum_j w_tj phi_k_j,   dphi_k_j += w_tj phi_q_t
+///   dv_j       += p_tj g_t
+/// then through phi = [exp(pre), exp(-pre)]:
+///   dpre        = dphi_pos * phi_pos - dphi_neg * phi_neg
+/// and (Learnable) through the feature map pre = W x:
+///   dW         += dpre x^T,   dx += W^T dpre.
+fn bwd_head(ops: Ops, n: usize, d: usize, t: BwdTask) {
+    let BwdTask {
+        qh,
+        kh,
+        vh,
+        phi_q,
+        phi_k,
+        p,
+        den,
+        yh,
+        fm_q,
+        fm_k,
+        dyh,
+        distill,
+        dqh,
+        dkh,
+        dvh,
+        dfm_q,
+        dfm_k,
+        loss,
+    } = t;
+    let dp = 2 * d;
+    let mut dphi_q = vec![0.0f32; n * dp];
+    let mut dphi_k = vec![0.0f32; n * dp];
+
+    // attention-output path (dL/dyh through the normalization)
+    if !dyh.is_empty() {
+        for i in 0..n {
+            let g = &dyh[i * d..(i + 1) * d];
+            let gy = (ops.dot)(g, &yh[i * d..(i + 1) * d]);
+            let inv = den[i].recip();
+            let prow = &p[i * n..(i + 1) * n];
+            let qf = &phi_q[i * dp..(i + 1) * dp];
+            for j in 0..=i {
+                let w = ((ops.dot)(g, &vh[j * d..(j + 1) * d]) - gy) * inv;
+                (ops.axpy)(&mut dphi_q[i * dp..(i + 1) * dp], w, &phi_k[j * dp..(j + 1) * dp]);
+                (ops.axpy)(&mut dphi_k[j * dp..(j + 1) * dp], w, qf);
+                (ops.axpy)(&mut dvh[j * d..(j + 1) * d], prow[j], g);
             }
         }
-        (ops.axpy)(&mut dphi[i * dp..(i + 1) * dp], 1.0, &dphit);
     }
-    for i in 0..n {
-        let ph = &phi[i * dp..(i + 1) * dp];
-        let dph = &dphi[i * dp..(i + 1) * dp];
-        simd::grad_pos_neg(&mut dxh[i * d..(i + 1) * d], &dph[..d], &dph[d..], &ph[..d], &ph[d..]);
+
+    // per-layer distillation: teacher = causal softmax over raw q.k at
+    // scale 1.0 (distill.py's softmax_attention_weights), student = the
+    // stored normalized map p. Loss rows sum here; the caller applies
+    // inv_m to the total. Gradient flows through BOTH maps (teacher path
+    // into q/k directly, student path through the normalization into
+    // phi) — jax value_and_grad semantics.
+    if let Some(inv_m) = distill {
+        let mut trow = vec![0.0f32; n];
+        let mut lp = vec![0.0f32; n];
+        let mut dpr = vec![0.0f32; n];
+        let mut loss_sum = 0.0f64;
+        for i in 0..n {
+            let qi = &qh[i * d..(i + 1) * d];
+            let prow = &p[i * n..(i + 1) * n];
+            let mut mx = f32::NEG_INFINITY;
+            for j in 0..=i {
+                trow[j] = (ops.dot)(qi, &kh[j * d..(j + 1) * d]);
+                mx = mx.max(trow[j]);
+            }
+            let mut tsum = 0.0f32;
+            for tv in trow[..=i].iter_mut() {
+                *tv = (*tv - mx).exp();
+                tsum += *tv;
+            }
+            let tinv = tsum.recip();
+            let mut row_loss = 0.0f32;
+            for j in 0..=i {
+                trow[j] *= tinv;
+                lp[j] = (prow[j] + EPS).ln();
+                row_loss += trow[j] * -lp[j];
+            }
+            loss_sum += row_loss as f64;
+            // teacher path: dL/dscore_ij = T_ij (-lp_j - L_i) inv_m, and
+            // score_ij = q_i . k_j fans out to both rows.
+            for j in 0..=i {
+                let dsc = trow[j] * (-lp[j] - row_loss) * inv_m;
+                (ops.axpy)(&mut dqh[i * d..(i + 1) * d], dsc, &kh[j * d..(j + 1) * d]);
+                (ops.axpy)(&mut dkh[j * d..(j + 1) * d], dsc, qi);
+            }
+            // student path: dL/dP_ij = -T_ij / (P_ij + EPS) inv_m, pushed
+            // through the normalization exactly like the w_tj chain.
+            let mut c = 0.0f32;
+            for j in 0..=i {
+                dpr[j] = -trow[j] / (prow[j] + EPS) * inv_m;
+                c += dpr[j] * prow[j];
+            }
+            let inv = den[i].recip();
+            let qf = &phi_q[i * dp..(i + 1) * dp];
+            for j in 0..=i {
+                let w = (dpr[j] - c) * inv;
+                (ops.axpy)(&mut dphi_q[i * dp..(i + 1) * dp], w, &phi_k[j * dp..(j + 1) * dp]);
+                (ops.axpy)(&mut dphi_k[j * dp..(j + 1) * dp], w, qf);
+            }
+        }
+        *loss = loss_sum;
     }
-    *loss = loss_sum;
+
+    // feature chain: dphi -> (dpre ->) head-space q/k gradients
+    match fm_q {
+        None => {
+            for i in 0..n {
+                let pq = &phi_q[i * dp..(i + 1) * dp];
+                let dq = &dphi_q[i * dp..(i + 1) * dp];
+                let out = &mut dqh[i * d..(i + 1) * d];
+                simd::grad_pos_neg(out, &dq[..d], &dq[d..], &pq[..d], &pq[d..]);
+                let pk = &phi_k[i * dp..(i + 1) * dp];
+                let dk = &dphi_k[i * dp..(i + 1) * dp];
+                let out = &mut dkh[i * d..(i + 1) * d];
+                simd::grad_pos_neg(out, &dk[..d], &dk[d..], &pk[..d], &pk[d..]);
+            }
+        }
+        Some(fmq) => {
+            let fmk = fm_k.expect("learnable config has both feature maps");
+            let mut dpre = vec![0.0f32; d];
+            for i in 0..n {
+                dpre.fill(0.0);
+                let pq = &phi_q[i * dp..(i + 1) * dp];
+                let dq = &dphi_q[i * dp..(i + 1) * dp];
+                simd::grad_pos_neg(&mut dpre, &dq[..d], &dq[d..], &pq[..d], &pq[d..]);
+                outer_acc(ops, &dpre, &qh[i * d..(i + 1) * d], dfm_q);
+                vec_mat_acc(ops, &dpre, fmq, &mut dqh[i * d..(i + 1) * d]);
+
+                dpre.fill(0.0);
+                let pk = &phi_k[i * dp..(i + 1) * dp];
+                let dk = &dphi_k[i * dp..(i + 1) * dp];
+                simd::grad_pos_neg(&mut dpre, &dk[..d], &dk[d..], &pk[..d], &pk[d..]);
+                outer_acc(ops, &dpre, &kh[i * d..(i + 1) * d], dfm_k);
+                vec_mat_acc(ops, &dpre, fmk, &mut dkh[i * d..(i + 1) * d]);
+            }
+        }
+    }
+}
+
+/// Reverse sweep over every layer: propagates dL/d(layer output) down
+/// the stack, accumulating projection/feature-map gradients, plus (when
+/// `distill_inv_m` is set) each layer's Eq. 4 map loss and its direct
+/// gradients. Returns (per-layer grads, dL/dx0, summed distill loss).
+#[allow(clippy::too_many_arguments)]
+fn backward_model(
+    cfg: &ModelConfig,
+    ops: Ops,
+    pool: &WorkerPool,
+    threads: usize,
+    mp: &ModelParams,
+    acts: &[LayerActs],
+    mut dx: Vec<f32>,
+    mut dx_zero: bool,
+    distill_inv_m: Option<f32>,
+) -> (Vec<LayerGrads>, Vec<f32>, f64) {
+    let (b, n, h, d) = (cfg.batch, cfg.seq, cfg.heads, cfg.head_dim);
+    let (dp, dm, dd) = (cfg.dp(), cfg.d_model(), cfg.head_dim * cfg.head_dim);
+    let bh = b * h;
+    // only the per-layer grads live here; embed/unembed belong to the
+    // caller (`loss_and_grads`), so don't allocate a full Grads
+    let mut layer_grads: Vec<LayerGrads> = if cfg.learnable() {
+        (0..cfg.layers)
+            .map(|_| LayerGrads {
+                dwq: vec![0.0; dm * dm],
+                dwk: vec![0.0; dm * dm],
+                dwv: vec![0.0; dm * dm],
+                dwo: vec![0.0; dm * dm],
+                dfm_q: vec![0.0; h * d * d],
+                dfm_k: vec![0.0; h * d * d],
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let mut distill_loss = 0.0f64;
+
+    for l in (0..cfg.layers).rev() {
+        let act = &acts[l];
+        let lp = mp.layers.get(l);
+        let learnable = lp.is_some();
+
+        // 1. through the output projection / residual into dyh
+        let mut dyh: Vec<f32> = Vec::new();
+        let mut dx_prev: Vec<f32>;
+        if dx_zero {
+            dx_prev = std::mem::take(&mut dx); // zeros, reused
+        } else {
+            let dy: Vec<f32> = match lp {
+                Some(lp) => {
+                    let lg = &mut layer_grads[l];
+                    let mut dy = vec![0.0f32; b * n * dm];
+                    for r in 0..b * n {
+                        let dxr = &dx[r * dm..(r + 1) * dm];
+                        vec_mat_t(ops, dxr, lp.wo, &mut dy[r * dm..(r + 1) * dm]);
+                        outer_acc(ops, &act.y[r * dm..(r + 1) * dm], dxr, &mut lg.dwo);
+                    }
+                    dy
+                }
+                // FixedExp stacks by replacement: the whole gradient
+                // goes through y, nothing passes around it.
+                None => std::mem::take(&mut dx),
+            };
+            dyh = vec![0.0f32; bh * n * d];
+            for bi in 0..b {
+                for hh in 0..h {
+                    for t in 0..n {
+                        let dst = ((bi * h + hh) * n + t) * d;
+                        let src = (bi * n + t) * dm + hh * d;
+                        dyh[dst..dst + d].copy_from_slice(&dy[src..src + d]);
+                    }
+                }
+            }
+            dx_prev = match lp {
+                Some(_) => std::mem::take(&mut dx), // residual passthrough
+                None => vec![0.0f32; b * n * dm],
+            };
+        }
+
+        // 2. per-(batch, head) backward on the pool
+        let mut dqh = vec![0.0f32; bh * n * d];
+        let mut dkh = vec![0.0f32; bh * n * d];
+        let mut dvh = vec![0.0f32; bh * n * d];
+        let mut dfm_q_part = if learnable { vec![0.0f32; bh * dd] } else { Vec::new() };
+        let mut dfm_k_part = if learnable { vec![0.0f32; bh * dd] } else { Vec::new() };
+        let mut losses = vec![0.0f64; bh];
+        {
+            let mut tasks = Vec::with_capacity(bh);
+            let mut dqh_rest = dqh.as_mut_slice();
+            let mut dkh_rest = dkh.as_mut_slice();
+            let mut dvh_rest = dvh.as_mut_slice();
+            let mut dfq_rest = dfm_q_part.as_mut_slice();
+            let mut dfk_rest = dfm_k_part.as_mut_slice();
+            let mut loss_rest = losses.as_mut_slice();
+            let kh = act.k_heads();
+            let vh = act.v_heads();
+            let phi_k = act.phi_k_view();
+            for i in 0..bh {
+                let hh = i % h;
+                let (dq, r) = std::mem::take(&mut dqh_rest).split_at_mut(n * d);
+                dqh_rest = r;
+                let (dk, r) = std::mem::take(&mut dkh_rest).split_at_mut(n * d);
+                dkh_rest = r;
+                let (dv, r) = std::mem::take(&mut dvh_rest).split_at_mut(n * d);
+                dvh_rest = r;
+                let dfq: &mut [f32] = if learnable {
+                    let (a, r) = std::mem::take(&mut dfq_rest).split_at_mut(dd);
+                    dfq_rest = r;
+                    a
+                } else {
+                    Default::default()
+                };
+                let dfk: &mut [f32] = if learnable {
+                    let (a, r) = std::mem::take(&mut dfk_rest).split_at_mut(dd);
+                    dfk_rest = r;
+                    a
+                } else {
+                    Default::default()
+                };
+                let (ls, r) = std::mem::take(&mut loss_rest).split_at_mut(1);
+                loss_rest = r;
+                tasks.push(BwdTask {
+                    qh: &act.qh[i * n * d..(i + 1) * n * d],
+                    kh: &kh[i * n * d..(i + 1) * n * d],
+                    vh: &vh[i * n * d..(i + 1) * n * d],
+                    phi_q: &act.phi_q[i * n * dp..(i + 1) * n * dp],
+                    phi_k: &phi_k[i * n * dp..(i + 1) * n * dp],
+                    p: &act.p[i * n * n..(i + 1) * n * n],
+                    den: &act.den[i * n..(i + 1) * n],
+                    yh: &act.yh[i * n * d..(i + 1) * n * d],
+                    fm_q: lp.map(|lp| &lp.fm_q[hh * dd..(hh + 1) * dd]),
+                    fm_k: lp.map(|lp| &lp.fm_k[hh * dd..(hh + 1) * dd]),
+                    dyh: if dyh.is_empty() { &[] } else { &dyh[i * n * d..(i + 1) * n * d] },
+                    distill: distill_inv_m,
+                    dqh: dq,
+                    dkh: dk,
+                    dvh: dv,
+                    dfm_q: dfq,
+                    dfm_k: dfk,
+                    loss: &mut ls[0],
+                });
+            }
+            pool.run_tasks(threads, tasks, |t: BwdTask| bwd_head(ops, n, d, t));
+        }
+        if let Some(inv_m) = distill_inv_m {
+            distill_loss += losses.iter().sum::<f64>() * inv_m as f64;
+            // this layer's map loss reaches everything below it
+            dx_zero = false;
+        }
+        if learnable {
+            let lg = &mut layer_grads[l];
+            for i in 0..bh {
+                let hh = i % h;
+                (ops.axpy)(
+                    &mut lg.dfm_q[hh * dd..(hh + 1) * dd],
+                    1.0,
+                    &dfm_q_part[i * dd..(i + 1) * dd],
+                );
+                (ops.axpy)(
+                    &mut lg.dfm_k[hh * dd..(hh + 1) * dd],
+                    1.0,
+                    &dfm_k_part[i * dd..(i + 1) * dd],
+                );
+            }
+        }
+
+        // 3. through the q/k/v projections (or straight into the input)
+        match lp {
+            Some(lp) => {
+                let lg = &mut layer_grads[l];
+                let mut drow = vec![0.0f32; dm];
+                for bi in 0..b {
+                    for t in 0..n {
+                        let xr = &act.x[(bi * n + t) * dm..(bi * n + t + 1) * dm];
+                        let dxr = &mut dx_prev[(bi * n + t) * dm..(bi * n + t + 1) * dm];
+                        for (dhead, w, dw) in [
+                            (&dqh, lp.wq, &mut lg.dwq),
+                            (&dkh, lp.wk, &mut lg.dwk),
+                            (&dvh, lp.wv, &mut lg.dwv),
+                        ] {
+                            for hh in 0..h {
+                                let src = ((bi * h + hh) * n + t) * d;
+                                drow[hh * d..(hh + 1) * d].copy_from_slice(&dhead[src..src + d]);
+                            }
+                            outer_acc(ops, xr, &drow, dw);
+                            vec_mat_t_acc(ops, &drow, w, dxr);
+                        }
+                    }
+                }
+            }
+            None => {
+                for bi in 0..b {
+                    for t in 0..n {
+                        let dst = (bi * n + t) * dm;
+                        for hh in 0..h {
+                            let src = ((bi * h + hh) * n + t) * d;
+                            let seg = &mut dx_prev[dst + hh * d..dst + (hh + 1) * d];
+                            (ops.axpy)(seg, 1.0, &dqh[src..src + d]);
+                            (ops.axpy)(seg, 1.0, &dkh[src..src + d]);
+                            (ops.axpy)(seg, 1.0, &dvh[src..src + d]);
+                        }
+                    }
+                }
+            }
+        }
+        dx = dx_prev;
+    }
+    (layer_grads, dx, distill_loss)
 }
 
 // ---------------------------------------------------------------------------
@@ -633,150 +1279,112 @@ fn distill_head(ops: Ops, inv_m: f32, task: DistillTask) {
 pub(crate) enum StepKind<'a> {
     /// Masked next-token cross-entropy (train_step / eval).
     Lm { targets: &'a [i32], mask: &'a [f32] },
-    /// Attention-map distillation (distill_step).
+    /// Per-layer attention-map distillation (distill_step).
     Distill,
 }
 
-/// Forward + backward for one batch: returns (loss, metric, dL/dembed,
-/// dL/dunembed). `metric` is masked accuracy for `Lm` and NaN for
-/// `Distill` (it has no labels). The distillation loss never touches the
-/// unembed, so its gradient comes back exactly zero.
+/// Forward + backward for one batch: returns (loss, metric, grads).
+/// `metric` is masked accuracy for `Lm` and NaN for `Distill` (no
+/// labels). The distillation loss never touches the unembed, so its
+/// gradient comes back exactly zero.
 pub(crate) fn loss_and_grads(
+    cfg: &ModelConfig,
     pool: &WorkerPool,
     opts: ExecOptions,
-    embed: &[f32],
-    unembed: &[f32],
+    mp: &ModelParams,
     tokens: &[i32],
     kind: StepKind,
-) -> (f32, f32, Vec<f32>, Vec<f32>) {
-    let (ops, threads) = resolve(opts);
-    let (b, n, d) = (TRAIN_BATCH, TRAIN_SEQ, HD);
-    let bh = b * HEADS;
-    let acts = forward_attention(ops, pool, threads, tokens, embed);
-    let mut dxh = vec![0.0f32; bh * n * d];
-    let mut dembed = vec![0.0f32; VOCAB * DIM];
-    let mut dunembed = vec![0.0f32; DIM * VOCAB];
+) -> (f32, f32, Grads) {
+    let (ops, threads) = resolve(cfg, opts);
+    let (b, n, dm, v) = (cfg.batch, cfg.seq, cfg.d_model(), cfg.vocab);
+    let acts = forward_model(cfg, ops, pool, threads, mp, tokens);
+    let final_x = acts.last().expect("at least one layer").out_view();
+
     let loss;
     let mut metric = f32::NAN;
-
-    match kind {
+    let mut dembed = vec![0.0f32; cfg.vocab * dm];
+    let mut dunembed = vec![0.0f32; dm * v];
+    let (layer_grads, dx0, _) = match kind {
         StepKind::Lm { targets, mask } => {
             let mask_den = mask.iter().map(|&m| m as f64).sum::<f64>() as f32 + 1e-6;
-            // per-batch-row head pass: loss, accuracy, dyh, partial dun
-            let mut dyh = vec![0.0f32; bh * n * d];
-            let mut dun_partials = vec![0.0f32; b * DIM * VOCAB];
+            let mut dx = vec![0.0f32; b * n * dm];
+            let mut dun_partials = vec![0.0f32; b * dm * v];
             let mut stats = vec![(0.0f64, 0.0f64); b];
             {
-                let yh = &acts.yh;
                 let mut tasks = Vec::with_capacity(b);
-                let mut dyh_rest = dyh.as_mut_slice();
+                let mut dx_rest = dx.as_mut_slice();
                 let mut dun_rest = dun_partials.as_mut_slice();
                 let mut stats_rest = stats.as_mut_slice();
                 for bi in 0..b {
-                    let (dyh_b, r) = std::mem::take(&mut dyh_rest).split_at_mut(HEADS * n * d);
-                    dyh_rest = r;
-                    let (dun_b, r) = std::mem::take(&mut dun_rest).split_at_mut(DIM * VOCAB);
+                    let (dx_b, r) = std::mem::take(&mut dx_rest).split_at_mut(n * dm);
+                    dx_rest = r;
+                    let (dun_b, r) = std::mem::take(&mut dun_rest).split_at_mut(dm * v);
                     dun_rest = r;
                     let (stat, r) = std::mem::take(&mut stats_rest).split_at_mut(1);
                     stats_rest = r;
                     let s = &mut stat[0];
                     tasks.push(HeadTask {
-                        yh: &yh[bi * HEADS * n * d..(bi + 1) * HEADS * n * d],
+                        x: &final_x[bi * n * dm..(bi + 1) * n * dm],
                         targets: &targets[bi * n..(bi + 1) * n],
                         mask: &mask[bi * n..(bi + 1) * n],
-                        dyh: dyh_b,
+                        dx: dx_b,
                         dun: dun_b,
                         loss: &mut s.0,
                         correct: &mut s.1,
                     });
                 }
                 pool.run_tasks(threads, tasks, |t: HeadTask| {
-                    head_row(ops, true, mask_den, unembed, t)
+                    head_row(ops, n, dm, v, true, mask_den, mp.unembed, t)
                 });
             }
             let loss_sum: f64 = stats.iter().map(|s| s.0).sum();
             let correct_sum: f64 = stats.iter().map(|s| s.1).sum();
             loss = (loss_sum / mask_den as f64) as f32;
             metric = (correct_sum / mask_den as f64) as f32;
-            for part in dun_partials.chunks_exact(DIM * VOCAB) {
+            for part in dun_partials.chunks_exact(dm * v) {
                 (ops.axpy)(&mut dunembed, 1.0, part);
             }
-            // attention backward per (batch, head)
-            let mut tasks = Vec::with_capacity(bh);
-            let mut dxh_rest = dxh.as_mut_slice();
-            for i in 0..bh {
-                let (dxh_i, r) = std::mem::take(&mut dxh_rest).split_at_mut(n * d);
-                dxh_rest = r;
-                tasks.push(BwdTask {
-                    xh: &acts.xh[i * n * d..(i + 1) * n * d],
-                    phi: &acts.phi[i * n * DP..(i + 1) * n * DP],
-                    p: &acts.p[i * n * n..(i + 1) * n * n],
-                    den: &acts.den[i * n..(i + 1) * n],
-                    yh: &acts.yh[i * n * d..(i + 1) * n * d],
-                    dyh: &dyh[i * n * d..(i + 1) * n * d],
-                    dxh: dxh_i,
-                });
-            }
-            pool.run_tasks(threads, tasks, |t: BwdTask| bwd_head(ops, t));
+            backward_model(cfg, ops, pool, threads, mp, &acts, dx, false, None)
         }
         StepKind::Distill => {
-            let inv_m = 1.0f32 / (bh * n) as f32;
-            let mut losses = vec![0.0f64; bh];
-            {
-                let mut tasks = Vec::with_capacity(bh);
-                let mut dxh_rest = dxh.as_mut_slice();
-                let mut loss_rest = losses.as_mut_slice();
-                for i in 0..bh {
-                    let (dxh_i, r) = std::mem::take(&mut dxh_rest).split_at_mut(n * d);
-                    dxh_rest = r;
-                    let (loss_i, r) = std::mem::take(&mut loss_rest).split_at_mut(1);
-                    loss_rest = r;
-                    tasks.push(DistillTask {
-                        xh: &acts.xh[i * n * d..(i + 1) * n * d],
-                        phi: &acts.phi[i * n * DP..(i + 1) * n * DP],
-                        p: &acts.p[i * n * n..(i + 1) * n * n],
-                        den: &acts.den[i * n..(i + 1) * n],
-                        dxh: dxh_i,
-                        loss: &mut loss_i[0],
-                    });
-                }
-                pool.run_tasks(threads, tasks, |t: DistillTask| distill_head(ops, inv_m, t));
-            }
-            loss = (losses.iter().sum::<f64>() * inv_m as f64) as f32;
+            let inv_m = 1.0f32 / (b * cfg.heads * n) as f32;
+            let dx = vec![0.0f32; b * n * dm];
+            let (lg, dx0, dloss) =
+                backward_model(cfg, ops, pool, threads, mp, &acts, dx, true, Some(inv_m));
+            loss = dloss as f32;
+            (lg, dx0, dloss)
         }
-    }
+    };
 
-    // scatter the per-head embedding gradients back by token id (serial:
-    // different (b, t) may hit the same embedding row)
+    // scatter dL/dx0 back into the embedding rows by token id (serial:
+    // different (b, t) may hit the same row)
     for bi in 0..b {
         for t in 0..n {
-            let tok = tokens[bi * n + t].rem_euclid(VOCAB as i32) as usize;
-            for h in 0..HEADS {
-                let src = ((bi * HEADS + h) * n + t) * d;
-                (ops.axpy)(
-                    &mut dembed[tok * DIM + h * d..tok * DIM + (h + 1) * d],
-                    1.0,
-                    &dxh[src..src + d],
-                );
-            }
+            let tok = tokens[bi * n + t].rem_euclid(v as i32) as usize;
+            (ops.axpy)(
+                &mut dembed[tok * dm..(tok + 1) * dm],
+                1.0,
+                &dx0[(bi * n + t) * dm..(bi * n + t + 1) * dm],
+            );
         }
     }
-    (loss, metric, dembed, dunembed)
+    (loss, metric, Grads { dembed, layers: layer_grads, dunembed })
 }
 
 /// Loss + metric only (the eval graph): same forward, no backward.
 pub(crate) fn eval_loss_metric(
+    cfg: &ModelConfig,
     pool: &WorkerPool,
     opts: ExecOptions,
-    embed: &[f32],
-    unembed: &[f32],
+    mp: &ModelParams,
     tokens: &[i32],
     targets: &[i32],
     mask: &[f32],
 ) -> (f32, f32) {
-    let (ops, threads) = resolve(opts);
-    let (b, n, d) = (TRAIN_BATCH, TRAIN_SEQ, HD);
-    let acts = forward_attention(ops, pool, threads, tokens, embed);
+    let (ops, threads) = resolve(cfg, opts);
+    let (b, n, dm, v) = (cfg.batch, cfg.seq, cfg.d_model(), cfg.vocab);
+    let acts = forward_model(cfg, ops, pool, threads, mp, tokens);
+    let final_x = acts.last().expect("at least one layer").out_view();
     let mask_den = mask.iter().map(|&m| m as f64).sum::<f64>() as f32 + 1e-6;
     let mut stats = vec![(0.0f64, 0.0f64); b];
     let mut tasks = Vec::with_capacity(b);
@@ -786,19 +1394,41 @@ pub(crate) fn eval_loss_metric(
         stats_rest = r;
         let s = &mut stat[0];
         tasks.push(HeadTask {
-            yh: &acts.yh[bi * HEADS * n * d..(bi + 1) * HEADS * n * d],
+            x: &final_x[bi * n * dm..(bi + 1) * n * dm],
             targets: &targets[bi * n..(bi + 1) * n],
             mask: &mask[bi * n..(bi + 1) * n],
-            dyh: &mut [],
+            dx: &mut [],
             dun: &mut [],
             loss: &mut s.0,
             correct: &mut s.1,
         });
     }
-    pool.run_tasks(threads, tasks, |t: HeadTask| head_row(ops, false, mask_den, unembed, t));
+    pool.run_tasks(threads, tasks, |t: HeadTask| {
+        head_row(ops, n, dm, v, false, mask_den, mp.unembed, t)
+    });
     let loss_sum: f64 = stats.iter().map(|s| s.0).sum();
     let correct_sum: f64 = stats.iter().map(|s| s.1).sum();
     ((loss_sum / mask_den as f64) as f32, (correct_sum / mask_den as f64) as f32)
+}
+
+/// Whole-sequence forward to (B, N, V) logits — the quadratic-form
+/// oracle the decode step is property-tested against.
+pub(crate) fn forward_logits(
+    cfg: &ModelConfig,
+    pool: &WorkerPool,
+    opts: ExecOptions,
+    mp: &ModelParams,
+    tokens: &[i32],
+) -> Vec<f32> {
+    let (ops, threads) = resolve(cfg, opts);
+    let (b, n, dm, v) = (cfg.batch, cfg.seq, cfg.d_model(), cfg.vocab);
+    let acts = forward_model(cfg, ops, pool, threads, mp, tokens);
+    let final_x = acts.last().expect("at least one layer").out_view();
+    let mut logits = vec![0.0f32; b * n * v];
+    for r in 0..b * n {
+        vec_mat(ops, &final_x[r * dm..(r + 1) * dm], mp.unembed, &mut logits[r * v..(r + 1) * v]);
+    }
+    logits
 }
 
 // ---------------------------------------------------------------------------
@@ -838,10 +1468,12 @@ fn adamw_leaf(
 // The step/eval executable
 // ---------------------------------------------------------------------------
 
-/// Executable for `ref_lm_train_step`, `ref_lm_distill_step`, and
-/// `ref_lm_eval` (init is `RefLmInit`). Shares the backend's options and
+/// Executable for `<tag>_train_step`, `<tag>_distill_step`, and
+/// `<tag>_eval` (init is `RefLmInit`). Shares the backend's options and
 /// worker pool with every other reference executable.
 struct RefLmStep {
+    tag: &'static str,
+    cfg: ModelConfig,
     graph: TrainGraph,
     opts: Arc<SharedExecOptions>,
     pool: Arc<WorkerPool>,
@@ -850,59 +1482,87 @@ struct RefLmStep {
 impl BackendExecutable for RefLmStep {
     fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         let opts = self.opts.load();
+        let cfg = &self.cfg;
+        let nl = cfg.n_leaves();
         match self.graph {
             TrainGraph::Eval => {
-                // manifest order: params/embed, params/unembed, tokens,
-                // targets, loss_mask (shapes pre-checked by the registry)
-                if inputs.len() != 5 {
-                    bail!("ref_lm_eval expects 5 inputs, got {}", inputs.len());
+                // manifest order: leaves, tokens, targets, loss_mask
+                if inputs.len() != nl + 3 {
+                    bail!("{}_eval expects {} inputs, got {}", self.tag, nl + 3, inputs.len());
                 }
+                let leaves: Vec<&[f32]> =
+                    inputs[..nl].iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
+                let mp = ModelParams::from_leaves(cfg, &leaves)?;
                 let (loss, metric) = eval_loss_metric(
+                    cfg,
                     &self.pool,
                     opts,
-                    inputs[0].as_f32()?,
-                    inputs[1].as_f32()?,
-                    inputs[2].as_i32()?,
-                    inputs[3].as_i32()?,
-                    inputs[4].as_f32()?,
+                    &mp,
+                    inputs[nl].as_i32()?,
+                    inputs[nl + 1].as_i32()?,
+                    inputs[nl + 2].as_f32()?,
                 );
                 Ok(vec![Tensor::scalar_f32(loss), Tensor::scalar_f32(metric)])
             }
             TrainGraph::Train | TrainGraph::Distill => {
-                // manifest order: params x2, m x2, v x2, step, lr, wd, batch
-                let want = if self.graph == TrainGraph::Train { 12 } else { 10 };
+                // manifest order: leaves, m leaves, v leaves, step, lr,
+                // wd, tokens[, targets, loss_mask]
+                let want = if self.graph == TrainGraph::Train { 3 * nl + 6 } else { 3 * nl + 4 };
                 if inputs.len() != want {
-                    bail!("{} expects {want} inputs, got {}", self.graph.name(), inputs.len());
+                    bail!(
+                        "{}{} expects {want} inputs, got {}",
+                        self.tag,
+                        self.graph.suffix(),
+                        inputs.len()
+                    );
                 }
-                let embed = inputs[0].as_f32()?;
-                let unembed = inputs[1].as_f32()?;
-                let (m_embed, m_unembed) = (inputs[2].as_f32()?, inputs[3].as_f32()?);
-                let (v_embed, v_unembed) = (inputs[4].as_f32()?, inputs[5].as_f32()?);
-                let step = inputs[6].item_i32()?;
-                let lr = inputs[7].item_f32()?;
-                let wd = inputs[8].item_f32()?;
-                let tokens = inputs[9].as_i32()?;
+                let leaves: Vec<&[f32]> =
+                    inputs[..nl].iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
+                let m_leaves: Vec<&[f32]> =
+                    inputs[nl..2 * nl].iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
+                let v_leaves: Vec<&[f32]> =
+                    inputs[2 * nl..3 * nl].iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
+                let step = inputs[3 * nl].item_i32()?;
+                let lr = inputs[3 * nl + 1].item_f32()?;
+                let wd = inputs[3 * nl + 2].item_f32()?;
+                let tokens = inputs[3 * nl + 3].as_i32()?;
                 let kind = if self.graph == TrainGraph::Train {
-                    StepKind::Lm { targets: inputs[10].as_i32()?, mask: inputs[11].as_f32()? }
+                    StepKind::Lm {
+                        targets: inputs[3 * nl + 4].as_i32()?,
+                        mask: inputs[3 * nl + 5].as_f32()?,
+                    }
                 } else {
                     StepKind::Distill
                 };
-                let (loss, _metric, dembed, dunembed) =
-                    loss_and_grads(&self.pool, opts, embed, unembed, tokens, kind);
+                let mp = ModelParams::from_leaves(cfg, &leaves)?;
+                let (loss, _metric, grads) =
+                    loss_and_grads(cfg, &self.pool, opts, &mp, tokens, kind);
+                let grad_leaves = grads.into_leaves();
                 let step_new = step + 1;
-                let (pe, me, ve) = adamw_leaf(embed, &dembed, m_embed, v_embed, step_new, lr, wd);
-                let (pu, mu, vu) =
-                    adamw_leaf(unembed, &dunembed, m_unembed, v_unembed, step_new, lr, wd);
-                Ok(vec![
-                    Tensor::from_f32(pe, &[VOCAB, DIM]),
-                    Tensor::from_f32(pu, &[DIM, VOCAB]),
-                    Tensor::from_f32(me, &[VOCAB, DIM]),
-                    Tensor::from_f32(mu, &[DIM, VOCAB]),
-                    Tensor::from_f32(ve, &[VOCAB, DIM]),
-                    Tensor::from_f32(vu, &[DIM, VOCAB]),
-                    Tensor::scalar_i32(step_new),
-                    Tensor::scalar_f32(loss),
-                ])
+                let slots = cfg.leaf_slots("params");
+                let mut p_out = Vec::with_capacity(nl);
+                let mut m_out = Vec::with_capacity(nl);
+                let mut v_out = Vec::with_capacity(nl);
+                for i in 0..nl {
+                    let (p, m, v) = adamw_leaf(
+                        leaves[i],
+                        &grad_leaves[i],
+                        m_leaves[i],
+                        v_leaves[i],
+                        step_new,
+                        lr,
+                        wd,
+                    );
+                    p_out.push(Tensor::from_f32(p, &slots[i].shape));
+                    m_out.push(Tensor::from_f32(m, &slots[i].shape));
+                    v_out.push(Tensor::from_f32(v, &slots[i].shape));
+                }
+                let mut outs = p_out;
+                outs.extend(m_out);
+                outs.extend(v_out);
+                outs.push(Tensor::scalar_i32(step_new));
+                outs.push(Tensor::scalar_f32(loss));
+                Ok(outs)
             }
             TrainGraph::Init => unreachable!("init is handled by RefLmInit"),
         }
@@ -915,9 +1575,9 @@ mod tests {
     use crate::runtime::ArtifactRegistry;
     use crate::train::session::{evaluate, ref_lm_demo_batch, Batch, Session};
 
-    /// The shared demo batch (`ref_lm_demo_batch`) as raw buffers, for
-    /// driving `loss_and_grads` directly — same data distribution as the
-    /// integration tests, the train bench, and the refconv experiment.
+    /// The shared demo batch (`ref_lm_demo_batch`) as raw buffers — same
+    /// data distribution as the integration tests, the train bench, and
+    /// the refconv experiment (both builtin configs share its geometry).
     fn cyclic_batch() -> (Vec<i32>, Vec<i32>, Vec<f32>) {
         let b = ref_lm_demo_batch(0, false);
         (
@@ -935,12 +1595,22 @@ mod tests {
         ref_lm_demo_batch(0, true)
     }
 
-    fn demo_vecs() -> (Vec<f32>, Vec<f32>) {
-        let params = init_param_store(1234);
-        (
-            params.get("params/embed").unwrap().as_f32().unwrap().to_vec(),
-            params.get("params/unembed").unwrap().as_f32().unwrap().to_vec(),
-        )
+    /// Parameter leaves of `cfg` in manifest order, as owned buffers the
+    /// FD tests can perturb in place.
+    fn leaves_of(cfg: &ModelConfig, seed: u64) -> (Vec<String>, Vec<Vec<f32>>) {
+        let params = cfg.init_params(seed);
+        let slots = cfg.leaf_slots("params");
+        let names = slots.iter().map(|s| s.name.clone()).collect();
+        let data = slots
+            .iter()
+            .map(|s| params.get(&s.name).unwrap().as_f32().unwrap().to_vec())
+            .collect();
+        (names, data)
+    }
+
+    fn mp_of<'a>(cfg: &ModelConfig, leaves: &'a [Vec<f32>]) -> ModelParams<'a> {
+        let slices: Vec<&[f32]> = leaves.iter().map(|v| v.as_slice()).collect();
+        ModelParams::from_leaves(cfg, &slices).unwrap()
     }
 
     /// Sample indices: the strongest-gradient entries plus deterministic
@@ -949,7 +1619,7 @@ mod tests {
         let mut order: Vec<usize> = (0..grad.len()).collect();
         order.sort_by(|&a, &b| grad[b].abs().total_cmp(&grad[a].abs()));
         let mut idx: Vec<usize> = order[..count / 2].to_vec();
-        let mut rng = Pcg32::new(seed);
+        let mut rng = crate::data::Pcg32::new(seed);
         while idx.len() < count {
             idx.push(rng.usize_below(grad.len()));
         }
@@ -957,29 +1627,29 @@ mod tests {
     }
 
     /// Documented FD tolerance: relative 1e-2 against max(|fd|, |g|, 0.05)
-    /// (f32 forward, f64 loss accumulation; measured worst ~4e-4).
+    /// (f32 forward, f64 loss accumulation; measured worst ~2.3e-3 in an
+    /// f32 numpy prototype of the exact model, learnable config).
     const FD_TOL: f32 = 1e-2;
     const FD_H: f32 = 1e-2;
 
-    fn fd_check(
+    /// Central-FD check of `grad` for leaf `li`, sampling `count` entries.
+    fn fd_check_leaf(
         label: &str,
-        make_loss: &dyn Fn(&[f32], &[f32]) -> f32,
-        embed: &[f32],
-        unembed: &[f32],
-        which: usize, // 0 = embed, 1 = unembed
+        cfg: &ModelConfig,
+        leaves: &mut [Vec<f32>],
+        li: usize,
         grad: &[f32],
+        count: usize,
+        make_loss: &dyn Fn(&ModelConfig, &[Vec<f32>]) -> f32,
     ) {
-        let idx = sample_indices(grad, 16, 42 + which as u64);
+        let idx = sample_indices(grad, count, 42 + li as u64);
         for &i in &idx {
-            let mut e = embed.to_vec();
-            let mut u = unembed.to_vec();
-            let leaf: &mut Vec<f32> = if which == 0 { &mut e } else { &mut u };
-            let orig = leaf[i];
-            leaf[i] = orig + FD_H;
-            let lp = make_loss(&e, &u);
-            let leaf: &mut Vec<f32> = if which == 0 { &mut e } else { &mut u };
-            leaf[i] = orig - FD_H;
-            let lm = make_loss(&e, &u);
+            let orig = leaves[li][i];
+            leaves[li][i] = orig + FD_H;
+            let lp = make_loss(cfg, leaves);
+            leaves[li][i] = orig - FD_H;
+            let lm = make_loss(cfg, leaves);
+            leaves[li][i] = orig;
             let fd = (lp - lm) / (2.0 * FD_H);
             let g = grad[i];
             let denom = fd.abs().max(g.abs()).max(0.05);
@@ -991,71 +1661,131 @@ mod tests {
         }
     }
 
-    #[test]
-    fn finite_difference_gradient_check_train_step() {
+    fn lm_loss_of(cfg: &ModelConfig, leaves: &[Vec<f32>]) -> f32 {
         let pool = WorkerPool::new();
-        let opts = ExecOptions::naive();
-        let (embed, unembed) = demo_vecs();
         let (tokens, targets, mask) = cyclic_batch();
-        let (loss, metric, dembed, dunembed) = loss_and_grads(
+        let mp = mp_of(cfg, leaves);
+        loss_and_grads(
+            cfg,
             &pool,
-            opts,
-            &embed,
-            &unembed,
+            ExecOptions::naive(),
+            &mp,
             &tokens,
             StepKind::Lm { targets: &targets, mask: &mask },
-        );
-        assert!(loss.is_finite() && loss > 0.0);
-        assert!((0.0..=1.0).contains(&metric));
-        let make_loss = |e: &[f32], u: &[f32]| -> f32 {
+        )
+        .0
+    }
+
+    fn distill_loss_of(cfg: &ModelConfig, leaves: &[Vec<f32>]) -> f32 {
+        let pool = WorkerPool::new();
+        let (tokens, _, _) = cyclic_batch();
+        let mp = mp_of(cfg, leaves);
+        loss_and_grads(cfg, &pool, ExecOptions::naive(), &mp, &tokens, StepKind::Distill).0
+    }
+
+    /// FD gradient check over EVERY leaf of `cfg`, both losses.
+    fn fd_check_all_leaves(cfg: &ModelConfig, seed: u64, count: usize) {
+        let pool = WorkerPool::new();
+        let (tokens, targets, mask) = cyclic_batch();
+        let (names, mut leaves) = leaves_of(cfg, seed);
+
+        let (loss, metric, grads) = {
+            let mp = mp_of(cfg, &leaves);
             loss_and_grads(
+                cfg,
                 &pool,
-                opts,
-                e,
-                u,
+                ExecOptions::naive(),
+                &mp,
                 &tokens,
                 StepKind::Lm { targets: &targets, mask: &mask },
             )
-            .0
         };
-        fd_check("train/embed", &make_loss, &embed, &unembed, 0, &dembed);
-        fd_check("train/unembed", &make_loss, &embed, &unembed, 1, &dunembed);
-        // embedding rows no batch token touches must have exactly zero grad
-        let unused = 200usize;
-        assert!(tokens.iter().all(|&t| t != unused as i32));
-        assert!(dembed[unused * DIM..(unused + 1) * DIM].iter().all(|&g| g == 0.0));
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=1.0).contains(&metric));
+        let glv = grads.into_leaves();
+        for li in 0..names.len() {
+            fd_check_leaf(
+                &format!("train/{}", names[li]),
+                cfg,
+                &mut leaves,
+                li,
+                &glv[li],
+                count,
+                &lm_loss_of,
+            );
+        }
+
+        let (dloss, _, dgrads) = {
+            let mp = mp_of(cfg, &leaves);
+            loss_and_grads(cfg, &pool, ExecOptions::naive(), &mp, &tokens, StepKind::Distill)
+        };
+        assert!(dloss.is_finite() && dloss > 0.0);
+        let dglv = dgrads.into_leaves();
+        // the distillation loss never reads the unembed: structural zero
+        assert!(dglv.last().unwrap().iter().all(|&g| g == 0.0));
+        for li in 0..names.len() - 1 {
+            fd_check_leaf(
+                &format!("distill/{}", names[li]),
+                cfg,
+                &mut leaves,
+                li,
+                &dglv[li],
+                count,
+                &distill_loss_of,
+            );
+        }
     }
 
     #[test]
-    fn finite_difference_gradient_check_distill_step() {
+    fn finite_difference_gradient_check_ref_lm() {
+        // legacy fixed-exp config: embed + unembed only
+        fd_check_all_leaves(&ModelConfig::ref_lm(), 1234, 16);
+    }
+
+    #[test]
+    fn finite_difference_gradient_check_ref_lm2_all_layer_leaves() {
+        // the learnable config: every params/layer{i}/* leaf, both losses
+        let cfg = ModelConfig::ref_lm2();
+        assert_eq!(cfg.n_leaves(), 14);
+        fd_check_all_leaves(&cfg, 1234, 8);
+    }
+
+    #[test]
+    fn untouched_embedding_rows_have_zero_gradient() {
+        let cfg = ModelConfig::ref_lm2();
         let pool = WorkerPool::new();
-        let opts = ExecOptions::naive();
-        let (embed, unembed) = demo_vecs();
-        let (tokens, _, _) = cyclic_batch();
-        let (loss, _, dembed, dunembed) =
-            loss_and_grads(&pool, opts, &embed, &unembed, &tokens, StepKind::Distill);
-        assert!(loss.is_finite() && loss > 0.0);
-        // the distillation loss never reads the unembed: structural zero
-        assert!(dunembed.iter().all(|&g| g == 0.0));
-        let make_loss = |e: &[f32], u: &[f32]| -> f32 {
-            loss_and_grads(&pool, opts, e, u, &tokens, StepKind::Distill).0
-        };
-        fd_check("distill/embed", &make_loss, &embed, &unembed, 0, &dembed);
+        let (tokens, targets, mask) = cyclic_batch();
+        let (_, leaves) = leaves_of(&cfg, 7);
+        let mp = mp_of(&cfg, &leaves);
+        let (_, _, grads) = loss_and_grads(
+            &cfg,
+            &pool,
+            ExecOptions::naive(),
+            &mp,
+            &tokens,
+            StepKind::Lm { targets: &targets, mask: &mask },
+        );
+        let dm = cfg.d_model();
+        let unused = 200usize;
+        assert!(tokens.iter().all(|&t| t != unused as i32));
+        assert!(grads.dembed[unused * dm..(unused + 1) * dm].iter().all(|&g| g == 0.0));
     }
 
     /// Forward-loss parity gated at 1e-5 relative, gradients at 1e-5
     /// absolute (magnitudes are <= ~1e-2; the lane regrouping measures
     /// ~1e-7 relative).
-    fn assert_oracle_parity(run: impl Fn(ExecOptions) -> (f32, f32, Vec<f32>, Vec<f32>)) {
-        let (loss0, _, de0, du0) = run(ExecOptions::naive());
+    fn assert_oracle_parity(run: impl Fn(ExecOptions) -> (f32, Vec<Vec<f32>>)) {
+        let (loss0, g0) = run(ExecOptions::naive());
         for opts in [ExecOptions::serial(), ExecOptions::serial().with_threads(4)] {
-            let (loss1, _, de1, du1) = run(opts);
+            let (loss1, g1) = run(opts);
             assert!(
                 (loss1 - loss0).abs() <= 1e-5 * loss0.abs().max(1.0),
                 "{opts:?}: loss {loss1} vs oracle {loss0}"
             );
-            for (a, b) in de1.iter().zip(&de0).chain(du1.iter().zip(&du0)) {
-                assert!((a - b).abs() <= 1e-5, "{opts:?}: grad {a} vs oracle {b}");
+            for (la, lb) in g1.iter().zip(&g0) {
+                for (a, b) in la.iter().zip(lb) {
+                    assert!((a - b).abs() <= 1e-5, "{opts:?}: grad {a} vs oracle {b}");
+                }
             }
         }
     }
@@ -1063,39 +1793,114 @@ mod tests {
     #[test]
     fn chunked_simd_path_matches_scalar_oracle() {
         let pool = WorkerPool::new();
-        let (embed, unembed) = demo_vecs();
         let (tokens, targets, mask) = cyclic_batch();
-        assert_oracle_parity(|o| {
-            loss_and_grads(
-                &pool,
-                o,
-                &embed,
-                &unembed,
-                &tokens,
-                StepKind::Lm { targets: &targets, mask: &mask },
-            )
-        });
-        assert_oracle_parity(|o| {
-            loss_and_grads(&pool, o, &embed, &unembed, &tokens, StepKind::Distill)
-        });
+        for tag in ModelConfig::builtin_tags() {
+            let cfg = ModelConfig::for_tag(tag).unwrap();
+            let (_, leaves) = leaves_of(&cfg, 99);
+            assert_oracle_parity(|o| {
+                let mp = mp_of(&cfg, &leaves);
+                let (loss, _, g) = loss_and_grads(
+                    &cfg,
+                    &pool,
+                    o,
+                    &mp,
+                    &tokens,
+                    StepKind::Lm { targets: &targets, mask: &mask },
+                );
+                (loss, g.into_leaves())
+            });
+            assert_oracle_parity(|o| {
+                let mp = mp_of(&cfg, &leaves);
+                let (loss, _, g) =
+                    loss_and_grads(&cfg, &pool, o, &mp, &tokens, StepKind::Distill);
+                (loss, g.into_leaves())
+            });
+        }
+    }
+
+    /// Driving each builtin tag's decode step token-by-token must equal
+    /// the whole-sequence training forward (the quadratic form) at every
+    /// position — the L-layer generalization of the PR-3 property test,
+    /// covering the projections and the learnable feature maps too.
+    #[test]
+    fn decode_step_matches_whole_sequence_forward() {
+        let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+        let pool = WorkerPool::new();
+        for tag in ModelConfig::builtin_tags() {
+            let cfg = ModelConfig::for_tag(tag).unwrap();
+            let (n, v, b) = (cfg.seq, cfg.vocab, cfg.batch);
+            // one token stream, fed to every decode slot == every batch row
+            let row: Vec<i32> = (0..n).map(|t| ((t * 7 + 3) % cfg.vocab) as i32).collect();
+            let mut tokens = Vec::with_capacity(b * n);
+            for _ in 0..b {
+                tokens.extend_from_slice(&row);
+            }
+            let (_, leaves) = leaves_of(&cfg, 0x5EED);
+            let want = {
+                let mp = mp_of(&cfg, &leaves);
+                forward_logits(&cfg, &pool, ExecOptions::serial(), &mp, &tokens)
+            };
+            let params = cfg.init_params(0x5EED);
+            let exe = reg.get(&format!("{tag}_decode_step")).unwrap();
+            let man = exe.manifest.clone();
+            let mut s = Tensor::zeros(DType::F32, &man.inputs[2].shape);
+            let mut z = Tensor::zeros(DType::F32, &man.inputs[3].shape);
+            for t in 0..n {
+                let token = Tensor::from_i32(vec![row[t]; b], &[b]);
+                let pos = Tensor::from_i32(vec![t as i32; b], &[b]);
+                let mut outs = {
+                    let mut refs: Vec<&Tensor> = vec![&token, &pos, &s, &z];
+                    for sl in &man.inputs[4..] {
+                        refs.push(params.get(&sl.name).unwrap());
+                    }
+                    exe.run_refs(&refs).unwrap()
+                };
+                z = outs.pop().unwrap();
+                s = outs.pop().unwrap();
+                let logits = outs.pop().unwrap();
+                let logits = logits.as_f32().unwrap();
+                for slot in 0..b {
+                    let got = &logits[slot * v..(slot + 1) * v];
+                    let wrow = &want[(slot * n + t) * v..(slot * n + t + 1) * v];
+                    for (a, x) in got.iter().zip(wrow) {
+                        let tol = 1e-5 * x.abs().max(1.0);
+                        assert!(
+                            (a - x).abs() <= tol,
+                            "{tag} slot {slot} step {t}: decode {a} vs forward {x}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]
     fn registry_serves_and_validates_train_graphs() {
         let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
-        for name in ["ref_lm_init", "ref_lm_train_step", "ref_lm_distill_step", "ref_lm_eval"] {
-            assert!(reg.contains(name), "{name} missing");
-            assert!(reg.get(name).is_ok(), "{name} failed to load");
+        for tag in ModelConfig::builtin_tags() {
+            for suffix in ["_init", "_train_step", "_distill_step", "_eval"] {
+                let name = format!("{tag}{suffix}");
+                assert!(reg.contains(&name), "{name} missing");
+                assert!(reg.get(&name).is_ok(), "{name} failed to load");
+            }
         }
         let man = reg.manifest("ref_lm_train_step").unwrap();
         assert_eq!(man.meta_usize("batch_size"), Some(TRAIN_BATCH));
         assert_eq!(man.meta_usize("seq_len"), Some(TRAIN_SEQ));
-        assert_eq!(man.meta_usize("vocab"), Some(VOCAB));
+        assert_eq!(man.meta_usize("n_layers"), Some(1));
         assert_eq!(man.inputs.len(), 12);
         assert_eq!(man.outputs.len(), 8);
+        // the learnable tag declares the per-layer leaves
+        let man2 = reg.manifest("ref_lm2_train_step").unwrap();
+        assert_eq!(man2.meta_usize("n_layers"), Some(2));
+        assert_eq!(man2.meta_str("feature"), Some("learnable"));
+        assert_eq!(man2.inputs.len(), 3 * 14 + 6);
+        assert_eq!(man2.outputs.len(), 3 * 14 + 2);
+        assert!(man2.inputs.iter().any(|s| s.name == "params/layer1/fm_q"));
         // geometry look-alikes must be rejected at load
-        let mut bad = builtin_manifest(TrainGraph::Train);
-        bad.inputs[0].shape = vec![VOCAB, 99];
+        let cfg = ModelConfig::ref_lm();
+        let mut bad = builtin_manifest(&cfg, "ref_lm", TrainGraph::Train);
+        bad.inputs[0].shape = vec![cfg.vocab, 99];
         let backend = crate::runtime::ReferenceBackend::new();
         let err = crate::runtime::Backend::load(&backend, std::path::Path::new("x"), &bad)
             .err()
@@ -1109,39 +1914,51 @@ mod tests {
         let s = Session::init(&reg, "ref_lm", 0x5EED).unwrap();
         let demo = crate::runtime::ref_lm_demo_params();
         assert_eq!(s.params.tensors, demo.tensors, "init(0x5EED) must equal the demo params");
+        // the learnable tag inits every declared leaf
+        let s2 = Session::init(&reg, "ref_lm2", 3).unwrap();
+        assert_eq!(s2.params.len(), 14);
+        assert!(s2.params.get("params/layer1/wo").is_ok());
     }
 
     #[test]
     fn train_loss_decreases_over_50_steps() {
         let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
-        let mut s = Session::init(&reg, "ref_lm", 7).unwrap();
-        let batch = session_batch();
-        let last = s.run(50, |_| 1e-2, 0.0, |_| batch.clone()).unwrap();
-        assert!(s.losses.iter().all(|l| l.is_finite()));
-        assert!(last < s.losses[0] * 0.8, "loss did not decrease: {} -> {last}", s.losses[0]);
-        assert_eq!(s.step, 50);
-        // the eval graph agrees with training progress: finite, bounded metric
-        let (loss, acc) = evaluate(&reg, "ref_lm", &s.params, 2, |_| session_batch()).unwrap();
-        assert!(loss.is_finite());
-        assert!((0.0..=1.0).contains(&acc));
+        for tag in ModelConfig::builtin_tags() {
+            let mut s = Session::init(&reg, tag, 7).unwrap();
+            let batch = session_batch();
+            let last = s.run(50, |_| 1e-2, 0.0, |_| batch.clone()).unwrap();
+            assert!(s.losses.iter().all(|l| l.is_finite()));
+            assert!(
+                last < s.losses[0] * 0.8,
+                "{tag}: loss did not decrease: {} -> {last}",
+                s.losses[0]
+            );
+            assert_eq!(s.step, 50);
+            let (loss, acc) = evaluate(&reg, tag, &s.params, 2, |_| session_batch()).unwrap();
+            assert!(loss.is_finite());
+            assert!((0.0..=1.0).contains(&acc));
+        }
     }
 
     #[test]
     fn distill_loss_decreases_over_50_steps() {
         let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
-        let init = Session::init(&reg, "ref_lm", 9).unwrap();
-        let mut s =
-            Session::with_step_artifact(&reg, "ref_lm_distill_step", init.params).unwrap();
-        let batch = tokens_only_batch();
-        for _ in 0..50 {
-            s.train_step(1e-2, 0.0, &batch).unwrap();
+        for tag in ModelConfig::builtin_tags() {
+            let init = Session::init(&reg, tag, 9).unwrap();
+            let mut s =
+                Session::with_step_artifact(&reg, &format!("{tag}_distill_step"), init.params)
+                    .unwrap();
+            let batch = tokens_only_batch();
+            for _ in 0..50 {
+                s.train_step(1e-2, 0.0, &batch).unwrap();
+            }
+            let first: f32 = s.losses[..10].iter().sum::<f32>() / 10.0;
+            let trailing = s.trailing_loss(10);
+            assert!(s.losses.iter().all(|l| l.is_finite()));
+            assert!(
+                trailing < first - 0.05,
+                "{tag}: distill loss did not decrease: first10 {first} vs last10 {trailing}"
+            );
         }
-        let first: f32 = s.losses[..10].iter().sum::<f32>() / 10.0;
-        let trailing = s.trailing_loss(10);
-        assert!(s.losses.iter().all(|l| l.is_finite()));
-        assert!(
-            trailing < first - 0.05,
-            "distill loss did not decrease: first10 {first} vs last10 {trailing}"
-        );
     }
 }

@@ -13,8 +13,10 @@
 //! * `fig6_{softmax,hedgehog,taylor}_n*` — the Fig 6 scaling artifacts:
 //!   softmax, the data-independent Hedgehog map `[exp(x), exp(-x)]`
 //!   (Eq. 6), and 2nd-degree Taylor features (Sec 4.1).
-//! * `ref_lm_decode_step` — a builtin one-layer Hedgehog LM decode step
-//!   (embed -> per-head linear attention over the carried (S, z) state ->
+//! * `<tag>_decode_step` for each builtin `ModelConfig` tag (`ref_lm`,
+//!   `ref_lm2`) — Hedgehog LM decode steps (embed -> per layer: optional
+//!   q/k/v/o projections + fixed or *learnable* feature maps + linear
+//!   attention over the carried per-layer (S, z) state, residual ->
 //!   unembed), so the serving engine, the batcher, and the decode bench
 //!   run hermetically with no compiled model graphs. See `RefDecode`.
 //!
@@ -46,15 +48,17 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
 use super::backend::{Backend, ExecOptions, Executable as BackendExecutable};
+use super::config::ModelConfig;
 use super::json::Json;
 use super::manifest::{Manifest, Slot};
 use super::params::ParamStore;
 use super::pool::WorkerPool;
+use super::ref_lm::{LayerParams, ModelParams};
 use super::simd;
 use super::tensor::{DType, Tensor};
 
@@ -73,20 +77,24 @@ const FIG6_SOFTMAX_NS: &[usize] = &[256, 512, 1024, 2048, 4096];
 const FIG6_HEDGEHOG_NS: &[usize] = &[256, 512, 1024, 2048, 4096, 8192, 16384];
 const FIG6_TAYLOR_NS: &[usize] = &[256, 512, 1024, 2048];
 
-/// Geometry of the builtin `ref_lm_decode_step` artifact: a one-layer,
-/// two-head Hedgehog LM whose decode step the backend interprets natively
-/// (the only model-shaped graph with a reference interpretation). Small
-/// on purpose — it exists to make the serve layer hermetic and to give
-/// the decode hot path something real to execute, not to be a good LM.
+/// The builtin model tags whose decode/train graphs the backend
+/// interprets natively. Geometry and leaves come from
+/// `runtime::config::ModelConfig::for_tag`; the models are small on
+/// purpose — they exist to make the serve/train layers hermetic and to
+/// give the hot paths something real to execute, not to be good LMs.
 pub const REF_LM_TAG: &str = "ref_lm";
-const REF_LM_NAME: &str = "ref_lm_decode_step";
-pub(crate) const REF_LM_VOCAB: usize = 256;
-pub(crate) const REF_LM_BATCH: usize = 4;
-pub(crate) const REF_LM_HEADS: usize = 2;
-pub(crate) const REF_LM_HEAD_DIM: usize = 16;
-pub(crate) const REF_LM_DIM: usize = REF_LM_HEADS * REF_LM_HEAD_DIM;
-/// Hedgehog features double the head dim: phi(x) = [exp(x), exp(-x)].
-pub(crate) const REF_LM_DP: usize = 2 * REF_LM_HEAD_DIM;
+/// The 2-layer learnable-feature-map builtin (projections + `fm` leaves).
+pub const REF_LM2_TAG: &str = "ref_lm2";
+
+/// Map `<tag>_decode_step` to its builtin config, if any.
+fn decode_for(name: &str) -> Option<(&'static str, ModelConfig)> {
+    for tag in ModelConfig::builtin_tags() {
+        if name.strip_prefix(tag) == Some("_decode_step") {
+            return Some((tag, ModelConfig::for_tag(tag).unwrap()));
+        }
+    }
+    None
+}
 
 /// Below this estimated flop count, auto threading (`threads == 0`) stays
 /// serial: even pooled dispatch costs a lock + wakeup, which would
@@ -238,16 +246,20 @@ impl Backend for ReferenceBackend {
     }
 
     fn load(&self, _dir: &Path, manifest: &Manifest) -> Result<Box<dyn BackendExecutable>> {
-        if manifest.name == REF_LM_NAME {
-            validate_decode_manifest(manifest)?;
+        if let Some((tag, cfg)) = decode_for(&manifest.name) {
+            validate_decode_manifest(tag, &cfg, manifest)?;
             return Ok(Box::new(RefDecode {
+                cfg,
                 opts: Arc::clone(&self.opts),
                 pool: Arc::clone(&self.pool),
+                scratch: Mutex::new(Vec::new()),
             }));
         }
-        if let Some(graph) = super::ref_lm::graph_for(&manifest.name) {
-            super::ref_lm::validate_manifest(graph, manifest)?;
+        if let Some((tag, cfg, graph)) = super::ref_lm::graph_for(&manifest.name) {
+            super::ref_lm::validate_manifest(tag, &cfg, graph, manifest)?;
             return Ok(super::ref_lm::load_graph(
+                tag,
+                cfg,
                 graph,
                 Arc::clone(&self.opts),
                 Arc::clone(&self.pool),
@@ -305,8 +317,10 @@ impl Backend for ReferenceBackend {
         let mut ms = vec![
             builtin_kernel_manifest("kernel_linear_attention", "linear_attention"),
             builtin_kernel_manifest("kernel_softmax_attention", "softmax_attention"),
-            builtin_decode_manifest(),
         ];
+        for tag in ModelConfig::builtin_tags() {
+            ms.push(builtin_decode_manifest(&ModelConfig::for_tag(tag).unwrap(), tag));
+        }
         for &(attn, ns) in &[
             ("softmax", FIG6_SOFTMAX_NS),
             ("hedgehog", FIG6_HEDGEHOG_NS),
@@ -375,11 +389,12 @@ fn builtin_fig6_manifest(attn: &str, n: usize) -> Manifest {
 // Builtin decode-step artifact (the serve layer's hermetic hot path)
 // ---------------------------------------------------------------------------
 
-/// Manifest for the builtin `ref_lm_decode_step` artifact, following the
-/// `<tag>_decode_step` contract the serving engine drives: token/pos plus
-/// the per-layer (S, z) recurrent state and named parameter leaves in,
-/// logits plus the advanced state out.
-fn builtin_decode_manifest() -> Manifest {
+/// Manifest for one builtin `<tag>_decode_step` artifact, following the
+/// contract the serving engine drives: token/pos plus the per-layer
+/// (S, z) recurrent state and named parameter leaves in, logits plus the
+/// advanced state out. The parameter slots are exactly the config's
+/// sorted leaf layout, shared with the training graphs.
+fn builtin_decode_manifest(cfg: &ModelConfig, tag: &str) -> Manifest {
     let f = |name: &str, shape: &[usize]| Slot {
         name: name.to_string(),
         shape: shape.to_vec(),
@@ -390,32 +405,31 @@ fn builtin_decode_manifest() -> Manifest {
         shape: shape.to_vec(),
         dtype: DType::I32,
     };
-    let (b, h, d, dp) = (REF_LM_BATCH, REF_LM_HEADS, REF_LM_HEAD_DIM, REF_LM_DP);
-    let s_shape = [1, b, h, dp, d];
-    let z_shape = [1, b, h, dp];
+    let (l, b, h, d, dp) = (cfg.layers, cfg.batch, cfg.heads, cfg.head_dim, cfg.dp());
+    let s_shape = [l, b, h, dp, d];
+    let z_shape = [l, b, h, dp];
     let mut meta = BTreeMap::new();
     for (key, val) in [
-        ("vocab", REF_LM_VOCAB),
+        ("vocab", cfg.vocab),
         ("batch", b),
         ("heads", h),
-        ("d_model", REF_LM_DIM),
+        ("d_model", cfg.d_model()),
+        ("n_layers", l),
     ] {
         meta.insert(key.to_string(), Json::Num(val as f64));
     }
+    meta.insert("family".to_string(), Json::Str(tag.to_string()));
+    meta.insert("feature".to_string(), Json::Str(cfg.feature.name().to_string()));
     meta.insert("graph".to_string(), Json::Str("decode_step".to_string()));
     meta.insert("kernel".to_string(), Json::Str("hedgehog".to_string()));
     meta.insert("backend".to_string(), Json::Str("reference".to_string()));
+    let mut inputs =
+        vec![i("token", &[b]), i("pos", &[b]), f("s", &s_shape), f("z", &z_shape)];
+    inputs.extend(cfg.leaf_slots("params"));
     Manifest {
-        name: REF_LM_NAME.to_string(),
-        inputs: vec![
-            i("token", &[b]),
-            i("pos", &[b]),
-            f("s", &s_shape),
-            f("z", &z_shape),
-            f("params/embed", &[REF_LM_VOCAB, REF_LM_DIM]),
-            f("params/unembed", &[REF_LM_DIM, REF_LM_VOCAB]),
-        ],
-        outputs: vec![f("logits", &[b, REF_LM_VOCAB]), f("s", &s_shape), f("z", &z_shape)],
+        name: format!("{tag}_decode_step"),
+        inputs,
+        outputs: vec![f("logits", &[b, cfg.vocab]), f("s", &s_shape), f("z", &z_shape)],
         meta,
     }
 }
@@ -426,8 +440,8 @@ fn builtin_decode_manifest() -> Manifest {
 /// look-alikes loudly instead of misinterpreting them — the engine trusts
 /// meta like `vocab` to slice the logits buffer, so a drifted meta value
 /// would turn into out-of-bounds rows, not just wrong math).
-fn validate_decode_manifest(manifest: &Manifest) -> Result<()> {
-    let want = builtin_decode_manifest();
+fn validate_decode_manifest(tag: &str, cfg: &ModelConfig, manifest: &Manifest) -> Result<()> {
+    let want = builtin_decode_manifest(cfg, tag);
     let slots_eq = |a: &[Slot], b: &[Slot]| {
         a.len() == b.len()
             && a.iter()
@@ -439,8 +453,14 @@ fn validate_decode_manifest(manifest: &Manifest) -> Result<()> {
         || manifest.meta != want.meta
     {
         bail!(
-            "{REF_LM_NAME}: manifest does not match the builtin decode geometry \
-             (B={REF_LM_BATCH}, H={REF_LM_HEADS}, d={REF_LM_HEAD_DIM}, V={REF_LM_VOCAB})"
+            "{}: manifest does not match the builtin {tag} decode geometry \
+             (L={}, B={}, H={}, d={}, V={})",
+            manifest.name,
+            cfg.layers,
+            cfg.batch,
+            cfg.heads,
+            cfg.head_dim,
+            cfg.vocab
         );
     }
     Ok(())
@@ -452,7 +472,7 @@ fn validate_decode_manifest(manifest: &Manifest) -> Result<()> {
 /// `ref_lm_init` with a fixed seed, so the demo layout and the trained
 /// layout are the same by construction.
 pub fn ref_lm_demo_params() -> ParamStore {
-    super::ref_lm::init_param_store(0x5EED)
+    ModelConfig::ref_lm().init_params(0x5EED)
 }
 
 struct RefKernel {
@@ -634,6 +654,37 @@ fn run_linear(
     let chunk = opts.chunk_size;
     let flops = (bh * n * dp * (dv + 2)) as f64 * 2.0;
     let threads = auto_threads(opts, flops);
+    if threads == 1 {
+        // Single-thread reroute (PR 5): the span two-pass buys nothing
+        // without parallelism, and the intra-chunk quadratic term costs
+        // O(n C (Dp + Dv)) flops the row recurrence never pays — which
+        // made chunked linear attention *slower* than the naive path at
+        // t = 1 (0.63x, measured in PR 4). Run the single-pass state
+        // carry instead: naive loop structure, SIMD micro-kernels,
+        // block-wise feature extraction.
+        let cmax = chunk.min(n).max(1);
+        let mut qf = vec![0.0f32; cmax * dp];
+        let mut kf = vec![0.0f32; cmax * dp];
+        let mut s = vec![0.0f32; dp * dv];
+        let mut z = vec![0.0f32; dp];
+        for i in 0..bh {
+            s.fill(0.0);
+            z.fill(0.0);
+            linear_head_single_pass(
+                fm,
+                &q[i * n * d..(i + 1) * n * d],
+                &k[i * n * d..(i + 1) * n * d],
+                &v[i * n * dv..(i + 1) * n * dv],
+                &mut out[i * n * dv..(i + 1) * n * dv],
+                chunk,
+                d,
+                dv,
+                dp,
+                (&mut qf, &mut kf, &mut s, &mut z),
+            );
+        }
+        return;
+    }
     let bounds = span_bounds(n, threads.div_ceil(bh), false);
     let nspans = bounds.len() - 1;
     let block = dp * dv + dp;
@@ -711,6 +762,51 @@ fn run_linear(
             dp,
         );
     });
+}
+
+/// Single-pass chunked state carry for one (batch, head): per block,
+/// features are extracted into reusable scratch, then each row folds its
+/// key into (S, z) and reads its output from the carried state — the
+/// decode recurrence at sequence scale, in the naive oracle's
+/// fold-then-read order but with the 8-lane kernels. Used whenever the
+/// dispatch resolves to one thread (see `run_linear`).
+#[allow(clippy::too_many_arguments)]
+fn linear_head_single_pass(
+    fm: FeatureMap,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    out: &mut [f32],
+    chunk: usize,
+    d: usize,
+    dv: usize,
+    dp: usize,
+    (qf, kf, s, z): (&mut [f32], &mut [f32], &mut [f32], &mut [f32]),
+) {
+    let n = q.len() / d;
+    let cmax = chunk.min(n).max(1);
+    let mut c0 = 0usize;
+    while c0 < n {
+        let rows = cmax.min(n - c0);
+        for r in 0..rows {
+            let t = c0 + r;
+            fm.write(&k[t * d..(t + 1) * d], &mut kf[r * dp..(r + 1) * dp]);
+            fm.write(&q[t * d..(t + 1) * d], &mut qf[r * dp..(r + 1) * dp]);
+        }
+        for r in 0..rows {
+            let t = c0 + r;
+            simd::rank1_update(s, z, &kf[r * dp..(r + 1) * dp], &v[t * dv..(t + 1) * dv]);
+            let qr = &qf[r * dp..(r + 1) * dp];
+            let den = simd::dot(qr, z) + EPS;
+            let or = &mut out[t * dv..(t + 1) * dv];
+            simd::scaled_add(or, 0.0, qr[0], &s[..dv]);
+            for (p, &qp) in qr.iter().enumerate().skip(1) {
+                simd::axpy(or, qp, &s[p * dv..(p + 1) * dv]);
+            }
+            simd::scale(or, den.recip());
+        }
+        c0 += rows;
+    }
 }
 
 /// Accumulate sum(phi(k) v^T) and sum(phi(k)) over rows [r0, r1) into
@@ -1023,127 +1119,341 @@ fn softmax_head_naive(
 // Builtin decode step execution
 // ---------------------------------------------------------------------------
 
-/// Executable for `ref_lm_decode_step`: one token per slot through a
-/// one-layer Hedgehog LM. Per slot b:
+/// Executable for the builtin `<tag>_decode_step` artifacts: one token
+/// per slot through the config's Hedgehog LM. Per slot b:
 ///
-///   x        = embed[token_b]                       (D,)
-///   per head h, on x_h = x[h d .. (h+1) d] with q = k = v = x_h:
-///     phi    = [exp(x_h), exp(-x_h)]                (Dp,)
-///     S_bh  += phi x_h^T,  z_bh += phi              (state advance)
-///     y_h    = (phi . S_bh) / (phi . z_bh + eps)    (d,)
-///   logits_b = concat(y_h) @ unembed                (V,)
+///   x = embed[token_b]                                  (D,)
+///   per layer l:
+///     q/k/v    = x wq/wk/wv (Learnable) or q = k = v = x
+///     per head h:
+///       phi_k  = [exp(fm_k k_h), exp(-fm_k k_h)]        (Dp,)
+///       S_lbh += phi_k v_h^T,  z_lbh += phi_k           (state advance)
+///       phi_q  = [exp(fm_q q_h), exp(-fm_q q_h)]
+///       y_h    = (phi_q . S_lbh) / (phi_q . z_lbh + eps)
+///     x        = x + y wo (Learnable) or x = y (FixedExp)
+///   logits_b   = x @ unembed                            (V,)
 ///
-/// — exactly the (S, z) recurrence of `linear_head_naive` specialized to
-/// n = 1, so the engine's O(1)-per-token claim is executed, not simulated.
-/// Slots are independent; with explicit `threads > 1` they run as
-/// parallel tasks on the backend's pool (auto stays serial: a decode step
-/// is far below the parallelism threshold). The `pos` input is accepted
-/// for manifest parity with compiled decode graphs but unused — the
-/// recurrent state, not the position, drives the math.
+/// — exactly the (S, z) recurrence of the training forward's quadratic
+/// form specialized to n = 1, so the engine's O(1)-per-token claim is
+/// executed, not simulated (property-tested against the whole-sequence
+/// forward for both builtin configs). Slots are independent; with
+/// explicit `threads > 1` they run as parallel tasks on the backend's
+/// pool (auto stays serial: a decode step is far below the parallelism
+/// threshold). The serial path is *allocation-free* in steady state for
+/// `FixedExp` configs — per-slot scratch persists behind a mutex and
+/// outputs are written in place via `execute_into` (asserted at zero by
+/// `rust/tests/alloc_probe.rs` on the `ref_lm` engine); `Learnable`
+/// configs additionally pay one small `Vec<LayerParams>` per step in
+/// `ModelParams::from_tensors` (constant, position-independent).
+/// The `pos` input is accepted for manifest parity with compiled decode
+/// graphs but unused — the recurrent state, not the position, drives
+/// the math.
 struct RefDecode {
+    cfg: ModelConfig,
     opts: Arc<SharedExecOptions>,
     pool: Arc<WorkerPool>,
+    /// Persistent per-slot scratch (x/y rows, projected q/k/v, feature
+    /// buffers), lazily sized on first execute.
+    scratch: Mutex<Vec<f32>>,
 }
 
-/// Per-slot decode work item: disjoint views of the slot's state and
-/// logits rows.
+/// Scratch floats per decode slot.
+fn slot_scratch_len(cfg: &ModelConfig) -> usize {
+    let (dm, d, dp) = (cfg.d_model(), cfg.head_dim, cfg.dp());
+    if cfg.learnable() {
+        // x, y, q, k, v rows + pre + phi_q + phi_k
+        5 * dm + d + 2 * dp
+    } else {
+        // x, y rows + phi
+        2 * dm + dp
+    }
+}
+
+/// One layer's decode update for one slot: advances that layer's (H, Dp,
+/// Dv) / (H, Dp) state blocks and rewrites the residual stream `x` in
+/// place. `rest` is the slot scratch after the x row.
+fn decode_layer(
+    cfg: &ModelConfig,
+    lp: Option<&LayerParams>,
+    s_l: &mut [f32],
+    z_l: &mut [f32],
+    x: &mut [f32],
+    rest: &mut [f32],
+) {
+    let (h, d, dp, dm) = (cfg.heads, cfg.head_dim, cfg.dp(), cfg.d_model());
+    let dd = d * d;
+    match lp {
+        Some(lp) => {
+            let (y, rest) = rest.split_at_mut(dm);
+            let (q, rest) = rest.split_at_mut(dm);
+            let (k, rest) = rest.split_at_mut(dm);
+            let (v, rest) = rest.split_at_mut(dm);
+            let (pre, rest) = rest.split_at_mut(d);
+            let (phi_q, phi_k) = rest.split_at_mut(dp);
+            for (out, w) in [(&mut *q, lp.wq), (&mut *k, lp.wk), (&mut *v, lp.wv)] {
+                simd::scaled_add(out, 0.0, x[0], &w[..dm]);
+                for (i, &xi) in x.iter().enumerate().skip(1) {
+                    simd::axpy(out, xi, &w[i * dm..(i + 1) * dm]);
+                }
+            }
+            for head in 0..h {
+                let fm_k = &lp.fm_k[head * dd..(head + 1) * dd];
+                let fm_q = &lp.fm_q[head * dd..(head + 1) * dd];
+                let kh = &k[head * d..(head + 1) * d];
+                let vh = &v[head * d..(head + 1) * d];
+                let qh = &q[head * d..(head + 1) * d];
+                for (r, p) in pre.iter_mut().enumerate() {
+                    *p = simd::dot(kh, &fm_k[r * d..(r + 1) * d]);
+                }
+                {
+                    let (pos, neg) = phi_k.split_at_mut(d);
+                    simd::exp_pos_neg(pre, pos, neg);
+                }
+                let sh = &mut s_l[head * dp * d..(head + 1) * dp * d];
+                let zh = &mut z_l[head * dp..(head + 1) * dp];
+                // State advances first: the current token attends to
+                // itself, matching the quadratic form's inclusive rows.
+                simd::rank1_update(sh, zh, phi_k, vh);
+                for (r, p) in pre.iter_mut().enumerate() {
+                    *p = simd::dot(qh, &fm_q[r * d..(r + 1) * d]);
+                }
+                {
+                    let (pos, neg) = phi_q.split_at_mut(d);
+                    simd::exp_pos_neg(pre, pos, neg);
+                }
+                let den = simd::dot(phi_q, zh) + EPS;
+                let yh = &mut y[head * d..(head + 1) * d];
+                simd::scaled_add(yh, 0.0, phi_q[0], &sh[..d]);
+                for (p, &qp) in phi_q.iter().enumerate().skip(1) {
+                    simd::axpy(yh, qp, &sh[p * d..(p + 1) * d]);
+                }
+                simd::scale(yh, den.recip());
+            }
+            // residual + output projection: x += y wo
+            for (j, &yj) in y.iter().enumerate() {
+                simd::axpy(x, yj, &lp.wo[j * dm..(j + 1) * dm]);
+            }
+        }
+        None => {
+            let (y, rest) = rest.split_at_mut(dm);
+            let (phi, _) = rest.split_at_mut(dp);
+            for head in 0..h {
+                let xh = &x[head * d..(head + 1) * d];
+                {
+                    let (pos, neg) = phi.split_at_mut(d);
+                    simd::exp_pos_neg(xh, pos, neg);
+                }
+                let sh = &mut s_l[head * dp * d..(head + 1) * dp * d];
+                let zh = &mut z_l[head * dp..(head + 1) * dp];
+                simd::rank1_update(sh, zh, phi, xh);
+                let den = simd::dot(phi, zh) + EPS;
+                let yh = &mut y[head * d..(head + 1) * d];
+                simd::scaled_add(yh, 0.0, phi[0], &sh[..d]);
+                for (p, &qp) in phi.iter().enumerate().skip(1) {
+                    simd::axpy(yh, qp, &sh[p * d..(p + 1) * d]);
+                }
+                simd::scale(yh, den.recip());
+            }
+            // FixedExp stacks by replacement
+            x.copy_from_slice(y);
+        }
+    }
+}
+
+/// One slot's full decode step against the whole (L, B, H, ...) state
+/// buffers, addressed by slot index — the serial in-place path.
+#[allow(clippy::too_many_arguments)]
+fn decode_slot_inline(
+    cfg: &ModelConfig,
+    mp: &ModelParams,
+    token: i32,
+    slot: usize,
+    s: &mut [f32],
+    z: &mut [f32],
+    logits: &mut [f32],
+    scratch: &mut [f32],
+) {
+    let (b, h, d, dp, dm, v) =
+        (cfg.batch, cfg.heads, cfg.head_dim, cfg.dp(), cfg.d_model(), cfg.vocab);
+    // Idle batcher slots feed token 0; any in-range id embeds. Wrap
+    // out-of-range ids instead of failing mid-batch.
+    let tok = token.rem_euclid(v as i32) as usize;
+    let (x, rest) = scratch.split_at_mut(dm);
+    x.copy_from_slice(&mp.embed[tok * dm..(tok + 1) * dm]);
+    for l in 0..cfg.layers {
+        let sb = (l * b + slot) * h * dp * d;
+        let zb = (l * b + slot) * h * dp;
+        decode_layer(
+            cfg,
+            mp.layers.get(l),
+            &mut s[sb..sb + h * dp * d],
+            &mut z[zb..zb + h * dp],
+            x,
+            rest,
+        );
+    }
+    simd::scaled_add(logits, 0.0, x[0], &mp.unembed[..v]);
+    for (j, &xj) in x.iter().enumerate().skip(1) {
+        simd::axpy(logits, xj, &mp.unembed[j * v..(j + 1) * v]);
+    }
+}
+
+/// Per-slot decode work item for the pool path: disjoint views of the
+/// slot's per-layer state blocks, logits row, and scratch region.
 struct DecodeSlot<'a> {
     token: i32,
-    s: &'a mut [f32],
-    z: &'a mut [f32],
+    s: Vec<&'a mut [f32]>,
+    z: Vec<&'a mut [f32]>,
     logits: &'a mut [f32],
+    scratch: &'a mut [f32],
 }
 
-impl BackendExecutable for RefDecode {
-    fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        // Manifest order: token, pos, s, z, params/embed, params/unembed
-        // (shape/dtype already validated by the registry against the
-        // manifest, and the manifest against the builtin at load).
-        if inputs.len() != 6 {
-            bail!("{REF_LM_NAME} expects 6 inputs, got {}", inputs.len());
+/// Run one pooled decode slot (same math as `decode_slot_inline`, over
+/// pre-split per-layer state views).
+fn run_decode_slot(cfg: &ModelConfig, mp: &ModelParams, t: DecodeSlot) {
+    let (dm, v) = (cfg.d_model(), cfg.vocab);
+    let DecodeSlot { token, s, z, logits, scratch } = t;
+    let tok = token.rem_euclid(v as i32) as usize;
+    let (x, rest) = scratch.split_at_mut(dm);
+    x.copy_from_slice(&mp.embed[tok * dm..(tok + 1) * dm]);
+    for (l, (s_l, z_l)) in s.into_iter().zip(z).enumerate() {
+        decode_layer(cfg, mp.layers.get(l), s_l, z_l, x, rest);
+    }
+    simd::scaled_add(logits, 0.0, x[0], &mp.unembed[..v]);
+    for (j, &xj) in x.iter().enumerate().skip(1) {
+        simd::axpy(logits, xj, &mp.unembed[j * v..(j + 1) * v]);
+    }
+}
+
+impl RefDecode {
+    /// The decode core shared by `execute` (allocating) and
+    /// `execute_into` (in-place): advance the state from `inputs` into
+    /// the provided output buffers.
+    fn fill(
+        &self,
+        inputs: &[&Tensor],
+        logits: &mut [f32],
+        s_out: &mut [f32],
+        z_out: &mut [f32],
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        // Manifest order: token, pos, s, z, then the sorted params
+        // leaves (shape/dtype already validated by the registry against
+        // the manifest, and the manifest against the builtin at load).
+        if inputs.len() != 4 + cfg.n_leaves() {
+            bail!(
+                "decode step expects {} inputs, got {}",
+                4 + cfg.n_leaves(),
+                inputs.len()
+            );
         }
         let token = inputs[0].as_i32()?;
         let s_in = inputs[2].as_f32()?;
         let z_in = inputs[3].as_f32()?;
-        let embed = inputs[4].as_f32()?;
-        let unembed = inputs[5].as_f32()?;
-        let b = REF_LM_BATCH;
-        let (h, d, dp, v) = (REF_LM_HEADS, REF_LM_HEAD_DIM, REF_LM_DP, REF_LM_VOCAB);
-
-        // Advance state out-of-place: the engine owns the input tensors
-        // and swaps these outputs in (double-buffering at the serve
-        // layer). Allocation count here is a constant 3 buffers + tasks.
-        let mut s_out = s_in.to_vec();
-        let mut z_out = z_in.to_vec();
-        let mut logits = vec![0.0f32; b * v];
+        let (b, h, d, dp, dm, v) =
+            (cfg.batch, cfg.heads, cfg.head_dim, cfg.dp(), cfg.d_model(), cfg.vocab);
+        if logits.len() != b * v || s_out.len() != s_in.len() || z_out.len() != z_in.len() {
+            bail!("decode step: output buffer shapes do not match the manifest");
+        }
+        s_out.copy_from_slice(s_in);
+        z_out.copy_from_slice(z_in);
+        let mp = ModelParams::from_tensors(cfg, &inputs[4..])?;
 
         let opts = self.opts.load();
-        let flops = (b * (h * dp * d * 4 + REF_LM_DIM * v)) as f64;
+        let proj = if cfg.learnable() { 4 * dm * dm } else { 0 };
+        let flops = (b * (cfg.layers * (h * dp * d * 4 + proj) + dm * v)) as f64;
         let threads = auto_threads(opts, flops).min(b);
-
-        let mut tasks = Vec::with_capacity(b);
-        {
-            let mut s_rest = s_out.as_mut_slice();
-            let mut z_rest = z_out.as_mut_slice();
-            let mut l_rest = logits.as_mut_slice();
-            for slot in 0..b {
-                let (s_cur, s_tail) = std::mem::take(&mut s_rest).split_at_mut(h * dp * d);
-                let (z_cur, z_tail) = std::mem::take(&mut z_rest).split_at_mut(h * dp);
-                let (l_cur, l_tail) = std::mem::take(&mut l_rest).split_at_mut(v);
-                s_rest = s_tail;
-                z_rest = z_tail;
-                l_rest = l_tail;
-                tasks.push(DecodeSlot { token: token[slot], s: s_cur, z: z_cur, logits: l_cur });
-            }
+        let per = slot_scratch_len(cfg);
+        // Recover a poisoned lock instead of propagating the panic: the
+        // scratch carries no cross-step invariant (every slot region is
+        // fully overwritten before it is read), and the WorkerPool's
+        // contract is that a panicked task breaks the one execute call,
+        // not the executable forever.
+        let mut guard = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
+        if guard.len() < b * per {
+            guard.resize(b * per, 0.0);
         }
-        self.pool.run_tasks(threads, tasks, |t: DecodeSlot| {
-            decode_slot(t.token, embed, unembed, t.s, t.z, t.logits);
-        });
-
-        Ok(vec![
-            Tensor::from_f32(logits, &[b, v]),
-            Tensor::from_f32(s_out, &[1, b, h, dp, d]),
-            Tensor::from_f32(z_out, &[1, b, h, dp]),
-        ])
+        if threads <= 1 {
+            for slot in 0..b {
+                let sc = &mut guard[slot * per..(slot + 1) * per];
+                decode_slot_inline(
+                    cfg,
+                    &mp,
+                    token[slot],
+                    slot,
+                    s_out,
+                    z_out,
+                    &mut logits[slot * v..(slot + 1) * v],
+                    sc,
+                );
+            }
+        } else {
+            // distribute each slot's per-layer state blocks (the (L, B,
+            // ...) layout is layer-major, so one slot's blocks are not
+            // contiguous)
+            let mut slot_s: Vec<Vec<&mut [f32]>> =
+                (0..b).map(|_| Vec::with_capacity(cfg.layers)).collect();
+            let mut slot_z: Vec<Vec<&mut [f32]>> =
+                (0..b).map(|_| Vec::with_capacity(cfg.layers)).collect();
+            let mut s_rest = &mut s_out[..];
+            let mut z_rest = &mut z_out[..];
+            for _l in 0..cfg.layers {
+                for slot in 0..b {
+                    let (blk, r) = std::mem::take(&mut s_rest).split_at_mut(h * dp * d);
+                    s_rest = r;
+                    slot_s[slot].push(blk);
+                    let (blk, r) = std::mem::take(&mut z_rest).split_at_mut(h * dp);
+                    z_rest = r;
+                    slot_z[slot].push(blk);
+                }
+            }
+            let mut tasks = Vec::with_capacity(b);
+            let mut l_rest = &mut logits[..];
+            let mut sc_rest = &mut guard[..];
+            for (slot, (s_v, z_v)) in slot_s.into_iter().zip(slot_z).enumerate() {
+                let (lg, r) = std::mem::take(&mut l_rest).split_at_mut(v);
+                l_rest = r;
+                let (sc, r) = std::mem::take(&mut sc_rest).split_at_mut(per);
+                sc_rest = r;
+                tasks.push(DecodeSlot {
+                    token: token[slot],
+                    s: s_v,
+                    z: z_v,
+                    logits: lg,
+                    scratch: sc,
+                });
+            }
+            self.pool.run_tasks(threads, tasks, |t: DecodeSlot| run_decode_slot(cfg, &mp, t));
+        }
+        Ok(())
     }
 }
 
-/// One slot's decode step (see `RefDecode` for the math). Scratch lives
-/// on the stack (the geometry is const), so this never allocates.
-fn decode_slot(
-    token: i32,
-    embed: &[f32],
-    unembed: &[f32],
-    s: &mut [f32],
-    z: &mut [f32],
-    logits: &mut [f32],
-) {
-    let (hh, d, dp, v) = (REF_LM_HEADS, REF_LM_HEAD_DIM, REF_LM_DP, REF_LM_VOCAB);
-    // Idle batcher slots feed token 0; any in-range id embeds. Wrap
-    // out-of-range ids instead of failing mid-batch.
-    let tok = token.rem_euclid(v as i32) as usize;
-    let x = &embed[tok * REF_LM_DIM..(tok + 1) * REF_LM_DIM];
-    let mut phi = [0.0f32; REF_LM_DP];
-    let mut y = [0.0f32; REF_LM_DIM];
-    for head in 0..hh {
-        let xh = &x[head * d..(head + 1) * d];
-        FeatureMap::Hedgehog.write(xh, &mut phi);
-        let sh = &mut s[head * dp * d..(head + 1) * dp * d];
-        let zh = &mut z[head * dp..(head + 1) * dp];
-        // State advances first: the current token attends to itself,
-        // matching the naive oracle's fold-then-read order.
-        simd::rank1_update(sh, zh, &phi, xh);
-        let den = simd::dot(&phi, zh) + EPS;
-        let yh = &mut y[head * d..(head + 1) * d];
-        simd::scaled_add(yh, 0.0, phi[0], &sh[..d]);
-        for (p, &qp) in phi.iter().enumerate().skip(1) {
-            simd::axpy(yh, qp, &sh[p * d..(p + 1) * d]);
-        }
-        simd::scale(yh, den.recip());
+impl BackendExecutable for RefDecode {
+    fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let cfg = &self.cfg;
+        let (l, b, h, d, dp, v) =
+            (cfg.layers, cfg.batch, cfg.heads, cfg.head_dim, cfg.dp(), cfg.vocab);
+        let mut logits = vec![0.0f32; b * v];
+        let mut s_out = vec![0.0f32; l * b * h * dp * d];
+        let mut z_out = vec![0.0f32; l * b * h * dp];
+        self.fill(inputs, &mut logits, &mut s_out, &mut z_out)?;
+        Ok(vec![
+            Tensor::from_f32(logits, &[b, v]),
+            Tensor::from_f32(s_out, &[l, b, h, dp, d]),
+            Tensor::from_f32(z_out, &[l, b, h, dp]),
+        ])
     }
-    simd::scaled_add(logits, 0.0, y[0], &unembed[..v]);
-    for (j, &yj) in y.iter().enumerate().skip(1) {
-        simd::axpy(logits, yj, &unembed[j * v..(j + 1) * v]);
+
+    fn execute_into(&self, inputs: &[&Tensor], outputs: &mut [Tensor]) -> Result<()> {
+        // Zero-allocation steady state: write logits and the advanced
+        // (S, z) straight into the engine's back buffers.
+        if outputs.len() != 3 {
+            bail!("decode step writes 3 outputs, got {} buffers", outputs.len());
+        }
+        let (a, rest) = outputs.split_at_mut(1);
+        let (b, c) = rest.split_at_mut(1);
+        self.fill(inputs, a[0].as_f32_mut()?, b[0].as_f32_mut()?, c[0].as_f32_mut()?)
     }
 }
 
@@ -1389,7 +1699,11 @@ mod tests {
         assert_eq!(kernel_for("fig6_hedgehog_n256"), Some(Kernel::Linear(FeatureMap::Hedgehog)));
         assert_eq!(kernel_for("fig6_taylor_n512"), Some(Kernel::Linear(FeatureMap::Taylor)));
         assert_eq!(kernel_for("ar_softmax_train_step"), None);
-        assert_eq!(kernel_for(REF_LM_NAME), None, "decode routes via its own branch");
+        assert_eq!(kernel_for("ref_lm_decode_step"), None, "decode routes via its own branch");
+        assert_eq!(decode_for("ref_lm_decode_step").map(|(t, _)| t), Some("ref_lm"));
+        assert_eq!(decode_for("ref_lm2_decode_step").map(|(t, _)| t), Some("ref_lm2"));
+        assert_eq!(decode_for("ref_lm3_decode_step"), None);
+        assert_eq!(decode_for("ref_lm_train_step"), None);
     }
 
     #[test]
@@ -1408,26 +1722,29 @@ mod tests {
     #[test]
     fn decode_manifest_lookalikes_rejected() {
         let backend = ReferenceBackend::new();
-        let mut m = builtin_decode_manifest();
-        m.inputs[2].shape = vec![1, REF_LM_BATCH, REF_LM_HEADS, REF_LM_DP, 99];
-        let err = backend.load(Path::new("unused"), &m).unwrap_err();
-        assert!(err.to_string().contains("builtin decode geometry"), "{err:#}");
-        // Meta drift is just as dangerous: the engine slices logits by
-        // the manifest's `vocab`, so a wrong value must not load.
-        let mut m = builtin_decode_manifest();
-        m.meta.insert("vocab".to_string(), Json::Num(512.0));
-        let err = backend.load(Path::new("unused"), &m).unwrap_err();
-        assert!(err.to_string().contains("builtin decode geometry"), "{err:#}");
-        // The unmodified builtin, of course, loads.
-        assert!(backend.load(Path::new("unused"), &builtin_decode_manifest()).is_ok());
+        for tag in ModelConfig::builtin_tags() {
+            let cfg = ModelConfig::for_tag(tag).unwrap();
+            let mut m = builtin_decode_manifest(&cfg, tag);
+            m.inputs[2].shape = vec![cfg.layers, cfg.batch, cfg.heads, cfg.dp(), 99];
+            let err = backend.load(Path::new("unused"), &m).unwrap_err();
+            assert!(err.to_string().contains("decode geometry"), "{err:#}");
+            // Meta drift is just as dangerous: the engine slices logits
+            // by the manifest's `vocab`, so a wrong value must not load.
+            let mut m = builtin_decode_manifest(&cfg, tag);
+            m.meta.insert("vocab".to_string(), Json::Num(512.0));
+            let err = backend.load(Path::new("unused"), &m).unwrap_err();
+            assert!(err.to_string().contains("decode geometry"), "{err:#}");
+            // The unmodified builtin, of course, loads.
+            assert!(backend.load(Path::new("unused"), &builtin_decode_manifest(&cfg, tag)).is_ok());
+        }
     }
 
     #[test]
     fn builtin_manifests_match_aot_export() {
         let ms = ReferenceBackend::new().builtin_manifests();
         let fig6_count = FIG6_SOFTMAX_NS.len() + FIG6_HEDGEHOG_NS.len() + FIG6_TAYLOR_NS.len();
-        // 3 kernel/decode manifests + fig6 sweep + the 4 ref_lm train graphs
-        assert_eq!(ms.len(), 3 + fig6_count + 4);
+        // 2 kernels + fig6 sweep + per builtin tag (decode + 4 train graphs)
+        assert_eq!(ms.len(), 2 + fig6_count + 2 * 5);
         for m in &ms {
             if m.name.starts_with(REF_LM_TAG) {
                 continue; // decode + train graphs have their own slot contracts
@@ -1444,34 +1761,46 @@ mod tests {
         assert_eq!(fig6.inputs[0].shape, vec![1, FIG6_HEADS, 1024, FIG6_D]);
         assert_eq!(fig6.meta_str("kernel"), Some("hedgehog"));
         assert_eq!(fig6.meta_usize("n"), Some(1024));
-        let dec = ms.iter().find(|m| m.name == REF_LM_NAME).unwrap();
+        let dec = ms.iter().find(|m| m.name == "ref_lm_decode_step").unwrap();
         assert_eq!(dec.inputs.len(), 6);
         assert_eq!(dec.outputs.len(), 3);
-        assert_eq!(dec.meta_usize("vocab"), Some(REF_LM_VOCAB));
-        assert_eq!(dec.inputs[0].shape, vec![REF_LM_BATCH]);
+        assert_eq!(dec.meta_usize("vocab"), Some(256));
+        assert_eq!(dec.inputs[0].shape, vec![4]);
+        assert_eq!(dec.inputs[2].shape, vec![1, 4, 2, 32, 16]);
+        // the learnable tag declares every per-layer leaf and an L-deep state
+        let dec2 = ms.iter().find(|m| m.name == "ref_lm2_decode_step").unwrap();
+        assert_eq!(dec2.inputs.len(), 4 + 14);
+        assert_eq!(dec2.inputs[2].shape, vec![2, 4, 2, 32, 16]);
+        assert_eq!(dec2.meta_usize("n_layers"), Some(2));
+        assert!(dec2.inputs.iter().any(|s| s.name == "params/layer1/fm_k"));
     }
 
     /// Run T decode steps for one slot through RefDecode and return its
     /// logits rows, threading the state tensors through the steps.
-    fn decode_rollout(tokens: &[i32], opts: ExecOptions) -> Vec<Vec<f32>> {
+    fn decode_rollout(tag: &str, tokens: &[i32], opts: ExecOptions) -> Vec<Vec<f32>> {
+        let cfg = ModelConfig::for_tag(tag).unwrap();
         let backend = ReferenceBackend::with_options(opts);
-        let m = builtin_decode_manifest();
+        let m = builtin_decode_manifest(&cfg, tag);
         let exe = backend.load(Path::new("unused"), &m).unwrap();
-        let params = ref_lm_demo_params();
+        let params = cfg.init_params(0x5EED);
         let mut s = Tensor::zeros(DType::F32, &m.inputs[2].shape);
         let mut z = Tensor::zeros(DType::F32, &m.inputs[3].shape);
         let mut rows = Vec::new();
         for (step, &t) in tokens.iter().enumerate() {
-            let token = Tensor::from_i32(vec![t, 0, 0, 0], &[REF_LM_BATCH]);
-            let pos = Tensor::from_i32(vec![step as i32; REF_LM_BATCH], &[REF_LM_BATCH]);
-            let embed = params.get("params/embed").unwrap();
-            let unembed = params.get("params/unembed").unwrap();
-            let refs: Vec<&Tensor> = vec![&token, &pos, &s, &z, embed, unembed];
+            let mut toks = vec![0i32; cfg.batch];
+            toks[0] = t;
+            let token = Tensor::from_i32(toks, &[cfg.batch]);
+            let pos = Tensor::from_i32(vec![step as i32; cfg.batch], &[cfg.batch]);
+            let mut refs: Vec<&Tensor> = vec![&token, &pos, &s, &z];
+            let leaves: Vec<&Tensor> =
+                m.inputs[4..].iter().map(|sl| params.get(&sl.name).unwrap()).collect();
+            refs.extend(leaves);
             let mut outs = exe.execute(&refs).unwrap();
+            drop(refs);
             z = outs.pop().unwrap();
             s = outs.pop().unwrap();
             let logits = outs.pop().unwrap();
-            rows.push(logits.as_f32().unwrap()[..REF_LM_VOCAB].to_vec());
+            rows.push(logits.as_f32().unwrap()[..cfg.vocab].to_vec());
         }
         rows
     }
@@ -1486,7 +1815,8 @@ mod tests {
         let params = ref_lm_demo_params();
         let embed = params.get("params/embed").unwrap().as_f32().unwrap();
         let unembed = params.get("params/unembed").unwrap().as_f32().unwrap();
-        let (hh, d, dim, v) = (REF_LM_HEADS, REF_LM_HEAD_DIM, REF_LM_DIM, REF_LM_VOCAB);
+        let cfg = ModelConfig::ref_lm();
+        let (hh, d, dim, v) = (cfg.heads, cfg.head_dim, cfg.d_model(), cfg.vocab);
 
         // oracle: per head, naive linear attention over the embedding rows
         let mut y = vec![0.0f32; tlen * dim];
@@ -1538,7 +1868,7 @@ mod tests {
         }
 
         for opts in [ExecOptions::serial(), ExecOptions::default().with_threads(4)] {
-            let rows = decode_rollout(&tokens, opts);
+            let rows = decode_rollout("ref_lm", &tokens, opts);
             for (t, row) in rows.iter().enumerate() {
                 for (a, b) in row.iter().zip(&want[t * v..(t + 1) * v]) {
                     let tol = 1e-4 * b.abs().max(1.0);
@@ -1556,13 +1886,16 @@ mod tests {
         // Slot 0 sees a changing token stream; slots 1-3 always feed 0.
         // Idle slots must produce identical logits at every step (their
         // state evolves only from token 0), and two rollouts must agree
-        // bit-for-bit.
+        // bit-for-bit — for both builtin configs.
         let tokens = vec![5, 9, 200, 31];
-        let a = decode_rollout(&tokens, ExecOptions::serial());
-        let b = decode_rollout(&tokens, ExecOptions::serial());
-        assert_eq!(a, b, "decode must be deterministic");
-        // Thread count must not change the math (per-slot tasks).
-        let c = decode_rollout(&tokens, ExecOptions::serial().with_threads(4));
-        assert_eq!(a, c, "slot-parallel decode changed the output");
+        for tag in ModelConfig::builtin_tags() {
+            let a = decode_rollout(tag, &tokens, ExecOptions::serial());
+            let b = decode_rollout(tag, &tokens, ExecOptions::serial());
+            assert_eq!(a, b, "{tag}: decode must be deterministic");
+            // Thread count must not change the math (per-slot tasks).
+            let c = decode_rollout(tag, &tokens, ExecOptions::serial().with_threads(4));
+            assert_eq!(a, c, "{tag}: slot-parallel decode changed the output");
+            assert!(a.iter().flatten().all(|x| x.is_finite()), "{tag}: non-finite logits");
+        }
     }
 }

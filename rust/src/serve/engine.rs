@@ -14,13 +14,18 @@
 //! `ref_lm_decode_step` (tag `ref_lm`, demo params from
 //! `runtime::ref_lm_demo_params`) gives the engine a hermetic hot path.
 //!
-//! The step loop is engineered to be allocation-light and
-//! position-independent (O(1) allocations per token, enforced by
-//! `rust/tests/alloc_probe.rs`):
+//! The step loop is engineered to be **allocation-free** in steady state
+//! and position-independent (zero allocations per token on the serial
+//! reference path, enforced by `rust/tests/alloc_probe.rs`):
 //!
 //! * token/pos feed persistent i32 tensors mutated in place;
-//! * the backend's (S, z) outputs are double-buffered — moved into the
-//!   engine's state slots (the previous buffers drop), never cloned;
+//! * outputs go through `Executable::run_refs_into` into a persistent
+//!   back-buffer set: the backend (when it overrides `execute_into`, as
+//!   the reference decode step does) writes logits and the advanced
+//!   (S, z) straight into engine-owned tensors, which are then swapped
+//!   with the front state — no per-token output `Vec`, no clones;
+//! * the borrowed input list is assembled through a reusable pointer
+//!   scratch instead of a fresh `Vec<&Tensor>` per token;
 //! * logits are returned as a borrowed `&[f32]` view of the engine's
 //!   last-step tensor instead of a freshly allocated `Vec<Vec<f32>>`.
 
@@ -45,6 +50,14 @@ pub struct Engine {
     pub z: Tensor,
     /// last step's (B, vocab) logits — the buffer `step` hands out views of
     logits: Tensor,
+    /// back buffers for `run_refs_into` (manifest output order: logits,
+    /// s, z), swapped with the front tensors after every step
+    outs_back: Vec<Tensor>,
+    /// reusable input-assembly scratch (see the SAFETY note in `step`).
+    /// Raw pointers would strip Send/Sync, but `Engine` is already
+    /// single-threaded by construction (`exe` is an `Rc`), so no
+    /// auto-trait is lost that the type ever had.
+    input_ptrs: Vec<*const Tensor>,
     pub batch: usize,
     pub vocab: usize,
     /// per-slot next position
@@ -100,6 +113,8 @@ impl Engine {
         let token_t = Tensor::zeros(man.inputs[token_idx].dtype, &man.inputs[token_idx].shape);
         let pos_t = Tensor::zeros(man.inputs[pos_idx].dtype, &man.inputs[pos_idx].shape);
         let logits = Tensor::zeros(man.outputs[0].dtype, &man.outputs[0].shape);
+        let outs_back: Vec<Tensor> =
+            man.outputs.iter().map(|o| Tensor::zeros(o.dtype, &o.shape)).collect();
         Ok(Engine {
             exe,
             param_inputs,
@@ -112,6 +127,8 @@ impl Engine {
             s,
             z,
             logits,
+            outs_back,
+            input_ptrs: Vec::new(),
             batch,
             vocab,
             positions: vec![0; batch],
@@ -136,9 +153,11 @@ impl Engine {
         assert_eq!(tokens.len(), self.batch);
         self.token_t.as_i32_mut()?.copy_from_slice(tokens);
         self.pos_t.as_i32_mut()?.copy_from_slice(&self.positions);
-        // borrowed inputs: params, state, and the token/pos buffers are
-        // never cloned per token (§Perf L3)
-        let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.param_inputs.len());
+        // Borrowed inputs: params, state, and the token/pos buffers are
+        // never cloned per token (§Perf L3). Assembled through the
+        // persistent pointer scratch — a fresh `Vec<&Tensor>` would be
+        // the step loop's one remaining allocation.
+        self.input_ptrs.clear();
         for (i, p) in self.param_inputs.iter().enumerate() {
             let t: &Tensor = if let Some(p) = p {
                 p
@@ -153,15 +172,31 @@ impl Engine {
             } else {
                 return Err(anyhow!("unfilled decode input {i}"));
             };
-            inputs.push(t);
+            self.input_ptrs.push(t as *const Tensor);
         }
-        let mut outs = self.exe.run_refs(&inputs)?;
+        // SAFETY: `&Tensor` and `*const Tensor` are layout-compatible;
+        // every pointer was derived from a live borrow of `self` in the
+        // loop above and stays valid for the duration of the call. The
+        // slice is consumed by `run_refs_into`, which reads the inputs
+        // and writes only `outs_back` — never one of the pointed-to
+        // tensors (the swap below keeps front and back buffers distinct
+        // objects), so no aliasing mutation occurs behind the erased
+        // borrows.
+        let inputs: &[&Tensor] = unsafe {
+            std::slice::from_raw_parts(
+                self.input_ptrs.as_ptr() as *const &Tensor,
+                self.input_ptrs.len(),
+            )
+        };
+        let res = self.exe.run_refs_into(inputs, &mut self.outs_back);
+        self.input_ptrs.clear();
+        res?;
         // outputs: logits, s, z (manifest order, validated at
-        // construction). Double-buffer: move the backend's buffers in and
-        // let the previous step's drop — no elementwise clone.
-        self.z = outs.pop().expect("decode outputs");
-        self.s = outs.pop().expect("decode outputs");
-        self.logits = outs.pop().expect("decode outputs");
+        // construction). Double-buffer: swap the filled back buffers
+        // with the front tensors — no per-token output Vec, no clones.
+        std::mem::swap(&mut self.logits, &mut self.outs_back[0]);
+        std::mem::swap(&mut self.s, &mut self.outs_back[1]);
+        std::mem::swap(&mut self.z, &mut self.outs_back[2]);
         for p in &mut self.positions {
             *p += 1;
         }

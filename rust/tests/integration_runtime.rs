@@ -12,7 +12,8 @@
 //! stay hermetic in that environment too.
 
 use hedgehog::runtime::{
-    ref_lm_demo_params, ArtifactRegistry, ExecOptions, ReferenceBackend, Tensor, REF_LM_TAG,
+    ref_lm_demo_params, ArtifactRegistry, ExecOptions, ReferenceBackend, Tensor, REF_LM2_TAG,
+    REF_LM_TAG,
 };
 use hedgehog::serve::{Batcher, Engine, Request};
 use hedgehog::train::session::{evaluate, ref_lm_demo_batch, Batch, Session};
@@ -223,6 +224,51 @@ fn conversion_pipeline_runs_hermetically() {
     let (batch, vocab) = (engine.batch, engine.vocab);
     let tokens = vec![3i32; batch];
     let logits = engine.step(&tokens).unwrap();
+    assert_eq!(logits.len(), batch * vocab);
+    assert!(logits.iter().all(|l| l.is_finite()), "served logits must be finite");
+}
+
+/// The same two-stage conversion on the 2-layer *learnable* builtin
+/// (`ref_lm2`): per-layer projections + trainable feature maps, per-layer
+/// Eq. 4 distillation summed over layers. All 14 leaves are shared
+/// teacher -> student (self-family conversion), the distill loss must
+/// decrease over 50 steps, and the converted params must serve through
+/// the decode engine — the acceptance loop for the learnable config.
+#[test]
+fn conversion_pipeline_runs_hermetically_on_learnable_config() {
+    let reg = ref_registry();
+    let mut teacher = Session::init(&reg, REF_LM2_TAG, 1).unwrap();
+    assert_eq!(teacher.params.len(), 14, "ref_lm2 has embed + 2x6 layer leaves + unembed");
+    teacher.run(20, |_| 1e-2, 0.0, |_| ref_lm_demo_batch(0, false)).unwrap();
+
+    let mut spec = ConversionSpec::new(REF_LM2_TAG);
+    spec.distill_steps = 50;
+    spec.distill_lr = 1e-2;
+    spec.finetune_steps = 20;
+    spec.finetune_lr = 5e-3;
+    spec.seed = 2;
+    let conv = convert(
+        &reg,
+        &teacher.params,
+        &spec,
+        |_| ref_lm_demo_batch(0, true),
+        |_| ref_lm_demo_batch(0, false),
+    )
+    .unwrap();
+
+    assert_eq!(conv.shared_leaves, 14, "every leaf is shared in self-family conversion");
+    assert_eq!(conv.distill_losses.len(), 50);
+    assert!(conv.distill_losses.iter().chain(&conv.finetune_losses).all(|l| l.is_finite()));
+    let first10: f32 = conv.distill_losses[..10].iter().sum::<f32>() / 10.0;
+    let last10: f32 = conv.distill_losses[40..].iter().sum::<f32>() / 10.0;
+    assert!(
+        last10 < first10 - 0.05,
+        "per-layer distill loss did not decrease: first10 {first10} vs last10 {last10}"
+    );
+
+    let mut engine = Engine::new(&reg, REF_LM2_TAG, &conv.params).unwrap();
+    let (batch, vocab) = (engine.batch, engine.vocab);
+    let logits = engine.step(&vec![3i32; batch]).unwrap();
     assert_eq!(logits.len(), batch * vocab);
     assert!(logits.iter().all(|l| l.is_finite()), "served logits must be finite");
 }

@@ -6,7 +6,9 @@ Usage:
 
 The baseline defaults to `git show HEAD:BENCH_kernels.json` (the committed
 snapshot), falling back to the working-tree file if git is unavailable.
-Records are matched on (kernel, n, threads, chunk_size); only chunked
+Records are matched on (kernel, n, threads, chunk_size, geometry) — the
+geometry field (model layers/heads/head_dim, emitted by the train bench)
+guarantees tokens/sec is never compared across model shapes; only chunked
 configs (chunk_size > 0) are compared — the naive oracle rows are a
 correctness baseline, not a perf target.
 
@@ -62,7 +64,9 @@ def load_baseline(spec):
 
 
 def key(r):
-    return (r["kernel"], r["n"], r["threads"], r["chunk_size"])
+    # geometry distinguishes model shapes (train-bench records); kernel
+    # sweep records predate the field / carry null, which matches itself.
+    return (r["kernel"], r["n"], r["threads"], r["chunk_size"], r.get("geometry"))
 
 
 def main(argv):
@@ -114,10 +118,11 @@ def main(argv):
             continue
         compared += 1
         ratio = r["tokens_per_sec"] / b["tokens_per_sec"]
+        geom = f" [{r['geometry']}]" if r.get("geometry") else ""
         line = (
             f"  {r['kernel']:<12} n={r['n']:<6} t={r['threads']:<3} C={r['chunk_size']:<4} "
             f"{b['tokens_per_sec']:>14.0f} -> {r['tokens_per_sec']:>14.0f} tok/s "
-            f"({ratio:5.2f}x)"
+            f"({ratio:5.2f}x){geom}"
         )
         print(line)
         if ratio < REGRESSION_RATIO:
