@@ -2,15 +2,16 @@
 #
 #   make build        release build (tier-1, no XLA)
 #   make test         tier-1 test suite
-#   make bench        full kernel + fig6 + decode bench sweep -> BENCH_*.json
+#   make bench        full kernel + fig6 + decode + serve bench sweep -> BENCH_*.json
 #   make bench-smoke  CI short mode: small n, few reps, parity-gated
+#   make serve-smoke  short continuous-batching serve load -> BENCH_serve.json
 #   make perf-diff    fresh smoke sweep vs the committed BENCH_kernels.json
 #                     snapshot (warn-only, >25% tokens/sec regression)
 #
 # `make artifacts` (model-graph export) lives in python/compile and needs
 # jax; everything here is hermetic Rust.
 
-.PHONY: build test bench bench-smoke refconv-smoke perf-diff
+.PHONY: build test bench bench-smoke refconv-smoke serve-smoke perf-diff
 
 build:
 	cargo build --release
@@ -27,11 +28,19 @@ bench:
 	cargo bench --bench fig6_scaling
 	cargo bench --bench decode_throughput
 	cargo bench --bench train_step
+	cargo bench --bench serve_load
 
-bench-smoke: refconv-smoke
+bench-smoke: refconv-smoke serve-smoke
 	BENCH_SMOKE=1 cargo bench --bench kernel_micro
 	BENCH_SMOKE=1 cargo bench --bench fig6_scaling
 	BENCH_SMOKE=1 cargo bench --bench train_step
+
+# Continuous-batching serve stack under synthetic Poisson load, per
+# builtin tag (chunked prefill + streaming scheduler), short mode.
+# Hermetic: reference backend only. Emits BENCH_serve.json at the repo
+# root (same convention as the other BENCH_*.json emissions).
+serve-smoke:
+	BENCH_SMOKE=1 cargo bench --bench serve_load
 
 # End-to-end conversion smoke on every builtin config (including the
 # 2-layer learnable ref_lm2), artifact-less: teacher train -> per-layer

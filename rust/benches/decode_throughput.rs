@@ -34,11 +34,11 @@ fn bench_reference_decode(results: &mut Vec<common::BenchResult>) {
     reg.set_exec_options(ExecOptions::serial());
     let params = ref_lm_demo_params();
     let mut engine = Engine::new(&reg, REF_LM_TAG, &params).expect("builtin decode engine");
-    let b = engine.batch;
+    let b = engine.batch();
     let toks = vec![1i32; b];
 
     let mut at_position = |pos: usize, label: String, results: &mut Vec<common::BenchResult>| {
-        while (engine.positions[0] as usize) < pos {
+        while (engine.positions()[0] as usize) < pos {
             engine.step(&toks).unwrap();
         }
         results.push(bench(label, 64, || {
@@ -50,14 +50,14 @@ fn bench_reference_decode(results: &mut Vec<common::BenchResult>) {
     at_position(1000, format!("ref_lm  b={b} pos ~1000"), results);
 
     let t0 = std::time::Instant::now();
-    let before = engine.tokens_processed;
+    let before = engine.tokens_processed();
     for _ in 0..500 {
         engine.step(&toks).unwrap();
     }
     let secs = t0.elapsed().as_secs_f64();
     println!(
         "ref_lm sustained: {:.0} slot-tokens/sec (batch {b}, O(1) state, serial)",
-        (engine.tokens_processed - before) as f64 / secs
+        (engine.tokens_processed() - before) as f64 / secs
     );
 }
 
@@ -81,7 +81,7 @@ fn bench_compiled_decode(results: &mut Vec<common::BenchResult>) {
 
     // linear engine: time a step at position ~0 and position ~100
     let mut engine = Engine::new(&reg, "lm_hedgehog", &params).unwrap();
-    let b = engine.batch;
+    let b = engine.batch();
     results.push(bench("linear  pos 0..8", 8, || {
         engine.step(&vec![1i32; b]).unwrap();
     }));

@@ -1,0 +1,182 @@
+//! Serving under load: the continuous-batching scheduler driven by
+//! synthetic Poisson traffic, per builtin tag.
+//!
+//! Emits `BENCH_serve.json` (schema `hedgehog_serve_v1`): sustained
+//! generated tokens/sec, p50/p99 time-to-first-token, p50/p99 per-token
+//! decode latency, high-water concurrency, and shed requests — keyed by
+//! (tag, slots) so `tools/perf_diff.py` never compares across geometry.
+//!
+//! Hermetic: runs only on the reference backend (the builtin decode
+//! graphs + chunked prefill are the serve stack this repo optimizes);
+//! self-skips under a compiled-artifact registry. `BENCH_SMOKE=1`
+//! shrinks the request count for CI.
+
+mod common;
+
+use common::{bench_out_path, smoke_mode};
+use hedgehog::runtime::{ArtifactRegistry, ExecOptions, ModelConfig};
+use hedgehog::serve::{Engine, Scheduler, TrafficGen};
+
+struct ServeRecord {
+    tag: String,
+    slots: usize,
+    requests: usize,
+    rejected: usize,
+    max_concurrent: usize,
+    engine_steps: usize,
+    sustained_tokens_per_sec: f64,
+    ttft_p50_ms: f64,
+    ttft_p99_ms: f64,
+    tok_p50_ms: f64,
+    tok_p99_ms: f64,
+}
+
+/// Percentile by nearest-rank on a sorted copy (small samples; exactness
+/// over interpolation).
+fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx]
+}
+
+fn drive_tag(tag: &str, reg: &ArtifactRegistry, target: usize) -> ServeRecord {
+    let params = ModelConfig::for_tag(tag).expect("builtin tag").init_params(0x5EED);
+    let mut engine = Engine::new(reg, tag, &params).expect("builtin decode engine");
+    let cap = engine.batch();
+    let mut sched = Scheduler::new(cap, 8 * cap);
+    // open-loop Poisson load hot enough to keep the slots busy: ~1.5
+    // arrivals per engine step against cap concurrent decodes
+    let mut gen =
+        TrafficGen::new(0x5EED ^ tag.len() as u64, 1.5, (4, 24), (4, 16), engine.vocab(), -1);
+
+    let mut streamed = 0usize;
+    let mut clock = 0usize;
+    let t0 = std::time::Instant::now();
+    while (gen.generated() as usize) < target || !sched.is_idle() {
+        if (gen.generated() as usize) < target {
+            while let Some(req) = gen.next_if_due(clock) {
+                let _ = sched.submit(req); // QueueFull -> counted in rejected
+                if gen.generated() as usize >= target {
+                    break;
+                }
+            }
+        }
+        sched.tick(&mut engine, &mut |_, _| streamed += 1).expect("scheduler tick");
+        clock += 1;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+
+    let ttft_ms: Vec<f64> = sched.completed.iter().map(|r| 1e3 * r.ttft).collect();
+    // per-token decode latency: time after the first token, per
+    // subsequent token (requests with a single token contribute nothing)
+    let tok_ms: Vec<f64> = sched
+        .completed
+        .iter()
+        .filter(|r| r.output.len() > 1)
+        .map(|r| 1e3 * (r.total - r.ttft) / (r.output.len() - 1) as f64)
+        .collect();
+    ServeRecord {
+        tag: tag.to_string(),
+        slots: cap,
+        requests: sched.completed.len(),
+        rejected: sched.rejected,
+        max_concurrent: sched.max_concurrent,
+        engine_steps: sched.steps(),
+        sustained_tokens_per_sec: streamed as f64 / secs,
+        ttft_p50_ms: percentile(&ttft_ms, 50.0),
+        ttft_p99_ms: percentile(&ttft_ms, 99.0),
+        tok_p50_ms: percentile(&tok_ms, 50.0),
+        tok_p99_ms: percentile(&tok_ms, 99.0),
+    }
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn write_serve_json(path: &std::path::Path, records: &[ServeRecord]) -> std::io::Result<()> {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"hedgehog_serve_v1\",\n");
+    s.push_str("  \"title\": \"continuous-batching serve under Poisson load\",\n");
+    s.push_str("  \"provenance\": \"measured\",\n");
+    s.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
+    s.push_str(&format!("  \"available_parallelism\": {cores},\n"));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"tag\": {:?}, \"slots\": {}, \"requests\": {}, \"rejected\": {}, \
+             \"max_concurrent\": {}, \"engine_steps\": {}, \
+             \"sustained_tokens_per_sec\": {}, \"ttft_p50_ms\": {}, \"ttft_p99_ms\": {}, \
+             \"tok_p50_ms\": {}, \"tok_p99_ms\": {}}}{}\n",
+            r.tag,
+            r.slots,
+            r.requests,
+            r.rejected,
+            r.max_concurrent,
+            r.engine_steps,
+            json_num(r.sustained_tokens_per_sec),
+            json_num(r.ttft_p50_ms),
+            json_num(r.ttft_p99_ms),
+            json_num(r.tok_p50_ms),
+            json_num(r.tok_p99_ms),
+            if i + 1 == records.len() { "" } else { "," },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)
+}
+
+fn main() {
+    let reg = ArtifactRegistry::open("artifacts").expect("artifact registry");
+    if reg.backend_name() != "reference" {
+        eprintln!(
+            "serve_load: the serve-load bench drives the reference backend's builtin \
+             decode graphs; skipping under a compiled-artifact registry"
+        );
+        return;
+    }
+    // latency-bound decode steps: serial, default chunking for prefill
+    reg.set_exec_options(ExecOptions::serial());
+    let target = if smoke_mode() { 24 } else { 200 };
+
+    let mut records = Vec::new();
+    println!("== bench: serve under load ({target} requests per tag) ==");
+    println!(
+        "{:<8}  {:>5}  {:>8}  {:>8}  {:>12}  {:>9}  {:>9}  {:>9}  {:>9}",
+        "tag", "slots", "requests", "rejected", "tokens/sec", "ttft p50", "ttft p99", "tok p50",
+        "tok p99"
+    );
+    for tag in ModelConfig::builtin_tags() {
+        let r = drive_tag(tag, &reg, target);
+        println!(
+            "{:<8}  {:>5}  {:>8}  {:>8}  {:>12.0}  {:>8.3}ms  {:>8.3}ms  {:>8.3}ms  {:>8.3}ms",
+            r.tag,
+            r.slots,
+            r.requests,
+            r.rejected,
+            r.sustained_tokens_per_sec,
+            r.ttft_p50_ms,
+            r.ttft_p99_ms,
+            r.tok_p50_ms,
+            r.tok_p99_ms
+        );
+        records.push(r);
+    }
+
+    let path = bench_out_path("BENCH_serve.json");
+    match write_serve_json(&path, &records) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("serve_load: could not write {}: {e}", path.display()),
+    }
+    println!("chunked prefill + same-step eviction: TTFT is one pass, no dead steps");
+}

@@ -1,8 +1,12 @@
-//! Serve a linearized LM: batched greedy decoding with O(1) recurrent
-//! state per sequence — the deployment story behind the paper's Fig 6.
+//! Serve a linearized LM: continuous-batching greedy decoding with O(1)
+//! recurrent state per sequence — the deployment story behind the
+//! paper's Fig 6.
 //!
 //! Trains a small Hedgehog LM briefly, then pushes a wave of generation
-//! requests through the slot batcher and reports latency/throughput.
+//! requests through the streaming scheduler. Prompts take the chunked
+//! prefill fast path where the backend supports it (one pass per prompt
+//! instead of one engine step per prompt token), tokens stream as they
+//! are sampled, and the run reports time-to-first-token and throughput.
 //!
 //!     cargo run --release --example serve_linear_llm -- [n_requests]
 
@@ -10,7 +14,7 @@ use anyhow::Result;
 use hedgehog::data::{corpus, Pcg32};
 use hedgehog::metrics::Stats;
 use hedgehog::runtime::{ArtifactRegistry, ExecOptions};
-use hedgehog::serve::{Batcher, Engine, Request};
+use hedgehog::serve::{Engine, Request, Scheduler};
 use hedgehog::train::session::{Batch, Session};
 
 fn main() -> Result<()> {
@@ -28,34 +32,43 @@ fn main() -> Result<()> {
     })?;
 
     // Decode steps are latency-bound (one token per call): skip the
-    // fork/join overhead; the batcher provides the parallelism.
+    // fork/join overhead; the scheduler provides the parallelism.
     let mut engine =
         Engine::with_exec_options(&reg, "lm_hedgehog", &s.params, ExecOptions::serial())?;
-    println!("engine: {} slots, vocab {}", engine.batch, engine.vocab);
+    println!("engine: {} slots, vocab {}", engine.batch(), engine.vocab());
 
-    let mut batcher = Batcher::new(engine.batch, 256);
+    let mut sched = Scheduler::new(engine.batch(), 256);
     let mut prng = Pcg32::with_stream(0, 1);
     for id in 0..n_requests {
         let plen = 6 + prng.usize_below(20);
         let prompt = lang.stream(&mut prng, corpus::Domain::Pretrain, plen);
-        let ok = batcher.submit(Request { id, prompt, max_new: 20, eos: corpus::EOS });
-        assert!(ok, "queue backpressure triggered");
+        if let Err(e) = sched.submit(Request { id, prompt, max_new: 20, eos: corpus::EOS }) {
+            println!("request {id} shed: {e}");
+        }
     }
 
-    let (steps, secs) = batcher.run_to_completion(&mut engine)?;
+    // stream tokens as they are sampled; here we just count them
+    let mut streamed = 0usize;
+    let (steps, secs) = sched.run(&mut engine, &mut |_id, _tok| streamed += 1)?;
 
+    let mut ttft = Stats::default();
     let mut latency = Stats::default();
-    let mut out_tokens = 0usize;
-    for r in &batcher.completed {
+    for r in &sched.completed {
+        ttft.push(1e3 * r.ttft);
         latency.push((r.decode_steps + r.queue_steps) as f64);
-        out_tokens += r.output.len();
     }
-    println!("completed {} requests in {secs:.2}s / {steps} engine steps", batcher.completed.len());
     println!(
-        "throughput: {:.0} slot-tokens/s, {} generated tokens",
-        engine.tokens_processed as f64 / secs,
-        out_tokens
+        "completed {} requests in {secs:.2}s / {steps} engine steps \
+         (max {} concurrent, {} shed)",
+        sched.completed.len(),
+        sched.max_concurrent,
+        sched.rejected
     );
+    println!(
+        "throughput: {:.0} slot-tokens/s, {streamed} streamed tokens",
+        engine.tokens_processed() as f64 / secs
+    );
+    println!("ttft (ms): mean {:.2}, min {:.2}, max {:.2}", ttft.mean(), ttft.min, ttft.max);
     println!(
         "latency (engine steps): mean {:.1}, min {:.0}, max {:.0}",
         latency.mean(),
@@ -63,7 +76,7 @@ fn main() -> Result<()> {
         latency.max
     );
     // show one generation
-    if let Some(r) = batcher.completed.first() {
+    if let Some(r) = sched.completed.first() {
         println!("sample generation (request {}): {:?}", r.id, r.output);
     }
     println!("per-token cost is constant: no KV cache growth at any context length");

@@ -85,7 +85,7 @@ fn main() -> Result<()> {
         println!("generated    : {gen:?}");
         println!(
             "decode engine: {} tokens through O(1) recurrent state",
-            engine.tokens_processed
+            engine.tokens_processed()
         );
     }
     println!("loss curve -> results/{family}_loss_curve.csv");

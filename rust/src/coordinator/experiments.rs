@@ -54,7 +54,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     (
         "refconv",
         "hermetic conversion on every builtin config (ref_lm fixed-exp, ref_lm2 2-layer \
-         learnable): distill -> finetune -> serve (reference backend)",
+         learnable, ref_lm4 4-layer/4-head): distill -> finetune -> serve (reference backend)",
     ),
 ];
 
@@ -781,8 +781,9 @@ fn rouge_eval(
 /// `ModelConfig` tag: train a teacher, run the two-stage `convert()`
 /// (per-layer attention distillation, then task finetuning), evaluate,
 /// and drop the converted params into the decode engine — train -> eval
-/// -> serve with no compiled artifacts. The `ref_lm2` pass is the one
-/// that exercises the paper's learnable machinery: per-layer projections
+/// -> serve with no compiled artifacts. The learnable passes (`ref_lm2`,
+/// and `ref_lm4` at 4 layers / 4 heads) are the ones that exercise the
+/// paper's learnable machinery: per-layer projections
 /// and trainable feature maps distilled against each layer's softmax
 /// teacher map. Skips (with a note) when a compiled-artifact backend is
 /// active, since the builtin training graphs only exist on the reference
@@ -829,7 +830,7 @@ fn refconv_tag(ctx: &Ctx, tag: &str) -> Result<()> {
 
     // converted params drop straight into the decode engine (shared layout)
     let mut engine = crate::serve::Engine::new(&ctx.reg, tag, &conv.params)?;
-    let step_tokens = vec![1i32; engine.batch];
+    let step_tokens = vec![1i32; engine.batch()];
     let first_logit = {
         let logits = engine.step(&step_tokens)?;
         logits[0]
@@ -885,12 +886,12 @@ fn serve_demo(ctx: &Ctx) -> Result<()> {
     })?;
 
     let mut engine = Engine::new(&ctx.reg, "lm_hedgehog", &s.params)?;
-    let mut batcher = Batcher::new(engine.batch, 64);
+    let mut batcher = Batcher::new(engine.batch(), 64);
     let mut prng = Pcg32::with_stream(ctx.seed, 111);
     for id in 0..12u64 {
         let plen = 8 + prng.usize_below(16);
         let prompt = lang.stream(&mut prng, corpus::Domain::Pretrain, plen);
-        batcher.submit(Request { id, prompt, max_new: 16, eos: corpus::EOS });
+        batcher.submit(Request { id, prompt, max_new: 16, eos: corpus::EOS })?;
     }
     let (steps, secs) = batcher.run_to_completion(&mut engine)?;
 
@@ -901,7 +902,7 @@ fn serve_demo(ctx: &Ctx) -> Result<()> {
     report.row(vec!["wall seconds".into(), format!("{secs:.2}")]);
     report.row(vec![
         "tokens/sec (batch-steps)".into(),
-        format!("{:.0}", engine.tokens_processed as f64 / secs),
+        format!("{:.0}", engine.tokens_processed() as f64 / secs),
     ]);
     let mut lat = metrics::Stats::default();
     for r in &batcher.completed {

@@ -63,6 +63,15 @@ impl Pcg32 {
         self.f32() < p
     }
 
+    /// Exponential inter-arrival time with the given rate (events per
+    /// unit time) via inverse CDF — Poisson process arrivals for the
+    /// serve traffic generator. `f32()` is in [0, 1), so `1 - u` never
+    /// hits 0 and the log stays finite.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        let u = self.f32() as f64;
+        -(1.0 - u).ln() / rate
+    }
+
     /// Sample an index from unnormalized weights.
     pub fn weighted(&mut self, weights: &[f32]) -> usize {
         let total: f32 = weights.iter().sum();
@@ -124,6 +133,22 @@ mod tests {
         for _ in 0..1000 {
             assert!(r.below(10) < 10);
         }
+    }
+
+    #[test]
+    fn exponential_is_positive_with_matching_mean() {
+        let mut r = Pcg32::new(11);
+        let rate = 0.25;
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.exponential(rate);
+            assert!(x.is_finite() && x >= 0.0);
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        // mean of Exp(rate) is 1/rate = 4; loose statistical bound
+        assert!((mean - 4.0).abs() < 0.2, "mean {mean}");
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! params init, benches, tests — derives from, so adding a model shape is
 //! one new config, not a hand-synchronized edit across six files.
 //!
-//! Two builtin configs exist:
+//! Three builtin configs exist:
 //!
 //! * [`ModelConfig::ref_lm`] (tag `ref_lm`) — the legacy shape, kept
 //!   byte-compatible with PR 3/4: `FeatureKind::FixedExp`, one layer, no
@@ -21,25 +21,32 @@
 //!   two layers, per-layer q/k/v/o projections, *learnable* per-head
 //!   Hedgehog feature maps (`fm_q`, `fm_k`), residual stacking. This is
 //!   the config the per-layer Eq. 4 distillation actually exercises.
+//! * [`ModelConfig::ref_lm4`] (tag `ref_lm4`) — the serve/bench shape:
+//!   four layers, four heads (D = 64), same learnable machinery as
+//!   `ref_lm2`. Exists so the serving and bench paths exercise non-toy
+//!   geometry (deeper stack, wider residual stream, more state per slot).
 //!
 //! **Leaf naming scheme** (aot.py sorted-tree-path convention — manifests
 //! list leaves in sorted name order, and `ParamStore`'s BTreeMap agrees by
-//! construction):
+//! construction). Layer indices are zero-padded to two digits so
+//! lexicographic order equals numeric order up to 100 layers:
 //!
 //! ```text
 //! params/embed                  (V, D)
-//! params/layer{i}/fm_k          (H, d, d)   learnable only
-//! params/layer{i}/fm_q          (H, d, d)   learnable only
-//! params/layer{i}/wk            (D, D)      learnable only
-//! params/layer{i}/wo            (D, D)      learnable only
-//! params/layer{i}/wq            (D, D)      learnable only
-//! params/layer{i}/wv            (D, D)      learnable only
+//! params/layer{i:02}/fm_k       (H, d, d)   learnable only
+//! params/layer{i:02}/fm_q       (H, d, d)   learnable only
+//! params/layer{i:02}/wk         (D, D)      learnable only
+//! params/layer{i:02}/wo         (D, D)      learnable only
+//! params/layer{i:02}/wq         (D, D)      learnable only
+//! params/layer{i:02}/wv         (D, D)      learnable only
 //! params/unembed                (D, V)
 //! ```
 //!
-//! `layer{i}` sorts lexicographically, which equals numeric order only for
-//! `layers <= 10` — enforced in `validate`, revisit the naming (zero
-//! padding) before anyone builds an 11-layer config.
+//! Zero-padding only changes the *name* strings — tensor data and rng
+//! draw order are untouched, so the `ref_lm`/`ref_lm2` byte-compat
+//! contracts hold (and `ModelParams::from_leaves` keys on sorted
+//! *position*, which padding preserves). `validate` still rejects
+//! `layers > 99`, where two digits stop sorting numerically.
 
 use anyhow::{bail, Result};
 
@@ -111,9 +118,16 @@ impl ModelConfig {
         ModelConfig { layers: 2, feature: FeatureKind::Learnable, ..Self::ref_lm() }
     }
 
+    /// The serve/bench builtin (tag `ref_lm4`): 4-layer, 4-head (D = 64)
+    /// learnable model — non-toy geometry for the serving stack and the
+    /// load benches (4x the per-slot state and per-step flops of ref_lm2).
+    pub fn ref_lm4() -> Self {
+        ModelConfig { layers: 4, heads: 4, feature: FeatureKind::Learnable, ..Self::ref_lm() }
+    }
+
     /// The builtin tags, in registration order.
-    pub fn builtin_tags() -> [&'static str; 2] {
-        ["ref_lm", "ref_lm2"]
+    pub fn builtin_tags() -> [&'static str; 3] {
+        ["ref_lm", "ref_lm2", "ref_lm4"]
     }
 
     /// Resolve a builtin tag to its config.
@@ -121,6 +135,7 @@ impl ModelConfig {
         match tag {
             "ref_lm" => Some(Self::ref_lm()),
             "ref_lm2" => Some(Self::ref_lm2()),
+            "ref_lm4" => Some(Self::ref_lm4()),
             _ => None,
         }
     }
@@ -152,7 +167,7 @@ impl ModelConfig {
         if self.learnable() {
             for i in 0..self.layers {
                 for leaf in LAYER_LEAVES {
-                    let name = format!("{prefix}/layer{i}/{leaf}");
+                    let name = format!("{prefix}/layer{i:02}/{leaf}");
                     let slot = if leaf.starts_with("fm") {
                         f(name, &[h, hd, hd])
                     } else {
@@ -197,13 +212,13 @@ impl ModelConfig {
             for i in 0..self.layers {
                 for leaf in ["wq", "wk", "wv", "wo"] {
                     params.insert(
-                        format!("params/layer{i}/{leaf}"),
+                        format!("params/layer{i:02}/{leaf}"),
                         Tensor::from_f32(randn(dm * dm, proj_scale), &[dm, dm]),
                     );
                 }
                 for leaf in ["fm_q", "fm_k"] {
                     params.insert(
-                        format!("params/layer{i}/{leaf}"),
+                        format!("params/layer{i:02}/{leaf}"),
                         Tensor::from_f32(randn(h * hd * hd, fm_scale), &[h, hd, hd]),
                     );
                 }
@@ -218,9 +233,9 @@ impl ModelConfig {
         if self.layers == 0 || self.heads == 0 || self.head_dim == 0 {
             bail!("ModelConfig: layers/heads/head_dim must be positive: {self:?}");
         }
-        if self.layers > 10 {
-            bail!("ModelConfig: layer{{i}} leaf names sort lexicographically — layers > 10 \
-                   needs a zero-padded naming scheme first");
+        if self.layers > 99 {
+            bail!("ModelConfig: layer{{i:02}} leaf names zero-pad to two digits — layers > 99 \
+                   breaks sorted tree-path order (widen the padding first)");
         }
         if self.feature == FeatureKind::FixedExp && self.layers != 1 {
             // Defined (stack-by-replacement) but unexercised; keep the
@@ -263,11 +278,31 @@ mod tests {
         sorted.sort();
         assert_eq!(names, sorted, "leaf slots must follow sorted tree-path order");
         assert_eq!(names[0], "params/embed");
-        assert_eq!(names[1], "params/layer0/fm_k");
+        assert_eq!(names[1], "params/layer00/fm_k");
         assert_eq!(*names.last().unwrap(), "params/unembed");
         // fixed-exp config has no layer leaves
         let legacy = ModelConfig::ref_lm().leaf_slots("params");
         assert_eq!(legacy.len(), 2);
+    }
+
+    #[test]
+    fn leaf_order_stays_numeric_past_ten_layers() {
+        // The regression zero-padding exists to prevent: with unpadded
+        // names, "layer10" sorts between "layer1" and "layer2" and the
+        // positional `from_leaves` indexing silently shears.
+        let mut cfg = ModelConfig::ref_lm2();
+        cfg.layers = 12;
+        cfg.validate().unwrap();
+        let slots = cfg.leaf_slots("params");
+        assert_eq!(slots.len(), cfg.n_leaves());
+        let names: Vec<&str> = slots.iter().map(|s| s.name.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted, "12-layer leaf slots must stay in sorted order");
+        // layer i's first leaf sits at position 1 + 6*i — numeric order
+        for i in 0..cfg.layers {
+            assert_eq!(names[1 + 6 * i], format!("params/layer{i:02}/fm_k"));
+        }
     }
 
     #[test]
@@ -307,7 +342,9 @@ mod tests {
         cfg.layers = 2; // FixedExp multi-layer is not a supported contract
         assert!(cfg.validate().is_err());
         let mut cfg = ModelConfig::ref_lm2();
-        cfg.layers = 11;
+        cfg.layers = 11; // fine now that names are zero-padded
+        assert!(cfg.validate().is_ok());
+        cfg.layers = 100; // two digits stop sorting numerically
         assert!(cfg.validate().is_err());
     }
 }

@@ -25,5 +25,5 @@ pub use config::{FeatureKind, ModelConfig};
 pub use manifest::{Manifest, Slot};
 pub use params::ParamStore;
 pub use pool::WorkerPool;
-pub use reference::{ref_lm_demo_params, ReferenceBackend, REF_LM2_TAG, REF_LM_TAG};
+pub use reference::{ref_lm_demo_params, ReferenceBackend, REF_LM2_TAG, REF_LM4_TAG, REF_LM_TAG};
 pub use tensor::{DType, Tensor, TensorData};

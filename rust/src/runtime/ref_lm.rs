@@ -8,14 +8,16 @@
 //! the distillation loss is the **per-layer** Eq. 4 objective (soft
 //! cross-entropy against each layer's softmax teacher map, summed over
 //! layers, full backprop through the stack — jax `value_and_grad`
-//! semantics). Two builtin tags exist:
+//! semantics). Three builtin tags exist:
 //!
 //! * `ref_lm` — the legacy fixed-exp shape, byte-compatible with PR 4
 //!   (`ref_lm_init(0x5EED) == ref_lm_demo_params()`, leaves
 //!   `params/{embed, unembed}`).
 //! * `ref_lm2` — 2 layers, learnable: leaves `params/embed`,
-//!   `params/layer{i}/{fm_k, fm_q, wk, wo, wq, wv}`, `params/unembed`
+//!   `params/layer{i:02}/{fm_k, fm_q, wk, wo, wq, wv}`, `params/unembed`
 //!   (sorted tree-path order, see `runtime/config.rs`).
+//! * `ref_lm4` — 4 layers, 4 heads (D = 64), same learnable machinery;
+//!   the non-toy geometry the serving stack and load benches exercise.
 //!
 //! Per tag the backend registers `<tag>_init`, `<tag>_train_step`,
 //! `<tag>_distill_step`, `<tag>_eval` (manifests follow aot.py's
@@ -1896,7 +1898,7 @@ mod tests {
         assert_eq!(man2.meta_str("feature"), Some("learnable"));
         assert_eq!(man2.inputs.len(), 3 * 14 + 6);
         assert_eq!(man2.outputs.len(), 3 * 14 + 2);
-        assert!(man2.inputs.iter().any(|s| s.name == "params/layer1/fm_q"));
+        assert!(man2.inputs.iter().any(|s| s.name == "params/layer01/fm_q"));
         // geometry look-alikes must be rejected at load
         let cfg = ModelConfig::ref_lm();
         let mut bad = builtin_manifest(&cfg, "ref_lm", TrainGraph::Train);
@@ -1917,7 +1919,7 @@ mod tests {
         // the learnable tag inits every declared leaf
         let s2 = Session::init(&reg, "ref_lm2", 3).unwrap();
         assert_eq!(s2.params.len(), 14);
-        assert!(s2.params.get("params/layer1/wo").is_ok());
+        assert!(s2.params.get("params/layer01/wo").is_ok());
     }
 
     #[test]

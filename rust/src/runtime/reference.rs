@@ -14,11 +14,15 @@
 //!   softmax, the data-independent Hedgehog map `[exp(x), exp(-x)]`
 //!   (Eq. 6), and 2nd-degree Taylor features (Sec 4.1).
 //! * `<tag>_decode_step` for each builtin `ModelConfig` tag (`ref_lm`,
-//!   `ref_lm2`) — Hedgehog LM decode steps (embed -> per layer: optional
-//!   q/k/v/o projections + fixed or *learnable* feature maps + linear
-//!   attention over the carried per-layer (S, z) state, residual ->
-//!   unembed), so the serving engine, the batcher, and the decode bench
-//!   run hermetically with no compiled model graphs. See `RefDecode`.
+//!   `ref_lm2`, `ref_lm4`) — Hedgehog LM decode steps (embed -> per
+//!   layer: optional q/k/v/o projections + fixed or *learnable* feature
+//!   maps + linear attention over the carried per-layer (S, z) state,
+//!   residual -> unembed), so the serving engine, the scheduler, and the
+//!   decode bench run hermetically with no compiled model graphs. See
+//!   `RefDecode`. The same math has a whole-prompt **chunked prefill**
+//!   entry point ([`prefill_state`]) that runs a prompt through
+//!   `linear_head_single_pass` once and hands the final per-layer (S, z)
+//!   to a serve slot (the time-to-first-token lever — see DESIGN.md §9).
 //!
 //! Two execution strategies per kernel, selected by `ExecOptions` (see
 //! rust/DESIGN.md §5 for the derivation):
@@ -85,6 +89,8 @@ const FIG6_TAYLOR_NS: &[usize] = &[256, 512, 1024, 2048];
 pub const REF_LM_TAG: &str = "ref_lm";
 /// The 2-layer learnable-feature-map builtin (projections + `fm` leaves).
 pub const REF_LM2_TAG: &str = "ref_lm2";
+/// The 4-layer 4-head learnable builtin — non-toy serve/bench geometry.
+pub const REF_LM4_TAG: &str = "ref_lm4";
 
 /// Map `<tag>_decode_step` to its builtin config, if any.
 fn decode_for(name: &str) -> Option<(&'static str, ModelConfig)> {
@@ -1298,6 +1304,169 @@ fn decode_slot_inline(
     }
 }
 
+/// Whole-prompt chunked prefill (DESIGN.md §9): run a prompt through the
+/// same fold-then-read recurrence the decode step executes, but
+/// layer-major over all n rows via `linear_head_single_pass` — one
+/// chunked SIMD pass instead of n sequential `decode_step` calls, which
+/// is the serving stack's time-to-first-token lever. Returns the final
+/// single-slot state and the last-position logits:
+///
+///   s      (L, H, Dp, d)   — exactly what n decode steps would leave
+///   z      (L, H, Dp)
+///   logits (V,)            — predicts the first generated token
+///
+/// `leaves` are the parameter tensors in the manifest's sorted leaf
+/// order (the tail of the decode manifest's inputs — what
+/// `serve::Engine` already holds). Valid because causal attention at
+/// layer l, row t reads only layer-l rows <= t: reordering token-major
+/// decode into layer-major passes changes nothing, and every per-row
+/// operation here is the same `simd` call sequence `decode_layer` makes,
+/// so parity with sequential stepping is property-tested at <= 1e-5 for
+/// every builtin tag. Buffers are allocated per call — prefill is a
+/// per-admission one-shot, not part of the zero-alloc steady-state
+/// decode contract.
+pub fn prefill_state(
+    cfg: &ModelConfig,
+    leaves: &[&Tensor],
+    prompt: &[i32],
+    opts: ExecOptions,
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    if prompt.is_empty() {
+        bail!("prefill_state: empty prompt (admit the slot with reset state instead)");
+    }
+    let mp = ModelParams::from_tensors(cfg, leaves)?;
+    let (h, d, dp, dm, v) = (cfg.heads, cfg.head_dim, cfg.dp(), cfg.d_model(), cfg.vocab);
+    let dd = d * d;
+    let n = prompt.len();
+    // chunk_size == 0 marks the naive oracle for kernels; the single-pass
+    // fold order is chunk-independent, so here it just means "one block".
+    let cmax = if opts.chunk_size == 0 { n } else { opts.chunk_size.min(n) };
+
+    let mut s = vec![0.0f32; cfg.layers * h * dp * d];
+    let mut z = vec![0.0f32; cfg.layers * h * dp];
+
+    // Residual stream rows (n, D): embed gather, same id-wrapping as decode.
+    let mut x = vec![0.0f32; n * dm];
+    for (t, &tok) in prompt.iter().enumerate() {
+        let id = tok.rem_euclid(v as i32) as usize;
+        x[t * dm..(t + 1) * dm].copy_from_slice(&mp.embed[id * dm..(id + 1) * dm]);
+    }
+
+    // Reusable layer/head buffers (q/k/w rows only used by Learnable).
+    let mut y = vec![0.0f32; n * dm];
+    let mut q = vec![0.0f32; n * dm];
+    let mut k = vec![0.0f32; n * dm];
+    let mut w = vec![0.0f32; n * dm];
+    let mut pre_q = vec![0.0f32; n * d];
+    let mut pre_k = vec![0.0f32; n * d];
+    let mut vh = vec![0.0f32; n * d];
+    let mut outh = vec![0.0f32; n * d];
+    let mut qf = vec![0.0f32; cmax * dp];
+    let mut kf = vec![0.0f32; cmax * dp];
+
+    for l in 0..cfg.layers {
+        let s_l = &mut s[l * h * dp * d..(l + 1) * h * dp * d];
+        let z_l = &mut z[l * h * dp..(l + 1) * h * dp];
+        match mp.layers.get(l) {
+            Some(lp) => {
+                // Project every row with decode_layer's op convention.
+                for t in 0..n {
+                    let xr = &x[t * dm..(t + 1) * dm];
+                    for (out, wm) in [
+                        (&mut q[t * dm..(t + 1) * dm], lp.wq),
+                        (&mut k[t * dm..(t + 1) * dm], lp.wk),
+                        (&mut w[t * dm..(t + 1) * dm], lp.wv),
+                    ] {
+                        simd::scaled_add(out, 0.0, xr[0], &wm[..dm]);
+                        for (i, &xi) in xr.iter().enumerate().skip(1) {
+                            simd::axpy(out, xi, &wm[i * dm..(i + 1) * dm]);
+                        }
+                    }
+                }
+                for head in 0..h {
+                    let fm_q = &lp.fm_q[head * dd..(head + 1) * dd];
+                    let fm_k = &lp.fm_k[head * dd..(head + 1) * dd];
+                    // Pre-activation rows (fm . q_h / fm . k_h): the
+                    // Hedgehog map inside the single pass then applies
+                    // exp(+-x), matching decode_layer's exp_pos_neg(pre).
+                    for t in 0..n {
+                        let qh = &q[t * dm + head * d..t * dm + (head + 1) * d];
+                        let kh = &k[t * dm + head * d..t * dm + (head + 1) * d];
+                        for r in 0..d {
+                            pre_q[t * d + r] = simd::dot(qh, &fm_q[r * d..(r + 1) * d]);
+                            pre_k[t * d + r] = simd::dot(kh, &fm_k[r * d..(r + 1) * d]);
+                        }
+                        vh[t * d..(t + 1) * d]
+                            .copy_from_slice(&w[t * dm + head * d..t * dm + (head + 1) * d]);
+                    }
+                    let sh = &mut s_l[head * dp * d..(head + 1) * dp * d];
+                    let zh = &mut z_l[head * dp..(head + 1) * dp];
+                    linear_head_single_pass(
+                        FeatureMap::Hedgehog,
+                        &pre_q,
+                        &pre_k,
+                        &vh,
+                        &mut outh,
+                        cmax,
+                        d,
+                        d,
+                        dp,
+                        (&mut qf, &mut kf, sh, zh),
+                    );
+                    for t in 0..n {
+                        y[t * dm + head * d..t * dm + (head + 1) * d]
+                            .copy_from_slice(&outh[t * d..(t + 1) * d]);
+                    }
+                }
+                // residual + output projection: x_t += y_t wo
+                for t in 0..n {
+                    let xr = &mut x[t * dm..(t + 1) * dm];
+                    for (j, &yj) in y[t * dm..(t + 1) * dm].iter().enumerate() {
+                        simd::axpy(xr, yj, &lp.wo[j * dm..(j + 1) * dm]);
+                    }
+                }
+            }
+            None => {
+                // FixedExp: q = k = v = the raw head slice, phi = the
+                // data-independent Hedgehog map, stack by replacement.
+                for head in 0..h {
+                    for t in 0..n {
+                        vh[t * d..(t + 1) * d]
+                            .copy_from_slice(&x[t * dm + head * d..t * dm + (head + 1) * d]);
+                    }
+                    let sh = &mut s_l[head * dp * d..(head + 1) * dp * d];
+                    let zh = &mut z_l[head * dp..(head + 1) * dp];
+                    linear_head_single_pass(
+                        FeatureMap::Hedgehog,
+                        &vh,
+                        &vh,
+                        &vh,
+                        &mut outh,
+                        cmax,
+                        d,
+                        d,
+                        dp,
+                        (&mut qf, &mut kf, sh, zh),
+                    );
+                    for t in 0..n {
+                        y[t * dm + head * d..t * dm + (head + 1) * d]
+                            .copy_from_slice(&outh[t * d..(t + 1) * d]);
+                    }
+                }
+                x.copy_from_slice(&y);
+            }
+        }
+    }
+
+    let mut logits = vec![0.0f32; v];
+    let xr = &x[(n - 1) * dm..n * dm];
+    simd::scaled_add(&mut logits, 0.0, xr[0], &mp.unembed[..v]);
+    for (j, &xj) in xr.iter().enumerate().skip(1) {
+        simd::axpy(&mut logits, xj, &mp.unembed[j * v..(j + 1) * v]);
+    }
+    Ok((s, z, logits))
+}
+
 /// Per-slot decode work item for the pool path: disjoint views of the
 /// slot's per-layer state blocks, logits row, and scratch region.
 struct DecodeSlot<'a> {
@@ -1744,7 +1913,7 @@ mod tests {
         let ms = ReferenceBackend::new().builtin_manifests();
         let fig6_count = FIG6_SOFTMAX_NS.len() + FIG6_HEDGEHOG_NS.len() + FIG6_TAYLOR_NS.len();
         // 2 kernels + fig6 sweep + per builtin tag (decode + 4 train graphs)
-        assert_eq!(ms.len(), 2 + fig6_count + 2 * 5);
+        assert_eq!(ms.len(), 2 + fig6_count + 3 * 5);
         for m in &ms {
             if m.name.starts_with(REF_LM_TAG) {
                 continue; // decode + train graphs have their own slot contracts
@@ -1772,7 +1941,7 @@ mod tests {
         assert_eq!(dec2.inputs.len(), 4 + 14);
         assert_eq!(dec2.inputs[2].shape, vec![2, 4, 2, 32, 16]);
         assert_eq!(dec2.meta_usize("n_layers"), Some(2));
-        assert!(dec2.inputs.iter().any(|s| s.name == "params/layer1/fm_k"));
+        assert!(dec2.inputs.iter().any(|s| s.name == "params/layer01/fm_k"));
     }
 
     /// Run T decode steps for one slot through RefDecode and return its
@@ -1877,6 +2046,73 @@ mod tests {
                         "{opts:?} step {t}: decode {a} vs oracle {b}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_matches_sequential_decode() {
+        // Feeding a prompt through `prefill_state` must land in the same
+        // per-layer (S, z) and last-token logits as n sequential decode
+        // steps — for every builtin tag, at several chunkings (including
+        // a non-divisor chunk and the one-block path). This is the
+        // serving stack's state-handoff contract (DESIGN.md §9).
+        let prompt: Vec<i32> = vec![3, 250, 17, 17, 99, 0, 42, 128, 7, 64, 9, 77, 5];
+        for tag in ModelConfig::builtin_tags() {
+            let cfg = ModelConfig::for_tag(tag).unwrap();
+            let backend = ReferenceBackend::with_options(ExecOptions::serial());
+            let m = builtin_decode_manifest(&cfg, tag);
+            let exe = backend.load(Path::new("unused"), &m).unwrap();
+            let params = cfg.init_params(0x5EED);
+            let mut s = Tensor::zeros(DType::F32, &m.inputs[2].shape);
+            let mut z = Tensor::zeros(DType::F32, &m.inputs[3].shape);
+            let mut last = Vec::new();
+            for (step, &t) in prompt.iter().enumerate() {
+                let mut toks = vec![0i32; cfg.batch];
+                toks[0] = t;
+                let token = Tensor::from_i32(toks, &[cfg.batch]);
+                let pos = Tensor::from_i32(vec![step as i32; cfg.batch], &[cfg.batch]);
+                let mut refs: Vec<&Tensor> = vec![&token, &pos, &s, &z];
+                refs.extend(
+                    m.inputs[4..].iter().map(|sl| params.get(&sl.name).unwrap()),
+                );
+                let mut outs = exe.execute(&refs).unwrap();
+                drop(refs);
+                z = outs.pop().unwrap();
+                s = outs.pop().unwrap();
+                last = outs.pop().unwrap().as_f32().unwrap()[..cfg.vocab].to_vec();
+            }
+            // slot 0's state columns, per layer, as prefill lays them out
+            let (l, b, h, dp, d) = (cfg.layers, cfg.batch, cfg.heads, cfg.dp(), cfg.head_dim);
+            let (sd, zd) = (s.as_f32().unwrap(), z.as_f32().unwrap());
+            let mut s_want = Vec::new();
+            let mut z_want = Vec::new();
+            for li in 0..l {
+                s_want.extend_from_slice(&sd[li * b * h * dp * d..][..h * dp * d]);
+                z_want.extend_from_slice(&zd[li * b * h * dp..][..h * dp]);
+            }
+
+            let leaves: Vec<&Tensor> =
+                m.inputs[4..].iter().map(|sl| params.get(&sl.name).unwrap()).collect();
+            let close = |a: &[f32], want: &[f32], what: &str, opts: ExecOptions| {
+                assert_eq!(a.len(), want.len(), "{tag} {what}: length");
+                for (i, (x, y)) in a.iter().zip(want).enumerate() {
+                    let tol = 1e-5 * y.abs().max(1.0);
+                    assert!(
+                        (x - y).abs() <= tol,
+                        "{tag} {what}[{i}] ({opts:?}): prefill {x} vs sequential {y}"
+                    );
+                }
+            };
+            for opts in [
+                ExecOptions::serial(),
+                ExecOptions { threads: 1, chunk_size: 5 },
+                ExecOptions::naive(),
+            ] {
+                let (ps, pz, pl) = prefill_state(&cfg, &leaves, &prompt, opts).unwrap();
+                close(&ps, &s_want, "S", opts);
+                close(&pz, &z_want, "z", opts);
+                close(&pl, &last, "logits", opts);
             }
         }
     }

@@ -1,5 +1,8 @@
-//! Batched decode scheduler: FIFO admission into engine slots with
-//! bounded-queue backpressure, per-request latency accounting.
+//! Static-batch decode scheduler: FIFO admission into engine slots with
+//! bounded-queue backpressure, per-request latency accounting. The
+//! continuous-batching scheduler (`serve::scheduler`) supersedes this
+//! for streaming workloads; the batcher stays as the minimal reference
+//! for the admission/eviction bookkeeping.
 //!
 //! The scheduler is deliberately engine-agnostic: `plan_admissions` /
 //! `record_token` are pure state transitions (property-tested: capacity
@@ -7,11 +10,29 @@
 //! `run_to_completion` drives a real `Engine`.
 
 use std::collections::VecDeque;
+use std::fmt;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::engine::{argmax, Engine};
+
+/// Typed backpressure: the wait queue is at `max_queue`, the request was
+/// not enqueued. Carries the numbers a caller needs to decide between
+/// retry-later, shed-load, or growing the queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueFull {
+    pub queued: usize,
+    pub max_queue: usize,
+}
+
+impl fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "serve queue full: {} queued (max {})", self.queued, self.max_queue)
+    }
+}
+
+impl std::error::Error for QueueFull {}
 
 /// A generation request.
 #[derive(Debug, Clone)]
@@ -65,14 +86,15 @@ impl Batcher {
         }
     }
 
-    /// Enqueue a request; returns false (backpressure) if the queue is full.
-    pub fn submit(&mut self, req: Request) -> bool {
+    /// Enqueue a request; `Err(QueueFull)` (backpressure) if the queue
+    /// is at capacity — the request is dropped and counted in `rejected`.
+    pub fn submit(&mut self, req: Request) -> Result<(), QueueFull> {
         if self.queue.len() >= self.max_queue {
             self.rejected += 1;
-            return false;
+            return Err(QueueFull { queued: self.queue.len(), max_queue: self.max_queue });
         }
         self.queue.push_back((req, 0));
-        true
+        Ok(())
     }
 
     pub fn pending(&self) -> usize {
@@ -184,12 +206,12 @@ impl Batcher {
     /// iteration costs one engine step and no batcher-side allocations
     /// (beyond per-request output growth).
     pub fn run_to_completion(&mut self, engine: &mut Engine) -> Result<(usize, f64)> {
-        assert_eq!(engine.batch, self.capacity, "engine batch != batcher capacity");
+        assert_eq!(engine.batch(), self.capacity, "engine batch != batcher capacity");
         let t0 = Instant::now();
         let mut steps = 0;
         let mut tokens = vec![0i32; self.capacity];
         let mut sampled = vec![0i32; self.capacity];
-        let vocab = engine.vocab;
+        let vocab = engine.vocab();
         while !self.is_idle() {
             for slot in self.plan_admissions() {
                 engine.reset_slot(slot)?;
@@ -218,7 +240,7 @@ mod tests {
     fn capacity_never_exceeded() {
         let mut b = Batcher::new(2, 16);
         for i in 0..6 {
-            assert!(b.submit(req(i, 3, 2)));
+            assert!(b.submit(req(i, 3, 2)).is_ok());
         }
         b.plan_admissions();
         assert_eq!(b.active(), 2);
@@ -228,17 +250,18 @@ mod tests {
     #[test]
     fn backpressure_rejects() {
         let mut b = Batcher::new(1, 2);
-        assert!(b.submit(req(0, 1, 1)));
-        assert!(b.submit(req(1, 1, 1)));
-        assert!(!b.submit(req(2, 1, 1)));
+        assert!(b.submit(req(0, 1, 1)).is_ok());
+        assert!(b.submit(req(1, 1, 1)).is_ok());
+        let err = b.submit(req(2, 1, 1)).unwrap_err();
+        assert_eq!(err, QueueFull { queued: 2, max_queue: 2 });
         assert_eq!(b.rejected, 1);
     }
 
     #[test]
     fn fifo_completion_order_single_slot() {
         let mut b = Batcher::new(1, 16);
-        b.submit(req(10, 1, 1));
-        b.submit(req(11, 1, 1));
+        b.submit(req(10, 1, 1)).unwrap();
+        b.submit(req(11, 1, 1)).unwrap();
         // drive manually with a fake "sampled token" stream
         while !b.is_idle() {
             b.plan_admissions();
@@ -255,7 +278,7 @@ mod tests {
     fn all_requests_complete_exactly_once() {
         let mut b = Batcher::new(3, 64);
         for i in 0..10 {
-            b.submit(req(i, 2 + (i as usize % 3), 1 + (i as usize % 4)));
+            b.submit(req(i, 2 + (i as usize % 3), 1 + (i as usize % 4))).unwrap();
         }
         let mut guard = 0;
         while !b.is_idle() {
@@ -272,7 +295,7 @@ mod tests {
     #[test]
     fn eos_terminates_early() {
         let mut b = Batcher::new(1, 4);
-        b.submit(Request { id: 0, prompt: vec![1, 2], max_new: 50, eos: 9 });
+        b.submit(Request { id: 0, prompt: vec![1, 2], max_new: 50, eos: 9 }).unwrap();
         b.plan_admissions();
         b.record_tokens(&[0]); // prefill token 1
         b.record_tokens(&[4]); // prefill token 2 -> first output 4

@@ -1,18 +1,27 @@
-//! Recurrent-state decode engine over a `<tag>_decode_step` artifact.
+//! The *executor* half of the serving split (DESIGN.md §9): a stateless
+//! step executor over a `<tag>_decode_step` artifact, plus the `Engine`
+//! façade that pairs one executor with one `SlotStore`.
 //!
-//! The linear-attention state is (S, z) per layer:
-//!     S (L, B, H, Dp, Dv)   running sum of phi(k) v^T
-//!     z (L, B, H, Dp)       running sum of phi(k)
-//! One `step()` advances every batch slot by one token for a constant cost
-//! — no KV cache growth. Slots are independent sequences; `reset_slot`
-//! zeroes one slot's state columns without touching the others (state
-//! isolation is property-tested in rust/tests).
+//! [`StepExecutor`] owns what belongs to the **model**: the executable
+//! handle, pre-filled parameter inputs, persistent token/pos input
+//! tensors, and the output buffers. It holds no sequence state — every
+//! `step` borrows a [`SlotStore`] (the per-slot (S, z), positions,
+//! lifecycle) and advances all of its slots by one token for a constant
+//! cost, no KV cache growth. One executor can therefore serve any store
+//! with matching geometry; the split is what sharding/multi-executor
+//! work builds on, and what lets chunked prefill hand a finished state
+//! into a slot the executor never stepped.
 //!
-//! Execution is backend-agnostic: the engine drives an `Executable` handle
+//! Execution is backend-agnostic: the executor drives an `Executable`
 //! and never sees whether PJRT or the reference backend is underneath.
-//! With no compiled artifacts, the reference backend's builtin
-//! `ref_lm_decode_step` (tag `ref_lm`, demo params from
-//! `runtime::ref_lm_demo_params`) gives the engine a hermetic hot path.
+//! With no compiled artifacts, the builtin `<tag>_decode_step` graphs
+//! give it a hermetic hot path — and, on the reference backend, a
+//! **chunked prefill** fast path ([`StepExecutor::prefill`]): the whole
+//! prompt runs through `runtime::reference::prefill_state` in one
+//! chunked SIMD pass and the final per-layer (S, z) is installed via
+//! `SlotStore::load`, so time-to-first-token is one pass instead of
+//! `prompt.len()` sequential steps. Compiled backends return `None` and
+//! callers fall back to per-token stepping.
 //!
 //! The step loop is engineered to be **allocation-free** in steady state
 //! and position-independent (zero allocations per token on the serial
@@ -22,20 +31,27 @@
 //! * outputs go through `Executable::run_refs_into` into a persistent
 //!   back-buffer set: the backend (when it overrides `execute_into`, as
 //!   the reference decode step does) writes logits and the advanced
-//!   (S, z) straight into engine-owned tensors, which are then swapped
-//!   with the front state — no per-token output `Vec`, no clones;
+//!   (S, z) straight into executor-owned tensors, which are then swapped
+//!   with the store's front state — no per-token output `Vec`, no clones;
 //! * the borrowed input list is assembled through a reusable pointer
 //!   scratch instead of a fresh `Vec<&Tensor>` per token;
-//! * logits are returned as a borrowed `&[f32]` view of the engine's
+//! * logits are returned as a borrowed `&[f32]` view of the executor's
 //!   last-step tensor instead of a freshly allocated `Vec<Vec<f32>>`.
 
 use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::runtime::{ArtifactRegistry, Executable, ExecOptions, ParamStore, Tensor};
+use crate::runtime::reference::prefill_state;
+use crate::runtime::{
+    ArtifactRegistry, Executable, ExecOptions, ModelConfig, ParamStore, Tensor,
+};
 
-pub struct Engine {
+use super::slot::SlotStore;
+
+/// Stateless decode-step executor. See the module doc; sequence state
+/// lives in the [`SlotStore`] each call borrows.
+pub struct StepExecutor {
     exe: Rc<Executable>,
     /// inputs in manifest order, with param slots pre-filled
     param_inputs: Vec<Option<Tensor>>,
@@ -46,46 +62,35 @@ pub struct Engine {
     /// persistent (B,) i32 input buffers, overwritten each step
     token_t: Tensor,
     pos_t: Tensor,
-    pub s: Tensor,
-    pub z: Tensor,
     /// last step's (B, vocab) logits — the buffer `step` hands out views of
     logits: Tensor,
     /// back buffers for `run_refs_into` (manifest output order: logits,
     /// s, z), swapped with the front tensors after every step
     outs_back: Vec<Tensor>,
     /// reusable input-assembly scratch (see the SAFETY note in `step`).
-    /// Raw pointers would strip Send/Sync, but `Engine` is already
+    /// Raw pointers would strip Send/Sync, but the executor is already
     /// single-threaded by construction (`exe` is an `Rc`), so no
     /// auto-trait is lost that the type ever had.
     input_ptrs: Vec<*const Tensor>,
-    pub batch: usize,
-    pub vocab: usize,
-    /// per-slot next position
-    pub positions: Vec<i32>,
-    /// tokens decoded since construction (throughput accounting)
-    pub tokens_processed: usize,
+    batch: usize,
+    vocab: usize,
+    /// `Some` when the artifact is a reference-backend builtin whose
+    /// geometry `prefill_state` can replay (the chunked-prefill gate).
+    prefill_cfg: Option<ModelConfig>,
+    /// Chunking for the prefill pass (captured from the registry).
+    prefill_opts: ExecOptions,
+    /// tokens absorbed since construction — decode steps count `batch`
+    /// each, prefill counts the prompt length (throughput accounting)
+    tokens_processed: usize,
 }
 
-impl Engine {
-    /// `new`, after applying execution tuning to the registry's backend.
-    /// NOTE: options are registry-wide (shared by every executable the
-    /// registry serves, including other engines/sessions on it) — this is
-    /// a convenience for processes with one dominant workload, not
-    /// per-engine isolation. Decode steps are latency-bound (n = 1 per
-    /// call); the persistent pool makes explicit `threads > 1`
-    /// slot-parallel decode viable, but auto (0) deliberately stays
-    /// serial for these tiny per-step problems.
-    pub fn with_exec_options(
+impl StepExecutor {
+    /// Build the executor and a zeroed, geometry-matched `SlotStore`.
+    pub fn new(
         reg: &ArtifactRegistry,
         tag: &str,
         params: &ParamStore,
-        opts: ExecOptions,
-    ) -> Result<Engine> {
-        reg.set_exec_options(opts);
-        Engine::new(reg, tag, params)
-    }
-
-    pub fn new(reg: &ArtifactRegistry, tag: &str, params: &ParamStore) -> Result<Engine> {
+    ) -> Result<(StepExecutor, SlotStore)> {
         let exe = reg.get(&format!("{tag}_decode_step"))?;
         let man = exe.manifest.clone();
         let token_idx = man.input_index("token")?;
@@ -115,7 +120,15 @@ impl Engine {
         let logits = Tensor::zeros(man.outputs[0].dtype, &man.outputs[0].shape);
         let outs_back: Vec<Tensor> =
             man.outputs.iter().map(|o| Tensor::zeros(o.dtype, &o.shape)).collect();
-        Ok(Engine {
+        // Chunked prefill needs the interpreter's math, not just any
+        // executable: gate on the reference backend serving a builtin
+        // config (compiled graphs fall back to per-token stepping).
+        let prefill_cfg = if man.meta_str("backend") == Some("reference") {
+            ModelConfig::for_tag(tag)
+        } else {
+            None
+        };
+        let exec = StepExecutor {
             exe,
             param_inputs,
             token_idx,
@@ -124,35 +137,46 @@ impl Engine {
             z_idx,
             token_t,
             pos_t,
-            s,
-            z,
             logits,
             outs_back,
             input_ptrs: Vec::new(),
             batch,
             vocab,
-            positions: vec![0; batch],
+            prefill_cfg,
+            prefill_opts: reg.exec_options(),
             tokens_processed: 0,
-        })
+        };
+        let slots = SlotStore::new(s, z, batch);
+        Ok((exec, slots))
     }
 
-    /// Zero one slot's recurrent state and position (new request admitted).
-    pub fn reset_slot(&mut self, slot: usize) -> Result<()> {
-        assert!(slot < self.batch);
-        zero_slot(&mut self.s, 1, slot)?;
-        zero_slot(&mut self.z, 1, slot)?;
-        self.positions[slot] = 0;
-        Ok(())
+    pub fn batch(&self) -> usize {
+        self.batch
     }
 
-    /// Advance every slot by one token. `tokens[b]` is the input token for
-    /// slot b (idle slots can feed 0). Returns a view of the flat
-    /// (B, vocab) logits — row b is `&logits[b * vocab..(b + 1) * vocab]`,
-    /// or use `logits_row`. The view is valid until the next `step`.
-    pub fn step(&mut self, tokens: &[i32]) -> Result<&[f32]> {
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn tokens_processed(&self) -> usize {
+        self.tokens_processed
+    }
+
+    /// Whether `prefill` has a fast path (reference-backend builtins).
+    pub fn supports_prefill(&self) -> bool {
+        self.prefill_cfg.is_some()
+    }
+
+    /// Advance every slot of `slots` by one token. `tokens[b]` is the
+    /// input token for slot b (idle slots can feed 0). Returns a view of
+    /// the flat (B, vocab) logits — row b is
+    /// `&logits[b * vocab..(b + 1) * vocab]`, or use `logits_row`. The
+    /// view is valid until the next `step`.
+    pub fn step(&mut self, slots: &mut SlotStore, tokens: &[i32]) -> Result<&[f32]> {
         assert_eq!(tokens.len(), self.batch);
+        assert_eq!(slots.batch(), self.batch, "slot store geometry mismatch");
         self.token_t.as_i32_mut()?.copy_from_slice(tokens);
-        self.pos_t.as_i32_mut()?.copy_from_slice(&self.positions);
+        self.pos_t.as_i32_mut()?.copy_from_slice(slots.positions());
         // Borrowed inputs: params, state, and the token/pos buffers are
         // never cloned per token (§Perf L3). Assembled through the
         // persistent pointer scratch — a fresh `Vec<&Tensor>` would be
@@ -166,22 +190,22 @@ impl Engine {
             } else if i == self.pos_idx {
                 &self.pos_t
             } else if i == self.s_idx {
-                &self.s
+                &slots.s
             } else if i == self.z_idx {
-                &self.z
+                &slots.z
             } else {
                 return Err(anyhow!("unfilled decode input {i}"));
             };
             self.input_ptrs.push(t as *const Tensor);
         }
         // SAFETY: `&Tensor` and `*const Tensor` are layout-compatible;
-        // every pointer was derived from a live borrow of `self` in the
-        // loop above and stays valid for the duration of the call. The
-        // slice is consumed by `run_refs_into`, which reads the inputs
-        // and writes only `outs_back` — never one of the pointed-to
-        // tensors (the swap below keeps front and back buffers distinct
-        // objects), so no aliasing mutation occurs behind the erased
-        // borrows.
+        // every pointer was derived from a live borrow of `self` or
+        // `slots` in the loop above and stays valid for the duration of
+        // the call. The slice is consumed by `run_refs_into`, which
+        // reads the inputs and writes only `outs_back` — never one of
+        // the pointed-to tensors (the swap below keeps front and back
+        // buffers distinct objects), so no aliasing mutation occurs
+        // behind the erased borrows.
         let inputs: &[&Tensor] = unsafe {
             std::slice::from_raw_parts(
                 self.input_ptrs.as_ptr() as *const &Tensor,
@@ -193,13 +217,12 @@ impl Engine {
         res?;
         // outputs: logits, s, z (manifest order, validated at
         // construction). Double-buffer: swap the filled back buffers
-        // with the front tensors — no per-token output Vec, no clones.
+        // with the store's front tensors — no per-token output Vec, no
+        // clones.
         std::mem::swap(&mut self.logits, &mut self.outs_back[0]);
-        std::mem::swap(&mut self.s, &mut self.outs_back[1]);
-        std::mem::swap(&mut self.z, &mut self.outs_back[2]);
-        for p in &mut self.positions {
-            *p += 1;
-        }
+        std::mem::swap(&mut slots.s, &mut self.outs_back[1]);
+        std::mem::swap(&mut slots.z, &mut self.outs_back[2]);
+        slots.advance_positions();
         self.tokens_processed += self.batch;
         self.logits.as_f32()
     }
@@ -210,8 +233,110 @@ impl Engine {
         Ok(&self.logits.as_f32()?[b * self.vocab..(b + 1) * self.vocab])
     }
 
+    /// Chunked prefill with state handoff (DESIGN.md §9): run `prompt`
+    /// through the reference interpreter's single-pass kernels, install
+    /// the final per-layer (S, z) into `slots` at `slot` with position
+    /// `prompt.len()`, and return the last-position logits (they predict
+    /// the first generated token). Returns `Ok(None)` when the artifact
+    /// has no prefill path (compiled backends) or the prompt is empty —
+    /// callers then fall back to per-token stepping. Allocates per call;
+    /// prefill is a per-admission one-shot, not steady-state decode.
+    pub fn prefill(
+        &mut self,
+        slots: &mut SlotStore,
+        slot: usize,
+        prompt: &[i32],
+    ) -> Result<Option<Vec<f32>>> {
+        let Some(cfg) = self.prefill_cfg else { return Ok(None) };
+        if prompt.is_empty() {
+            return Ok(None);
+        }
+        assert!(slot < self.batch);
+        // Param slots in manifest order are exactly the sorted leaves
+        // the builtin decode manifest declares after token/pos/s/z.
+        let leaves: Vec<&Tensor> = self.param_inputs.iter().flatten().collect();
+        let (s, z, logits) = prefill_state(&cfg, &leaves, prompt, self.prefill_opts)?;
+        slots.load(slot, &s, &z, prompt.len() as i32)?;
+        self.tokens_processed += prompt.len();
+        Ok(Some(logits))
+    }
+}
+
+/// One executor + one slot store: the single-process serving engine.
+/// Everything the scheduler layers build on is reachable through the
+/// two halves (`exec`, `slots`); the methods here are the common
+/// compositions.
+pub struct Engine {
+    pub exec: StepExecutor,
+    pub slots: SlotStore,
+}
+
+impl Engine {
+    /// `new`, after applying execution tuning to the registry's backend.
+    /// NOTE: options are registry-wide (shared by every executable the
+    /// registry serves, including other engines/sessions on it) — this is
+    /// a convenience for processes with one dominant workload, not
+    /// per-engine isolation. Decode steps are latency-bound (n = 1 per
+    /// call); the persistent pool makes explicit `threads > 1`
+    /// slot-parallel decode viable, but auto (0) deliberately stays
+    /// serial for these tiny per-step problems.
+    pub fn with_exec_options(
+        reg: &ArtifactRegistry,
+        tag: &str,
+        params: &ParamStore,
+        opts: ExecOptions,
+    ) -> Result<Engine> {
+        reg.set_exec_options(opts);
+        Engine::new(reg, tag, params)
+    }
+
+    pub fn new(reg: &ArtifactRegistry, tag: &str, params: &ParamStore) -> Result<Engine> {
+        let (exec, slots) = StepExecutor::new(reg, tag, params)?;
+        Ok(Engine { exec, slots })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.exec.batch()
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.exec.vocab()
+    }
+
+    /// Per-slot next position.
+    pub fn positions(&self) -> &[i32] {
+        self.slots.positions()
+    }
+
+    /// Tokens absorbed since construction (throughput accounting).
+    pub fn tokens_processed(&self) -> usize {
+        self.exec.tokens_processed()
+    }
+
+    /// Zero one slot's recurrent state and position (new request admitted).
+    pub fn reset_slot(&mut self, slot: usize) -> Result<()> {
+        self.slots.reset(slot)
+    }
+
+    /// Advance every slot by one token — see [`StepExecutor::step`].
+    pub fn step(&mut self, tokens: &[i32]) -> Result<&[f32]> {
+        self.exec.step(&mut self.slots, tokens)
+    }
+
+    /// Slot `b`'s row of the last step's logits.
+    pub fn logits_row(&self, b: usize) -> Result<&[f32]> {
+        self.exec.logits_row(b)
+    }
+
+    /// Chunked prefill into one slot — see [`StepExecutor::prefill`].
+    pub fn prefill_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<Option<Vec<f32>>> {
+        self.exec.prefill(&mut self.slots, slot, prompt)
+    }
+
     /// Greedy-decode a single prompt in slot 0 (other slots idle).
     /// Returns the generated continuation (stops at `eos` or `max_new`).
+    /// The prompt takes the chunked prefill fast path where available
+    /// (one pass); otherwise it is absorbed token-by-token.
     pub fn generate_greedy(
         &mut self,
         prompt: &[i32],
@@ -220,14 +345,19 @@ impl Engine {
     ) -> Result<Vec<i32>> {
         self.reset_slot(0)?;
         // Hoisted: the slice `step` returns keeps `self` mutably
-        // borrowed, so `self.vocab` can't be read past that call.
-        let vocab = self.vocab;
-        let mut toks = vec![0i32; self.batch];
+        // borrowed, so `self.vocab()` can't be read past that call.
+        let vocab = self.vocab();
+        let mut toks = vec![0i32; self.batch()];
         let mut next = 0i32;
-        for &t in prompt {
-            toks.fill(0);
-            toks[0] = t;
-            next = argmax(&self.step(&toks)?[..vocab]);
+        match self.prefill_slot(0, prompt)? {
+            Some(logits) => next = argmax(&logits[..vocab]),
+            None => {
+                for &t in prompt {
+                    toks.fill(0);
+                    toks[0] = t;
+                    next = argmax(&self.step(&toks)?[..vocab]);
+                }
+            }
         }
         let mut out = Vec::new();
         for _ in 0..max_new {
@@ -255,46 +385,15 @@ pub fn argmax(row: &[f32]) -> i32 {
     best as i32
 }
 
-/// Zero the `slot`-th column of a tensor along axis `axis` (axis 1 = the
-/// batch axis of (L, B, ...) state tensors).
-fn zero_slot(t: &mut Tensor, axis: usize, slot: usize) -> Result<()> {
-    let shape = t.shape.clone();
-    let outer: usize = shape[..axis].iter().product();
-    let axis_len = shape[axis];
-    let inner: usize = shape[axis + 1..].iter().product();
-    let data = t.as_f32_mut()?;
-    for o in 0..outer {
-        let base = o * axis_len * inner + slot * inner;
-        for x in &mut data[base..base + inner] {
-            *x = 0.0;
-        }
-    }
-    Ok(())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::{ref_lm_demo_params, ArtifactRegistry, REF_LM_TAG};
+    use crate::runtime::{ref_lm_demo_params, ArtifactRegistry, REF_LM2_TAG, REF_LM_TAG};
 
     #[test]
     fn argmax_picks_max() {
         assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
         assert_eq!(argmax(&[5.0]), 0);
-    }
-
-    #[test]
-    fn zero_slot_isolates() {
-        // (L=2, B=3, inner=4)
-        let mut t = Tensor::from_f32((0..24).map(|i| i as f32 + 1.0).collect(), &[2, 3, 4]);
-        zero_slot(&mut t, 1, 1).unwrap();
-        let d = t.as_f32().unwrap();
-        // slot 1 zeroed in both layers
-        assert!(d[4..8].iter().all(|&x| x == 0.0));
-        assert!(d[16..20].iter().all(|&x| x == 0.0));
-        // slots 0 and 2 untouched
-        assert!(d[0..4].iter().all(|&x| x != 0.0));
-        assert!(d[8..12].iter().all(|&x| x != 0.0));
     }
 
     fn ref_engine() -> Engine {
@@ -305,17 +404,17 @@ mod tests {
     #[test]
     fn step_advances_positions_and_returns_flat_logits() {
         let mut engine = ref_engine();
-        let b = engine.batch;
-        let logits_len = b * engine.vocab;
+        let b = engine.batch();
+        let logits_len = b * engine.vocab();
         let first = engine.step(&vec![1i32; b]).unwrap().to_vec();
         assert_eq!(first.len(), logits_len);
         assert!(first.iter().all(|x| x.is_finite()));
-        assert_eq!(engine.positions, vec![1; b]);
-        assert_eq!(engine.tokens_processed, b);
+        assert_eq!(engine.positions(), vec![1; b]);
+        assert_eq!(engine.tokens_processed(), b);
         // logits_row views agree with the flat slice
         let second = engine.step(&vec![2i32; b]).unwrap().to_vec();
         for slot in 0..b {
-            let v = engine.vocab;
+            let v = engine.vocab();
             assert_eq!(engine.logits_row(slot).unwrap(), &second[slot * v..(slot + 1) * v]);
         }
         // same token in every slot with identical (fresh) state:
@@ -328,13 +427,13 @@ mod tests {
     #[test]
     fn reset_slot_restores_fresh_state() {
         let mut engine = ref_engine();
-        let b = engine.batch;
+        let b = engine.batch();
         let fresh = engine.step(&vec![7i32; b]).unwrap().to_vec();
         // run slot 0 forward a few tokens, then reset it
         engine.step(&vec![9i32; b]).unwrap();
         engine.step(&vec![11i32; b]).unwrap();
         engine.reset_slot(0).unwrap();
-        let v = engine.vocab;
+        let v = engine.vocab();
         let after = engine.step(&vec![7i32; b]).unwrap().to_vec();
         assert_eq!(&after[..v], &fresh[..v], "reset slot must replay its first step");
         assert_ne!(&after[v..2 * v], &fresh[v..2 * v], "unreset slots keep their state");
@@ -348,5 +447,47 @@ mod tests {
         let out2 = b.generate_greedy(&[3, 5, 7], 12, -1).unwrap();
         assert_eq!(out1, out2);
         assert!(out1.len() <= 12);
+    }
+
+    /// Prefilling a prompt into a slot must leave the engine in the same
+    /// state as feeding the prompt token-by-token: the returned logits
+    /// match the last sequential step's and the next decode step agrees
+    /// — for both a fixed-exp and a learnable builtin tag.
+    #[test]
+    fn prefill_slot_matches_sequential_feeding() {
+        let prompt = [3i32, 5, 7, 11, 2, 9];
+        for tag in [REF_LM_TAG, REF_LM2_TAG] {
+            let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+            let params = crate::runtime::ModelConfig::for_tag(tag).unwrap().init_params(0x5EED);
+            let mut seq = Engine::new(&reg, tag, &params).unwrap();
+            let mut pre = Engine::new(&reg, tag, &params).unwrap();
+            assert!(pre.exec.supports_prefill(), "{tag}: builtin must support prefill");
+
+            let b = seq.batch();
+            let v = seq.vocab();
+            let mut toks = vec![0i32; b];
+            let mut last = Vec::new();
+            for &t in &prompt {
+                toks.fill(0);
+                toks[0] = t;
+                last = seq.step(&toks).unwrap()[..v].to_vec();
+            }
+            let pl = pre.prefill_slot(0, &prompt).unwrap().expect("prefill path");
+            assert_eq!(pre.positions()[0], prompt.len() as i32);
+            for (i, (a, want)) in pl.iter().zip(&last).enumerate() {
+                let tol = 1e-5 * want.abs().max(1.0);
+                assert!((a - want).abs() <= tol, "{tag} prefill logits[{i}]: {a} vs {want}");
+            }
+            // the next decoded token agrees (slot 0's row only — other
+            // slots saw different histories: idle zeros vs nothing)
+            toks.fill(0);
+            toks[0] = 42;
+            let srow = seq.step(&toks).unwrap()[..v].to_vec();
+            let prow = pre.step(&toks).unwrap()[..v].to_vec();
+            for (i, (a, want)) in prow.iter().zip(&srow).enumerate() {
+                let tol = 1e-5 * want.abs().max(1.0);
+                assert!((a - want).abs() <= tol, "{tag} post-prefill step[{i}]: {a} vs {want}");
+            }
+        }
     }
 }

@@ -1,9 +1,32 @@
-//! Serving runtime for linearized models: the recurrent-state decode
-//! engine (O(1) per token — the paper's Fig 6 inference claim) and a
-//! batched request scheduler with admission control.
+//! Serving vertical: continuous-batching inference over the decode-step
+//! runtime (DESIGN.md §9).
+//!
+//! The stack splits along state vs execution:
+//!
+//! * [`slot`] — `SlotStore`, the per-slot (S, z) state store: positions,
+//!   lifecycle, history tail; every mutation in place.
+//! * [`engine`] — `StepExecutor`, the stateless zero-alloc step executor
+//!   over a `<tag>_decode_step` artifact (plus chunked prefill on the
+//!   reference backend), and the `Engine` façade pairing one executor
+//!   with one store.
+//! * [`scheduler`] — `Scheduler`, the continuous-batching loop: admits
+//!   queued requests into freed slots every step, prefills prompts in one
+//!   pass, evicts finished slots same-step, streams tokens via callback,
+//!   and reports per-request latency. `TrafficGen` drives it with
+//!   synthetic Poisson load (benches/serve_load.rs).
+//! * [`batcher`] — the simpler static-batch FIFO scheduler, kept as the
+//!   minimal reference for the admission/eviction bookkeeping and for
+//!   workloads where batch composition should not churn.
+//!
+//! Backpressure is typed: both schedulers' `submit` return
+//! `Result<(), QueueFull>` when the wait queue is at capacity.
 
 pub mod batcher;
 pub mod engine;
+pub mod scheduler;
+pub mod slot;
 
-pub use batcher::{Batcher, Request, RequestResult};
-pub use engine::Engine;
+pub use batcher::{Batcher, QueueFull, Request, RequestResult};
+pub use engine::{Engine, StepExecutor};
+pub use scheduler::{Scheduler, ServedRequest, TrafficGen};
+pub use slot::{SlotLife, SlotStore, HISTORY_TAIL};

@@ -1,0 +1,255 @@
+//! Per-slot decode state store — the *state* half of the serving split
+//! (DESIGN.md §9).
+//!
+//! `SlotStore` owns everything that belongs to the sequences being
+//! served: the batched per-layer recurrent state tensors
+//!
+//!     S (L, B, H, Dp, Dv)   running sum of phi(k) v^T
+//!     z (L, B, H, Dp)       running sum of phi(k)
+//!
+//! plus per-slot positions, lifecycle, and a small fixed token-history
+//! tail. The step executor (`serve::engine::StepExecutor`) owns
+//! everything that belongs to the *model* — executable handle, parameter
+//! inputs, I/O buffers — and operates on a **borrowed** `SlotStore`.
+//! The split is what lets state and execution scale independently later
+//! (sharded stores, several executors over one store, state migration);
+//! today it is what lets chunked prefill hand a finished (S, z) straight
+//! into a slot (`load`) without the executor knowing how it was made.
+//!
+//! Slots are independent sequences. `reset` zeroes one slot's state
+//! columns without touching the others (state isolation is
+//! property-tested in rust/tests), and every mutation here is in-place —
+//! the store allocates only at construction, preserving the serve loop's
+//! zero-allocation steady state.
+
+use anyhow::Result;
+
+use crate::runtime::Tensor;
+
+/// Tokens of per-slot history kept (most recent last): enough for
+/// debugging and stop-sequence checks without per-token allocation.
+pub const HISTORY_TAIL: usize = 8;
+
+/// Slot lifecycle, tracked by the store so schedulers agree with the
+/// state about which columns are live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotLife {
+    /// No sequence bound; a scheduler may admit into this slot.
+    Free,
+    /// A sequence occupies the slot.
+    Active,
+}
+
+/// Batched per-slot recurrent state + bookkeeping. See the module doc.
+pub struct SlotStore {
+    /// (L, B, H, Dp, Dv) — swapped wholesale with the executor's back
+    /// buffer every step, which is why these are `pub` tensors rather
+    /// than accessor-hidden fields.
+    pub s: Tensor,
+    /// (L, B, H, Dp)
+    pub z: Tensor,
+    positions: Vec<i32>,
+    life: Vec<SlotLife>,
+    /// `HISTORY_TAIL` tokens per slot, oldest-first within each tail.
+    history: Vec<i32>,
+    hist_len: Vec<usize>,
+    batch: usize,
+}
+
+impl SlotStore {
+    /// A store of zeroed state. `s`/`z` must be the decode manifest's
+    /// state tensors (batch axis 1).
+    pub fn new(s: Tensor, z: Tensor, batch: usize) -> Self {
+        SlotStore {
+            s,
+            z,
+            positions: vec![0; batch],
+            life: vec![SlotLife::Free; batch],
+            history: vec![0; batch * HISTORY_TAIL],
+            hist_len: vec![0; batch],
+            batch,
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Per-slot next position (steps absorbed so far).
+    pub fn positions(&self) -> &[i32] {
+        &self.positions
+    }
+
+    pub fn life(&self, slot: usize) -> SlotLife {
+        self.life[slot]
+    }
+
+    /// Count of `Active` slots.
+    pub fn active(&self) -> usize {
+        self.life.iter().filter(|l| **l == SlotLife::Active).count()
+    }
+
+    /// Zero one slot's recurrent state, position, and history, and mark
+    /// it `Active` (the admission path: reset-then-occupy).
+    pub fn reset(&mut self, slot: usize) -> Result<()> {
+        assert!(slot < self.batch);
+        zero_slot(&mut self.s, 1, slot)?;
+        zero_slot(&mut self.z, 1, slot)?;
+        self.positions[slot] = 0;
+        self.hist_len[slot] = 0;
+        self.life[slot] = SlotLife::Active;
+        Ok(())
+    }
+
+    /// Mark a finished slot `Free`. The state columns are left as-is —
+    /// the next admission resets them — so eviction is O(1) and a slot
+    /// freed this step can be re-admitted the next.
+    pub fn release(&mut self, slot: usize) {
+        assert!(slot < self.batch);
+        self.life[slot] = SlotLife::Free;
+    }
+
+    /// Append a token to the slot's fixed history tail (oldest drops).
+    pub fn record(&mut self, slot: usize, token: i32) {
+        let tail = &mut self.history[slot * HISTORY_TAIL..(slot + 1) * HISTORY_TAIL];
+        let len = &mut self.hist_len[slot];
+        if *len < HISTORY_TAIL {
+            tail[*len] = token;
+            *len += 1;
+        } else {
+            tail.copy_within(1.., 0);
+            tail[HISTORY_TAIL - 1] = token;
+        }
+    }
+
+    /// The slot's recent tokens, oldest-first (at most `HISTORY_TAIL`).
+    pub fn history(&self, slot: usize) -> &[i32] {
+        &self.history[slot * HISTORY_TAIL..slot * HISTORY_TAIL + self.hist_len[slot]]
+    }
+
+    /// Advance every slot's position by one (one executed step).
+    pub(crate) fn advance_positions(&mut self) {
+        for p in &mut self.positions {
+            *p += 1;
+        }
+    }
+
+    /// Prefill handoff: install a single-slot (L, H, Dp, Dv) / (L, H, Dp)
+    /// state — e.g. from `runtime::reference::prefill_state` — into this
+    /// slot's columns and set its position (the prompt length). The slot
+    /// becomes `Active`.
+    pub fn load(&mut self, slot: usize, s: &[f32], z: &[f32], pos: i32) -> Result<()> {
+        assert!(slot < self.batch);
+        scatter_slot(&mut self.s, 1, slot, s)?;
+        scatter_slot(&mut self.z, 1, slot, z)?;
+        self.positions[slot] = pos;
+        self.hist_len[slot] = 0;
+        self.life[slot] = SlotLife::Active;
+        Ok(())
+    }
+}
+
+/// Zero the `slot`-th column of a tensor along axis `axis` (axis 1 = the
+/// batch axis of (L, B, ...) state tensors).
+fn zero_slot(t: &mut Tensor, axis: usize, slot: usize) -> Result<()> {
+    let shape = t.shape.clone();
+    let outer: usize = shape[..axis].iter().product();
+    let axis_len = shape[axis];
+    let inner: usize = shape[axis + 1..].iter().product();
+    let data = t.as_f32_mut()?;
+    for o in 0..outer {
+        let base = o * axis_len * inner + slot * inner;
+        for x in &mut data[base..base + inner] {
+            *x = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Write `src` (the slot's column, outer-major) into the `slot`-th column
+/// of `t` along `axis` — the inverse addressing of `zero_slot`.
+fn scatter_slot(t: &mut Tensor, axis: usize, slot: usize, src: &[f32]) -> Result<()> {
+    let shape = t.shape.clone();
+    let outer: usize = shape[..axis].iter().product();
+    let axis_len = shape[axis];
+    let inner: usize = shape[axis + 1..].iter().product();
+    assert_eq!(src.len(), outer * inner, "slot column size mismatch");
+    let data = t.as_f32_mut()?;
+    for o in 0..outer {
+        let base = o * axis_len * inner + slot * inner;
+        data[base..base + inner].copy_from_slice(&src[o * inner..(o + 1) * inner]);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> SlotStore {
+        // (L=2, B=3, inner=4) / (L=2, B=3, inner=2)
+        let s = Tensor::from_f32((0..24).map(|i| i as f32 + 1.0).collect(), &[2, 3, 4]);
+        let z = Tensor::from_f32((0..12).map(|i| i as f32 + 1.0).collect(), &[2, 3, 2]);
+        SlotStore::new(s, z, 3)
+    }
+
+    #[test]
+    fn reset_isolates_one_slot() {
+        let mut st = store();
+        st.reset(1).unwrap();
+        let d = st.s.as_f32().unwrap();
+        assert!(d[4..8].iter().all(|&x| x == 0.0));
+        assert!(d[16..20].iter().all(|&x| x == 0.0));
+        assert!(d[0..4].iter().all(|&x| x != 0.0));
+        assert!(d[8..12].iter().all(|&x| x != 0.0));
+        assert_eq!(st.life(1), SlotLife::Active);
+        assert_eq!(st.life(0), SlotLife::Free);
+        assert_eq!(st.positions()[1], 0);
+    }
+
+    #[test]
+    fn load_scatters_columns_and_sets_position() {
+        let mut st = store();
+        let s_col = [100.0f32, 101.0, 102.0, 103.0, 200.0, 201.0, 202.0, 203.0];
+        let z_col = [10.0f32, 11.0, 20.0, 21.0];
+        st.load(2, &s_col, &z_col, 7).unwrap();
+        let d = st.s.as_f32().unwrap();
+        assert_eq!(&d[8..12], &s_col[0..4], "layer 0, slot 2");
+        assert_eq!(&d[20..24], &s_col[4..8], "layer 1, slot 2");
+        // other slots untouched
+        assert_eq!(d[0], 1.0);
+        assert_eq!(d[4], 5.0);
+        let zd = st.z.as_f32().unwrap();
+        assert_eq!(&zd[4..6], &z_col[0..2]);
+        assert_eq!(&zd[10..12], &z_col[2..4]);
+        assert_eq!(st.positions()[2], 7);
+        assert_eq!(st.life(2), SlotLife::Active);
+    }
+
+    #[test]
+    fn history_tail_keeps_most_recent() {
+        let mut st = store();
+        st.reset(0).unwrap();
+        for t in 0..(HISTORY_TAIL as i32 + 3) {
+            st.record(0, t);
+        }
+        let tail = st.history(0);
+        assert_eq!(tail.len(), HISTORY_TAIL);
+        assert_eq!(tail[0], 3);
+        assert_eq!(tail[HISTORY_TAIL - 1], HISTORY_TAIL as i32 + 2);
+        // other slots unaffected, reset clears
+        assert!(st.history(1).is_empty());
+        st.reset(0).unwrap();
+        assert!(st.history(0).is_empty());
+    }
+
+    #[test]
+    fn release_frees_without_touching_state() {
+        let mut st = store();
+        st.reset(0).unwrap();
+        assert_eq!(st.active(), 1);
+        st.release(0);
+        assert_eq!(st.active(), 0);
+        assert_eq!(st.life(0), SlotLife::Free);
+    }
+}

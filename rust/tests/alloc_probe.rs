@@ -102,8 +102,8 @@ fn kernel_probe() {
 /// Allocation calls for one `Engine::step` after the engine has already
 /// advanced to `position` (every slot fed the same token stream).
 fn decode_allocs_at(engine: &mut Engine, position: usize) -> usize {
-    let toks = vec![3i32; engine.batch];
-    while (engine.positions[0] as usize) < position {
+    let toks = vec![3i32; engine.batch()];
+    while (engine.positions()[0] as usize) < position {
         engine.step(&toks).unwrap();
     }
     alloc_calls_during(|| {
@@ -130,8 +130,40 @@ fn decode_probe() {
     assert_eq!(late, 0, "Engine::step allocated {late} times per token at pos 512 (want 0)");
 }
 
+/// The continuous-batching scheduler's decode loop on top of the engine:
+/// mid-generation ticks (no admissions, no evictions, no streaming side
+/// effects) must allocate nothing — the scheduler's token/sample buffers
+/// persist and per-request outputs are pre-reserved at admission.
+fn scheduler_probe() {
+    use hedgehog::serve::{Request, Scheduler};
+
+    let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+    reg.set_exec_options(ExecOptions::serial());
+    let params = ref_lm_demo_params();
+    let mut engine = Engine::new(&reg, REF_LM_TAG, &params).unwrap();
+    let cap = engine.batch();
+    let mut sched = Scheduler::new(cap, 2 * cap);
+    for id in 0..cap as u64 {
+        // max_new large enough that no slot finishes inside the window
+        sched.submit(Request { id, prompt: vec![2, 4, 6], max_new: 64, eos: -1 }).unwrap();
+    }
+    let mut sink = |_id: u64, _tok: i32| {};
+    // admission tick (prefill; allocates) + a few decode warmup ticks
+    for _ in 0..4 {
+        sched.tick(&mut engine, &mut sink).unwrap();
+    }
+    let allocs = alloc_calls_during(|| {
+        for _ in 0..8 {
+            sched.tick(&mut engine, &mut sink).unwrap();
+        }
+    });
+    assert_eq!(allocs, 0, "Scheduler::tick allocated {allocs} times over 8 decode ticks (want 0)");
+    assert_eq!(sched.active(), cap, "probe window must stay mid-generation");
+}
+
 #[test]
 fn execute_allocations_do_not_scale_with_sequence_length_or_position() {
     kernel_probe();
     decode_probe();
+    scheduler_probe();
 }

@@ -121,11 +121,11 @@ fn serve_stack_runs_hermetically_on_reference_decode() {
         reg.set_exec_options(opts);
         let params = ref_lm_demo_params();
         let mut engine = Engine::new(&reg, REF_LM_TAG, &params).expect("builtin decode engine");
-        let mut batcher = Batcher::new(engine.batch, 64);
+        let mut batcher = Batcher::new(engine.batch(), 64);
         for id in 0..10u64 {
             let plen = 1 + (id as usize % 4);
             let prompt: Vec<i32> = (0..plen).map(|i| (id as i32 * 13 + i as i32) % 256).collect();
-            assert!(batcher.submit(Request { id, prompt, max_new: 5, eos: -1 }));
+            assert!(batcher.submit(Request { id, prompt, max_new: 5, eos: -1 }).is_ok());
         }
         let (steps, _secs) = batcher.run_to_completion(&mut engine).unwrap();
         assert!(steps > 0);
@@ -221,7 +221,7 @@ fn conversion_pipeline_runs_hermetically() {
 
     // converted params serve directly (decode shares the layout)
     let mut engine = Engine::new(&reg, REF_LM_TAG, &conv.params).unwrap();
-    let (batch, vocab) = (engine.batch, engine.vocab);
+    let (batch, vocab) = (engine.batch(), engine.vocab());
     let tokens = vec![3i32; batch];
     let logits = engine.step(&tokens).unwrap();
     assert_eq!(logits.len(), batch * vocab);
@@ -267,7 +267,7 @@ fn conversion_pipeline_runs_hermetically_on_learnable_config() {
     );
 
     let mut engine = Engine::new(&reg, REF_LM2_TAG, &conv.params).unwrap();
-    let (batch, vocab) = (engine.batch, engine.vocab);
+    let (batch, vocab) = (engine.batch(), engine.vocab());
     let logits = engine.step(&vec![3i32; batch]).unwrap();
     assert_eq!(logits.len(), batch * vocab);
     assert!(logits.iter().all(|l| l.is_finite()), "served logits must be finite");

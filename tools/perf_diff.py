@@ -1,16 +1,22 @@
 #!/usr/bin/env python3
-"""Compare a fresh BENCH_kernels.json against the committed snapshot.
+"""Compare a fresh BENCH_kernels.json / BENCH_serve.json against the
+committed snapshot.
 
 Usage:
     python3 tools/perf_diff.py <fresh.json> [--baseline <path-or-git>]
 
-The baseline defaults to `git show HEAD:BENCH_kernels.json` (the committed
-snapshot), falling back to the working-tree file if git is unavailable.
-Records are matched on (kernel, n, threads, chunk_size, geometry) — the
-geometry field (model layers/heads/head_dim, emitted by the train bench)
-guarantees tokens/sec is never compared across model shapes; only chunked
-configs (chunk_size > 0) are compared — the naive oracle rows are a
-correctness baseline, not a perf target.
+The fresh document's schema picks the comparison mode:
+
+* ``hedgehog_bench_v2`` (kernel/train sweeps) — records matched on
+  (kernel, n, threads, chunk_size, geometry); the geometry field (model
+  layers/heads/head_dim, emitted by the train bench) guarantees
+  tokens/sec is never compared across model shapes; only chunked configs
+  (chunk_size > 0) are compared — the naive oracle rows are a
+  correctness baseline, not a perf target. Baseline defaults to
+  ``git show HEAD:BENCH_kernels.json``.
+* ``hedgehog_serve_v1`` (continuous-batching serve load) — records
+  matched on (tag, slots), compared on sustained generated tokens/sec.
+  Baseline defaults to ``git show HEAD:BENCH_serve.json``.
 
 Warn-only by construction: a >25% tokens/sec regression on any matching
 config prints a WARNING block (picked up in the CI log and the uploaded
@@ -30,6 +36,8 @@ import sys
 
 REGRESSION_RATIO = 0.75  # warn when fresh < 75% of baseline tokens/sec
 
+SERVE_SCHEMA = "hedgehog_serve_v1"
+
 
 def load_json(text, label):
     try:
@@ -39,34 +47,40 @@ def load_json(text, label):
         sys.exit(2)
 
 
-def load_baseline(spec):
+def load_baseline(spec, default_file):
     if spec is not None:
         with open(spec) as f:
             return load_json(f.read(), spec), spec
     try:
         out = subprocess.run(
-            ["git", "show", "HEAD:BENCH_kernels.json"],
+            ["git", "show", f"HEAD:{default_file}"],
             capture_output=True,
             text=True,
             check=True,
         )
-        return load_json(out.stdout, "git HEAD:BENCH_kernels.json"), "git HEAD:BENCH_kernels.json"
+        return load_json(out.stdout, f"git HEAD:{default_file}"), f"git HEAD:{default_file}"
     except (subprocess.CalledProcessError, FileNotFoundError):
         try:
-            with open("BENCH_kernels.json") as f:
-                return load_json(f.read(), "BENCH_kernels.json"), "BENCH_kernels.json (worktree)"
+            with open(default_file) as f:
+                return load_json(f.read(), default_file), f"{default_file} (worktree)"
         except OSError:
             print(
-                "perf-diff: no committed BENCH_kernels.json snapshot to compare against",
+                f"perf-diff: no committed {default_file} snapshot to compare against",
                 file=sys.stderr,
             )
             sys.exit(2)
 
 
-def key(r):
+def kernel_key(r):
     # geometry distinguishes model shapes (train-bench records); kernel
     # sweep records predate the field / carry null, which matches itself.
     return (r["kernel"], r["n"], r["threads"], r["chunk_size"], r.get("geometry"))
+
+
+def serve_key(r):
+    # slots pins the engine geometry: tokens/sec at 4 slots is not
+    # comparable to tokens/sec at 8.
+    return (r["tag"], r["slots"])
 
 
 def main(argv):
@@ -91,7 +105,9 @@ def main(argv):
     except OSError as e:
         print(f"perf-diff: cannot read fresh file: {e}", file=sys.stderr)
         return 2
-    base, base_label = load_baseline(baseline_spec)
+    serve = fresh.get("schema") == SERVE_SCHEMA
+    default_file = "BENCH_serve.json" if serve else "BENCH_kernels.json"
+    base, base_label = load_baseline(baseline_spec, default_file)
 
     base_prov = base.get("provenance", "unknown")
     informational = base_prov != "measured"
@@ -107,29 +123,39 @@ def main(argv):
             "comparison is informational only; commit the first CI artifact to arm the gate"
         )
 
+    key = serve_key if serve else kernel_key
     base_by_key = {key(r): r for r in base.get("results", [])}
+    rate_field = "sustained_tokens_per_sec" if serve else "tokens_per_sec"
     compared = 0
     warnings = []
     for r in fresh.get("results", []):
-        if r["chunk_size"] == 0:
+        if not serve and r["chunk_size"] == 0:
             continue
         b = base_by_key.get(key(r))
-        if b is None or not b.get("tokens_per_sec") or not r.get("tokens_per_sec"):
+        if b is None or not b.get(rate_field) or not r.get(rate_field):
             continue
         compared += 1
-        ratio = r["tokens_per_sec"] / b["tokens_per_sec"]
-        geom = f" [{r['geometry']}]" if r.get("geometry") else ""
-        line = (
-            f"  {r['kernel']:<12} n={r['n']:<6} t={r['threads']:<3} C={r['chunk_size']:<4} "
-            f"{b['tokens_per_sec']:>14.0f} -> {r['tokens_per_sec']:>14.0f} tok/s "
-            f"({ratio:5.2f}x){geom}"
-        )
+        ratio = r[rate_field] / b[rate_field]
+        if serve:
+            line = (
+                f"  {r['tag']:<10} slots={r['slots']:<3} "
+                f"{b[rate_field]:>14.0f} -> {r[rate_field]:>14.0f} tok/s "
+                f"({ratio:5.2f}x) ttft_p50={r.get('ttft_p50_ms', '?')}ms"
+            )
+        else:
+            geom = f" [{r['geometry']}]" if r.get("geometry") else ""
+            line = (
+                f"  {r['kernel']:<12} n={r['n']:<6} t={r['threads']:<3} C={r['chunk_size']:<4} "
+                f"{b[rate_field]:>14.0f} -> {r[rate_field]:>14.0f} tok/s "
+                f"({ratio:5.2f}x){geom}"
+            )
         print(line)
         if ratio < REGRESSION_RATIO:
             warnings.append(line)
 
+    what = "serve" if serve else "chunked"
     if compared == 0:
-        print("perf-diff: no overlapping chunked configs between fresh and baseline")
+        print(f"perf-diff: no overlapping {what} configs between fresh and baseline")
         return 0
     if warnings and not informational:
         print(
@@ -142,7 +168,7 @@ def main(argv):
     elif warnings:
         print(f"\n{len(warnings)} config(s) below threshold vs the modeled baseline (informational)")
     else:
-        print(f"\nperf-diff: all {compared} chunked configs within threshold")
+        print(f"\nperf-diff: all {compared} {what} configs within threshold")
     return 0
 
 
