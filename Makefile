@@ -2,7 +2,7 @@
 #
 #   make build        release build (tier-1, no XLA)
 #   make test         tier-1 test suite
-#   make bench        full kernel + fig6 + decode + serve bench sweep -> BENCH_*.json
+#   make bench        full kernel + fig6 + decode + train + serve + quality sweep -> BENCH_*.json
 #   make bench-smoke  CI short mode: small n, few reps, parity-gated
 #   make serve-smoke  short continuous-batching serve load -> BENCH_serve.json
 #   make perf-diff    fresh smoke sweep vs the committed BENCH_kernels.json
@@ -29,11 +29,13 @@ bench:
 	cargo bench --bench decode_throughput
 	cargo bench --bench train_step
 	cargo bench --bench serve_load
+	cargo bench --bench quality
 
 bench-smoke: refconv-smoke serve-smoke
 	BENCH_SMOKE=1 cargo bench --bench kernel_micro
 	BENCH_SMOKE=1 cargo bench --bench fig6_scaling
 	BENCH_SMOKE=1 cargo bench --bench train_step
+	BENCH_SMOKE=1 cargo bench --bench quality
 
 # Continuous-batching serve stack under synthetic Poisson load, per
 # builtin tag (chunked prefill + streaming scheduler), short mode.

@@ -1,0 +1,132 @@
+//! Feature-map quality diagnostics — the paper's Figs. 2-3 argument as a
+//! measured table instead of a guess.
+//!
+//! For every builtin `ModelConfig` tag x every `FeatureKind` in the zoo,
+//! distill-adapt the map on the demo-batch distribution
+//! (`metrics::quality::measure_quality`) and record:
+//!
+//! * **spikiness** — mean student attention entropy vs the softmax
+//!   teacher's entropy on the same q.k rows (nats; lower student entropy
+//!   = spikier, the property Fig. 2 says linear maps lose);
+//! * **monotonicity** — pairwise violation rate + Spearman rho between
+//!   raw q.k scores and the student weights (Fig. 3's property);
+//! * **distill fidelity** — per-layer Eq. 4 loss first -> last step and
+//!   mean KL(teacher || student) after adaptation.
+//!
+//! Emits `BENCH_quality.json` (schema `hedgehog_quality_v1`, keyed by
+//! `(tag, feature_map)` — see BENCHMARKS.md). Unlike the latency benches
+//! the numbers here are deterministic model measurements, not timings;
+//! `probe_ms` is informational wall time only. `BENCH_SMOKE=1` shrinks
+//! the adaptation to a few steps so CI finishes in seconds while still
+//! producing every row.
+
+mod common;
+
+use std::time::Instant;
+
+use common::{bench_out_path, smoke_mode};
+use hedgehog::metrics::quality::{measure_quality, QualityReport};
+use hedgehog::runtime::{FeatureKind, ModelConfig};
+
+/// Adaptation hyperparameters: enough steps for the distill loss to move
+/// visibly on every map without stalling the suite (the quality numbers
+/// are diagnostics of the pipeline, not converged paper results).
+const FULL_STEPS: usize = 25;
+const SMOKE_STEPS: usize = 2;
+const LR: f32 = 1e-3;
+const SEED: u64 = 0x5EED;
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// `BENCH_quality.json` writer. Hand-rolled like `common::write_json`
+/// (serde is not vendored) but under its own schema: quality rows carry
+/// diagnostics, not latencies, and are keyed `(tag, feature_map)`.
+fn write_quality_json(
+    path: &std::path::Path,
+    steps: usize,
+    rows: &[(QualityReport, String, f64)],
+) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"hedgehog_quality_v1\",\n");
+    s.push_str(
+        "  \"title\": \"feature-map quality: spikiness, monotonicity, distill fidelity\",\n",
+    );
+    s.push_str(
+        "  \"baseline\": \"softmax teacher on the same q.k rows (entropy/KL); \
+         raw q.k score order (monotonicity)\",\n",
+    );
+    s.push_str("  \"provenance\": \"measured\",\n");
+    s.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
+    s.push_str(&format!(
+        "  \"adaptation\": {{\"distill_steps\": {steps}, \"lr\": {LR}, \"seed\": {SEED}}},\n"
+    ));
+    s.push_str("  \"results\": [\n");
+    for (i, (r, geometry, probe_ms)) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"tag\": {:?}, \"feature_map\": {:?}, \"geometry\": {:?}, \
+             \"distill_steps\": {}, \"distill_loss_first\": {}, \"distill_loss_last\": {}, \
+             \"lm_loss\": {}, \"student_entropy\": {}, \"teacher_entropy\": {}, \
+             \"monotonicity_violation_rate\": {}, \"spearman_rho\": {}, \
+             \"kl_teacher_student\": {}, \"probe_ms\": {}}}{}\n",
+            r.tag,
+            r.feature_map,
+            geometry,
+            r.distill_steps,
+            json_num(r.distill_loss_first as f64),
+            json_num(r.distill_loss_last as f64),
+            json_num(r.lm_loss as f64),
+            json_num(r.student_entropy as f64),
+            json_num(r.teacher_entropy as f64),
+            json_num(r.monotonicity_violation_rate as f64),
+            json_num(r.spearman_rho as f64),
+            json_num(r.kl_teacher_student as f64),
+            json_num(*probe_ms),
+            if i + 1 == rows.len() { "" } else { "," },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)
+}
+
+fn main() {
+    let steps = if smoke_mode() { SMOKE_STEPS } else { FULL_STEPS };
+    let mut rows: Vec<(QualityReport, String, f64)> = Vec::new();
+
+    println!("== bench: feature-map quality (distill_steps={steps}) ==");
+    println!(
+        "{:<8} {:<11} {:>8} {:>8} {:>7} {:>7} {:>8} {:>7} {:>8}",
+        "tag", "map", "H(stud)", "H(teach)", "viol", "rho", "KL", "lm", "distill"
+    );
+    for tag in ModelConfig::builtin_tags() {
+        let geometry = ModelConfig::for_tag(tag).expect("builtin tag").geometry();
+        for kind in FeatureKind::zoo() {
+            let t0 = Instant::now();
+            let r = measure_quality(tag, kind, steps, LR, SEED);
+            let probe_ms = t0.elapsed().as_secs_f64() * 1000.0;
+            println!(
+                "{:<8} {:<11} {:>8.3} {:>8.3} {:>7.3} {:>7.3} {:>8.4} {:>7.3} {:>8.4}",
+                r.tag,
+                r.feature_map,
+                r.student_entropy,
+                r.teacher_entropy,
+                r.monotonicity_violation_rate,
+                r.spearman_rho,
+                r.kl_teacher_student,
+                r.lm_loss,
+                r.distill_loss_last,
+            );
+            rows.push((r, geometry.clone(), probe_ms));
+        }
+    }
+
+    let out_path = bench_out_path("BENCH_quality.json");
+    write_quality_json(&out_path, steps, &rows).expect("write BENCH_quality.json");
+    println!("wrote {}", out_path.display());
+}

@@ -1,7 +1,11 @@
 //! Evaluation metrics for every table in the paper: perplexity, accuracy,
 //! Matthews correlation (CoLA), Pearson (STS-B), Spearman rho
 //! (monotonicity, Fig 3), ROUGE-1/2/L (SAMSum, Table 11), plus attention
-//! entropy/KL helpers mirroring the L2 analysis graphs.
+//! entropy/KL helpers mirroring the L2 analysis graphs. The [`quality`]
+//! submodule turns the entropy/monotonicity helpers into the paper's
+//! per-feature-map diagnostic probe (`BENCH_quality.json`).
+
+pub mod quality;
 
 /// Perplexity from a mean token NLL (nats).
 pub fn perplexity(mean_nll: f32) -> f32 {

@@ -1,0 +1,223 @@
+//! Paper-diagnostic quality probe (Figs. 2-3 of the Hedgehog paper):
+//! attention-weight **spikiness** (Shannon entropy), **dot-product
+//! monotonicity** (pairwise violation rate + Spearman rho against the
+//! raw q.k scores), and **distill fidelity** (per-layer Eq. 4 loss
+//! before/after adaptation plus KL(teacher || student) on the probed
+//! rows) — measured per `(builtin tag, feature map)` on the hermetic
+//! reference interpreter. `benches/quality.rs` sweeps the zoo with this
+//! and emits `BENCH_quality.json` (schema `hedgehog_quality_v1`; see
+//! BENCHMARKS.md for the keying and provenance contract).
+//!
+//! The probe deliberately reuses the train stack's own machinery — the
+//! demo-batch data distribution, `StepKind::Distill` gradients, and the
+//! AdamW step — so "quality of map X" means "what the distill pipeline
+//! in this repo actually produces for map X", not a detached toy.
+
+use crate::metrics::{entropy, kl_div, spearman, Stats};
+use crate::runtime::ref_lm::{
+    adamw_leaf, attention_probe, eval_loss_metric, loss_and_grads, ModelParams, StepKind,
+};
+use crate::runtime::{ExecOptions, FeatureKind, ModelConfig, WorkerPool};
+use crate::train::session::ref_lm_demo_batch;
+
+/// One `(tag, feature_map)` quality row — the unit `BENCH_quality.json`
+/// is keyed by. Entropies are mean nats over every probed causal row
+/// (t >= 1, all layers/batches/heads); `teacher_entropy` scores the
+/// scale-1.0 softmax teacher on the *same* q.k rows, so the gap reads
+/// directly as "how much spikier the teacher is than this map".
+#[derive(Debug, Clone)]
+pub struct QualityReport {
+    pub tag: String,
+    pub feature_map: String,
+    /// Distill-adaptation steps taken before probing.
+    pub distill_steps: usize,
+    /// Per-layer Eq. 4 distill loss at the first / last adaptation step.
+    pub distill_loss_first: f32,
+    pub distill_loss_last: f32,
+    /// Masked next-token cross-entropy of the adapted model (demo batch).
+    pub lm_loss: f32,
+    /// Mean student attention entropy (nats) — the spikiness axis.
+    pub student_entropy: f32,
+    /// Mean softmax-teacher entropy (nats) on the same rows.
+    pub teacher_entropy: f32,
+    /// Fraction of score-ordered pairs the student weights invert.
+    pub monotonicity_violation_rate: f32,
+    /// Mean Spearman rho(q.k scores, student weights) over probed rows.
+    pub spearman_rho: f32,
+    /// Mean KL(teacher || student) over probed rows — distill fidelity.
+    pub kl_teacher_student: f32,
+}
+
+/// Pairwise monotonicity violations of `weights` against `scores`
+/// (Fig. 3's property, counted instead of eyeballed): for every pair
+/// with `scores[a] != scores[b]`, a violation is a strict inversion of
+/// the weight order. Returns `(violations, comparable_pairs)` so callers
+/// can pool counts across rows before dividing; equal weights count as
+/// weakly monotone, not as violations.
+pub fn monotonicity_violations(scores: &[f32], weights: &[f32]) -> (u64, u64) {
+    assert_eq!(scores.len(), weights.len());
+    let (mut viol, mut total) = (0u64, 0u64);
+    for a in 0..scores.len() {
+        for b in a + 1..scores.len() {
+            if scores[a] == scores[b] {
+                continue;
+            }
+            total += 1;
+            let (hi, lo) = if scores[a] > scores[b] { (a, b) } else { (b, a) };
+            if weights[hi] < weights[lo] {
+                viol += 1;
+            }
+        }
+    }
+    (viol, total)
+}
+
+/// Numerically-shifted softmax of one score row (the scale-1.0 teacher
+/// of the distill objective, `distill.py`'s softmax_attention_weights).
+fn softmax_row(scores: &[f32]) -> Vec<f32> {
+    let mx = scores.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+    let mut out: Vec<f32> = scores.iter().map(|&s| (s - mx).exp()).collect();
+    let inv = out.iter().sum::<f32>().recip();
+    for o in &mut out {
+        *o *= inv;
+    }
+    out
+}
+
+/// Distill-adapt `tag`'s geometry re-dressed with `feature` for
+/// `distill_steps` AdamW steps (lr as given, wd 0 — pure mimicry), then
+/// probe every causal attention row and aggregate the paper's three
+/// diagnostics. Deterministic for fixed inputs; `seed` draws the init.
+pub fn measure_quality(
+    tag: &str,
+    feature: FeatureKind,
+    distill_steps: usize,
+    lr: f32,
+    seed: u64,
+) -> QualityReport {
+    let base = ModelConfig::for_tag(tag).unwrap_or_else(|| panic!("unknown builtin tag {tag:?}"));
+    let cfg = ModelConfig { feature, ..base };
+    let pool = WorkerPool::new();
+    let opts = ExecOptions::default();
+
+    // leaves + AdamW state in manifest order, as owned buffers
+    let slots = cfg.leaf_slots("params");
+    let params = cfg.init_params(seed);
+    let mut leaves: Vec<Vec<f32>> = slots
+        .iter()
+        .map(|s| params.get(&s.name).unwrap().as_f32().unwrap().to_vec())
+        .collect();
+    let mut m: Vec<Vec<f32>> = leaves.iter().map(|l| vec![0.0f32; l.len()]).collect();
+    let mut v: Vec<Vec<f32>> = m.clone();
+
+    let (mut first, mut last) = (0.0f32, 0.0f32);
+    for step in 0..distill_steps {
+        let batch = ref_lm_demo_batch(step, true);
+        let tokens = batch.get("tokens").unwrap().as_i32().unwrap().to_vec();
+        let g = {
+            let slices: Vec<&[f32]> = leaves.iter().map(|l| l.as_slice()).collect();
+            let mp = ModelParams::from_leaves(&cfg, &slices).unwrap();
+            let (loss, _, grads) =
+                loss_and_grads(&cfg, &pool, opts, &mp, &tokens, StepKind::Distill);
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+            grads.into_leaves()
+        };
+        for i in 0..leaves.len() {
+            let (p, mn, vn) =
+                adamw_leaf(&leaves[i], &g[i], &m[i], &v[i], step as i32 + 1, lr, 0.0);
+            leaves[i] = p;
+            m[i] = mn;
+            v[i] = vn;
+        }
+    }
+
+    // probe the adapted model on the canonical batch
+    let batch = ref_lm_demo_batch(0, false);
+    let tokens = batch.get("tokens").unwrap().as_i32().unwrap().to_vec();
+    let targets = batch.get("targets").unwrap().as_i32().unwrap().to_vec();
+    let mask = batch.get("loss_mask").unwrap().as_f32().unwrap().to_vec();
+    let slices: Vec<&[f32]> = leaves.iter().map(|l| l.as_slice()).collect();
+    let mp = ModelParams::from_leaves(&cfg, &slices).unwrap();
+    let (lm_loss, _) = eval_loss_metric(&cfg, &pool, opts, &mp, &tokens, &targets, &mask);
+    let rows = attention_probe(&cfg, &pool, opts, &mp, &tokens);
+
+    let (mut s_ent, mut t_ent, mut kl, mut rho) =
+        (Stats::default(), Stats::default(), Stats::default(), Stats::default());
+    let (mut viol, mut pairs) = (0u64, 0u64);
+    for row in &rows {
+        let teacher = softmax_row(&row.scores);
+        s_ent.push(entropy(&row.student) as f64);
+        t_ent.push(entropy(&teacher) as f64);
+        kl.push(kl_div(&teacher, &row.student) as f64);
+        let r = spearman(&row.scores, &row.student);
+        if !r.is_nan() {
+            rho.push(r as f64);
+        }
+        let (vl, tp) = monotonicity_violations(&row.scores, &row.student);
+        viol += vl;
+        pairs += tp;
+    }
+
+    QualityReport {
+        tag: tag.to_string(),
+        feature_map: cfg.feature.name().to_string(),
+        distill_steps,
+        distill_loss_first: first,
+        distill_loss_last: last,
+        lm_loss,
+        student_entropy: s_ent.mean() as f32,
+        teacher_entropy: t_ent.mean() as f32,
+        monotonicity_violation_rate: if pairs == 0 { 0.0 } else { viol as f32 / pairs as f32 },
+        spearman_rho: rho.mean() as f32,
+        kl_teacher_student: kl.mean() as f32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonicity_counts_monotone_and_inverted_pairs() {
+        // perfectly monotone weights: zero violations over all 6 pairs
+        let scores = [0.1, 0.5, 0.9, 1.3];
+        let mono = [0.05, 0.15, 0.3, 0.5];
+        assert_eq!(monotonicity_violations(&scores, &mono), (0, 6));
+        // fully inverted weights: every pair violates
+        let anti = [0.5, 0.3, 0.15, 0.05];
+        assert_eq!(monotonicity_violations(&scores, &anti), (6, 6));
+        // one swapped neighbor: exactly one violation
+        let one = [0.05, 0.3, 0.15, 0.5];
+        assert_eq!(monotonicity_violations(&scores, &one), (1, 6));
+        // equal scores are not comparable; equal weights are not violations
+        assert_eq!(monotonicity_violations(&[1.0, 1.0], &[0.9, 0.1]), (0, 0));
+        assert_eq!(monotonicity_violations(&[1.0, 2.0], &[0.5, 0.5]), (0, 1));
+    }
+
+    #[test]
+    fn softmax_teacher_row_is_normalized_and_ordered() {
+        let p = softmax_row(&[1.0, 3.0, 2.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[1] > p[2] && p[2] > p[0]);
+    }
+
+    #[test]
+    fn measure_quality_smoke_all_maps_on_ref_lm() {
+        // tiny end-to-end pass: every zoo kind runs on the ref_lm
+        // geometry, produces finite diagnostics, and bounds hold
+        for kind in FeatureKind::zoo() {
+            let r = measure_quality("ref_lm", kind, 1, 1e-3, 0x5EED);
+            assert_eq!(r.feature_map, kind.name());
+            assert!(r.distill_loss_first.is_finite() && r.distill_loss_first > 0.0);
+            assert!(r.student_entropy.is_finite() && r.student_entropy >= 0.0);
+            assert!(r.teacher_entropy.is_finite() && r.teacher_entropy >= 0.0);
+            assert!((0.0..=1.0).contains(&r.monotonicity_violation_rate), "{kind:?}");
+            assert!((-1.0..=1.0).contains(&r.spearman_rho), "{kind:?}");
+            assert!(r.kl_teacher_student.is_finite());
+            assert!(r.lm_loss.is_finite() && r.lm_loss > 0.0);
+        }
+    }
+}

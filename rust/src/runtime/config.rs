@@ -33,14 +33,21 @@
 //!
 //! ```text
 //! params/embed                  (V, D)
-//! params/layer{i:02}/fm_k       (H, d, d)   learnable only
-//! params/layer{i:02}/fm_q       (H, d, d)   learnable only
-//! params/layer{i:02}/wk         (D, D)      learnable only
-//! params/layer{i:02}/wo         (D, D)      learnable only
-//! params/layer{i:02}/wq         (D, D)      learnable only
-//! params/layer{i:02}/wv         (D, D)      learnable only
+//! params/layer{i:02}/fm_k       (H, d, d)   maps with trainable fm only
+//! params/layer{i:02}/fm_q       (H, d, d)   maps with trainable fm only
+//! params/layer{i:02}/wk         (D, D)      projected kinds only
+//! params/layer{i:02}/wo         (D, D)      projected kinds only
+//! params/layer{i:02}/wq         (D, D)      projected kinds only
+//! params/layer{i:02}/wv         (D, D)      projected kinds only
 //! params/unembed                (D, V)
 //! ```
+//!
+//! The feature-map zoo ([`FeatureKind`]) splits the old single
+//! `learnable` flag into two orthogonal properties: `projected()`
+//! (q/k/v/o projections + residual stacking — every kind except
+//! `FixedExp`) and `has_fm()` (trainable `fm_q`/`fm_k` leaves —
+//! `Learnable`, `T2R`, `HedgehogSoftmax`; `Dpfp` is projected but
+//! parameter-free, so its layers carry 4 leaves instead of 6).
 //!
 //! Zero-padding only changes the *name* strings — tensor data and rng
 //! draw order are untouched, so the `ref_lm`/`ref_lm2` byte-compat
@@ -57,7 +64,15 @@ use crate::data::Pcg32;
 
 /// Which feature map the attention uses — and, with it, the architecture
 /// family (the two are deliberately coupled so the legacy shape stays
-/// bit-stable while the learnable shape gets the paper's structure).
+/// bit-stable while the projected shapes get the paper's structure).
+///
+/// The zoo (ROADMAP direction 5, fla-style exemplars from SNIPPETS.md):
+/// every kind except `FixedExp` uses per-layer q/k/v/o projections and
+/// residual stacking; the kinds differ in the per-head map phi and in
+/// whether a learned pre-projection W (the `fm_q` / `fm_k` leaves) sits
+/// in front of it. All maps produce non-negative features, so the
+/// normalized attention weights stay a valid distribution and the
+/// guarded denominator never flips sign.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FeatureKind {
     /// Projection-free legacy model: q = k = v = the per-head slice of
@@ -65,10 +80,22 @@ pub enum FeatureKind {
     /// W = I). Layers stack by replacement (`x_{l+1} = y_l`); with
     /// `layers == 1` this is exactly the PR-3/PR-4 `ref_lm` model.
     FixedExp,
-    /// Paper §4.2: per-layer q/k/v/o projections and a trainable per-head
-    /// feature map phi(x) = [exp(Wx), exp(-Wx)] (the `fm_q` / `fm_k`
-    /// leaves), residual stacking (`x_{l+1} = x_l + y_l wo`).
+    /// Paper §4.2: trainable per-head feature map
+    /// phi(x) = [exp(Wx), exp(-Wx)], feature dim 2d.
     Learnable,
+    /// Transformer-to-RNN (Kasai et al.): phi(x) = relu(Wx) with a
+    /// trainable per-head W — the only map whose feature dim stays d.
+    T2R,
+    /// Deterministic parameter-free projection (Schlag et al.), nu = 1:
+    /// u = relu([x, -x]), phi_i = u_i * u_{(i-1) mod 2d}, feature dim 2d.
+    /// No `fm` leaves — the map applies directly to the projected heads
+    /// (gradient still flows into wq/wk through the relu products).
+    Dpfp,
+    /// Softmax-normalized hedgehog (fla's `HedgehogFeatureMap`):
+    /// phi(x) = softmax([Wx, -Wx]), trainable W, feature dim 2d. Rows
+    /// sum to 1, so z counts tokens and attention tends to flatten —
+    /// the negative control for the spikiness diagnostics.
+    HedgehogSoftmax,
 }
 
 impl FeatureKind {
@@ -76,6 +103,48 @@ impl FeatureKind {
         match self {
             FeatureKind::FixedExp => "fixed_exp",
             FeatureKind::Learnable => "learnable",
+            FeatureKind::T2R => "t2r",
+            FeatureKind::Dpfp => "dpfp",
+            FeatureKind::HedgehogSoftmax => "hh_softmax",
+        }
+    }
+
+    /// Inverse of [`FeatureKind::name`] (bench/CLI surface).
+    pub fn from_name(name: &str) -> Option<FeatureKind> {
+        Self::zoo().into_iter().find(|k| k.name() == name)
+    }
+
+    /// Every kind, in a fixed order (the bench sweep order).
+    pub fn zoo() -> [FeatureKind; 5] {
+        [
+            FeatureKind::FixedExp,
+            FeatureKind::Learnable,
+            FeatureKind::T2R,
+            FeatureKind::Dpfp,
+            FeatureKind::HedgehogSoftmax,
+        ]
+    }
+
+    /// Does the architecture carry per-layer q/k/v/o projections (and
+    /// residual stacking)? Everything except the legacy `FixedExp`.
+    pub fn projected(self) -> bool {
+        self != FeatureKind::FixedExp
+    }
+
+    /// Does the map carry trainable per-head `fm_q`/`fm_k` leaves (a
+    /// learned W in front of the elementwise map)?
+    pub fn has_fm(self) -> bool {
+        matches!(
+            self,
+            FeatureKind::Learnable | FeatureKind::T2R | FeatureKind::HedgehogSoftmax
+        )
+    }
+
+    /// Feature dimension Dp for head dimension d.
+    pub fn dim(self, d: usize) -> usize {
+        match self {
+            FeatureKind::T2R => d,
+            _ => 2 * d,
         }
     }
 }
@@ -144,13 +213,35 @@ impl ModelConfig {
         self.heads * self.head_dim
     }
 
-    /// Hedgehog feature dimension: phi doubles the head dim.
+    /// Feature dimension Dp of phi — depends on the map (2d for the
+    /// exp/dpfp/softmax families, d for T2R). Decode state is [Dp, d]
+    /// per head, so the manifest shapes track the map through here.
     pub fn dp(&self) -> usize {
-        2 * self.head_dim
+        self.feature.dim(self.head_dim)
     }
 
-    pub fn learnable(&self) -> bool {
-        self.feature == FeatureKind::Learnable
+    /// Per-layer q/k/v/o projections + residual stacking (everything
+    /// except the legacy `FixedExp` shape).
+    pub fn projected(&self) -> bool {
+        self.feature.projected()
+    }
+
+    /// Trainable per-head `fm_q`/`fm_k` leaves present?
+    pub fn has_fm(&self) -> bool {
+        self.feature.has_fm()
+    }
+
+    /// Per-layer leaf basenames in sorted (manifest) order: 6 with
+    /// trainable feature maps, 4 for projected-but-parameter-free maps
+    /// (DPFP), none for the legacy projection-free shape.
+    pub fn layer_leaves(&self) -> &'static [&'static str] {
+        if self.has_fm() {
+            &LAYER_LEAVES
+        } else if self.projected() {
+            &LAYER_LEAVES[2..]
+        } else {
+            &[]
+        }
     }
 
     /// Leaves under `prefix/` (e.g. "params", "m", "v"), in sorted name
@@ -164,17 +255,15 @@ impl ModelConfig {
         };
         let (v, dm, h, hd) = (self.vocab, self.d_model(), self.heads, self.head_dim);
         let mut slots = vec![f(format!("{prefix}/embed"), &[v, dm])];
-        if self.learnable() {
-            for i in 0..self.layers {
-                for leaf in LAYER_LEAVES {
-                    let name = format!("{prefix}/layer{i:02}/{leaf}");
-                    let slot = if leaf.starts_with("fm") {
-                        f(name, &[h, hd, hd])
-                    } else {
-                        f(name, &[dm, dm])
-                    };
-                    slots.push(slot);
-                }
+        for i in 0..self.layers {
+            for leaf in self.layer_leaves() {
+                let name = format!("{prefix}/layer{i:02}/{leaf}");
+                let slot = if leaf.starts_with("fm") {
+                    f(name, &[h, hd, hd])
+                } else {
+                    f(name, &[dm, dm])
+                };
+                slots.push(slot);
             }
         }
         slots.push(f(format!("{prefix}/unembed"), &[dm, v]));
@@ -183,18 +272,16 @@ impl ModelConfig {
 
     /// Number of parameter leaves (`leaf_slots(..).len()` without building).
     pub fn n_leaves(&self) -> usize {
-        if self.learnable() {
-            2 + LAYER_LEAVES.len() * self.layers
-        } else {
-            2
-        }
+        2 + self.layer_leaves().len() * self.layers
     }
 
     /// Seeded parameter construction: ONE rng stream, draws in the fixed
-    /// order embed, then per layer (wq, wk, wv, wo, fm_q, fm_k), then
-    /// unembed. For `FixedExp` this is exactly the PR-4 `ref_lm_init`
-    /// (embed before unembed, N(0, 0.3^2) entries), so the fixed demo
-    /// seed keeps producing bit-identical parameters. Projections draw
+    /// order embed, then per layer (wq, wk, wv, wo, then fm_q, fm_k when
+    /// the map has them), then unembed. For `FixedExp` this is exactly
+    /// the PR-4 `ref_lm_init` (embed before unembed, N(0, 0.3^2)
+    /// entries), so the fixed demo seed keeps producing bit-identical
+    /// parameters; for `Learnable` the draw order matches PR 5, so
+    /// `ref_lm2`/`ref_lm4` stay byte-compatible too. Projections draw
     /// N(0, 1/D) and feature maps N(0, 1/d) — variance-preserving, so
     /// activations stay in the well-conditioned range of exp(+-x) at
     /// init (validated in an f32 prototype of the exact model).
@@ -206,7 +293,7 @@ impl ModelConfig {
         let (v, dm, h, hd) = (self.vocab, self.d_model(), self.heads, self.head_dim);
         let mut params = ParamStore::new();
         params.insert("params/embed", Tensor::from_f32(randn(v * dm, 0.3), &[v, dm]));
-        if self.learnable() {
+        if self.projected() {
             let proj_scale = (dm as f32).sqrt().recip();
             let fm_scale = (hd as f32).sqrt().recip();
             for i in 0..self.layers {
@@ -216,11 +303,13 @@ impl ModelConfig {
                         Tensor::from_f32(randn(dm * dm, proj_scale), &[dm, dm]),
                     );
                 }
-                for leaf in ["fm_q", "fm_k"] {
-                    params.insert(
-                        format!("params/layer{i:02}/{leaf}"),
-                        Tensor::from_f32(randn(h * hd * hd, fm_scale), &[h, hd, hd]),
-                    );
+                if self.has_fm() {
+                    for leaf in ["fm_q", "fm_k"] {
+                        params.insert(
+                            format!("params/layer{i:02}/{leaf}"),
+                            Tensor::from_f32(randn(h * hd * hd, fm_scale), &[h, hd, hd]),
+                        );
+                    }
                 }
             }
         }
@@ -265,6 +354,68 @@ mod tests {
             assert_eq!(cfg.d_model(), cfg.heads * cfg.head_dim);
         }
         assert!(ModelConfig::for_tag("ref_lm99").is_none());
+    }
+
+    #[test]
+    fn zoo_kinds_roundtrip_and_pin_their_contract() {
+        use FeatureKind::*;
+        for kind in FeatureKind::zoo() {
+            assert_eq!(FeatureKind::from_name(kind.name()), Some(kind));
+            // fm leaves imply projections (a learned W needs q/k/v heads
+            // to act on); T2R is the only map with Dp = d.
+            assert!(!kind.has_fm() || kind.projected());
+            assert_eq!(kind.dim(16), if kind == T2R { 16 } else { 32 });
+        }
+        assert_eq!(FeatureKind::from_name("bogus"), None);
+        assert!(!Dpfp.has_fm() && Dpfp.projected());
+        assert!(!FixedExp.projected());
+    }
+
+    #[test]
+    fn zoo_leaf_layouts_by_kind() {
+        // (kind, per-layer leaves) — DPFP drops the two fm leaves.
+        let base = ModelConfig { layers: 2, ..ModelConfig::ref_lm() };
+        for (kind, per_layer) in [
+            (FeatureKind::Learnable, 6),
+            (FeatureKind::T2R, 6),
+            (FeatureKind::HedgehogSoftmax, 6),
+            (FeatureKind::Dpfp, 4),
+        ] {
+            let cfg = ModelConfig { feature: kind, ..base };
+            cfg.validate().unwrap();
+            assert_eq!(cfg.n_leaves(), 2 + per_layer * cfg.layers, "{}", kind.name());
+            let slots = cfg.leaf_slots("params");
+            assert_eq!(slots.len(), cfg.n_leaves());
+            let names: Vec<&str> = slots.iter().map(|s| s.name.as_str()).collect();
+            let mut sorted = names.clone();
+            sorted.sort();
+            assert_eq!(names, sorted, "{}: sorted tree-path order", kind.name());
+            let first_layer_leaf = if kind.has_fm() { "fm_k" } else { "wk" };
+            assert_eq!(names[1], format!("params/layer00/{first_layer_leaf}"));
+            // init agrees with the manifest layout for every kind
+            let params = cfg.init_params(11);
+            assert_eq!(params.len(), slots.len());
+            for s in &slots {
+                assert_eq!(params.get(&s.name).unwrap().shape, s.shape, "{}", s.name);
+            }
+            // T2R halves the feature dim; everything else doubles it.
+            let want_dp =
+                if kind == FeatureKind::T2R { cfg.head_dim } else { 2 * cfg.head_dim };
+            assert_eq!(cfg.dp(), want_dp);
+        }
+    }
+
+    #[test]
+    fn dpfp_init_matches_learnable_projection_stream() {
+        // DPFP draws the same projection normals as Learnable (fm draws
+        // are simply skipped at the end of each layer) — pinned so the
+        // init stream stays stable if the draw order is ever touched.
+        let learnable = ModelConfig::ref_lm2().init_params(3);
+        let dpfp = ModelConfig { feature: FeatureKind::Dpfp, ..ModelConfig::ref_lm2() };
+        let dp_params = dpfp.init_params(3);
+        let a = learnable.get("params/layer00/wq").unwrap().as_f32().unwrap();
+        let b = dp_params.get("params/layer00/wq").unwrap().as_f32().unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

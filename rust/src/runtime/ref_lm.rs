@@ -31,15 +31,25 @@
 //! map, causal normalized linear attention in quadratic form
 //! (a_tj = phi_q_t . phi_k_j for j <= t, den_t = sum + EPS,
 //! y_t = sum_j p_tj v_j), heads concatenated, then
-//! x_{l+1} = x_l + y wo (Learnable) or x_{l+1} = y (FixedExp); logits =
-//! x_L unembed, masked softmax cross-entropy. Backward is hand-derived
-//! (see rust/DESIGN.md §8): normalization chain
-//! w_tj = (g.v_j - g.y_t)/den_t into dphi_q/dphi_k/dv, the learnable-phi
-//! chain dpre = dpos*pos - dneg*neg then dW += dpre x^T and
-//! dx += W^T dpre, projection grads as per-row outer products, residual
-//! passthrough. The whole derivation was validated against central
-//! finite differences in an f64 prototype of the exact loop structure
-//! (worst relative error ~8e-8) before being ported here.
+//! x_{l+1} = x_l + y wo (projected kinds) or x_{l+1} = y (`FixedExp`);
+//! logits = x_L unembed, masked softmax cross-entropy. Backward is
+//! hand-derived (see rust/DESIGN.md §8/§10): normalization chain
+//! w_tj = (g.v_j - g.y_t)/den_t into dphi_q/dphi_k/dv, then the map's
+//! Jacobian via [`FeatureMap::backward`] (e.g. the hedgehog chain
+//! dpre = dpos*pos - dneg*neg), then — for fm-bearing kinds —
+//! dW += dpre x^T and dx += W^T dpre; projection grads as per-row outer
+//! products, residual passthrough. The derivation was validated against
+//! central finite differences in an f64 prototype of the exact loop
+//! structure (worst relative error ~8e-8) before being ported here.
+//!
+//! **Feature-map zoo (ISSUE 7).** The same interpreter serves every
+//! [`FeatureKind`](super::config::FeatureKind): `fixed_exp` and
+//! `learnable` (hedgehog exp pairs), `t2r` (relu after a learned
+//! projection), `dpfp` (projected, deterministic parameter-free, no fm
+//! leaves), and `hh_softmax` (softmax-normalized `[x, -x]`). Forward and
+//! backward both route through [`FeatureMap::of_kind`], so a new map
+//! only touches `reference.rs` — the FD-gradient and oracle-parity tests
+//! below iterate over the whole zoo.
 //!
 //! Execution strategies mirror PR 4: the default path routes reductions
 //! through the 8-lane `simd` micro-kernels and runs per-(batch, head)
@@ -58,7 +68,7 @@ use super::config::ModelConfig;
 use super::json::Json;
 use super::manifest::{Manifest, Slot};
 use super::pool::WorkerPool;
-use super::reference::{auto_threads, scalar_axpy, scalar_dot, SharedExecOptions, EPS};
+use super::reference::{auto_threads, scalar_axpy, scalar_dot, FeatureMap, SharedExecOptions, EPS};
 use super::simd;
 use super::tensor::{DType, Tensor};
 
@@ -381,18 +391,19 @@ fn outer_acc(ops: Ops, x: &[f32], g: &[f32], dw: &mut [f32]) {
 // Parameter views and gradients, in the sorted leaf order of the manifests
 // ---------------------------------------------------------------------------
 
-/// Per-layer parameter views (Learnable configs only).
+/// Per-layer parameter views (projected configs only). `fm_q`/`fm_k`
+/// are `None` for maps without trainable feature-map leaves (DPFP).
 pub(crate) struct LayerParams<'a> {
     pub(crate) wq: &'a [f32],
     pub(crate) wk: &'a [f32],
     pub(crate) wv: &'a [f32],
     pub(crate) wo: &'a [f32],
-    pub(crate) fm_q: &'a [f32],
-    pub(crate) fm_k: &'a [f32],
+    pub(crate) fm_q: Option<&'a [f32]>,
+    pub(crate) fm_k: Option<&'a [f32]>,
 }
 
 /// Borrowed views of one parameter set, resolved from the manifest's
-/// sorted leaf order (embed, per layer [fm_k, fm_q, wk, wo, wq, wv],
+/// sorted leaf order (embed, per layer [fm_k, fm_q,] wk, wo, wq, wv,
 /// unembed). Shared by the training interpreter and the decode step.
 pub(crate) struct ModelParams<'a> {
     pub(crate) embed: &'a [f32],
@@ -407,17 +418,23 @@ impl<'a> ModelParams<'a> {
             bail!("expected {} parameter leaves, got {}", cfg.n_leaves(), leaves.len());
         }
         let mut layers = Vec::new();
-        if cfg.learnable() {
+        if cfg.projected() {
+            let stride = cfg.layer_leaves().len();
             for l in 0..cfg.layers {
-                // sorted per-layer order: fm_k, fm_q, wk, wo, wq, wv
-                let b = 1 + 6 * l;
+                // sorted per-layer order: [fm_k, fm_q,] wk, wo, wq, wv
+                let b = 1 + stride * l;
+                let (fm_k, fm_q, w) = if cfg.has_fm() {
+                    (Some(leaves[b]), Some(leaves[b + 1]), b + 2)
+                } else {
+                    (None, None, b)
+                };
                 layers.push(LayerParams {
-                    fm_k: leaves[b],
-                    fm_q: leaves[b + 1],
-                    wk: leaves[b + 2],
-                    wo: leaves[b + 3],
-                    wq: leaves[b + 4],
-                    wv: leaves[b + 5],
+                    fm_k,
+                    fm_q,
+                    wk: leaves[w],
+                    wo: leaves[w + 1],
+                    wq: leaves[w + 2],
+                    wv: leaves[w + 3],
                 });
             }
         }
@@ -438,17 +455,23 @@ impl<'a> ModelParams<'a> {
             bail!("expected {} parameter leaves, got {}", cfg.n_leaves(), tensors.len());
         }
         let mut layers = Vec::new();
-        if cfg.learnable() {
+        if cfg.projected() {
             layers.reserve(cfg.layers);
+            let stride = cfg.layer_leaves().len();
             for l in 0..cfg.layers {
-                let b = 1 + 6 * l;
+                let b = 1 + stride * l;
+                let (fm_k, fm_q, w) = if cfg.has_fm() {
+                    (Some(tensors[b].as_f32()?), Some(tensors[b + 1].as_f32()?), b + 2)
+                } else {
+                    (None, None, b)
+                };
                 layers.push(LayerParams {
-                    fm_k: tensors[b].as_f32()?,
-                    fm_q: tensors[b + 1].as_f32()?,
-                    wk: tensors[b + 2].as_f32()?,
-                    wo: tensors[b + 3].as_f32()?,
-                    wq: tensors[b + 4].as_f32()?,
-                    wv: tensors[b + 5].as_f32()?,
+                    fm_k,
+                    fm_q,
+                    wk: tensors[w].as_f32()?,
+                    wo: tensors[w + 1].as_f32()?,
+                    wq: tensors[w + 2].as_f32()?,
+                    wv: tensors[w + 3].as_f32()?,
                 });
             }
         }
@@ -478,13 +501,17 @@ pub(crate) struct Grads {
 }
 
 impl Grads {
-    /// Flatten into the manifest's sorted leaf order.
+    /// Flatten into the manifest's sorted leaf order. The dfm buffers
+    /// are allocated empty for maps without fm leaves (DPFP), matching
+    /// the 4-leaf layer layout — they are skipped, not emitted as zeros.
     pub(crate) fn into_leaves(self) -> Vec<Vec<f32>> {
         let mut out = vec![self.dembed];
         for lg in self.layers {
-            // sorted per-layer order: fm_k, fm_q, wk, wo, wq, wv
-            out.push(lg.dfm_k);
-            out.push(lg.dfm_q);
+            // sorted per-layer order: [fm_k, fm_q,] wk, wo, wq, wv
+            if !lg.dfm_k.is_empty() {
+                out.push(lg.dfm_k);
+                out.push(lg.dfm_q);
+            }
             out.push(lg.dwk);
             out.push(lg.dwo);
             out.push(lg.dwq);
@@ -564,27 +591,33 @@ impl LayerActs {
     }
 }
 
-/// Write hedgehog features for every row of `x` (n rows of width d) into
-/// `phi` (n rows of width 2d). With `fm`, rows pass through the learned
-/// per-head map first (pre = fm x). `exp_pos_neg` is shared with every
-/// other path, so features stay bit-identical between oracle and SIMD
-/// executions of the same pre-activations.
-fn write_features(ops: Ops, fm: Option<&[f32]>, x: &[f32], phi: &mut [f32], d: usize) {
-    let dp = 2 * d;
+/// Write the feature map for every row of `x` (n rows of width d) into
+/// `phi` (n rows of width `map.dim(d)`). With `fm`, rows pass through
+/// the learned per-head projection first (pre = fm x). `map.write` is
+/// shared with every other path (decode, prefill, kernel bench), so
+/// features stay bit-identical between oracle and SIMD executions of the
+/// same pre-activations.
+fn write_features(
+    ops: Ops,
+    map: FeatureMap,
+    fm: Option<&[f32]>,
+    x: &[f32],
+    phi: &mut [f32],
+    d: usize,
+) {
+    let dp = map.dim(d);
     let n = x.len() / d;
     match fm {
         None => {
             for i in 0..n {
-                let (pos, neg) = phi[i * dp..(i + 1) * dp].split_at_mut(d);
-                simd::exp_pos_neg(&x[i * d..(i + 1) * d], pos, neg);
+                map.write(&x[i * d..(i + 1) * d], &mut phi[i * dp..(i + 1) * dp]);
             }
         }
         Some(fm) => {
             let mut pre = vec![0.0f32; d];
             for i in 0..n {
                 vec_mat_t(ops, &x[i * d..(i + 1) * d], fm, &mut pre);
-                let (pos, neg) = phi[i * dp..(i + 1) * dp].split_at_mut(d);
-                simd::exp_pos_neg(&pre, pos, neg);
+                map.write(&pre, &mut phi[i * dp..(i + 1) * dp]);
             }
         }
     }
@@ -607,12 +640,12 @@ struct FwdTask<'a> {
 
 /// One (batch, head)'s forward: features, raw scores, normalization, and
 /// the attention output — the quadratic form of the decode recurrence.
-fn fwd_head(ops: Ops, n: usize, d: usize, t: FwdTask) {
+fn fwd_head(ops: Ops, map: FeatureMap, n: usize, d: usize, t: FwdTask) {
     let FwdTask { qh, kh, vh, fm_q, fm_k, phi_q, mut phi_k, p, den, yh } = t;
-    let dp = 2 * d;
-    write_features(ops, fm_q, qh, phi_q, d);
+    let dp = map.dim(d);
+    write_features(ops, map, fm_q, qh, phi_q, d);
     if let Some(pk) = phi_k.as_deref_mut() {
-        write_features(ops, fm_k, kh, pk, d);
+        write_features(ops, map, fm_k, kh, pk, d);
     }
     let phi_k: &[f32] = match phi_k.as_deref() {
         Some(pk) => pk,
@@ -730,8 +763,8 @@ fn forward_layer(
                 } else {
                     &vh[i * n * d..(i + 1) * n * d]
                 },
-                fm_q: lp.map(|lp| &lp.fm_q[hh * dd..(hh + 1) * dd]),
-                fm_k: lp.map(|lp| &lp.fm_k[hh * dd..(hh + 1) * dd]),
+                fm_q: lp.and_then(|lp| lp.fm_q.map(|f| &f[hh * dd..(hh + 1) * dd])),
+                fm_k: lp.and_then(|lp| lp.fm_k.map(|f| &f[hh * dd..(hh + 1) * dd])),
                 phi_q: pq,
                 phi_k: pk,
                 p: pr,
@@ -739,7 +772,8 @@ fn forward_layer(
                 yh: yr,
             });
         }
-        pool.run_tasks(threads, tasks, |t: FwdTask| fwd_head(ops, n, d, t));
+        let map = FeatureMap::of_kind(cfg.feature);
+        pool.run_tasks(threads, tasks, |t: FwdTask| fwd_head(ops, map, n, d, t));
     }
 
     // merge heads
@@ -919,16 +953,16 @@ struct BwdTask<'a> {
 
 /// One (batch, head)'s backward through the normalized linear attention,
 /// the optional per-layer distillation loss, and the feature map.
-/// Derivation (DESIGN.md §8): with p_tj the normalized weights and den_t
-/// the guarded denominator,
+/// Derivation (DESIGN.md §8/§10): with p_tj the normalized weights and
+/// den_t the guarded denominator,
 ///   w_tj        = (g_t . v_j - g_t . y_t) / den_t
 ///   dphi_q_t   += sum_j w_tj phi_k_j,   dphi_k_j += w_tj phi_q_t
 ///   dv_j       += p_tj g_t
-/// then through phi = [exp(pre), exp(-pre)]:
-///   dpre        = dphi_pos * phi_pos - dphi_neg * phi_neg
-/// and (Learnable) through the feature map pre = W x:
+/// then through the map's Jacobian (`FeatureMap::backward` — e.g.
+/// dpre = dphi_pos * phi_pos - dphi_neg * phi_neg for the exp pair)
+/// and, when the map carries fm leaves, through pre = W x:
 ///   dW         += dpre x^T,   dx += W^T dpre.
-fn bwd_head(ops: Ops, n: usize, d: usize, t: BwdTask) {
+fn bwd_head(ops: Ops, map: FeatureMap, n: usize, d: usize, t: BwdTask) {
     let BwdTask {
         qh,
         kh,
@@ -949,7 +983,7 @@ fn bwd_head(ops: Ops, n: usize, d: usize, t: BwdTask) {
         dfm_k,
         loss,
     } = t;
-    let dp = 2 * d;
+    let dp = map.dim(d);
     let mut dphi_q = vec![0.0f32; n * dp];
     let mut dphi_k = vec![0.0f32; n * dp];
 
@@ -1027,35 +1061,49 @@ fn bwd_head(ops: Ops, n: usize, d: usize, t: BwdTask) {
         *loss = loss_sum;
     }
 
-    // feature chain: dphi -> (dpre ->) head-space q/k gradients
+    // feature chain: dphi -> (dpre ->) head-space q/k gradients. Without
+    // fm leaves the Jacobian applies straight to the head rows (the raw
+    // rows are passed for DPFP, whose Jacobian reads them); with fm
+    // leaves it lands in dpre, then dW += dpre x^T and dx += W^T dpre
+    // (x = &[] is fine there — only DPFP reads it, and DPFP has no fm).
     match fm_q {
         None => {
             for i in 0..n {
-                let pq = &phi_q[i * dp..(i + 1) * dp];
-                let dq = &dphi_q[i * dp..(i + 1) * dp];
-                let out = &mut dqh[i * d..(i + 1) * d];
-                simd::grad_pos_neg(out, &dq[..d], &dq[d..], &pq[..d], &pq[d..]);
-                let pk = &phi_k[i * dp..(i + 1) * dp];
-                let dk = &dphi_k[i * dp..(i + 1) * dp];
-                let out = &mut dkh[i * d..(i + 1) * d];
-                simd::grad_pos_neg(out, &dk[..d], &dk[d..], &pk[..d], &pk[d..]);
+                map.backward(
+                    &qh[i * d..(i + 1) * d],
+                    &phi_q[i * dp..(i + 1) * dp],
+                    &dphi_q[i * dp..(i + 1) * dp],
+                    &mut dqh[i * d..(i + 1) * d],
+                );
+                map.backward(
+                    &kh[i * d..(i + 1) * d],
+                    &phi_k[i * dp..(i + 1) * dp],
+                    &dphi_k[i * dp..(i + 1) * dp],
+                    &mut dkh[i * d..(i + 1) * d],
+                );
             }
         }
         Some(fmq) => {
-            let fmk = fm_k.expect("learnable config has both feature maps");
+            let fmk = fm_k.expect("fm-bearing config has both feature maps");
             let mut dpre = vec![0.0f32; d];
             for i in 0..n {
                 dpre.fill(0.0);
-                let pq = &phi_q[i * dp..(i + 1) * dp];
-                let dq = &dphi_q[i * dp..(i + 1) * dp];
-                simd::grad_pos_neg(&mut dpre, &dq[..d], &dq[d..], &pq[..d], &pq[d..]);
+                map.backward(
+                    &[],
+                    &phi_q[i * dp..(i + 1) * dp],
+                    &dphi_q[i * dp..(i + 1) * dp],
+                    &mut dpre,
+                );
                 outer_acc(ops, &dpre, &qh[i * d..(i + 1) * d], dfm_q);
                 vec_mat_acc(ops, &dpre, fmq, &mut dqh[i * d..(i + 1) * d]);
 
                 dpre.fill(0.0);
-                let pk = &phi_k[i * dp..(i + 1) * dp];
-                let dk = &dphi_k[i * dp..(i + 1) * dp];
-                simd::grad_pos_neg(&mut dpre, &dk[..d], &dk[d..], &pk[..d], &pk[d..]);
+                map.backward(
+                    &[],
+                    &phi_k[i * dp..(i + 1) * dp],
+                    &dphi_k[i * dp..(i + 1) * dp],
+                    &mut dpre,
+                );
                 outer_acc(ops, &dpre, &kh[i * d..(i + 1) * d], dfm_k);
                 vec_mat_acc(ops, &dpre, fmk, &mut dkh[i * d..(i + 1) * d]);
             }
@@ -1084,26 +1132,28 @@ fn backward_model(
     let bh = b * h;
     // only the per-layer grads live here; embed/unembed belong to the
     // caller (`loss_and_grads`), so don't allocate a full Grads
-    let mut layer_grads: Vec<LayerGrads> = if cfg.learnable() {
+    let fm_len = if cfg.has_fm() { h * d * d } else { 0 };
+    let mut layer_grads: Vec<LayerGrads> = if cfg.projected() {
         (0..cfg.layers)
             .map(|_| LayerGrads {
                 dwq: vec![0.0; dm * dm],
                 dwk: vec![0.0; dm * dm],
                 dwv: vec![0.0; dm * dm],
                 dwo: vec![0.0; dm * dm],
-                dfm_q: vec![0.0; h * d * d],
-                dfm_k: vec![0.0; h * d * d],
+                dfm_q: vec![0.0; fm_len],
+                dfm_k: vec![0.0; fm_len],
             })
             .collect()
     } else {
         Vec::new()
     };
+    let map = FeatureMap::of_kind(cfg.feature);
     let mut distill_loss = 0.0f64;
 
     for l in (0..cfg.layers).rev() {
         let act = &acts[l];
         let lp = mp.layers.get(l);
-        let learnable = lp.is_some();
+        let has_fm = lp.is_some_and(|lp| lp.fm_q.is_some());
 
         // 1. through the output projection / residual into dyh
         let mut dyh: Vec<f32> = Vec::new();
@@ -1146,8 +1196,8 @@ fn backward_model(
         let mut dqh = vec![0.0f32; bh * n * d];
         let mut dkh = vec![0.0f32; bh * n * d];
         let mut dvh = vec![0.0f32; bh * n * d];
-        let mut dfm_q_part = if learnable { vec![0.0f32; bh * dd] } else { Vec::new() };
-        let mut dfm_k_part = if learnable { vec![0.0f32; bh * dd] } else { Vec::new() };
+        let mut dfm_q_part = if has_fm { vec![0.0f32; bh * dd] } else { Vec::new() };
+        let mut dfm_k_part = if has_fm { vec![0.0f32; bh * dd] } else { Vec::new() };
         let mut losses = vec![0.0f64; bh];
         {
             let mut tasks = Vec::with_capacity(bh);
@@ -1168,14 +1218,14 @@ fn backward_model(
                 dkh_rest = r;
                 let (dv, r) = std::mem::take(&mut dvh_rest).split_at_mut(n * d);
                 dvh_rest = r;
-                let dfq: &mut [f32] = if learnable {
+                let dfq: &mut [f32] = if has_fm {
                     let (a, r) = std::mem::take(&mut dfq_rest).split_at_mut(dd);
                     dfq_rest = r;
                     a
                 } else {
                     Default::default()
                 };
-                let dfk: &mut [f32] = if learnable {
+                let dfk: &mut [f32] = if has_fm {
                     let (a, r) = std::mem::take(&mut dfk_rest).split_at_mut(dd);
                     dfk_rest = r;
                     a
@@ -1193,8 +1243,8 @@ fn backward_model(
                     p: &act.p[i * n * n..(i + 1) * n * n],
                     den: &act.den[i * n..(i + 1) * n],
                     yh: &act.yh[i * n * d..(i + 1) * n * d],
-                    fm_q: lp.map(|lp| &lp.fm_q[hh * dd..(hh + 1) * dd]),
-                    fm_k: lp.map(|lp| &lp.fm_k[hh * dd..(hh + 1) * dd]),
+                    fm_q: lp.and_then(|lp| lp.fm_q.map(|f| &f[hh * dd..(hh + 1) * dd])),
+                    fm_k: lp.and_then(|lp| lp.fm_k.map(|f| &f[hh * dd..(hh + 1) * dd])),
                     dyh: if dyh.is_empty() { &[] } else { &dyh[i * n * d..(i + 1) * n * d] },
                     distill: distill_inv_m,
                     dqh: dq,
@@ -1205,14 +1255,14 @@ fn backward_model(
                     loss: &mut ls[0],
                 });
             }
-            pool.run_tasks(threads, tasks, |t: BwdTask| bwd_head(ops, n, d, t));
+            pool.run_tasks(threads, tasks, |t: BwdTask| bwd_head(ops, map, n, d, t));
         }
         if let Some(inv_m) = distill_inv_m {
             distill_loss += losses.iter().sum::<f64>() * inv_m as f64;
             // this layer's map loss reaches everything below it
             dx_zero = false;
         }
-        if learnable {
+        if has_fm {
             let lg = &mut layer_grads[l];
             for i in 0..bh {
                 let hh = i % h;
@@ -1413,6 +1463,50 @@ pub(crate) fn eval_loss_metric(
     ((loss_sum / mask_den as f64) as f32, (correct_sum / mask_den as f64) as f32)
 }
 
+/// One causal attention row as the quality diagnostics consume it
+/// (`metrics::quality`): the student's normalized weights over positions
+/// j <= t, plus the raw dot products q_t . k_j that a softmax teacher
+/// would score the same positions with.
+pub(crate) struct AttnRow {
+    /// Normalized student weights p_tj, length t + 1.
+    pub(crate) student: Vec<f32>,
+    /// Raw q_t . k_j head-space scores, length t + 1.
+    pub(crate) scores: Vec<f32>,
+}
+
+/// Forward the batch and extract every causal attention row with at
+/// least two entries (t == 0 rows are degenerate one-point
+/// distributions: entropy 0 and rank correlation undefined by
+/// construction, so they would only dilute the diagnostics). Probe-only
+/// path: allocates freely, not part of any steady-state contract.
+pub(crate) fn attention_probe(
+    cfg: &ModelConfig,
+    pool: &WorkerPool,
+    opts: ExecOptions,
+    mp: &ModelParams,
+    tokens: &[i32],
+) -> Vec<AttnRow> {
+    let (ops, threads) = resolve(cfg, opts);
+    let (b, n, h, d) = (cfg.batch, cfg.seq, cfg.heads, cfg.head_dim);
+    let acts = forward_model(cfg, ops, pool, threads, mp, tokens);
+    let mut rows = Vec::with_capacity(cfg.layers * b * h * (n - 1));
+    for act in acts.iter() {
+        let kh_all = act.k_heads();
+        for i in 0..b * h {
+            let qh = &act.qh[i * n * d..(i + 1) * n * d];
+            let kh = &kh_all[i * n * d..(i + 1) * n * d];
+            let p = &act.p[i * n * n..(i + 1) * n * n];
+            for t in 1..n {
+                let scores = (0..=t)
+                    .map(|j| (ops.dot)(&qh[t * d..(t + 1) * d], &kh[j * d..(j + 1) * d]))
+                    .collect();
+                rows.push(AttnRow { student: p[t * n..t * n + t + 1].to_vec(), scores });
+            }
+        }
+    }
+    rows
+}
+
 /// Whole-sequence forward to (B, N, V) logits — the quadratic-form
 /// oracle the decode step is property-tested against.
 pub(crate) fn forward_logits(
@@ -1439,7 +1533,9 @@ pub(crate) fn forward_logits(
 
 /// One decoupled-weight-decay Adam step for one leaf. `step_new` is the
 /// incremented (1-based) step index used for bias correction.
-fn adamw_leaf(
+/// `pub(crate)` so the quality probe in `metrics::quality` can reuse the
+/// exact optimizer the train stack uses.
+pub(crate) fn adamw_leaf(
     p: &[f32],
     g: &[f32],
     m: &[f32],
@@ -1574,6 +1670,7 @@ impl BackendExecutable for RefLmStep {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::config::FeatureKind;
     use crate::runtime::ArtifactRegistry;
     use crate::train::session::{evaluate, ref_lm_demo_batch, Batch, Session};
 
@@ -1798,6 +1895,57 @@ mod tests {
         let (tokens, targets, mask) = cyclic_batch();
         for tag in ModelConfig::builtin_tags() {
             let cfg = ModelConfig::for_tag(tag).unwrap();
+            let (_, leaves) = leaves_of(&cfg, 99);
+            assert_oracle_parity(|o| {
+                let mp = mp_of(&cfg, &leaves);
+                let (loss, _, g) = loss_and_grads(
+                    &cfg,
+                    &pool,
+                    o,
+                    &mp,
+                    &tokens,
+                    StepKind::Lm { targets: &targets, mask: &mask },
+                );
+                (loss, g.into_leaves())
+            });
+            assert_oracle_parity(|o| {
+                let mp = mp_of(&cfg, &leaves);
+                let (loss, _, g) =
+                    loss_and_grads(&cfg, &pool, o, &mp, &tokens, StepKind::Distill);
+                (loss, g.into_leaves())
+            });
+        }
+    }
+
+    /// Non-builtin zoo configs: the ref_lm2 geometry re-dressed with each
+    /// alternative feature map (ISSUE 7's extension-point contract says
+    /// any `FeatureKind` must train, not just the registered tags).
+    fn zoo_cfg(kind: FeatureKind) -> ModelConfig {
+        ModelConfig { feature: kind, ..ModelConfig::ref_lm2() }
+    }
+
+    #[test]
+    fn finite_difference_gradient_check_zoo_maps() {
+        // every trainable zoo map, both losses, every leaf — the DPFP and
+        // relu kinks are kink-prone under FD, so the sampled entries lean
+        // on the strongest gradients (see `sample_indices`).
+        for kind in [FeatureKind::T2R, FeatureKind::Dpfp, FeatureKind::HedgehogSoftmax] {
+            let cfg = zoo_cfg(kind);
+            let expect = if cfg.has_fm() { 14 } else { 10 };
+            assert_eq!(cfg.n_leaves(), expect, "{}", kind.name());
+            fd_check_all_leaves(&cfg, 1234, 6);
+        }
+    }
+
+    #[test]
+    fn zoo_maps_match_scalar_oracle() {
+        // 1e-5 chunked-SIMD vs scalar-oracle parity for every zoo kind
+        // across thread counts, both losses (the builtin kinds are pinned
+        // by `chunked_simd_path_matches_scalar_oracle`).
+        let pool = WorkerPool::new();
+        let (tokens, targets, mask) = cyclic_batch();
+        for kind in [FeatureKind::T2R, FeatureKind::Dpfp, FeatureKind::HedgehogSoftmax] {
+            let cfg = zoo_cfg(kind);
             let (_, leaves) = leaves_of(&cfg, 99);
             assert_oracle_parity(|o| {
                 let mp = mp_of(&cfg, &leaves);

@@ -57,7 +57,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, bail, Result};
 
 use super::backend::{Backend, ExecOptions, Executable as BackendExecutable};
-use super::config::ModelConfig;
+use super::config::{FeatureKind, ModelConfig};
 use super::json::Json;
 use super::manifest::{Manifest, Slot};
 use super::params::ParamStore;
@@ -109,7 +109,9 @@ fn decode_for(name: &str) -> Option<(&'static str, ModelConfig)> {
 const MIN_AUTO_PARALLEL_FLOPS: f64 = 8e6;
 
 /// Feature maps the linear-attention interpreter supports. Inputs are raw
-/// q/k rows of length d; outputs are the Dp-dimensional positive features.
+/// q/k rows of length d (either the per-head slice itself or a learned
+/// pre-projection of it — the map is data-independent either way);
+/// outputs are the Dp-dimensional non-negative features.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub(crate) enum FeatureMap {
     /// phi(x) = exp(x) — what `kernel_linear_attention` bakes in.
@@ -118,14 +120,34 @@ pub(crate) enum FeatureMap {
     Hedgehog,
     /// phi(x) = [1, x, vec(x x^T)/sqrt(2)] on x pre-scaled by d^-1/4.
     Taylor,
+    /// phi(x) = relu(x) — the T2R map (applied after the learned fm).
+    Relu,
+    /// DPFP (nu = 1): u = [relu(x), relu(-x)], phi_j = u_j * u_{j-1 mod 2d}.
+    Dpfp,
+    /// phi(x) = softmax([x, -x]) with a max-|x| shift — the
+    /// softmax-normalized hedgehog (fla's `HedgehogFeatureMap`).
+    HedgehogSoftmax,
 }
 
 impl FeatureMap {
+    /// The kernel map a [`FeatureKind`] architecture evaluates per head.
+    /// `FixedExp` and `Learnable` both reduce to the Hedgehog negation
+    /// pair — they differ only in what row is fed in (the head slice vs
+    /// its fm projection), which the caller decides.
+    pub(crate) fn of_kind(kind: FeatureKind) -> FeatureMap {
+        match kind {
+            FeatureKind::FixedExp | FeatureKind::Learnable => FeatureMap::Hedgehog,
+            FeatureKind::T2R => FeatureMap::Relu,
+            FeatureKind::Dpfp => FeatureMap::Dpfp,
+            FeatureKind::HedgehogSoftmax => FeatureMap::HedgehogSoftmax,
+        }
+    }
+
     /// Feature dimension Dp for head dimension d.
     pub(crate) fn dim(self, d: usize) -> usize {
         match self {
-            FeatureMap::Exp => d,
-            FeatureMap::Hedgehog => 2 * d,
+            FeatureMap::Exp | FeatureMap::Relu => d,
+            FeatureMap::Hedgehog | FeatureMap::Dpfp | FeatureMap::HedgehogSoftmax => 2 * d,
             FeatureMap::Taylor => 1 + d + d * d,
         }
     }
@@ -133,8 +155,9 @@ impl FeatureMap {
     /// Apply to one row `x`, writing all `dim()` features into `out`.
     /// Pure slice writes into caller-hoisted scratch (never touches the
     /// allocator), routed through the `simd` micro-kernels. Shared by the
-    /// chunked paths AND the naive oracle, so the feature values are
-    /// bit-identical between them by construction.
+    /// chunked paths, the naive oracle, AND the train/distill interpreter
+    /// in `ref_lm`, so the feature values are bit-identical between every
+    /// execution path by construction.
     pub(crate) fn write(self, x: &[f32], out: &mut [f32]) {
         let d = x.len();
         match self {
@@ -156,6 +179,101 @@ impl FeatureMap {
                     // row = (x_i / sqrt(2)) * xs — a scaled store
                     simd::scaled_add(row, 0.0, xs[i] * isqrt2, xs);
                 }
+            }
+            FeatureMap::Relu => simd::relu_lanes(x, out),
+            FeatureMap::Dpfp => {
+                // u = [relu(x), relu(-x)] written into out, then the
+                // cyclic neighbor product phi_j = u_j * u_{j-1 mod 2d}
+                // formed in place by a descending sweep (out[j] only
+                // needs out[j-1]'s *original* value, which a top-down
+                // pass still has; the wrap term u_{2d-1} is saved first).
+                let (pos, neg) = out.split_at_mut(d);
+                simd::relu_pos_neg(x, pos, neg);
+                let last = out[2 * d - 1];
+                for j in (1..2 * d).rev() {
+                    out[j] *= out[j - 1];
+                }
+                out[0] *= last;
+            }
+            FeatureMap::HedgehogSoftmax => {
+                // softmax([x, -x]) shifted by m = max|x_i| (the max over
+                // the concatenated pair), then normalized by the lane sum.
+                let m = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                {
+                    let (pos, neg) = out.split_at_mut(d);
+                    simd::exp_shift_pos_neg(x, m, pos, neg);
+                }
+                let inv = simd::sum(out).recip();
+                simd::scale(out, inv);
+            }
+        }
+    }
+
+    /// Chain rule through the map, *accumulating* into `dx`:
+    /// dx += J_phi(x)^T dphi, using the stored forward features `phi`
+    /// (and, for `Dpfp` only, the raw input row `x` — every other map's
+    /// Jacobian is recoverable from `phi` alone, so fm-projected call
+    /// sites pass `&[]`). Shared by the scalar training oracle and the
+    /// SIMD path: it is its own specification.
+    pub(crate) fn backward(self, x: &[f32], phi: &[f32], dphi: &[f32], dx: &mut [f32]) {
+        let d = dx.len();
+        match self {
+            FeatureMap::Exp => {
+                for i in 0..d {
+                    dx[i] += dphi[i] * phi[i];
+                }
+            }
+            FeatureMap::Hedgehog => {
+                let (pos, neg) = phi.split_at(d);
+                let (dpos, dneg) = dphi.split_at(d);
+                simd::grad_pos_neg(dx, dpos, dneg, pos, neg);
+            }
+            FeatureMap::Relu => {
+                // phi = relu(x): the mask is phi > 0 (at the kink the
+                // subgradient 0 is used, matching the forward's max).
+                for i in 0..d {
+                    if phi[i] > 0.0 {
+                        dx[i] += dphi[i];
+                    }
+                }
+            }
+            FeatureMap::Dpfp => {
+                // phi_j = u_j u_{j-1 mod 2d} with u = [relu(x), relu(-x)]:
+                // du_j = dphi_j u_{j-1} + dphi_{j+1} u_{j+1} (cyclic),
+                // dx_i = du_i [x_i > 0] - du_{d+i} [x_i < 0]. u is
+                // recomputed on the fly from x (relu is free) — phi is
+                // not enough because the neighbor products destroy u.
+                let n = 2 * d;
+                let u = |j: usize| -> f32 {
+                    if j < d {
+                        x[j].max(0.0)
+                    } else {
+                        (-x[j - d]).max(0.0)
+                    }
+                };
+                for i in 0..d {
+                    let du = |j: usize| -> f32 {
+                        dphi[j] * u((j + n - 1) % n) + dphi[(j + 1) % n] * u((j + 1) % n)
+                    };
+                    if x[i] > 0.0 {
+                        dx[i] += du(i);
+                    } else if x[i] < 0.0 {
+                        dx[i] -= du(d + i);
+                    }
+                }
+            }
+            FeatureMap::HedgehogSoftmax => {
+                // softmax backward dp_j = phi_j (dphi_j - c), c = dphi.phi,
+                // then through the [x, -x] stack: dx_i = dp_i - dp_{d+i}.
+                let c = simd::dot(dphi, phi);
+                let (pos, neg) = phi.split_at(d);
+                let (dpos, dneg) = dphi.split_at(d);
+                for i in 0..d {
+                    dx[i] += pos[i] * (dpos[i] - c) - neg[i] * (dneg[i] - c);
+                }
+            }
+            FeatureMap::Taylor => {
+                unreachable!("Taylor is a kernel-bench map; no training path consumes it")
             }
         }
     }
@@ -1166,7 +1284,7 @@ struct RefDecode {
 /// Scratch floats per decode slot.
 fn slot_scratch_len(cfg: &ModelConfig) -> usize {
     let (dm, d, dp) = (cfg.d_model(), cfg.head_dim, cfg.dp());
-    if cfg.learnable() {
+    if cfg.projected() {
         // x, y, q, k, v rows + pre + phi_q + phi_k
         5 * dm + d + 2 * dp
     } else {
@@ -1188,6 +1306,7 @@ fn decode_layer(
 ) {
     let (h, d, dp, dm) = (cfg.heads, cfg.head_dim, cfg.dp(), cfg.d_model());
     let dd = d * d;
+    let map = FeatureMap::of_kind(cfg.feature);
     match lp {
         Some(lp) => {
             let (y, rest) = rest.split_at_mut(dm);
@@ -1203,29 +1322,35 @@ fn decode_layer(
                 }
             }
             for head in 0..h {
-                let fm_k = &lp.fm_k[head * dd..(head + 1) * dd];
-                let fm_q = &lp.fm_q[head * dd..(head + 1) * dd];
                 let kh = &k[head * d..(head + 1) * d];
                 let vh = &v[head * d..(head + 1) * d];
                 let qh = &q[head * d..(head + 1) * d];
-                for (r, p) in pre.iter_mut().enumerate() {
-                    *p = simd::dot(kh, &fm_k[r * d..(r + 1) * d]);
-                }
-                {
-                    let (pos, neg) = phi_k.split_at_mut(d);
-                    simd::exp_pos_neg(pre, pos, neg);
+                // With fm leaves, phi applies to pre = fm . head; without
+                // (DPFP), the map consumes the projected head row itself.
+                match lp.fm_k {
+                    Some(fm) => {
+                        let fm_k = &fm[head * dd..(head + 1) * dd];
+                        for (r, p) in pre.iter_mut().enumerate() {
+                            *p = simd::dot(kh, &fm_k[r * d..(r + 1) * d]);
+                        }
+                        map.write(pre, phi_k);
+                    }
+                    None => map.write(kh, phi_k),
                 }
                 let sh = &mut s_l[head * dp * d..(head + 1) * dp * d];
                 let zh = &mut z_l[head * dp..(head + 1) * dp];
                 // State advances first: the current token attends to
                 // itself, matching the quadratic form's inclusive rows.
                 simd::rank1_update(sh, zh, phi_k, vh);
-                for (r, p) in pre.iter_mut().enumerate() {
-                    *p = simd::dot(qh, &fm_q[r * d..(r + 1) * d]);
-                }
-                {
-                    let (pos, neg) = phi_q.split_at_mut(d);
-                    simd::exp_pos_neg(pre, pos, neg);
+                match lp.fm_q {
+                    Some(fm) => {
+                        let fm_q = &fm[head * dd..(head + 1) * dd];
+                        for (r, p) in pre.iter_mut().enumerate() {
+                            *p = simd::dot(qh, &fm_q[r * d..(r + 1) * d]);
+                        }
+                        map.write(pre, phi_q);
+                    }
+                    None => map.write(qh, phi_q),
                 }
                 let den = simd::dot(phi_q, zh) + EPS;
                 let yh = &mut y[head * d..(head + 1) * d];
@@ -1245,10 +1370,7 @@ fn decode_layer(
             let (phi, _) = rest.split_at_mut(dp);
             for head in 0..h {
                 let xh = &x[head * d..(head + 1) * d];
-                {
-                    let (pos, neg) = phi.split_at_mut(d);
-                    simd::exp_pos_neg(xh, pos, neg);
-                }
+                map.write(xh, phi);
                 let sh = &mut s_l[head * dp * d..(head + 1) * dp * d];
                 let zh = &mut z_l[head * dp..(head + 1) * dp];
                 simd::rank1_update(sh, zh, phi, xh);
@@ -1337,6 +1459,7 @@ pub fn prefill_state(
     let mp = ModelParams::from_tensors(cfg, leaves)?;
     let (h, d, dp, dm, v) = (cfg.heads, cfg.head_dim, cfg.dp(), cfg.d_model(), cfg.vocab);
     let dd = d * d;
+    let map = FeatureMap::of_kind(cfg.feature);
     let n = prompt.len();
     // chunk_size == 0 marks the naive oracle for kernels; the single-pass
     // fold order is chunk-independent, so here it just means "one block".
@@ -1384,17 +1507,26 @@ pub fn prefill_state(
                     }
                 }
                 for head in 0..h {
-                    let fm_q = &lp.fm_q[head * dd..(head + 1) * dd];
-                    let fm_k = &lp.fm_k[head * dd..(head + 1) * dd];
-                    // Pre-activation rows (fm . q_h / fm . k_h): the
-                    // Hedgehog map inside the single pass then applies
-                    // exp(+-x), matching decode_layer's exp_pos_neg(pre).
+                    // Pre-activation rows: with fm leaves, pre = fm . q_h
+                    // (the single pass then applies the elementwise map,
+                    // matching decode_layer); without (DPFP), the map
+                    // consumes the projected head rows directly.
                     for t in 0..n {
                         let qh = &q[t * dm + head * d..t * dm + (head + 1) * d];
                         let kh = &k[t * dm + head * d..t * dm + (head + 1) * d];
-                        for r in 0..d {
-                            pre_q[t * d + r] = simd::dot(qh, &fm_q[r * d..(r + 1) * d]);
-                            pre_k[t * d + r] = simd::dot(kh, &fm_k[r * d..(r + 1) * d]);
+                        match (lp.fm_q, lp.fm_k) {
+                            (Some(fq), Some(fk)) => {
+                                let fm_q = &fq[head * dd..(head + 1) * dd];
+                                let fm_k = &fk[head * dd..(head + 1) * dd];
+                                for r in 0..d {
+                                    pre_q[t * d + r] = simd::dot(qh, &fm_q[r * d..(r + 1) * d]);
+                                    pre_k[t * d + r] = simd::dot(kh, &fm_k[r * d..(r + 1) * d]);
+                                }
+                            }
+                            _ => {
+                                pre_q[t * d..(t + 1) * d].copy_from_slice(qh);
+                                pre_k[t * d..(t + 1) * d].copy_from_slice(kh);
+                            }
                         }
                         vh[t * d..(t + 1) * d]
                             .copy_from_slice(&w[t * dm + head * d..t * dm + (head + 1) * d]);
@@ -1402,7 +1534,7 @@ pub fn prefill_state(
                     let sh = &mut s_l[head * dp * d..(head + 1) * dp * d];
                     let zh = &mut z_l[head * dp..(head + 1) * dp];
                     linear_head_single_pass(
-                        FeatureMap::Hedgehog,
+                        map,
                         &pre_q,
                         &pre_k,
                         &vh,
@@ -1437,7 +1569,7 @@ pub fn prefill_state(
                     let sh = &mut s_l[head * dp * d..(head + 1) * dp * d];
                     let zh = &mut z_l[head * dp..(head + 1) * dp];
                     linear_head_single_pass(
-                        FeatureMap::Hedgehog,
+                        map,
                         &vh,
                         &vh,
                         &vh,
@@ -1529,7 +1661,7 @@ impl RefDecode {
         let mp = ModelParams::from_tensors(cfg, &inputs[4..])?;
 
         let opts = self.opts.load();
-        let proj = if cfg.learnable() { 4 * dm * dm } else { 0 };
+        let proj = if cfg.projected() { 4 * dm * dm } else { 0 };
         let flops = (b * (cfg.layers * (h * dp * d * 4 + proj) + dm * v)) as f64;
         let threads = auto_threads(opts, flops).min(b);
         let per = slot_scratch_len(cfg);
@@ -2113,6 +2245,80 @@ mod tests {
                 close(&ps, &s_want, "S", opts);
                 close(&pz, &z_want, "z", opts);
                 close(&pl, &last, "logits", opts);
+            }
+        }
+    }
+
+    #[test]
+    fn zoo_maps_prefill_matches_sequential_decode() {
+        // The same state-handoff contract for every non-builtin zoo kind:
+        // dress the ref_lm2 geometry in each alternative feature map and
+        // require chunked prefill (several chunkings, incl. a non-divisor
+        // chunk and the scalar one-block oracle) to land in the same
+        // (S, z, logits) as sequential decode stepping. This is the
+        // per-map chunk/thread parity gate ISSUE 7 asks for on the
+        // serve-side interpreter.
+        let prompt: Vec<i32> = vec![3, 250, 17, 17, 99, 0, 42, 128, 7, 64, 9];
+        for kind in [FeatureKind::T2R, FeatureKind::Dpfp, FeatureKind::HedgehogSoftmax] {
+            let cfg = ModelConfig { feature: kind, ..ModelConfig::ref_lm2() };
+            let tag = kind.name();
+            // zoo tags have no registered artifact, so build the decode
+            // executable directly instead of going through `Backend::load`
+            let m = builtin_decode_manifest(&cfg, tag);
+            let exe = RefDecode {
+                cfg,
+                opts: Arc::new(SharedExecOptions::new(ExecOptions::serial())),
+                pool: Arc::new(WorkerPool::new()),
+                scratch: Mutex::new(Vec::new()),
+            };
+            let params = cfg.init_params(0x5EED);
+            let mut s = Tensor::zeros(DType::F32, &m.inputs[2].shape);
+            let mut z = Tensor::zeros(DType::F32, &m.inputs[3].shape);
+            let mut last = Vec::new();
+            for (step, &t) in prompt.iter().enumerate() {
+                let mut toks = vec![0i32; cfg.batch];
+                toks[0] = t;
+                let token = Tensor::from_i32(toks, &[cfg.batch]);
+                let pos = Tensor::from_i32(vec![step as i32; cfg.batch], &[cfg.batch]);
+                let mut refs: Vec<&Tensor> = vec![&token, &pos, &s, &z];
+                refs.extend(
+                    m.inputs[4..].iter().map(|sl| params.get(&sl.name).unwrap()),
+                );
+                let mut outs = exe.execute(&refs).unwrap();
+                drop(refs);
+                z = outs.pop().unwrap();
+                s = outs.pop().unwrap();
+                last = outs.pop().unwrap().as_f32().unwrap()[..cfg.vocab].to_vec();
+            }
+            let (l, b, h, dp, d) = (cfg.layers, cfg.batch, cfg.heads, cfg.dp(), cfg.head_dim);
+            let (sd, zd) = (s.as_f32().unwrap(), z.as_f32().unwrap());
+            let mut s_want = Vec::new();
+            let mut z_want = Vec::new();
+            for li in 0..l {
+                s_want.extend_from_slice(&sd[li * b * h * dp * d..][..h * dp * d]);
+                z_want.extend_from_slice(&zd[li * b * h * dp..][..h * dp]);
+            }
+            let leaves: Vec<&Tensor> =
+                m.inputs[4..].iter().map(|sl| params.get(&sl.name).unwrap()).collect();
+            for opts in [
+                ExecOptions::serial(),
+                ExecOptions::serial().with_threads(4),
+                ExecOptions { threads: 1, chunk_size: 5 },
+                ExecOptions::naive(),
+            ] {
+                let (ps, pz, pl) = prefill_state(&cfg, &leaves, &prompt, opts).unwrap();
+                for (what, got, want) in
+                    [("S", &ps, &s_want), ("z", &pz, &z_want), ("logits", &pl, &last)]
+                {
+                    assert_eq!(got.len(), want.len(), "{tag} {what}: length");
+                    for (i, (x, y)) in got.iter().zip(want).enumerate() {
+                        let tol = 1e-5 * y.abs().max(1.0);
+                        assert!(
+                            (x - y).abs() <= tol,
+                            "{tag} {what}[{i}] ({opts:?}): prefill {x} vs sequential {y}"
+                        );
+                    }
+                }
             }
         }
     }

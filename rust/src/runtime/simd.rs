@@ -164,6 +164,98 @@ pub fn grad_pos_neg(dx: &mut [f32], dpos: &[f32], dneg: &[f32], pos: &[f32], neg
     }
 }
 
+/// out[i] = max(x[i], 0), unrolled in LANES-wide blocks. The T2R and
+/// DPFP feature maps are built from this; like `exp_lanes` it is exact
+/// (max is exact), so lane structure cannot change results.
+#[inline]
+pub fn relu_lanes(x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let split = x.len() - x.len() % LANES;
+    for (co, cx) in out[..split].chunks_exact_mut(LANES).zip(x[..split].chunks_exact(LANES)) {
+        for l in 0..LANES {
+            co[l] = cx[l].max(0.0);
+        }
+    }
+    for (o, &v) in out[split..].iter_mut().zip(&x[split..]) {
+        *o = v.max(0.0);
+    }
+}
+
+/// DPFP's negation pair: pos[i] = relu(x[i]), neg[i] = relu(-x[i]).
+/// Exactly one of the pair is nonzero for x != 0 (both zero at 0).
+#[inline]
+pub fn relu_pos_neg(x: &[f32], pos: &mut [f32], neg: &mut [f32]) {
+    debug_assert_eq!(x.len(), pos.len());
+    debug_assert_eq!(x.len(), neg.len());
+    let split = x.len() - x.len() % LANES;
+    for ((cp, cn), cx) in pos[..split]
+        .chunks_exact_mut(LANES)
+        .zip(neg[..split].chunks_exact_mut(LANES))
+        .zip(x[..split].chunks_exact(LANES))
+    {
+        for l in 0..LANES {
+            cp[l] = cx[l].max(0.0);
+            cn[l] = (-cx[l]).max(0.0);
+        }
+    }
+    for ((p, n), &v) in pos[split..].iter_mut().zip(&mut neg[split..]).zip(&x[split..]) {
+        *p = v.max(0.0);
+        *n = (-v).max(0.0);
+    }
+}
+
+/// Horizontal sum with the same 8-lane accumulators + fixed pairwise
+/// tree as `dot` — deterministic for a given length, shared by the
+/// softmax-normalized feature map's normalizer in both execution paths.
+#[inline]
+pub fn sum(x: &[f32]) -> f32 {
+    let split = x.len() - x.len() % LANES;
+    let mut acc = [0.0f32; LANES];
+    for cx in x[..split].chunks_exact(LANES) {
+        for l in 0..LANES {
+            acc[l] += cx[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for &v in &x[split..] {
+        tail += v;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7])) + tail
+}
+
+/// Max-shifted hedgehog pair: pos[i] = exp(x[i] - m),
+/// neg[i] = exp(-x[i] - m), the unnormalized numerators of
+/// softmax([x, -x]) after subtracting the row max m = max_i |x[i]|
+/// (so every exponent is <= 0 and nothing overflows). Like
+/// `exp_pos_neg` the negative branch reuses the positive libm call:
+/// exp(-x-m) = recip(exp(x-m)) * exp(-2m), with exp(-2m) hoisted out of
+/// the loop. For m = max|x| both exponents sit in [-2m, 0], far from
+/// the denormal edge at any activation scale the models reach, and both
+/// execution paths share this function so they agree bit-for-bit.
+#[inline]
+pub fn exp_shift_pos_neg(x: &[f32], m: f32, pos: &mut [f32], neg: &mut [f32]) {
+    debug_assert_eq!(x.len(), pos.len());
+    debug_assert_eq!(x.len(), neg.len());
+    let e2m = (-2.0 * m).exp();
+    let split = x.len() - x.len() % LANES;
+    for ((cp, cn), cx) in pos[..split]
+        .chunks_exact_mut(LANES)
+        .zip(neg[..split].chunks_exact_mut(LANES))
+        .zip(x[..split].chunks_exact(LANES))
+    {
+        for l in 0..LANES {
+            let e = (cx[l] - m).exp();
+            cp[l] = e;
+            cn[l] = e.recip() * e2m;
+        }
+    }
+    for ((p, n), &v) in pos[split..].iter_mut().zip(&mut neg[split..]).zip(&x[split..]) {
+        let e = (v - m).exp();
+        *p = e;
+        *n = e.recip() * e2m;
+    }
+}
+
 /// Fused rank-1 state update: S += phi(k) v^T and z += phi(k), the
 /// (S, z) carry every linear-attention path (chunked, naive-shaped
 /// decode) performs per key row. `s` is row-major (Dp, Dv).
@@ -315,6 +407,59 @@ mod tests {
         for i in 0..21 {
             assert_eq!(dx[i], dx0[i] + dpos[i] * pos[i] - dneg[i] * neg[i]);
         }
+    }
+
+    #[test]
+    fn relu_lanes_and_pair_are_exact() {
+        for n in [0usize, 1, 7, 8, 9, 21, 64] {
+            let x = seq(n, 0.45);
+            let mut out = vec![9.0f32; n];
+            relu_lanes(&x, &mut out);
+            let mut pos = vec![9.0f32; n];
+            let mut neg = vec![9.0f32; n];
+            relu_pos_neg(&x, &mut pos, &mut neg);
+            for i in 0..n {
+                assert_eq!(out[i], x[i].max(0.0), "n={n} i={i}");
+                assert_eq!(pos[i], x[i].max(0.0));
+                assert_eq!(neg[i], (-x[i]).max(0.0));
+                // one-sided support: pos * neg == 0 always
+                assert_eq!(pos[i] * neg[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn sum_matches_scalar_for_all_tail_lengths() {
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 63, 100, 129] {
+            let x = seq(n, 1.6);
+            let want: f64 = x.iter().map(|&v| v as f64).sum();
+            let got = sum(&x) as f64;
+            assert!(
+                (got - want).abs() <= 1e-5 * want.abs().max(1.0),
+                "n={n}: lane sum {got} vs scalar {want}"
+            );
+        }
+        let x = seq(333, 0.2);
+        assert_eq!(sum(&x).to_bits(), sum(&x).to_bits());
+    }
+
+    #[test]
+    fn exp_shift_pos_neg_matches_direct_shifted_exponents() {
+        let x: Vec<f32> = vec![-3.0, -0.5, 0.0, 0.5, 3.0, 7.5, -7.5, 0.01, -0.01];
+        let m = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let mut pos = vec![0.0f32; x.len()];
+        let mut neg = vec![0.0f32; x.len()];
+        exp_shift_pos_neg(&x, m, &mut pos, &mut neg);
+        for ((&p, &n), &v) in pos.iter().zip(&neg).zip(&x) {
+            let wp = (v - m).exp();
+            let wn = (-v - m).exp();
+            assert_eq!(p.to_bits(), wp.to_bits(), "pos is one direct libm call");
+            assert!((n - wn).abs() <= 1e-6 * wn.max(1e-30), "x={v}: {n} vs {wn}");
+            assert!(p <= 1.0 && n <= 1.0, "max-shift bounds both numerators by 1");
+        }
+        // the shifted row always contains a 1 at the argmax coordinate
+        let top = pos.iter().chain(neg.iter()).cloned().fold(0.0f32, f32::max);
+        assert!((top - 1.0).abs() < 1e-6);
     }
 
     #[test]

@@ -1,6 +1,5 @@
 #!/usr/bin/env python3
-"""Compare a fresh BENCH_kernels.json / BENCH_serve.json against the
-committed snapshot.
+"""Compare a fresh BENCH_*.json emission against the committed snapshot.
 
 Usage:
     python3 tools/perf_diff.py <fresh.json> [--baseline <path-or-git>]
@@ -17,17 +16,25 @@ The fresh document's schema picks the comparison mode:
 * ``hedgehog_serve_v1`` (continuous-batching serve load) — records
   matched on (tag, slots), compared on sustained generated tokens/sec.
   Baseline defaults to ``git show HEAD:BENCH_serve.json``.
+* ``hedgehog_quality_v1`` (feature-map diagnostics) — records matched on
+  (tag, feature_map), compared on the paper's quality axes instead of
+  throughput: Spearman rho (warn on an absolute drop > 0.05),
+  monotonicity violation rate (warn on an absolute rise > 0.05), and
+  KL(teacher || student) (warn on a > 25% relative rise). Baseline
+  defaults to ``git show HEAD:BENCH_quality.json``.
 
-Warn-only by construction: a >25% tokens/sec regression on any matching
-config prints a WARNING block (picked up in the CI log and the uploaded
-artifact) but the exit code stays 0. Exit 2 is reserved for unusable
-inputs (missing/unparseable files), which means the harness itself broke.
+Warn-only by construction: a >25% tokens/sec regression (or a quality
+degradation past the thresholds above) on any matching config prints a
+WARNING block (picked up in the CI log and the uploaded artifact) but
+the exit code stays 0. Exit 2 is reserved for unusable inputs
+(missing/unparseable files), which means the harness itself broke.
 
 Absolute numbers are machine-dependent; the report prints both sides'
 core counts, smoke flags, and provenance so a cross-machine comparison
 reads as context, not ground truth. A baseline whose provenance is not
-"measured" (e.g. the modeled pre-CI seed snapshot) is reported as
-informational only.
+"measured" (e.g. the modeled pre-CI seed snapshot) prints a one-line
+WARNING and downgrades the comparison to informational (see
+BENCHMARKS.md for the snapshot-replacement procedure).
 """
 
 import json
@@ -37,6 +44,15 @@ import sys
 REGRESSION_RATIO = 0.75  # warn when fresh < 75% of baseline tokens/sec
 
 SERVE_SCHEMA = "hedgehog_serve_v1"
+QUALITY_SCHEMA = "hedgehog_quality_v1"
+
+# (field, direction, threshold): "higher"/"lower" use absolute deltas,
+# "lower_rel" uses a relative ratio against the baseline value.
+QUALITY_CHECKS = (
+    ("spearman_rho", "higher", 0.05),
+    ("monotonicity_violation_rate", "lower", 0.05),
+    ("kl_teacher_student", "lower_rel", 1.25),
+)
 
 
 def load_json(text, label):
@@ -83,6 +99,47 @@ def serve_key(r):
     return (r["tag"], r["slots"])
 
 
+def quality_key(r):
+    # the quality bench's unit of identity: one builtin geometry dressed
+    # in one feature map.
+    return (r["tag"], r["feature_map"])
+
+
+def diff_quality(fresh, base):
+    """Per-(tag, feature_map) quality comparison. Returns (compared,
+    warning-lines); degradations past QUALITY_CHECKS thresholds warn."""
+    base_by_key = {quality_key(r): r for r in base.get("results", [])}
+    compared = 0
+    warnings = []
+    for r in fresh.get("results", []):
+        b = base_by_key.get(quality_key(r))
+        if b is None:
+            continue
+        compared += 1
+        degraded = []
+        for field, direction, thresh in QUALITY_CHECKS:
+            fv, bv = r.get(field), b.get(field)
+            if fv is None or bv is None:
+                continue
+            if direction == "higher" and bv - fv > thresh:
+                degraded.append(f"{field} {bv:.3f}->{fv:.3f}")
+            elif direction == "lower" and fv - bv > thresh:
+                degraded.append(f"{field} {bv:.3f}->{fv:.3f}")
+            elif direction == "lower_rel" and bv > 0 and fv / bv > thresh:
+                degraded.append(f"{field} {bv:.4f}->{fv:.4f}")
+        line = (
+            f"  {r['tag']:<8} {r['feature_map']:<11} "
+            f"rho={r.get('spearman_rho', '?'):>6} "
+            f"viol={r.get('monotonicity_violation_rate', '?'):>6} "
+            f"kl={r.get('kl_teacher_student', '?'):>8}"
+            + (f"  DEGRADED: {'; '.join(degraded)}" if degraded else "")
+        )
+        print(line)
+        if degraded:
+            warnings.append(line)
+    return compared, warnings
+
+
 def main(argv):
     fresh_path = None
     baseline_spec = None
@@ -105,8 +162,13 @@ def main(argv):
     except OSError as e:
         print(f"perf-diff: cannot read fresh file: {e}", file=sys.stderr)
         return 2
-    serve = fresh.get("schema") == SERVE_SCHEMA
-    default_file = "BENCH_serve.json" if serve else "BENCH_kernels.json"
+    schema = fresh.get("schema")
+    if schema == SERVE_SCHEMA:
+        mode, default_file = "serve", "BENCH_serve.json"
+    elif schema == QUALITY_SCHEMA:
+        mode, default_file = "quality", "BENCH_quality.json"
+    else:
+        mode, default_file = "kernel", "BENCH_kernels.json"
     base, base_label = load_baseline(baseline_spec, default_file)
 
     base_prov = base.get("provenance", "unknown")
@@ -119,10 +181,28 @@ def main(argv):
         )
     if informational:
         print(
-            f"  NOTE: baseline provenance is {base_prov!r} (not a measured run) — "
-            "comparison is informational only; commit the first CI artifact to arm the gate"
+            f"  WARNING: baseline provenance is {base_prov!r}, not 'measured' — comparison "
+            "is informational only; replace the snapshot with a first-CI artifact "
+            "(BENCHMARKS.md) to arm the gate"
         )
 
+    if mode == "quality":
+        compared, warnings = diff_quality(fresh, base)
+        if compared == 0:
+            print("perf-diff: no overlapping (tag, feature_map) rows between fresh and baseline")
+            return 0
+        if warnings and not informational:
+            print(f"\nWARNING: {len(warnings)} (tag, feature_map) row(s) degraded past threshold:")
+            for w in warnings:
+                print(w)
+            print("(warn-only: not failing the build — investigate before committing a new snapshot)")
+        elif warnings:
+            print(f"\n{len(warnings)} row(s) degraded vs the unmeasured baseline (informational)")
+        else:
+            print(f"\nperf-diff: all {compared} quality rows within threshold")
+        return 0
+
+    serve = mode == "serve"
     key = serve_key if serve else kernel_key
     base_by_key = {key(r): r for r in base.get("results", [])}
     rate_field = "sustained_tokens_per_sec" if serve else "tokens_per_sec"

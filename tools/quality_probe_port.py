@@ -1,0 +1,268 @@
+#!/usr/bin/env python3
+"""Numpy port of the feature-map quality probe (metrics/quality.rs +
+runtime/ref_lm.rs forward), for emitting a *modeled* BENCH_quality.json
+seed snapshot from an authoring container that has no Rust toolchain.
+
+Replicates bit-for-bit the Rust side's Pcg32 init stream, demo batch, and
+forward math (f64 here vs f32 there — diagnostics agree to ~1e-6), but
+takes 0 distillation steps: adaptation needs the backward pass, which
+this port does not carry. The snapshot therefore models the *initial*
+model's diagnostics; the first CI `make bench-smoke` artifact (measured,
+2 adaptation steps) should replace it — see BENCHMARKS.md.
+
+Usage: python3 tools/quality_probe_port.py > BENCH_quality.json
+"""
+
+import json
+import math
+import sys
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+EPS = 1e-6
+
+
+class Pcg32:
+    """PCG-XSH-RR 64/32, mirroring rust/src/data/rng.rs."""
+
+    def __init__(self, seed, stream=0xDA3E39CB94B95BDB):
+        self.state = 0
+        self.inc = ((stream << 1) | 1) & MASK64
+        self.next_u32()
+        self.state = (self.state + seed) & MASK64
+        self.next_u32()
+
+    def next_u32(self):
+        old = self.state
+        self.state = (old * 6364136223846793005 + self.inc) & MASK64
+        xorshifted = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << ((-rot) & 31))) & 0xFFFFFFFF
+
+    def f32(self):
+        return np.float32(self.next_u32() >> 8) / np.float32(1 << 24)
+
+    def normal(self):
+        u1 = max(self.f32(), np.float32(1e-7))
+        u2 = self.f32()
+        return float(np.float32(math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)))
+
+    def randn(self, n, scale):
+        return np.array([self.normal() for _ in range(n)], dtype=np.float64) * scale
+
+
+CONFIGS = {
+    "ref_lm": dict(layers=1, heads=2, d=16, vocab=256, seq=32, batch=4),
+    "ref_lm2": dict(layers=2, heads=2, d=16, vocab=256, seq=32, batch=4),
+    "ref_lm4": dict(layers=4, heads=4, d=16, vocab=256, seq=32, batch=4),
+}
+ZOO = ["fixed_exp", "learnable", "t2r", "dpfp", "hh_softmax"]
+
+
+def projected(fm):
+    return fm != "fixed_exp"
+
+
+def has_fm(fm):
+    return fm in ("learnable", "t2r", "hh_softmax")
+
+
+def init_params(cfg, fm, seed):
+    rng = Pcg32(seed)
+    v, dm, h, hd = cfg["vocab"], cfg["heads"] * cfg["d"], cfg["heads"], cfg["d"]
+    p = {"embed": rng.randn(v * dm, 0.3).reshape(v, dm)}
+    if projected(fm):
+        ps, fs = dm ** -0.5, hd ** -0.5
+        for li in range(cfg["layers"]):
+            for leaf in ["wq", "wk", "wv", "wo"]:
+                p[f"layer{li:02}/{leaf}"] = rng.randn(dm * dm, ps).reshape(dm, dm)
+            if has_fm(fm):
+                for leaf in ["fm_q", "fm_k"]:
+                    p[f"layer{li:02}/{leaf}"] = rng.randn(h * hd * hd, fs).reshape(h, hd, hd)
+    p["unembed"] = rng.randn(dm * v, 0.3).reshape(dm, v)
+    return p
+
+
+def demo_batch(cfg):
+    b, n = cfg["batch"], cfg["seq"]
+    tokens = np.array(
+        [[((t + bi * 5) * 7) % 64 for t in range(n)] for bi in range(b)], dtype=np.int64
+    )
+    targets = np.array(
+        [[((t + 1 + bi * 5) * 7) % 64 for t in range(n)] for bi in range(b)], dtype=np.int64
+    )
+    return tokens, targets
+
+
+def phi_of(fm, rows):
+    """rows (n, d) -> features (n, dp), matching FeatureMap::write."""
+    if fm in ("fixed_exp", "learnable"):
+        return np.concatenate([np.exp(rows), np.exp(-rows)], axis=1)
+    if fm == "t2r":
+        return np.maximum(rows, 0.0)
+    if fm == "dpfp":
+        u = np.concatenate([np.maximum(rows, 0.0), np.maximum(-rows, 0.0)], axis=1)
+        return u * np.roll(u, 1, axis=1)
+    if fm == "hh_softmax":
+        m = np.max(np.abs(rows), axis=1, keepdims=True)
+        cat = np.concatenate([rows, -rows], axis=1)
+        e = np.exp(cat - m)
+        return e / e.sum(axis=1, keepdims=True)
+    raise ValueError(fm)
+
+
+def probe(cfg, fm, seed):
+    """Forward the demo batch; return (rows, lm_loss, distill_loss)
+    where rows = [(student, scores), ...] for every t >= 1."""
+    p = init_params(cfg, fm, seed)
+    tokens, targets = demo_batch(cfg)
+    b, n, h, d = cfg["batch"], cfg["seq"], cfg["heads"], cfg["d"]
+    dm = h * d
+    x = p["embed"][tokens]  # (b, n, dm)
+    rows = []
+    distill = 0.0
+    for li in range(cfg["layers"]):
+        if projected(fm):
+            q = x @ p[f"layer{li:02}/wq"]
+            k = x @ p[f"layer{li:02}/wk"]
+            v = x @ p[f"layer{li:02}/wv"]
+        else:
+            q = k = v = x
+        y = np.zeros_like(x)
+        for bi in range(b):
+            for hh in range(h):
+                qh = q[bi, :, hh * d : (hh + 1) * d]
+                kh = k[bi, :, hh * d : (hh + 1) * d]
+                vh = v[bi, :, hh * d : (hh + 1) * d]
+                if has_fm(fm):
+                    pre_q = qh @ p[f"layer{li:02}/fm_q"][hh].T
+                    pre_k = kh @ p[f"layer{li:02}/fm_k"][hh].T
+                else:
+                    pre_q, pre_k = qh, kh
+                phi_q = phi_of(fm, pre_q)
+                phi_k = phi_of(fm, pre_k)
+                scores_all = qh @ kh.T  # raw q.k, the teacher side
+                a = phi_q @ phi_k.T
+                for t in range(n):
+                    arow = a[t, : t + 1]
+                    den = arow.sum() + EPS
+                    prow = arow / den
+                    y[bi, t, hh * d : (hh + 1) * d] = prow @ vh[: t + 1]
+                    srow = scores_all[t, : t + 1]
+                    tch = np.exp(srow - srow.max())
+                    tch /= tch.sum()
+                    distill += float(tch @ -np.log(prow + EPS))
+                    if t >= 1:
+                        rows.append((prow.copy(), srow.copy()))
+        x = x + y @ p[f"layer{li:02}/wo"] if projected(fm) else y
+    distill /= b * h * n  # inv_m, summed over layers
+    logits = x @ p["unembed"]
+    # matching the Rust path: shifted log-softmax cross-entropy, full mask
+    mx = logits.max(axis=2, keepdims=True)
+    lsm = logits - mx - np.log(np.exp(logits - mx).sum(axis=2, keepdims=True))
+    nll = -np.take_along_axis(lsm, targets[..., None], axis=2).squeeze(2)
+    lm_loss = nll.sum() / (b * n + 1e-6)
+    return rows, float(lm_loss), float(distill)
+
+
+def entropy(p):
+    p = p[p > 0]
+    return float(-(p * np.log(p)).sum())
+
+
+def spearman(x, y):
+    def ranks(a):
+        order = np.argsort(a, kind="stable")
+        r = np.empty(len(a))
+        i = 0
+        while i < len(a):
+            j = i
+            while j + 1 < len(a) and a[order[j + 1]] == a[order[i]]:
+                j += 1
+            r[order[i : j + 1]] = (i + j) / 2.0 + 1.0
+            i = j + 1
+        return r
+
+    rx, ry = ranks(x), ranks(y)
+    sx, sy = rx - rx.mean(), ry - ry.mean()
+    den = math.sqrt((sx**2).sum() * (sy**2).sum())
+    return float((sx * sy).sum() / den) if den > 0 else 0.0
+
+
+def violations(scores, weights):
+    viol = total = 0
+    for a in range(len(scores)):
+        for b in range(a + 1, len(scores)):
+            if scores[a] == scores[b]:
+                continue
+            total += 1
+            hi, lo = (a, b) if scores[a] > scores[b] else (b, a)
+            if weights[hi] < weights[lo]:
+                viol += 1
+    return viol, total
+
+
+def kl(p, q):
+    return float((p * (np.log(p + EPS) - np.log(q + EPS))).sum())
+
+
+def main():
+    out = []
+    for tag, cfg in CONFIGS.items():
+        geometry = f"L{cfg['layers']}_H{cfg['heads']}_d{cfg['d']}"
+        for fm in ZOO:
+            rows, lm_loss, distill = probe(cfg, fm, 0x5EED)
+            s_ent = t_ent = klsum = rho = 0.0
+            nrho = 0
+            viol = pairs = 0
+            for prow, srow in rows:
+                tch = np.exp(srow - srow.max())
+                tch /= tch.sum()
+                s_ent += entropy(prow)
+                t_ent += entropy(tch)
+                klsum += kl(tch, prow)
+                rho += spearman(srow, prow)
+                nrho += 1
+                vl, tp = violations(srow, prow)
+                viol += vl
+                pairs += tp
+            nr = len(rows)
+            out.append(
+                {
+                    "tag": tag,
+                    "feature_map": fm,
+                    "geometry": geometry,
+                    "distill_steps": 0,
+                    "distill_loss_first": round(distill, 6),
+                    "distill_loss_last": round(distill, 6),
+                    "lm_loss": round(lm_loss, 6),
+                    "student_entropy": round(s_ent / nr, 6),
+                    "teacher_entropy": round(t_ent / nr, 6),
+                    "monotonicity_violation_rate": round(viol / pairs, 6),
+                    "spearman_rho": round(rho / nrho, 6),
+                    "kl_teacher_student": round(klsum / nr, 6),
+                    "probe_ms": None,
+                }
+            )
+            print(f"{tag} {fm}: done", file=sys.stderr)
+    doc = {
+        "schema": "hedgehog_quality_v1",
+        "title": "feature-map quality: spikiness, monotonicity, distill fidelity",
+        "baseline": "softmax teacher on the same q.k rows (entropy/KL); "
+        "raw q.k score order (monotonicity)",
+        "provenance": "modeled",
+        "measured_by": "tools/quality_probe_port.py (numpy port of the forward probe, "
+        "0 adaptation steps; authoring container had no Rust toolchain — replace with "
+        "the first CI-emitted artifact for an in-harness baseline)",
+        "smoke": False,
+        "adaptation": {"distill_steps": 0, "lr": 0.001, "seed": 24301},
+        "results": out,
+    }
+    json.dump(doc, sys.stdout, indent=2)
+    print()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
