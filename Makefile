@@ -5,13 +5,14 @@
 #   make bench        full kernel + fig6 + decode + train + serve + quality sweep -> BENCH_*.json
 #   make bench-smoke  CI short mode: small n, few reps, parity-gated
 #   make serve-smoke  short continuous-batching serve load -> BENCH_serve.json
+#   make chaos-smoke  seeded fault-injection soak (serve stack) -> BENCH_soak.json
 #   make perf-diff    fresh smoke sweep vs the committed BENCH_kernels.json
 #                     snapshot (warn-only, >25% tokens/sec regression)
 #
 # `make artifacts` (model-graph export) lives in python/compile and needs
 # jax; everything here is hermetic Rust.
 
-.PHONY: build test bench bench-smoke refconv-smoke serve-smoke perf-diff
+.PHONY: build test bench bench-smoke refconv-smoke serve-smoke chaos-smoke perf-diff
 
 build:
 	cargo build --release
@@ -43,6 +44,16 @@ bench-smoke: refconv-smoke serve-smoke
 # root (same convention as the other BENCH_*.json emissions).
 serve-smoke:
 	BENCH_SMOKE=1 cargo bench --bench serve_load
+
+# Chaos soak (DESIGN.md §11): the serve stack under a seeded, fully
+# reproducible fault storm — state/logits corruption, contained worker
+# panics, transient executor errors, arrival bursts — asserting that
+# every submitted request resolves to exactly one typed outcome and the
+# process never aborts. Panic messages in the log are injected faults
+# being contained. Emits BENCH_soak.json (robustness census, not a
+# latency bench).
+chaos-smoke:
+	BENCH_SMOKE=1 cargo bench --bench serve_soak
 
 # End-to-end conversion smoke on every builtin config (including the
 # 2-layer learnable ref_lm2), artifact-less: teacher train -> per-layer

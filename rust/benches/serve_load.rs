@@ -29,6 +29,11 @@ struct ServeRecord {
     ttft_p99_ms: f64,
     tok_p50_ms: f64,
     tok_p99_ms: f64,
+    /// non-Completed outcome counts — all zero on this fault-free bench
+    /// (tools/perf_diff.py warns otherwise)
+    shed: usize,
+    poisoned: usize,
+    deadline_exceeded: usize,
 }
 
 /// Percentile by nearest-rank on a sorted copy (small samples; exactness
@@ -70,14 +75,17 @@ fn drive_tag(tag: &str, reg: &ArtifactRegistry, target: usize) -> ServeRecord {
     }
     let secs = t0.elapsed().as_secs_f64();
 
-    let ttft_ms: Vec<f64> = sched.completed.iter().map(|r| 1e3 * r.ttft).collect();
+    // requests that never produced a token (ttft None) are excluded from
+    // the latency percentiles instead of polluting them with fake TTFTs
+    let ttft_ms: Vec<f64> =
+        sched.completed.iter().filter_map(|r| r.ttft).map(|t| 1e3 * t).collect();
     // per-token decode latency: time after the first token, per
     // subsequent token (requests with a single token contribute nothing)
     let tok_ms: Vec<f64> = sched
         .completed
         .iter()
         .filter(|r| r.output.len() > 1)
-        .map(|r| 1e3 * (r.total - r.ttft) / (r.output.len() - 1) as f64)
+        .filter_map(|r| r.ttft.map(|t| 1e3 * (r.total - t) / (r.output.len() - 1) as f64))
         .collect();
     ServeRecord {
         tag: tag.to_string(),
@@ -91,6 +99,9 @@ fn drive_tag(tag: &str, reg: &ArtifactRegistry, target: usize) -> ServeRecord {
         ttft_p99_ms: percentile(&ttft_ms, 99.0),
         tok_p50_ms: percentile(&tok_ms, 50.0),
         tok_p99_ms: percentile(&tok_ms, 99.0),
+        shed: sched.shed,
+        poisoned: sched.poisoned,
+        deadline_exceeded: sched.deadline_exceeded,
     }
 }
 
@@ -117,7 +128,8 @@ fn write_serve_json(path: &std::path::Path, records: &[ServeRecord]) -> std::io:
             "    {{\"tag\": {:?}, \"slots\": {}, \"requests\": {}, \"rejected\": {}, \
              \"max_concurrent\": {}, \"engine_steps\": {}, \
              \"sustained_tokens_per_sec\": {}, \"ttft_p50_ms\": {}, \"ttft_p99_ms\": {}, \
-             \"tok_p50_ms\": {}, \"tok_p99_ms\": {}}}{}\n",
+             \"tok_p50_ms\": {}, \"tok_p99_ms\": {}, \
+             \"shed\": {}, \"poisoned\": {}, \"deadline_exceeded\": {}}}{}\n",
             r.tag,
             r.slots,
             r.requests,
@@ -129,6 +141,9 @@ fn write_serve_json(path: &std::path::Path, records: &[ServeRecord]) -> std::io:
             json_num(r.ttft_p99_ms),
             json_num(r.tok_p50_ms),
             json_num(r.tok_p99_ms),
+            r.shed,
+            r.poisoned,
+            r.deadline_exceeded,
             if i + 1 == records.len() { "" } else { "," },
         ));
     }

@@ -1,0 +1,224 @@
+//! Chaos soak (DESIGN.md §11): the continuous-batching serve stack under
+//! a seeded fault storm, per builtin tag.
+//!
+//! Each tag gets a fresh [`ChaosBackend`] whose [`FaultPlan`] is a pure
+//! function of a per-tag seed: slot-state and logits corruption,
+//! contained worker panics, transient executor errors, and queue-arrival
+//! bursts all fire on a reproducible schedule. The harness drives a
+//! [`Scheduler`] with deadlines, load shedding, and bounded retry armed,
+//! and asserts the §11 invariant at idle: every submitted request
+//! resolved to exactly one typed [`Outcome`], with nothing lost,
+//! duplicated, or crashed. Panic messages on stderr during the run are
+//! *injected faults being contained* — expected output, not a failure.
+//!
+//! Emits `BENCH_soak.json` (schema `hedgehog_soak_v1`) with the outcome
+//! and injection census per tag. The soak is a robustness gate, not a
+//! latency bench: `tools/perf_diff.py` ignores it. `BENCH_SMOKE=1`
+//! shrinks the request count for CI (`make chaos-smoke`).
+
+mod common;
+
+use common::{bench_out_path, smoke_mode};
+use hedgehog::data::Pcg32;
+use hedgehog::runtime::{
+    ArtifactRegistry, ChaosBackend, ChaosHandle, ExecOptions, FaultRates, ModelConfig,
+};
+use hedgehog::serve::{Engine, Outcome, Request, Scheduler, ServePolicy, TrafficGen};
+
+struct SoakRecord {
+    tag: String,
+    seed: u64,
+    submitted: usize,
+    resolved: usize,
+    completed: usize,
+    poisoned: usize,
+    deadline_exceeded: usize,
+    shed: usize,
+    rejected: usize,
+    transient_retries: usize,
+    injected_corrupt_state: usize,
+    injected_corrupt_logits: usize,
+    injected_worker_panics: usize,
+    injected_transients: usize,
+    decode_executes: u64,
+    engine_steps: usize,
+    streamed_tokens: usize,
+    ticks: usize,
+}
+
+/// Drive one tag's engine + scheduler to idle under the chaos plan.
+/// Burst events in the plan submit extra hand-built requests (unique id
+/// namespace above the traffic generator's) on their scheduled tick.
+fn soak_tag(tag: &str, target: u64) -> SoakRecord {
+    let seed = 0xC4A05 ^ tag.len() as u64;
+    let rates = FaultRates {
+        corrupt_state: 0.02,
+        corrupt_logits: 0.02,
+        worker_panic: 0.01,
+        transient: 0.02,
+        burst: 0.03,
+    };
+    let (chaos, handle): (ChaosBackend, ChaosHandle) = ChaosBackend::new(seed, 1 << 14, 4, &rates);
+    let reg = ArtifactRegistry::with_backend("/nonexistent/artifacts-dir", Box::new(chaos))
+        .expect("chaos registry");
+    reg.set_exec_options(ExecOptions::serial());
+    let params = ModelConfig::for_tag(tag).expect("builtin tag").init_params(0x5EED);
+    let mut engine = Engine::new(&reg, tag, &params).expect("builtin decode engine");
+    let cap = engine.batch();
+    let policy = ServePolicy {
+        deadline_ticks: 400,
+        shed_queue_ticks: 64,
+        max_step_retries: 10,
+        retry_backoff_ticks: 1,
+    };
+    let mut sched = Scheduler::with_policy(cap, 8 * cap, policy);
+    let mut gen = TrafficGen::new(seed ^ 0x7EA, 1.2, (2, 16), (2, 12), engine.vocab(), -1);
+    let mut burst_rng = Pcg32::with_stream(seed, 0xB0057);
+    let mut burst_id = 1_000_000_000u64;
+
+    let mut submitted = 0usize;
+    let mut streamed = 0usize;
+    let mut clock = 0usize;
+    while (gen.generated() as usize) < target as usize || !sched.is_idle() {
+        if (gen.generated() as usize) < target as usize {
+            while let Some(req) = gen.next_if_due(clock) {
+                submitted += 1;
+                let _ = sched.submit(req); // QueueFull -> counted in rejected
+                if gen.generated() >= target {
+                    break;
+                }
+            }
+            // Scheduled arrival bursts: a thundering herd on top of the
+            // Poisson process, sized by the plan (deterministic).
+            for _ in 0..handle.plan().burst_at(clock as u64) {
+                let plen = 2 + burst_rng.usize_below(8);
+                let prompt =
+                    (0..plen).map(|_| burst_rng.below(engine.vocab() as u32) as i32).collect();
+                let req = Request {
+                    id: burst_id,
+                    prompt,
+                    max_new: 1 + burst_rng.usize_below(8),
+                    eos: -1,
+                };
+                burst_id += 1;
+                submitted += 1;
+                let _ = sched.submit(req);
+            }
+        }
+        sched.tick(&mut engine, &mut |_, _| streamed += 1).expect("tick must absorb faults");
+        clock += 1;
+        assert!(clock < 200_000, "soak failed to drain (livelock?)");
+    }
+
+    // §11 accounting invariant: exactly one outcome per submission.
+    assert_eq!(
+        sched.completed.len() + sched.rejected,
+        submitted,
+        "{tag}: a request was lost or duplicated under chaos"
+    );
+    let mut ids: Vec<u64> = sched.completed.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    let n = ids.len();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "{tag}: a request resolved twice");
+    let done = sched.completed.iter().filter(|r| r.outcome == Outcome::Completed).count();
+    assert_eq!(
+        done + sched.shed + sched.poisoned + sched.deadline_exceeded,
+        sched.completed.len(),
+        "{tag}: outcome counters disagree with the records"
+    );
+
+    let inj = handle.injected();
+    SoakRecord {
+        tag: tag.to_string(),
+        seed,
+        submitted,
+        resolved: sched.completed.len(),
+        completed: done,
+        poisoned: sched.poisoned,
+        deadline_exceeded: sched.deadline_exceeded,
+        shed: sched.shed,
+        rejected: sched.rejected,
+        transient_retries: sched.transient_faults,
+        injected_corrupt_state: inj.corrupt_state,
+        injected_corrupt_logits: inj.corrupt_logits,
+        injected_worker_panics: inj.worker_panics,
+        injected_transients: inj.transients,
+        decode_executes: handle.executes(),
+        engine_steps: sched.steps(),
+        streamed_tokens: streamed,
+        ticks: clock,
+    }
+}
+
+fn write_soak_json(path: &std::path::Path, records: &[SoakRecord]) -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"hedgehog_soak_v1\",\n");
+    s.push_str("  \"title\": \"chaos soak: serve stack under seeded fault injection\",\n");
+    s.push_str("  \"provenance\": \"measured\",\n");
+    s.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"tag\": {:?}, \"seed\": {}, \"submitted\": {}, \"resolved\": {}, \
+             \"completed\": {}, \"poisoned\": {}, \"deadline_exceeded\": {}, \"shed\": {}, \
+             \"rejected\": {}, \"transient_retries\": {}, \"injected_corrupt_state\": {}, \
+             \"injected_corrupt_logits\": {}, \"injected_worker_panics\": {}, \
+             \"injected_transients\": {}, \"decode_executes\": {}, \"engine_steps\": {}, \
+             \"streamed_tokens\": {}, \"ticks\": {}}}{}\n",
+            r.tag,
+            r.seed,
+            r.submitted,
+            r.resolved,
+            r.completed,
+            r.poisoned,
+            r.deadline_exceeded,
+            r.shed,
+            r.rejected,
+            r.transient_retries,
+            r.injected_corrupt_state,
+            r.injected_corrupt_logits,
+            r.injected_worker_panics,
+            r.injected_transients,
+            r.decode_executes,
+            r.engine_steps,
+            r.streamed_tokens,
+            r.ticks,
+            if i + 1 == records.len() { "" } else { "," },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s)
+}
+
+fn main() {
+    let target = if smoke_mode() { 24 } else { 100 };
+    println!("== bench: chaos soak ({target} requests per tag + bursts) ==");
+    println!("note: panic messages below are injected worker faults, contained by the pool");
+    println!(
+        "{:<8}  {:>9}  {:>9}  {:>9}  {:>8}  {:>9}  {:>8}  {:>8}",
+        "tag", "submitted", "completed", "poisoned", "deadline", "shed", "rejected", "injected"
+    );
+    let mut records = Vec::new();
+    for tag in ModelConfig::builtin_tags() {
+        let r = soak_tag(tag, target);
+        let injected = r.injected_corrupt_state
+            + r.injected_corrupt_logits
+            + r.injected_worker_panics
+            + r.injected_transients;
+        println!(
+            "{:<8}  {:>9}  {:>9}  {:>9}  {:>8}  {:>9}  {:>8}  {:>8}",
+            r.tag, r.submitted, r.completed, r.poisoned, r.deadline_exceeded, r.shed, r.rejected,
+            injected
+        );
+        records.push(r);
+    }
+
+    let path = bench_out_path("BENCH_soak.json");
+    match write_soak_json(&path, &records) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("serve_soak: could not write {}: {e}", path.display()),
+    }
+    println!("every submitted request resolved to exactly one outcome; the process never aborted");
+}

@@ -808,6 +808,28 @@ fn refconv_tag(ctx: &Ctx, tag: &str) -> Result<()> {
         ref_lm_demo_batch(rng.usize_below(64), false)
     })?;
 
+    // Kill-and-resume check (DESIGN.md §11): checkpoint the teacher,
+    // rebuild a session from the file as a fresh process would, and
+    // verify both produce bit-identical losses on the same batches —
+    // the checkpoint carries the params, AdamW moments, and step
+    // counter, so a crashed conversion pipeline loses nothing.
+    let ckpt = ctx.results_dir.join(format!("refconv_{tag}.ckpt"));
+    teacher.checkpoint(&ckpt)?;
+    let mut resumed = Session::resume(&ctx.reg, &format!("{tag}_train_step"), &ckpt)?;
+    let mut resume_bit_identical = true;
+    for k in 0..3 {
+        let b = ref_lm_demo_batch(k * 17, false);
+        let a = teacher.train_step(1e-2, 0.0, &b)?;
+        let r = resumed.train_step(1e-2, 0.0, &b)?;
+        if a.to_bits() != r.to_bits() {
+            resume_bit_identical = false;
+        }
+    }
+    std::fs::remove_file(&ckpt).ok();
+    if !resume_bit_identical {
+        bail!("refconv_{tag}: resumed session diverged from the checkpointed one");
+    }
+
     let mut spec = ConversionSpec::new(tag);
     spec.distill_steps = ctx.steps(40);
     spec.finetune_steps = ctx.steps(40);
@@ -844,6 +866,7 @@ fn refconv_tag(ctx: &Ctx, tag: &str) -> Result<()> {
     report.row(vec!["geometry".into(), cfg.geometry()]);
     report.row(vec!["feature map".into(), cfg.feature.name().to_string()]);
     report.row(vec!["teacher trailing loss".into(), f(teacher.trailing_loss(5))]);
+    report.row(vec!["kill-and-resume bit-identical".into(), resume_bit_identical.to_string()]);
     report.row(vec!["shared leaves".into(), conv.shared_leaves.to_string()]);
     report.row(vec![
         "distill loss first -> last".into(),

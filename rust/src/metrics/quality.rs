@@ -118,7 +118,8 @@ pub fn measure_quality(
             let slices: Vec<&[f32]> = leaves.iter().map(|l| l.as_slice()).collect();
             let mp = ModelParams::from_leaves(&cfg, &slices).unwrap();
             let (loss, _, grads) =
-                loss_and_grads(&cfg, &pool, opts, &mp, &tokens, StepKind::Distill);
+                loss_and_grads(&cfg, &pool, opts, &mp, &tokens, StepKind::Distill)
+                    .expect("quality probe: distill step failed");
             if step == 0 {
                 first = loss;
             }
@@ -141,8 +142,10 @@ pub fn measure_quality(
     let mask = batch.get("loss_mask").unwrap().as_f32().unwrap().to_vec();
     let slices: Vec<&[f32]> = leaves.iter().map(|l| l.as_slice()).collect();
     let mp = ModelParams::from_leaves(&cfg, &slices).unwrap();
-    let (lm_loss, _) = eval_loss_metric(&cfg, &pool, opts, &mp, &tokens, &targets, &mask);
-    let rows = attention_probe(&cfg, &pool, opts, &mp, &tokens);
+    let (lm_loss, _) = eval_loss_metric(&cfg, &pool, opts, &mp, &tokens, &targets, &mask)
+        .expect("quality probe: eval failed");
+    let rows = attention_probe(&cfg, &pool, opts, &mp, &tokens)
+        .expect("quality probe: attention probe failed");
 
     let (mut s_ent, mut t_ent, mut kl, mut rho) =
         (Stats::default(), Stats::default(), Stats::default(), Stats::default());

@@ -1,0 +1,469 @@
+//! Deterministic fault injection for chaos testing (DESIGN.md §11).
+//!
+//! Production serving has to survive three failure families the happy
+//! path never exercises: numeric poison (a NaN/Inf landing in one slot's
+//! recurrent state or logits), contained worker panics (a buggy kernel
+//! task unwinding inside [`WorkerPool`]), and transient executor errors
+//! (the moral equivalent of a device hiccup that a retry absorbs). This
+//! module makes all three — plus queue-arrival bursts for the scheduler —
+//! *injectable on a schedule that is a pure function of a seed*, so a
+//! chaos soak that fails in CI can be replayed locally byte-for-byte.
+//!
+//! Layering: nothing in the serve or train stack knows this module
+//! exists. Faults enter through [`ChaosBackend`], a [`Backend`] proxy
+//! that wraps [`ReferenceBackend`] and interposes only on the
+//! `<tag>_decode_step` executables; every other artifact passes through
+//! untouched. Tests and benches install it via
+//! `ArtifactRegistry::with_backend`; production code paths never
+//! construct one, so the injector is inert by default.
+//!
+//! Determinism contract: a [`FaultPlan`] is fully determined by
+//! `(seed, horizon, slots, rates)`. Events are indexed by the *decode
+//! execute ordinal* (how many times the wrapped decode-step executable
+//! has run), not by scheduler tick — retries and backoff shift ticks,
+//! but the Nth execute always sees the same faults.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::data::Pcg32;
+
+use super::backend::{Backend, Executable, ExecOptions};
+use super::manifest::Manifest;
+use super::pool::WorkerPool;
+use super::reference::{decode_for, ReferenceBackend};
+use super::tensor::Tensor;
+
+/// One injectable failure family. See the module doc for the taxonomy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Poison one slot's recurrent (S, z) state with a non-finite value
+    /// after the decode step writes its outputs.
+    CorruptState,
+    /// Poison one slot's logits row with a non-finite value.
+    CorruptLogits,
+    /// Run a genuinely panicking task on the backend's [`WorkerPool`];
+    /// the contained panic surfaces as a typed executor error.
+    WorkerPanic,
+    /// Fail the execute before it runs, with a retryable
+    /// [`TransientExecError`]. Retrying the same step succeeds (the
+    /// next execute has a new ordinal).
+    TransientError,
+    /// Extra queue arrivals for the traffic layer. The executor proxy
+    /// ignores these; soak harnesses read them via
+    /// [`FaultPlan::burst_at`] when generating load.
+    ArrivalBurst,
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Decode-execute ordinal (for [`FaultKind::ArrivalBurst`]: the
+    /// scheduler tick, as counted by the traffic layer).
+    pub step: u64,
+    pub kind: FaultKind,
+    /// Target slot for corruption kinds; burst size for
+    /// [`FaultKind::ArrivalBurst`]; unused otherwise.
+    pub slot: usize,
+    /// Poison value for corruption kinds (NaN or +Inf), else 0.
+    pub value: f32,
+}
+
+/// Per-step probabilities for each fault family, all in `[0, 1]`.
+/// `FaultRates::default()` is all-zero (inert).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultRates {
+    pub corrupt_state: f64,
+    pub corrupt_logits: f64,
+    pub worker_panic: f64,
+    pub transient: f64,
+    pub burst: f64,
+}
+
+/// A precomputed, seed-deterministic schedule of [`FaultEvent`]s.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Sorted by `step` (generation order guarantees this; `from_events`
+    /// sorts).
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Roll the plan: one Pcg32 stream, a fixed draw order per step
+    /// (state, logits, panic, transient, burst), so the plan is a pure
+    /// function of the arguments.
+    pub fn generate(seed: u64, horizon: u64, slots: usize, rates: &FaultRates) -> FaultPlan {
+        let mut rng = Pcg32::new(seed);
+        let mut events = Vec::new();
+        let kinds = [
+            (FaultKind::CorruptState, rates.corrupt_state),
+            (FaultKind::CorruptLogits, rates.corrupt_logits),
+            (FaultKind::WorkerPanic, rates.worker_panic),
+            (FaultKind::TransientError, rates.transient),
+            (FaultKind::ArrivalBurst, rates.burst),
+        ];
+        for step in 0..horizon {
+            for &(kind, rate) in &kinds {
+                if f64::from(rng.f32()) >= rate {
+                    continue;
+                }
+                let (slot, value) = match kind {
+                    FaultKind::CorruptState | FaultKind::CorruptLogits => (
+                        rng.usize_below(slots.max(1)),
+                        if rng.bool(0.5) { f32::NAN } else { f32::INFINITY },
+                    ),
+                    FaultKind::ArrivalBurst => (1 + rng.usize_below(4), 0.0),
+                    _ => (0, 0.0),
+                };
+                events.push(FaultEvent { step, kind, slot, value });
+            }
+        }
+        FaultPlan { events }
+    }
+
+    /// Hand-authored plan for unit tests that need one specific fault at
+    /// one specific step. Events are sorted by step.
+    pub fn from_events(mut events: Vec<FaultEvent>) -> FaultPlan {
+        events.sort_by_key(|e| e.step);
+        FaultPlan { events }
+    }
+
+    /// Events scheduled at `step` (binary search — the plan is sorted).
+    pub fn events_at(&self, step: u64) -> &[FaultEvent] {
+        let lo = self.events.partition_point(|e| e.step < step);
+        let hi = self.events.partition_point(|e| e.step <= step);
+        &self.events[lo..hi]
+    }
+
+    /// Total arrival-burst size scheduled at `step` (traffic-layer hook).
+    pub fn burst_at(&self, step: u64) -> usize {
+        self.events_at(step)
+            .iter()
+            .filter(|e| e.kind == FaultKind::ArrivalBurst)
+            .map(|e| e.slot)
+            .sum()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+}
+
+/// Retryable executor failure. The scheduler classifies this (and
+/// contained pool panics) as transient and retries with backoff; any
+/// other error is fatal for the tick loop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransientExecError {
+    /// Decode-execute ordinal the fault was injected at.
+    pub step: u64,
+}
+
+impl std::fmt::Display for TransientExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "transient executor fault injected at decode step {} (retryable)", self.step)
+    }
+}
+
+impl std::error::Error for TransientExecError {}
+
+/// Raised by single-request drivers (`Engine::generate_greedy`) when the
+/// request's own slot is quarantined — there is no scheduler above them
+/// to resolve the request as `Outcome::Poisoned`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlotPoisoned {
+    pub slot: usize,
+}
+
+impl std::fmt::Display for SlotPoisoned {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "slot {} quarantined: non-finite state or logits detected", self.slot)
+    }
+}
+
+impl std::error::Error for SlotPoisoned {}
+
+/// How many faults of each kind a [`ChaosExec`] actually injected
+/// (post-clamping; a corruption event targeting a slot beyond the batch
+/// is clamped into range, never dropped).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InjectedCounts {
+    pub corrupt_state: usize,
+    pub corrupt_logits: usize,
+    pub worker_panics: usize,
+    pub transients: usize,
+}
+
+impl InjectedCounts {
+    pub fn total(&self) -> usize {
+        self.corrupt_state + self.corrupt_logits + self.worker_panics + self.transients
+    }
+}
+
+/// Shared between [`ChaosBackend`], every [`ChaosExec`] it loads, and the
+/// observing [`ChaosHandle`]. The execute ordinal is global across all
+/// decode executables from one backend — a soak drives one engine per
+/// registry, so this matches "Nth decode step of the run".
+struct ChaosState {
+    plan: FaultPlan,
+    step: AtomicU64,
+    corrupt_state: AtomicUsize,
+    corrupt_logits: AtomicUsize,
+    worker_panics: AtomicUsize,
+    transients: AtomicUsize,
+    /// Dedicated pool for injected panic jobs, so chaos never serializes
+    /// against the wrapped backend's real dispatches.
+    pool: WorkerPool,
+}
+
+/// Test/bench-side observer for a [`ChaosBackend`]: how far the run got
+/// and what was actually injected.
+#[derive(Clone)]
+pub struct ChaosHandle(Arc<ChaosState>);
+
+impl ChaosHandle {
+    /// Decode executes performed so far.
+    pub fn executes(&self) -> u64 {
+        self.0.step.load(Ordering::Relaxed)
+    }
+
+    pub fn injected(&self) -> InjectedCounts {
+        InjectedCounts {
+            corrupt_state: self.0.corrupt_state.load(Ordering::Relaxed),
+            corrupt_logits: self.0.corrupt_logits.load(Ordering::Relaxed),
+            worker_panics: self.0.worker_panics.load(Ordering::Relaxed),
+            transients: self.0.transients.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.0.plan
+    }
+}
+
+/// [`Backend`] proxy that injects the plan's faults into decode-step
+/// executables. Everything else (train/eval/distill graphs, kernels,
+/// builtin manifests, exec options) delegates to the wrapped
+/// [`ReferenceBackend`] unchanged.
+pub struct ChaosBackend {
+    inner: ReferenceBackend,
+    state: Arc<ChaosState>,
+}
+
+impl ChaosBackend {
+    /// Generate a plan from `(seed, horizon, slots, rates)` and build the
+    /// backend plus its observer handle.
+    pub fn new(
+        seed: u64,
+        horizon: u64,
+        slots: usize,
+        rates: &FaultRates,
+    ) -> (ChaosBackend, ChaosHandle) {
+        Self::with_plan(FaultPlan::generate(seed, horizon, slots, rates))
+    }
+
+    /// Build around a hand-authored plan (unit tests).
+    pub fn with_plan(plan: FaultPlan) -> (ChaosBackend, ChaosHandle) {
+        let state = Arc::new(ChaosState {
+            plan,
+            step: AtomicU64::new(0),
+            corrupt_state: AtomicUsize::new(0),
+            corrupt_logits: AtomicUsize::new(0),
+            worker_panics: AtomicUsize::new(0),
+            transients: AtomicUsize::new(0),
+            pool: WorkerPool::new(),
+        });
+        let handle = ChaosHandle(Arc::clone(&state));
+        (ChaosBackend { inner: ReferenceBackend::new(), state }, handle)
+    }
+}
+
+impl Backend for ChaosBackend {
+    fn name(&self) -> &'static str {
+        "reference-chaos"
+    }
+
+    fn load(&self, dir: &Path, manifest: &Manifest) -> Result<Box<dyn Executable>> {
+        let inner = self.inner.load(dir, manifest)?;
+        if decode_for(&manifest.name).is_some() && manifest.outputs.len() == 3 {
+            return Ok(Box::new(ChaosExec { inner, state: Arc::clone(&self.state) }));
+        }
+        Ok(inner)
+    }
+
+    fn builtin_manifests(&self) -> Vec<Manifest> {
+        self.inner.builtin_manifests()
+    }
+
+    fn set_exec_options(&self, opts: ExecOptions) {
+        self.inner.set_exec_options(opts);
+    }
+
+    fn exec_options(&self) -> ExecOptions {
+        self.inner.exec_options()
+    }
+}
+
+/// Decode-step executable wrapper: pre-execute faults (transient errors,
+/// worker panics) fire before the wrapped execute so a retry re-runs the
+/// real math; post-execute faults (state/logits corruption) poison the
+/// outputs the engine is about to swap in, exactly as a misbehaving
+/// kernel would.
+struct ChaosExec {
+    inner: Box<dyn Executable>,
+    state: Arc<ChaosState>,
+}
+
+impl ChaosExec {
+    /// Claim this execute's ordinal and fire pre-execute faults.
+    fn pre(&self) -> Result<u64> {
+        let step = self.state.step.fetch_add(1, Ordering::Relaxed);
+        for ev in self.state.plan.events_at(step) {
+            match ev.kind {
+                FaultKind::TransientError => {
+                    self.state.transients.fetch_add(1, Ordering::Relaxed);
+                    return Err(anyhow::Error::new(TransientExecError { step }));
+                }
+                FaultKind::WorkerPanic => {
+                    self.state.worker_panics.fetch_add(1, Ordering::Relaxed);
+                    // A real unwinding task on a real pool: exercises the
+                    // containment path, not a simulation of it.
+                    let err = self
+                        .state
+                        .pool
+                        .run(2, 2, &|i| {
+                            if i == 1 {
+                                panic!("injected worker fault at decode step");
+                            }
+                        })
+                        .expect_err("injected panic must surface as PoolError");
+                    return Err(anyhow::Error::new(err));
+                }
+                _ => {}
+            }
+        }
+        Ok(step)
+    }
+
+    /// Fire post-execute corruption on `[logits, s, z]` outputs.
+    fn post(&self, step: u64, outputs: &mut [Tensor]) -> Result<()> {
+        for ev in self.state.plan.events_at(step) {
+            match ev.kind {
+                FaultKind::CorruptLogits => {
+                    let logits = &mut outputs[0];
+                    let batch = logits.shape[0];
+                    let vocab = logits.shape[1];
+                    let slot = ev.slot.min(batch.saturating_sub(1));
+                    logits.as_f32_mut()?[slot * vocab] = ev.value;
+                    self.state.corrupt_logits.fetch_add(1, Ordering::Relaxed);
+                }
+                FaultKind::CorruptState => {
+                    // S is [layers, batch, heads, d_phi, d]; poison one
+                    // element of layer 0's column for the target slot.
+                    let s = &mut outputs[1];
+                    let batch = s.shape[1];
+                    let inner: usize = s.shape[2..].iter().product();
+                    let slot = ev.slot.min(batch.saturating_sub(1));
+                    s.as_f32_mut()?[slot * inner] = ev.value;
+                    self.state.corrupt_state.fetch_add(1, Ordering::Relaxed);
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Executable for ChaosExec {
+    fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let step = self.pre()?;
+        let mut outputs = self.inner.execute(inputs)?;
+        self.post(step, &mut outputs)?;
+        Ok(outputs)
+    }
+
+    fn execute_into(&self, inputs: &[&Tensor], outputs: &mut [Tensor]) -> Result<()> {
+        let step = self.pre()?;
+        self.inner.execute_into(inputs, outputs)?;
+        self.post(step, outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn event_key(e: &FaultEvent) -> (u64, u8, usize, u32) {
+        let kind = match e.kind {
+            FaultKind::CorruptState => 0,
+            FaultKind::CorruptLogits => 1,
+            FaultKind::WorkerPanic => 2,
+            FaultKind::TransientError => 3,
+            FaultKind::ArrivalBurst => 4,
+        };
+        (e.step, kind, e.slot, e.value.to_bits())
+    }
+
+    #[test]
+    fn plan_is_deterministic_in_the_seed() {
+        let rates = FaultRates {
+            corrupt_state: 0.1,
+            corrupt_logits: 0.1,
+            worker_panic: 0.05,
+            transient: 0.05,
+            burst: 0.05,
+        };
+        let a = FaultPlan::generate(42, 512, 4, &rates);
+        let b = FaultPlan::generate(42, 512, 4, &rates);
+        assert!(!a.events().is_empty(), "rates this high must schedule something in 512 steps");
+        let ka: Vec<_> = a.events().iter().map(event_key).collect();
+        let kb: Vec<_> = b.events().iter().map(event_key).collect();
+        assert_eq!(ka, kb, "same seed, same plan — bit-for-bit");
+        let c = FaultPlan::generate(43, 512, 4, &rates);
+        let kc: Vec<_> = c.events().iter().map(event_key).collect();
+        assert_ne!(ka, kc, "a different seed must reshuffle the schedule");
+    }
+
+    #[test]
+    fn plan_respects_rates_and_bounds() {
+        let rates = FaultRates { corrupt_state: 1.0, ..FaultRates::default() };
+        let plan = FaultPlan::generate(7, 100, 3, &rates);
+        assert_eq!(plan.events().len(), 100, "rate 1.0 fires every step");
+        for e in plan.events() {
+            assert_eq!(e.kind, FaultKind::CorruptState);
+            assert!(e.slot < 3, "slot {} out of range", e.slot);
+            assert!(e.value.is_nan() || e.value == f32::INFINITY);
+        }
+        let inert = FaultPlan::generate(7, 10_000, 3, &FaultRates::default());
+        assert!(inert.events().is_empty(), "default rates are inert");
+    }
+
+    #[test]
+    fn events_at_slices_by_step_and_bursts_sum() {
+        let plan = FaultPlan::from_events(vec![
+            FaultEvent { step: 5, kind: FaultKind::ArrivalBurst, slot: 2, value: 0.0 },
+            FaultEvent { step: 2, kind: FaultKind::TransientError, slot: 0, value: 0.0 },
+            FaultEvent { step: 5, kind: FaultKind::ArrivalBurst, slot: 3, value: 0.0 },
+            FaultEvent { step: 5, kind: FaultKind::CorruptState, slot: 1, value: f32::NAN },
+        ]);
+        assert_eq!(plan.events_at(0).len(), 0);
+        assert_eq!(plan.events_at(2).len(), 1);
+        assert_eq!(plan.events_at(5).len(), 3);
+        assert_eq!(plan.burst_at(5), 5, "two bursts of 2 and 3 sum");
+        assert_eq!(plan.burst_at(2), 0, "transients are not bursts");
+    }
+
+    #[test]
+    fn chaos_backend_delegates_builtins_and_options() {
+        let (chaos, handle) = ChaosBackend::new(1, 16, 4, &FaultRates::default());
+        let names: Vec<String> =
+            chaos.builtin_manifests().into_iter().map(|m| m.name).collect();
+        assert!(names.iter().any(|n| n == "ref_lm_decode_step"));
+        chaos.set_exec_options(ExecOptions::serial());
+        assert_eq!(chaos.exec_options(), ExecOptions::serial());
+        assert_eq!(handle.executes(), 0);
+        assert_eq!(handle.injected().total(), 0);
+    }
+}

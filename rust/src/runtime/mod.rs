@@ -8,6 +8,7 @@
 pub mod artifact;
 pub mod backend;
 pub mod config;
+pub mod faults;
 pub mod json;
 pub mod manifest;
 pub mod params;
@@ -22,8 +23,12 @@ pub mod tensor;
 pub use artifact::{ArtifactRegistry, Executable};
 pub use backend::{Backend, ExecOptions};
 pub use config::{FeatureKind, ModelConfig};
+pub use faults::{
+    ChaosBackend, ChaosHandle, FaultEvent, FaultKind, FaultPlan, FaultRates, InjectedCounts,
+    SlotPoisoned, TransientExecError,
+};
 pub use manifest::{Manifest, Slot};
 pub use params::ParamStore;
-pub use pool::WorkerPool;
+pub use pool::{PoolError, WorkerPool};
 pub use reference::{ref_lm_demo_params, ReferenceBackend, REF_LM2_TAG, REF_LM4_TAG, REF_LM_TAG};
 pub use tensor::{DType, Tensor, TensorData};

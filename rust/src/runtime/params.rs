@@ -157,6 +157,28 @@ impl ParamStore {
         Ok(())
     }
 
+    /// Crash-safe `save`: write to a hidden temp sibling, then
+    /// `rename` into place (atomic on POSIX filesystems). A crash
+    /// mid-write leaves the previous checkpoint intact — a resuming
+    /// process never observes a torn file. The temp name carries the
+    /// pid so concurrent savers to different targets cannot collide.
+    pub fn save_atomic(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .ok_or_else(|| anyhow!("save_atomic: {} has no file name", path.display()))?;
+        let tmp = path.with_file_name(format!(".{name}.tmp{}", std::process::id()));
+        if let Err(e) = self.save(&tmp) {
+            std::fs::remove_file(&tmp).ok();
+            return Err(e);
+        }
+        std::fs::rename(&tmp, path).with_context(|| {
+            std::fs::remove_file(&tmp).ok();
+            format!("rename {} -> {}", tmp.display(), path.display())
+        })
+    }
+
     pub fn load(path: impl AsRef<Path>) -> Result<ParamStore> {
         let mut f = std::fs::File::open(path.as_ref())
             .with_context(|| format!("open {}", path.as_ref().display()))?;
@@ -236,6 +258,28 @@ mod tests {
         let back = ParamStore::load(&dir).unwrap();
         assert_eq!(s.tensors, back.tensors);
         std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn save_atomic_overwrites_and_survives_failed_writes() {
+        let s = sample();
+        let path = std::env::temp_dir().join("hh_ckpt_atomic_test.bin");
+        s.save_atomic(&path).unwrap();
+        let mut s2 = sample();
+        s2.insert("params/extra", Tensor::from_f32(vec![9.0], &[1]));
+        s2.save_atomic(&path).unwrap();
+        assert_eq!(ParamStore::load(&path).unwrap().tensors, s2.tensors);
+        // no temp sibling left behind
+        let residue = std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .any(|e| e.file_name().to_string_lossy().contains("hh_ckpt_atomic_test.bin.tmp"));
+        assert!(!residue, "temp file left behind");
+        // a save that cannot even start leaves the last checkpoint intact
+        let missing = std::env::temp_dir().join("hh_no_such_dir_xyz").join("ckpt.bin");
+        assert!(s.save_atomic(&missing).is_err());
+        assert_eq!(ParamStore::load(&path).unwrap().tensors, s2.tensors);
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

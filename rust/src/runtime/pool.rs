@@ -28,10 +28,42 @@
 //! request simply wakes fewer claims' worth of work; teardown happens in
 //! `Drop` (shutdown flag + broadcast + join).
 
-use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+/// Typed job failure: a pooled task panicked. The panic was caught on
+/// whichever thread claimed the task, the job fully drained (counters
+/// reset, workers parked), and the dispatcher got this error instead of
+/// a re-raised panic — so a poisoned kernel fails one `execute`, not the
+/// process (DESIGN.md §11). The serve layer classifies it as retryable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolError {
+    /// The first panic payload, rendered to a string when it was one
+    /// (`&str` / `String` payloads; anything else is described opaquely).
+    pub message: String,
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "a pooled task panicked: {}", self.message)
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+/// Render a caught panic payload for `PoolError` (the two payload types
+/// `panic!` produces, then an opaque fallback).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
 
 /// A dispatch's task closure with its borrow lifetime erased so it can
 /// park in the shared job slot.
@@ -59,9 +91,9 @@ struct JobState {
     /// broadcast but skip a full job — explicit `ExecOptions::threads`
     /// counts stay honored exactly, never just "at least".
     max_workers: usize,
-    /// A worker task panicked during the current job (caught; re-raised
-    /// on the dispatcher after the job fully drains).
-    panicked: bool,
+    /// First worker-task panic of the current job (caught; surfaced to
+    /// the dispatcher as a typed `PoolError` after the job fully drains).
+    panicked: Option<String>,
     shutdown: bool,
 }
 
@@ -106,7 +138,7 @@ impl WorkerPool {
                     epoch: 0,
                     active: 0,
                     max_workers: 0,
-                    panicked: false,
+                    panicked: None,
                     shutdown: false,
                 }),
                 work: Condvar::new(),
@@ -144,23 +176,30 @@ impl WorkerPool {
     /// inline with no synchronization at all — that path is what keeps
     /// single-threaded decode allocation- and lock-free.
     ///
-    /// Panic policy (matches the `std::thread::scope` semantics this pool
-    /// replaced): a panicking task never breaks the protocol. Panics are
-    /// caught on whichever thread claimed the task, the job still drains
-    /// (counters cleaned, closure slot cleared, workers kept alive and
-    /// parked), and the panic is then re-raised on the dispatcher — so a
-    /// buggy kernel panics the `execute` call, not the process-wide pool,
+    /// Panic policy (DESIGN.md §11): a panicking task never breaks the
+    /// protocol and never aborts the process. Panics are caught on
+    /// whichever thread claimed the task, the job still drains (counters
+    /// cleaned, closure slot cleared, workers kept alive and parked), and
+    /// the dispatch returns a typed [`PoolError`] — so a buggy kernel
+    /// fails the `execute` call with an error its caller can classify,
     /// and the lifetime-erased closure is never dereferenced after `run`
-    /// returns.
-    pub fn run(&self, threads: usize, num_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+    /// returns. Remaining tasks may go unclaimed once a panic is seen;
+    /// the job is failing either way and reports exactly one error.
+    pub fn run(
+        &self,
+        threads: usize,
+        num_tasks: usize,
+        f: &(dyn Fn(usize) + Sync),
+    ) -> Result<(), PoolError> {
         if num_tasks == 0 {
-            return;
+            return Ok(());
         }
         if threads <= 1 || num_tasks == 1 {
             for i in 0..num_tasks {
-                f(i);
+                catch_unwind(AssertUnwindSafe(|| f(i)))
+                    .map_err(|p| PoolError { message: panic_message(&*p) })?;
             }
-            return;
+            return Ok(());
         }
         // More threads than tasks can never help, and workers persist for
         // the pool's lifetime — cap growth at the useful parallelism.
@@ -174,7 +213,7 @@ impl WorkerPool {
                 st = inner.done.wait(st).unwrap();
             }
             inner.next_task.store(0, Ordering::Relaxed);
-            st.panicked = false;
+            st.panicked = None;
             // SAFETY: extend the closure borrow to 'static to park it in
             // shared state; the completion wait below upholds TaskFn's
             // contract (no call can outlive this stack frame).
@@ -213,24 +252,34 @@ impl WorkerPool {
         drop(st);
         // Wake any dispatcher queued behind us.
         inner.done.notify_all();
+        // Exactly this dispatch's failure surfaces here (the install gate
+        // serialized the job, so `panicked` belongs to it alone) — a
+        // dispatcher-claimed panic wins, else the first worker's.
         if let Some(p) = dispatcher_panic {
-            resume_unwind(p);
+            return Err(PoolError { message: panic_message(&*p) });
         }
-        if worker_panicked {
-            panic!("WorkerPool: a pooled task panicked (see worker thread's message above)");
+        if let Some(message) = worker_panicked {
+            return Err(PoolError { message });
         }
+        Ok(())
     }
 
     /// Fork/join over owned task values: each task runs exactly once, on
     /// whichever thread claims its index. The planner-facing wrapper the
     /// reference kernels use (they build per-span task structs holding
     /// disjoint `&mut` output slices).
-    pub fn run_tasks<T: Send>(&self, threads: usize, tasks: Vec<T>, f: impl Fn(T) + Sync) {
+    pub fn run_tasks<T: Send>(
+        &self,
+        threads: usize,
+        tasks: Vec<T>,
+        f: impl Fn(T) + Sync,
+    ) -> Result<(), PoolError> {
         if threads <= 1 || tasks.len() <= 1 {
             for t in tasks {
-                f(t);
+                catch_unwind(AssertUnwindSafe(|| f(t)))
+                    .map_err(|p| PoolError { message: panic_message(&*p) })?;
             }
-            return;
+            return Ok(());
         }
         let cells: Vec<TaskCell<T>> =
             tasks.into_iter().map(|t| TaskCell(std::cell::UnsafeCell::new(Some(t)))).collect();
@@ -239,7 +288,7 @@ impl WorkerPool {
             // exclusive for the cell's lifetime.
             let task = unsafe { (*cells[i].0.get()).take() };
             f(task.expect("task index claimed twice"));
-        });
+        })
     }
 }
 
@@ -287,7 +336,7 @@ fn worker_loop(inner: Arc<PoolInner>) {
                 st = inner.work.wait(st).unwrap();
             }
         };
-        let mut panicked = false;
+        let mut panicked = None;
         loop {
             let i = inner.next_task.fetch_add(1, Ordering::Relaxed);
             if i >= num_tasks {
@@ -299,14 +348,14 @@ fn worker_loop(inner: Arc<PoolInner>) {
             // are caught so `active` is always decremented — a worker
             // that unwound past the decrement would deadlock every
             // subsequent dispatch.
-            if catch_unwind(AssertUnwindSafe(|| (func.0)(i))).is_err() {
-                panicked = true;
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| (func.0)(i))) {
+                panicked = Some(panic_message(&*p));
                 break;
             }
         }
         let mut st = inner.state.lock().unwrap();
-        if panicked {
-            st.panicked = true;
+        if panicked.is_some() && st.panicked.is_none() {
+            st.panicked = panicked;
         }
         st.active -= 1;
         if st.active == 0 {
@@ -329,7 +378,8 @@ mod tests {
                     (0..num_tasks).map(|_| AtomicUsize::new(0)).collect();
                 pool.run(threads, num_tasks, &|i| {
                     hits[i].fetch_add(1, Ordering::Relaxed);
-                });
+                })
+                .unwrap();
                 for (i, h) in hits.iter().enumerate() {
                     assert_eq!(
                         h.load(Ordering::Relaxed),
@@ -360,7 +410,8 @@ mod tests {
             for (i, x) in slice.iter_mut().enumerate() {
                 *x = (base + i) as u64;
             }
-        });
+        })
+        .unwrap();
         for (i, &x) in buf.iter().enumerate() {
             assert_eq!(x, i as u64);
         }
@@ -376,7 +427,8 @@ mod tests {
             let tasks = 1 + round % 5;
             pool.run(3, tasks, &|_| {
                 total.fetch_add(1, Ordering::Relaxed);
-            });
+            })
+            .unwrap();
         }
         let expected: usize = (0..200).map(|r| 1 + r % 5).sum();
         assert_eq!(total.load(Ordering::Relaxed), expected);
@@ -386,13 +438,13 @@ mod tests {
     fn grows_lazily_and_tears_down_on_drop() {
         let pool = WorkerPool::new();
         assert_eq!(pool.worker_count(), 0, "no threads before first dispatch");
-        pool.run(1, 8, &|_| {});
+        pool.run(1, 8, &|_| {}).unwrap();
         assert_eq!(pool.worker_count(), 0, "threads=1 must stay inline");
-        pool.run(3, 8, &|_| {});
+        pool.run(3, 8, &|_| {}).unwrap();
         assert_eq!(pool.worker_count(), 2);
-        pool.run(5, 8, &|_| {});
+        pool.run(5, 8, &|_| {}).unwrap();
         assert_eq!(pool.worker_count(), 4, "pool grows to the largest request");
-        pool.run(2, 8, &|_| {});
+        pool.run(2, 8, &|_| {}).unwrap();
         assert_eq!(pool.worker_count(), 4, "pool never shrinks while live");
         drop(pool); // must join all 4 workers without hanging
     }
@@ -400,14 +452,15 @@ mod tests {
     #[test]
     fn drop_with_parked_workers_does_not_hang() {
         let pool = WorkerPool::new();
-        pool.run(8, 32, &|_| {});
+        pool.run(8, 32, &|_| {}).unwrap();
         drop(pool);
         // Re-create: a fresh pool after a teardown must work from scratch.
         let pool = WorkerPool::new();
         let total = AtomicUsize::new(0);
         pool.run(8, 32, &|_| {
             total.fetch_add(1, Ordering::Relaxed);
-        });
+        })
+        .unwrap();
         assert_eq!(total.load(Ordering::Relaxed), 32);
     }
 
@@ -417,7 +470,7 @@ mod tests {
         // dispatch must still run at most 2 tasks concurrently (1 worker
         // + the dispatcher) — surplus workers skip the job.
         let pool = WorkerPool::new();
-        pool.run(8, 64, &|_| {});
+        pool.run(8, 64, &|_| {}).unwrap();
         assert_eq!(pool.worker_count(), 7);
         let in_flight = AtomicUsize::new(0);
         let high_water = AtomicUsize::new(0);
@@ -426,7 +479,8 @@ mod tests {
             high_water.fetch_max(now, Ordering::SeqCst);
             std::thread::sleep(std::time::Duration::from_micros(200));
             in_flight.fetch_sub(1, Ordering::SeqCst);
-        });
+        })
+        .unwrap();
         let peak = high_water.load(Ordering::SeqCst);
         assert!(peak <= 2, "threads=2 dispatch ran {peak} tasks concurrently");
     }
@@ -435,24 +489,71 @@ mod tests {
     fn panicking_task_fails_the_dispatch_but_not_the_pool() {
         let pool = WorkerPool::new();
         // A panic on any claimant (dispatcher or worker) must surface as
-        // a panic of `run`...
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            pool.run(4, 16, &|i| {
-                if i == 3 {
-                    panic!("boom");
-                }
-            });
-        }));
-        assert!(result.is_err(), "task panic was swallowed");
+        // a typed PoolError carrying the payload — never a process abort,
+        // never a re-raised panic on the dispatcher.
+        for threads in [1usize, 4] {
+            let err = pool
+                .run(threads, 16, &|i| {
+                    if i == 3 {
+                        panic!("boom");
+                    }
+                })
+                .unwrap_err();
+            assert_eq!(err.message, "boom", "threads={threads}");
+        }
         // ...and the pool must stay fully usable afterwards: counters
         // reset, workers alive and parked, no deadlocked dispatch.
         let total = AtomicUsize::new(0);
         for _ in 0..5 {
             pool.run(4, 16, &|_| {
                 total.fetch_add(1, Ordering::Relaxed);
-            });
+            })
+            .unwrap();
         }
         assert_eq!(total.load(Ordering::Relaxed), 80);
+    }
+
+    #[test]
+    fn panic_error_lands_on_the_dispatcher_that_owns_it() {
+        // Two dispatchers share the pool; one dispatches jobs that always
+        // panic, the other only clean jobs. The typed error must land on
+        // the failing dispatcher every round, the clean dispatcher must
+        // never see one, and the pool must stay usable afterwards
+        // (fault-containment satellite of DESIGN.md §11).
+        let pool = std::sync::Arc::new(WorkerPool::new());
+        let clean_ran = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            let (p1, p2) = (Arc::clone(&pool), Arc::clone(&pool));
+            let cr = &clean_ran;
+            scope.spawn(move || {
+                for round in 0..12 {
+                    let err = p1
+                        .run(3, 8, &|i| {
+                            if i == round % 8 {
+                                panic!("chaos");
+                            }
+                        })
+                        .unwrap_err();
+                    assert_eq!(err.message, "chaos", "round {round}");
+                }
+            });
+            scope.spawn(move || {
+                for _ in 0..12 {
+                    p2.run(3, 8, &|_| {
+                        cr.fetch_add(1, Ordering::Relaxed);
+                    })
+                    .expect("clean dispatcher must never observe the other job's panic");
+                }
+            });
+        });
+        assert_eq!(clean_ran.load(Ordering::Relaxed), 96);
+        // Pool still drains full jobs after 12 contained failures.
+        let total = AtomicUsize::new(0);
+        pool.run(4, 32, &|_| {
+            total.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(total.load(Ordering::Relaxed), 32);
     }
 
     #[test]
@@ -470,14 +571,16 @@ mod tests {
                 for _ in 0..50 {
                     p1.run(2, 5, &|_| {
                         ar.fetch_add(1, Ordering::Relaxed);
-                    });
+                    })
+                    .unwrap();
                 }
             });
             scope.spawn(move || {
                 for _ in 0..50 {
                     p2.run(2, 7, &|_| {
                         br.fetch_add(1, Ordering::Relaxed);
-                    });
+                    })
+                    .unwrap();
                 }
             });
         });

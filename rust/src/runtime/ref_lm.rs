@@ -67,7 +67,7 @@ use super::backend::{ExecOptions, Executable as BackendExecutable};
 use super::config::ModelConfig;
 use super::json::Json;
 use super::manifest::{Manifest, Slot};
-use super::pool::WorkerPool;
+use super::pool::{PoolError, WorkerPool};
 use super::reference::{auto_threads, scalar_axpy, scalar_dot, FeatureMap, SharedExecOptions, EPS};
 use super::simd;
 use super::tensor::{DType, Tensor};
@@ -681,7 +681,7 @@ fn forward_layer(
     threads: usize,
     lp: Option<&LayerParams>,
     x: Vec<f32>,
-) -> LayerActs {
+) -> Result<LayerActs, PoolError> {
     let (b, n, h, d) = (cfg.batch, cfg.seq, cfg.heads, cfg.head_dim);
     let (dp, dm, dd) = (cfg.dp(), cfg.d_model(), cfg.head_dim * cfg.head_dim);
     let bh = b * h;
@@ -773,7 +773,7 @@ fn forward_layer(
             });
         }
         let map = FeatureMap::of_kind(cfg.feature);
-        pool.run_tasks(threads, tasks, |t: FwdTask| fwd_head(ops, map, n, d, t));
+        pool.run_tasks(threads, tasks, |t: FwdTask| fwd_head(ops, map, n, d, t))?;
     }
 
     // merge heads
@@ -798,7 +798,7 @@ fn forward_layer(
         }
         None => Vec::new(),
     };
-    LayerActs { x, qh, kh, vh, phi_q, phi_k, p, den, yh, y, out }
+    Ok(LayerActs { x, qh, kh, vh, phi_q, phi_k, p, den, yh, y, out })
 }
 
 /// Full model forward: embedding gather + every layer.
@@ -809,7 +809,7 @@ fn forward_model(
     threads: usize,
     mp: &ModelParams,
     tokens: &[i32],
-) -> Vec<LayerActs> {
+) -> Result<Vec<LayerActs>, PoolError> {
     let (b, n, dm, v) = (cfg.batch, cfg.seq, cfg.d_model(), cfg.vocab);
     let mut x = vec![0.0f32; b * n * dm];
     for bi in 0..b {
@@ -837,9 +837,9 @@ fn forward_model(
                 std::mem::take(&mut prev.out)
             }
         };
-        acts.push(forward_layer(cfg, ops, pool, threads, mp.layers.get(l), xl));
+        acts.push(forward_layer(cfg, ops, pool, threads, mp.layers.get(l), xl)?);
     }
-    acts
+    Ok(acts)
 }
 
 // ---------------------------------------------------------------------------
@@ -1126,7 +1126,7 @@ fn backward_model(
     mut dx: Vec<f32>,
     mut dx_zero: bool,
     distill_inv_m: Option<f32>,
-) -> (Vec<LayerGrads>, Vec<f32>, f64) {
+) -> Result<(Vec<LayerGrads>, Vec<f32>, f64), PoolError> {
     let (b, n, h, d) = (cfg.batch, cfg.seq, cfg.heads, cfg.head_dim);
     let (dp, dm, dd) = (cfg.dp(), cfg.d_model(), cfg.head_dim * cfg.head_dim);
     let bh = b * h;
@@ -1255,7 +1255,7 @@ fn backward_model(
                     loss: &mut ls[0],
                 });
             }
-            pool.run_tasks(threads, tasks, |t: BwdTask| bwd_head(ops, map, n, d, t));
+            pool.run_tasks(threads, tasks, |t: BwdTask| bwd_head(ops, map, n, d, t))?;
         }
         if let Some(inv_m) = distill_inv_m {
             distill_loss += losses.iter().sum::<f64>() * inv_m as f64;
@@ -1320,7 +1320,7 @@ fn backward_model(
         }
         dx = dx_prev;
     }
-    (layer_grads, dx, distill_loss)
+    Ok((layer_grads, dx, distill_loss))
 }
 
 // ---------------------------------------------------------------------------
@@ -1346,10 +1346,10 @@ pub(crate) fn loss_and_grads(
     mp: &ModelParams,
     tokens: &[i32],
     kind: StepKind,
-) -> (f32, f32, Grads) {
+) -> Result<(f32, f32, Grads), PoolError> {
     let (ops, threads) = resolve(cfg, opts);
     let (b, n, dm, v) = (cfg.batch, cfg.seq, cfg.d_model(), cfg.vocab);
-    let acts = forward_model(cfg, ops, pool, threads, mp, tokens);
+    let acts = forward_model(cfg, ops, pool, threads, mp, tokens)?;
     let final_x = acts.last().expect("at least one layer").out_view();
 
     let loss;
@@ -1387,7 +1387,7 @@ pub(crate) fn loss_and_grads(
                 }
                 pool.run_tasks(threads, tasks, |t: HeadTask| {
                     head_row(ops, n, dm, v, true, mask_den, mp.unembed, t)
-                });
+                })?;
             }
             let loss_sum: f64 = stats.iter().map(|s| s.0).sum();
             let correct_sum: f64 = stats.iter().map(|s| s.1).sum();
@@ -1396,13 +1396,13 @@ pub(crate) fn loss_and_grads(
             for part in dun_partials.chunks_exact(dm * v) {
                 (ops.axpy)(&mut dunembed, 1.0, part);
             }
-            backward_model(cfg, ops, pool, threads, mp, &acts, dx, false, None)
+            backward_model(cfg, ops, pool, threads, mp, &acts, dx, false, None)?
         }
         StepKind::Distill => {
             let inv_m = 1.0f32 / (b * cfg.heads * n) as f32;
             let dx = vec![0.0f32; b * n * dm];
             let (lg, dx0, dloss) =
-                backward_model(cfg, ops, pool, threads, mp, &acts, dx, true, Some(inv_m));
+                backward_model(cfg, ops, pool, threads, mp, &acts, dx, true, Some(inv_m))?;
             loss = dloss as f32;
             (lg, dx0, dloss)
         }
@@ -1420,7 +1420,7 @@ pub(crate) fn loss_and_grads(
             );
         }
     }
-    (loss, metric, Grads { dembed, layers: layer_grads, dunembed })
+    Ok((loss, metric, Grads { dembed, layers: layer_grads, dunembed }))
 }
 
 /// Loss + metric only (the eval graph): same forward, no backward.
@@ -1432,10 +1432,10 @@ pub(crate) fn eval_loss_metric(
     tokens: &[i32],
     targets: &[i32],
     mask: &[f32],
-) -> (f32, f32) {
+) -> Result<(f32, f32), PoolError> {
     let (ops, threads) = resolve(cfg, opts);
     let (b, n, dm, v) = (cfg.batch, cfg.seq, cfg.d_model(), cfg.vocab);
-    let acts = forward_model(cfg, ops, pool, threads, mp, tokens);
+    let acts = forward_model(cfg, ops, pool, threads, mp, tokens)?;
     let final_x = acts.last().expect("at least one layer").out_view();
     let mask_den = mask.iter().map(|&m| m as f64).sum::<f64>() as f32 + 1e-6;
     let mut stats = vec![(0.0f64, 0.0f64); b];
@@ -1457,10 +1457,10 @@ pub(crate) fn eval_loss_metric(
     }
     pool.run_tasks(threads, tasks, |t: HeadTask| {
         head_row(ops, n, dm, v, false, mask_den, mp.unembed, t)
-    });
+    })?;
     let loss_sum: f64 = stats.iter().map(|s| s.0).sum();
     let correct_sum: f64 = stats.iter().map(|s| s.1).sum();
-    ((loss_sum / mask_den as f64) as f32, (correct_sum / mask_den as f64) as f32)
+    Ok(((loss_sum / mask_den as f64) as f32, (correct_sum / mask_den as f64) as f32))
 }
 
 /// One causal attention row as the quality diagnostics consume it
@@ -1485,10 +1485,10 @@ pub(crate) fn attention_probe(
     opts: ExecOptions,
     mp: &ModelParams,
     tokens: &[i32],
-) -> Vec<AttnRow> {
+) -> Result<Vec<AttnRow>, PoolError> {
     let (ops, threads) = resolve(cfg, opts);
     let (b, n, h, d) = (cfg.batch, cfg.seq, cfg.heads, cfg.head_dim);
-    let acts = forward_model(cfg, ops, pool, threads, mp, tokens);
+    let acts = forward_model(cfg, ops, pool, threads, mp, tokens)?;
     let mut rows = Vec::with_capacity(cfg.layers * b * h * (n - 1));
     for act in acts.iter() {
         let kh_all = act.k_heads();
@@ -1504,7 +1504,7 @@ pub(crate) fn attention_probe(
             }
         }
     }
-    rows
+    Ok(rows)
 }
 
 /// Whole-sequence forward to (B, N, V) logits — the quadratic-form
@@ -1515,16 +1515,16 @@ pub(crate) fn forward_logits(
     opts: ExecOptions,
     mp: &ModelParams,
     tokens: &[i32],
-) -> Vec<f32> {
+) -> Result<Vec<f32>, PoolError> {
     let (ops, threads) = resolve(cfg, opts);
     let (b, n, dm, v) = (cfg.batch, cfg.seq, cfg.d_model(), cfg.vocab);
-    let acts = forward_model(cfg, ops, pool, threads, mp, tokens);
+    let acts = forward_model(cfg, ops, pool, threads, mp, tokens)?;
     let final_x = acts.last().expect("at least one layer").out_view();
     let mut logits = vec![0.0f32; b * n * v];
     for r in 0..b * n {
         vec_mat(ops, &final_x[r * dm..(r + 1) * dm], mp.unembed, &mut logits[r * v..(r + 1) * v]);
     }
-    logits
+    Ok(logits)
 }
 
 // ---------------------------------------------------------------------------
@@ -1599,7 +1599,7 @@ impl BackendExecutable for RefLmStep {
                     inputs[nl].as_i32()?,
                     inputs[nl + 1].as_i32()?,
                     inputs[nl + 2].as_f32()?,
-                );
+                )?;
                 Ok(vec![Tensor::scalar_f32(loss), Tensor::scalar_f32(metric)])
             }
             TrainGraph::Train | TrainGraph::Distill => {
@@ -1634,7 +1634,7 @@ impl BackendExecutable for RefLmStep {
                 };
                 let mp = ModelParams::from_leaves(cfg, &leaves)?;
                 let (loss, _metric, grads) =
-                    loss_and_grads(cfg, &self.pool, opts, &mp, tokens, kind);
+                    loss_and_grads(cfg, &self.pool, opts, &mp, tokens, kind)?;
                 let grad_leaves = grads.into_leaves();
                 let step_new = step + 1;
                 let slots = cfg.leaf_slots("params");
@@ -1772,6 +1772,7 @@ mod tests {
             &tokens,
             StepKind::Lm { targets: &targets, mask: &mask },
         )
+        .unwrap()
         .0
     }
 
@@ -1779,7 +1780,9 @@ mod tests {
         let pool = WorkerPool::new();
         let (tokens, _, _) = cyclic_batch();
         let mp = mp_of(cfg, leaves);
-        loss_and_grads(cfg, &pool, ExecOptions::naive(), &mp, &tokens, StepKind::Distill).0
+        loss_and_grads(cfg, &pool, ExecOptions::naive(), &mp, &tokens, StepKind::Distill)
+            .unwrap()
+            .0
     }
 
     /// FD gradient check over EVERY leaf of `cfg`, both losses.
@@ -1798,6 +1801,7 @@ mod tests {
                 &tokens,
                 StepKind::Lm { targets: &targets, mask: &mask },
             )
+            .unwrap()
         };
         assert!(loss.is_finite() && loss > 0.0);
         assert!((0.0..=1.0).contains(&metric));
@@ -1817,6 +1821,7 @@ mod tests {
         let (dloss, _, dgrads) = {
             let mp = mp_of(cfg, &leaves);
             loss_and_grads(cfg, &pool, ExecOptions::naive(), &mp, &tokens, StepKind::Distill)
+                .unwrap()
         };
         assert!(dloss.is_finite() && dloss > 0.0);
         let dglv = dgrads.into_leaves();
@@ -1863,7 +1868,8 @@ mod tests {
             &mp,
             &tokens,
             StepKind::Lm { targets: &targets, mask: &mask },
-        );
+        )
+        .unwrap();
         let dm = cfg.d_model();
         let unused = 200usize;
         assert!(tokens.iter().all(|&t| t != unused as i32));
@@ -1905,13 +1911,14 @@ mod tests {
                     &mp,
                     &tokens,
                     StepKind::Lm { targets: &targets, mask: &mask },
-                );
+                )
+                .unwrap();
                 (loss, g.into_leaves())
             });
             assert_oracle_parity(|o| {
                 let mp = mp_of(&cfg, &leaves);
-                let (loss, _, g) =
-                    loss_and_grads(&cfg, &pool, o, &mp, &tokens, StepKind::Distill);
+                let (loss, _, g) = loss_and_grads(&cfg, &pool, o, &mp, &tokens, StepKind::Distill)
+                    .unwrap();
                 (loss, g.into_leaves())
             });
         }
@@ -1956,13 +1963,14 @@ mod tests {
                     &mp,
                     &tokens,
                     StepKind::Lm { targets: &targets, mask: &mask },
-                );
+                )
+                .unwrap();
                 (loss, g.into_leaves())
             });
             assert_oracle_parity(|o| {
                 let mp = mp_of(&cfg, &leaves);
-                let (loss, _, g) =
-                    loss_and_grads(&cfg, &pool, o, &mp, &tokens, StepKind::Distill);
+                let (loss, _, g) = loss_and_grads(&cfg, &pool, o, &mp, &tokens, StepKind::Distill)
+                    .unwrap();
                 (loss, g.into_leaves())
             });
         }
@@ -1988,7 +1996,7 @@ mod tests {
             let (_, leaves) = leaves_of(&cfg, 0x5EED);
             let want = {
                 let mp = mp_of(&cfg, &leaves);
-                forward_logits(&cfg, &pool, ExecOptions::serial(), &mp, &tokens)
+                forward_logits(&cfg, &pool, ExecOptions::serial(), &mp, &tokens).unwrap()
             };
             let params = cfg.init_params(0x5EED);
             let exe = reg.get(&format!("{tag}_decode_step")).unwrap();

@@ -61,7 +61,7 @@ use super::config::{FeatureKind, ModelConfig};
 use super::json::Json;
 use super::manifest::{Manifest, Slot};
 use super::params::ParamStore;
-use super::pool::WorkerPool;
+use super::pool::{PoolError, WorkerPool};
 use super::ref_lm::{LayerParams, ModelParams};
 use super::simd;
 use super::tensor::{DType, Tensor};
@@ -92,8 +92,9 @@ pub const REF_LM2_TAG: &str = "ref_lm2";
 /// The 4-layer 4-head learnable builtin — non-toy serve/bench geometry.
 pub const REF_LM4_TAG: &str = "ref_lm4";
 
-/// Map `<tag>_decode_step` to its builtin config, if any.
-fn decode_for(name: &str) -> Option<(&'static str, ModelConfig)> {
+/// Map `<tag>_decode_step` to its builtin config, if any. Also used by
+/// `runtime/faults.rs` to decide which executables to interpose on.
+pub(crate) fn decode_for(name: &str) -> Option<(&'static str, ModelConfig)> {
     for tag in ModelConfig::builtin_tags() {
         if name.strip_prefix(tag) == Some("_decode_step") {
             return Some((tag, ModelConfig::for_tag(tag).unwrap()));
@@ -624,10 +625,10 @@ impl BackendExecutable for RefKernel {
         let mut out = vec![0.0f32; b * h * n * dv];
         match self.kernel {
             Kernel::Softmax => {
-                run_softmax(&self.pool, qs, ks, vs, &mut out, b * h, n, d, dv, opts)
+                run_softmax(&self.pool, qs, ks, vs, &mut out, b * h, n, d, dv, opts)?
             }
             Kernel::Linear(fm) => {
-                run_linear(&self.pool, fm, qs, ks, vs, &mut out, b * h, n, d, dv, opts)
+                run_linear(&self.pool, fm, qs, ks, vs, &mut out, b * h, n, d, dv, opts)?
             }
         }
         Ok(vec![Tensor::from_f32(out, &[b, h, n, dv])])
@@ -743,9 +744,9 @@ fn run_linear(
     d: usize,
     dv: usize,
     opts: ExecOptions,
-) {
+) -> Result<(), PoolError> {
     if bh == 0 || n == 0 {
-        return;
+        return Ok(());
     }
     let dp = fm.dim(d);
     if opts.chunk_size == 0 {
@@ -772,7 +773,7 @@ fn run_linear(
                 &mut z,
             );
         }
-        return;
+        return Ok(());
     }
 
     let chunk = opts.chunk_size;
@@ -807,7 +808,7 @@ fn run_linear(
                 (&mut qf, &mut kf, &mut s, &mut z),
             );
         }
-        return;
+        return Ok(());
     }
     let bounds = span_bounds(n, threads.div_ceil(bh), false);
     let nspans = bounds.len() - 1;
@@ -842,7 +843,7 @@ fn run_linear(
                 dv,
                 dp,
             );
-        });
+        })?;
         // Serial prefix-sum over the (few) spans: after this, block j-1
         // holds the full carried-in state for span j.
         for head in 0..bh {
@@ -885,7 +886,7 @@ fn run_linear(
             dv,
             dp,
         );
-    });
+    })
 }
 
 /// Single-pass chunked state carry for one (batch, head): per block,
@@ -1092,9 +1093,9 @@ fn run_softmax(
     d: usize,
     dv: usize,
     opts: ExecOptions,
-) {
+) -> Result<(), PoolError> {
     if bh == 0 || n == 0 {
-        return;
+        return Ok(());
     }
     if opts.chunk_size == 0 {
         // PR-1 naive row-wise oracle: single-threaded, scores hoisted.
@@ -1110,7 +1111,7 @@ fn run_softmax(
                 &mut scores,
             );
         }
-        return;
+        return Ok(());
     }
 
     let flops = (bh * n * n * (d + dv)) as f64;
@@ -1131,7 +1132,7 @@ fn run_softmax(
             d,
             dv,
         );
-    });
+    })
 }
 
 /// Blocked causal softmax over query rows [r0, r1): for each row block,
@@ -1724,7 +1725,7 @@ impl RefDecode {
                     scratch: sc,
                 });
             }
-            self.pool.run_tasks(threads, tasks, |t: DecodeSlot| run_decode_slot(cfg, &mp, t));
+            self.pool.run_tasks(threads, tasks, |t: DecodeSlot| run_decode_slot(cfg, &mp, t))?;
         }
         Ok(())
     }

@@ -270,6 +270,32 @@ pub fn rank1_update(s: &mut [f32], z: &mut [f32], kf: &[f32], v: &[f32]) {
     }
 }
 
+/// All-finite scan, lane-structured like `dot`: lane `l` ORs the
+/// "exponent field is all-ones" bit (the IEEE-754 predicate for NaN and
+/// +-Inf) of elements `l, l+8, l+16, ...` into its own accumulator, the
+/// tail folds scalar, and one final OR-reduction decides. No per-element
+/// branch, no float compare (`x != x` style checks can be rewritten
+/// under fast-math; bit tests cannot), zero allocations — cheap enough
+/// for the serve layer to run over every slot's (S, z) and logits each
+/// decode tick (DESIGN.md §11). Returns `true` iff every element is
+/// finite.
+#[inline]
+pub fn finite_mask(x: &[f32]) -> bool {
+    const EXP: u32 = 0x7f80_0000;
+    let split = x.len() - x.len() % LANES;
+    let mut hit = [0u32; LANES];
+    for cx in x[..split].chunks_exact(LANES) {
+        for l in 0..LANES {
+            hit[l] |= u32::from(cx[l].to_bits() & EXP == EXP);
+        }
+    }
+    let mut any = ((hit[0] | hit[1]) | (hit[2] | hit[3])) | ((hit[4] | hit[5]) | (hit[6] | hit[7]));
+    for &v in &x[split..] {
+        any |= u32::from(v.to_bits() & EXP == EXP);
+    }
+    any == 0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -460,6 +486,24 @@ mod tests {
         // the shifted row always contains a 1 at the argmax coordinate
         let top = pos.iter().chain(neg.iter()).cloned().fold(0.0f32, f32::max);
         assert!((top - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn finite_mask_catches_every_poison_position_and_kind() {
+        for n in [1usize, 7, 8, 9, 15, 16, 17, 63, 64, 100] {
+            let clean = seq(n, 0.3);
+            assert!(finite_mask(&clean), "n={n}: clean data flagged");
+            for poison in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                for i in 0..n {
+                    let mut x = clean.clone();
+                    x[i] = poison;
+                    assert!(!finite_mask(&x), "n={n} i={i} poison={poison} missed");
+                }
+            }
+        }
+        // Denormals, zeros, and extremes of the finite range are finite.
+        assert!(finite_mask(&[0.0, -0.0, f32::MIN_POSITIVE / 2.0, f32::MAX, f32::MIN]));
+        assert!(finite_mask(&[]));
     }
 
     #[test]

@@ -43,8 +43,9 @@ use std::rc::Rc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::reference::prefill_state;
+use crate::runtime::simd::finite_mask;
 use crate::runtime::{
-    ArtifactRegistry, Executable, ExecOptions, ModelConfig, ParamStore, Tensor,
+    ArtifactRegistry, Executable, ExecOptions, ModelConfig, ParamStore, SlotPoisoned, Tensor,
 };
 
 use super::slot::SlotStore;
@@ -79,6 +80,9 @@ pub struct StepExecutor {
     prefill_cfg: Option<ModelConfig>,
     /// Chunking for the prefill pass (captured from the registry).
     prefill_opts: ExecOptions,
+    /// Slots quarantined by the last `step` (bit b = slot b), cleared at
+    /// the start of every step. See the guardrail sweep in `step`.
+    quarantined: u64,
     /// tokens absorbed since construction — decode steps count `batch`
     /// each, prefill counts the prompt length (throughput accounting)
     tokens_processed: usize,
@@ -98,6 +102,7 @@ impl StepExecutor {
         let s_idx = man.input_index("s")?;
         let z_idx = man.input_index("z")?;
         let batch = man.inputs[token_idx].shape[0];
+        assert!(batch <= 64, "quarantine bitmask supports at most 64 slots");
         let vocab = man.meta_usize("vocab").ok_or_else(|| anyhow!("manifest missing vocab"))?;
         if man.outputs.len() != 3 {
             bail!(
@@ -144,6 +149,7 @@ impl StepExecutor {
             vocab,
             prefill_cfg,
             prefill_opts: reg.exec_options(),
+            quarantined: 0,
             tokens_processed: 0,
         };
         let slots = SlotStore::new(s, z, batch);
@@ -223,8 +229,41 @@ impl StepExecutor {
         std::mem::swap(&mut slots.s, &mut self.outs_back[1]);
         std::mem::swap(&mut slots.z, &mut self.outs_back[2]);
         slots.advance_positions();
+        // Guardrail sweep (DESIGN.md §11): a non-finite value in one
+        // slot's logits row or freshly-swapped (S, z) column quarantines
+        // *that slot only* — its state is scrubbed to zero so the poison
+        // cannot survive into the next step, and the bit is reported via
+        // `quarantined()` for the scheduler to resolve. Other slots'
+        // rows are untouched (the decode math is slot-independent).
+        // Allocation-free: bitmask + in-place strided scans.
+        let mut poisoned = 0u64;
+        {
+            let logits = self.logits.as_f32()?;
+            for b in 0..self.batch {
+                if !finite_mask(&logits[b * self.vocab..(b + 1) * self.vocab])
+                    || !slots.state_finite(b)
+                {
+                    poisoned |= 1 << b;
+                }
+            }
+        }
+        self.quarantined = poisoned;
+        for b in 0..self.batch {
+            if poisoned & (1 << b) != 0 {
+                slots.scrub(b)?;
+            }
+        }
         self.tokens_processed += self.batch;
         self.logits.as_f32()
+    }
+
+    /// Bitmask of slots the *last* `step` quarantined (bit b = slot b):
+    /// their (S, z) was found non-finite (or their logits row was) and
+    /// has been scrubbed to zero. Cleared by every step; the caller must
+    /// inspect it before stepping again and resolve the victims — their
+    /// logits row for that step is not trustworthy.
+    pub fn quarantined(&self) -> u64 {
+        self.quarantined
     }
 
     /// Slot `b`'s row of the last step's logits.
@@ -328,6 +367,11 @@ impl Engine {
         self.exec.logits_row(b)
     }
 
+    /// Slots the last step quarantined — see [`StepExecutor::quarantined`].
+    pub fn quarantined(&self) -> u64 {
+        self.exec.quarantined()
+    }
+
     /// Chunked prefill into one slot — see [`StepExecutor::prefill`].
     pub fn prefill_slot(&mut self, slot: usize, prompt: &[i32]) -> Result<Option<Vec<f32>>> {
         self.exec.prefill(&mut self.slots, slot, prompt)
@@ -356,6 +400,12 @@ impl Engine {
                     toks.fill(0);
                     toks[0] = t;
                     next = argmax(&self.step(&toks)?[..vocab]);
+                    // `next` came from a quarantined (untrustworthy) row;
+                    // with no scheduler above to resolve the request as
+                    // `Poisoned`, surface the typed error directly.
+                    if self.quarantined() & 1 != 0 {
+                        return Err(anyhow::Error::new(SlotPoisoned { slot: 0 }));
+                    }
                 }
             }
         }
@@ -368,6 +418,9 @@ impl Engine {
             toks.fill(0);
             toks[0] = next;
             next = argmax(&self.step(&toks)?[..vocab]);
+            if self.quarantined() & 1 != 0 {
+                return Err(anyhow::Error::new(SlotPoisoned { slot: 0 }));
+            }
         }
         Ok(out)
     }
@@ -437,6 +490,56 @@ mod tests {
         let after = engine.step(&vec![7i32; b]).unwrap().to_vec();
         assert_eq!(&after[..v], &fresh[..v], "reset slot must replay its first step");
         assert_ne!(&after[v..2 * v], &fresh[v..2 * v], "unreset slots keep their state");
+    }
+
+    /// DESIGN.md §11 blast-radius contract: poisoning slot 1's state
+    /// quarantines slot 1 only — its column is scrubbed, and every other
+    /// slot's logits row stays bit-identical to a fault-free engine's.
+    #[test]
+    fn quarantine_isolates_the_poisoned_slot() {
+        let mut chaos = ref_engine();
+        let mut clean = ref_engine();
+        let b = chaos.batch();
+        let v = chaos.vocab();
+        chaos.step(&vec![3i32; b]).unwrap();
+        clean.step(&vec![3i32; b]).unwrap();
+        assert_eq!(chaos.quarantined(), 0, "healthy step quarantines nothing");
+        // NaN into slot 1's layer-0 S column between steps
+        let inner: usize = chaos.slots.s.shape[2..].iter().product();
+        chaos.slots.s.as_f32_mut().unwrap()[inner] = f32::NAN;
+        let crow = chaos.step(&vec![5i32; b]).unwrap().to_vec();
+        let krow = clean.step(&vec![5i32; b]).unwrap().to_vec();
+        assert_eq!(chaos.quarantined(), 0b10, "exactly slot 1 quarantined");
+        assert_eq!(chaos.slots.health_check(), 0, "the scrub removed the poison");
+        for slot in (0..b).filter(|&s| s != 1) {
+            assert_eq!(
+                &crow[slot * v..(slot + 1) * v],
+                &krow[slot * v..(slot + 1) * v],
+                "slot {slot} must be bit-identical to the fault-free run"
+            );
+        }
+        // the next step runs clean again (slot 1 restarts from zeroed state)
+        chaos.step(&vec![6i32; b]).unwrap();
+        assert_eq!(chaos.quarantined(), 0);
+    }
+
+    /// `generate_greedy` has no scheduler above it: a quarantine on its
+    /// own slot surfaces as a typed `SlotPoisoned` error. Poison enters
+    /// through the params (an Inf embedding row), the same way a bad
+    /// checkpoint would.
+    #[test]
+    fn generate_greedy_surfaces_slot_poisoned() {
+        let mut params = ref_lm_demo_params();
+        let embed = params.get("params/embed").unwrap();
+        let (v, d) = (embed.shape[0], embed.shape[1]);
+        let mut data = embed.as_f32().unwrap().to_vec();
+        data[3 * d..4 * d].fill(f32::INFINITY);
+        params.insert("params/embed", crate::runtime::Tensor::from_f32(data, &[v, d]));
+        let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+        let mut engine = Engine::new(&reg, REF_LM_TAG, &params).unwrap();
+        let err = engine.generate_greedy(&[3, 5, 7], 8, -1).unwrap_err();
+        let sp = err.downcast_ref::<SlotPoisoned>().expect("typed SlotPoisoned");
+        assert_eq!(sp.slot, 0);
     }
 
     #[test]

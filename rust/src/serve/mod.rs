@@ -20,6 +20,15 @@
 //!
 //! Backpressure is typed: both schedulers' `submit` return
 //! `Result<(), QueueFull>` when the wait queue is at capacity.
+//!
+//! **Fault model** (DESIGN.md §11): the stack degrades per-slot, never
+//! per-process. `SlotStore::health_check` / `StepExecutor::step` detect
+//! non-finite (S, z) or logits and quarantine the offending slot only;
+//! the `Scheduler` resolves every submitted request to exactly one
+//! [`Outcome`] (`Completed`, `DeadlineExceeded`, `Shed`, `Poisoned`)
+//! under a [`ServePolicy`] of tick deadlines, queue shedding, and
+//! bounded retry-with-backoff for transient executor faults. Chaos
+//! coverage lives in `runtime::faults` + benches/serve_soak.rs.
 
 pub mod batcher;
 pub mod engine;
@@ -28,5 +37,5 @@ pub mod slot;
 
 pub use batcher::{Batcher, QueueFull, Request, RequestResult};
 pub use engine::{Engine, StepExecutor};
-pub use scheduler::{Scheduler, ServedRequest, TrafficGen};
+pub use scheduler::{Outcome, Scheduler, ServePolicy, ServedRequest, TrafficGen};
 pub use slot::{SlotLife, SlotStore, HISTORY_TAIL};

@@ -23,6 +23,21 @@
 //! (enforced by rust/tests/alloc_probe.rs). Admission and completion
 //! allocate — they are per-request events, not per-token.
 //!
+//! **Fault lifecycle** (DESIGN.md §11): every submitted request resolves
+//! to exactly one typed [`Outcome`] — `Completed`, `DeadlineExceeded`
+//! (per-request tick budget, [`ServePolicy::deadline_ticks`]), `Shed`
+//! (load shedding of requests stuck in the queue past
+//! [`ServePolicy::shed_queue_ticks`]), or `Poisoned` (the engine
+//! quarantined the request's slot after a non-finite state/logits
+//! detection). Requests refused at `submit` are counted in `rejected`;
+//! the accounting invariant `completed.len() + rejected == submitted`
+//! holds at idle, where `completed` holds every *resolved* request
+//! whatever its outcome. Transient engine errors (injected faults,
+//! contained worker panics) are retried with bounded exponential
+//! backoff instead of tearing the loop down; sustained failure past
+//! [`ServePolicy::max_step_retries`] is fatal. The default policy
+//! disables deadlines and shedding — fault-free behavior is unchanged.
+//!
 //! [`TrafficGen`] generates the synthetic open-loop load (Poisson
 //! arrivals in engine-step time, mixed prompt/output lengths) that
 //! benches/serve_load.rs replays against the scheduler.
@@ -33,9 +48,65 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::data::Pcg32;
+use crate::runtime::simd::finite_mask;
+use crate::runtime::{PoolError, TransientExecError};
 
 use super::batcher::{QueueFull, Request};
 use super::engine::{argmax, Engine};
+
+/// How a submitted request resolved. Exactly one per request; see the
+/// module doc's accounting invariant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Finished normally: hit EOS or its `max_new` budget.
+    Completed,
+    /// Evicted (or swept from the queue) after exceeding the per-request
+    /// tick deadline; any tokens streamed before eviction are kept.
+    DeadlineExceeded,
+    /// Dropped from the wait queue by load shedding; never admitted, no
+    /// tokens streamed.
+    Shed,
+    /// The engine quarantined the request's slot (non-finite state or
+    /// logits). Tokens streamed before the quarantine are kept; the
+    /// tick's untrustworthy token is not.
+    Poisoned,
+}
+
+/// Robustness knobs for the scheduler loop. `Default` disables deadlines
+/// and shedding and retries transient faults up to 3 times — the
+/// fault-free hot path is byte-identical to the pre-policy scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServePolicy {
+    /// Max scheduler ticks a request may spend (queued + active) before
+    /// it is resolved `DeadlineExceeded`. 0 disables.
+    pub deadline_ticks: usize,
+    /// Max ticks a request may wait in the queue before load shedding
+    /// resolves it `Shed`. 0 disables.
+    pub shed_queue_ticks: usize,
+    /// Consecutive transient step failures tolerated before the error is
+    /// fatal to `tick`.
+    pub max_step_retries: usize,
+    /// Base backoff (in ticks) after a transient failure; doubles per
+    /// consecutive failure.
+    pub retry_backoff_ticks: usize,
+}
+
+impl Default for ServePolicy {
+    fn default() -> Self {
+        ServePolicy {
+            deadline_ticks: 0,
+            shed_queue_ticks: 0,
+            max_step_retries: 3,
+            retry_backoff_ticks: 1,
+        }
+    }
+}
+
+/// Transient = retry-with-backoff instead of fatal: injected transient
+/// executor faults and contained worker-pool panics.
+fn is_transient(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<TransientExecError>().is_some() || e.downcast_ref::<PoolError>().is_some()
+}
 
 /// A finished request with its streamed output and timing.
 #[derive(Debug, Clone)]
@@ -45,12 +116,17 @@ pub struct ServedRequest {
     pub prompt_len: usize,
     /// scheduler ticks spent queued before admission
     pub queue_steps: usize,
-    /// seconds from submit to first generated token
-    pub ttft: f64,
-    /// seconds from submit to completion
+    /// seconds from submit to first generated token; `None` if the
+    /// request never produced one (`max_new == 0`, immediate EOS, shed,
+    /// poisoned or evicted before its first token) — previously this was
+    /// silently conflated with `total`
+    pub ttft: Option<f64>,
+    /// seconds from submit to resolution
     pub total: f64,
     /// engine decode steps consumed after admission
     pub decode_steps: usize,
+    /// how the request resolved (exactly one outcome per request)
+    pub outcome: Outcome,
 }
 
 #[derive(Debug)]
@@ -73,11 +149,27 @@ pub struct Scheduler {
     queue: VecDeque<(Request, Instant, usize)>,
     slots: Vec<Option<ActiveSlot>>,
     pub max_queue: usize,
+    /// Every *resolved* request, whatever its [`Outcome`] (the name
+    /// predates the outcome taxonomy; `completed.len() + rejected ==
+    /// submitted` at idle).
     pub completed: Vec<ServedRequest>,
     /// submissions refused with [`QueueFull`]
     pub rejected: usize,
+    /// requests resolved `Outcome::Shed`
+    pub shed: usize,
+    /// requests resolved `Outcome::DeadlineExceeded`
+    pub deadline_exceeded: usize,
+    /// requests resolved `Outcome::Poisoned`
+    pub poisoned: usize,
+    /// transient engine-step failures absorbed by retry-with-backoff
+    pub transient_faults: usize,
     /// high-water mark of simultaneously active slots
     pub max_concurrent: usize,
+    policy: ServePolicy,
+    /// consecutive transient step failures (reset by a successful step)
+    consec_failures: usize,
+    /// ticks left to sit out before retrying after a transient failure
+    backoff_wait: usize,
     steps: usize,
     /// persistent per-tick buffers (zero-alloc decode loop)
     tokens: Vec<i32>,
@@ -86,6 +178,11 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(capacity: usize, max_queue: usize) -> Self {
+        Self::with_policy(capacity, max_queue, ServePolicy::default())
+    }
+
+    /// A scheduler with explicit robustness knobs — see [`ServePolicy`].
+    pub fn with_policy(capacity: usize, max_queue: usize, policy: ServePolicy) -> Self {
         Scheduler {
             capacity,
             queue: VecDeque::new(),
@@ -93,7 +190,14 @@ impl Scheduler {
             max_queue,
             completed: Vec::new(),
             rejected: 0,
+            shed: 0,
+            deadline_exceeded: 0,
+            poisoned: 0,
+            transient_faults: 0,
             max_concurrent: 0,
+            policy,
+            consec_failures: 0,
+            backoff_wait: 0,
             steps: 0,
             tokens: vec![0; capacity],
             sampled: vec![0; capacity],
@@ -139,6 +243,20 @@ impl Scheduler {
         on_token: &mut impl FnMut(u64, i32),
     ) -> Result<bool> {
         assert_eq!(engine.batch(), self.capacity, "engine batch != scheduler capacity");
+        // Lifecycle first: shed/expire queued requests and evict active
+        // ones past their deadline, so the slots they held are
+        // admissible in this very tick. No-op under the default policy.
+        self.enforce_lifecycle(engine);
+        // Retry backoff: after a transient step failure the loop sits
+        // out `backoff_wait` ticks. Queued requests keep aging (their
+        // deadlines measure wall progress, not engine progress).
+        if self.backoff_wait > 0 {
+            self.backoff_wait -= 1;
+            for (_, _, q) in self.queue.iter_mut() {
+                *q += 1;
+            }
+            return Ok(false);
+        }
         // Admissions: fill every free slot FIFO from the queue. A slot
         // released in the previous tick's record phase is free here —
         // eviction never costs a step.
@@ -162,16 +280,25 @@ impl Scheduler {
             // decode steps spent on the prompt.
             if let Some(logits) = engine.prefill_slot(slot, &a.req.prompt)? {
                 a.fed = a.req.prompt.len();
+                // Admission guardrail: a prompt that drives the state or
+                // logits non-finite (bad params, poisoned checkpoint) is
+                // resolved `Poisoned` here — before its garbage row can
+                // sample a token or its state can join the batch.
+                if !finite_mask(&logits[..engine.vocab()]) || !engine.slots.state_finite(slot) {
+                    engine.slots.scrub(slot)?;
+                    self.resolve(slot, a, Outcome::Poisoned, engine);
+                    continue;
+                }
                 let tok = argmax(&logits[..engine.vocab()]);
                 if tok == a.req.eos || a.req.max_new == 0 {
-                    self.finish(slot, a, engine);
+                    self.resolve(slot, a, Outcome::Completed, engine);
                     continue;
                 }
                 a.ttft = Some(a.submitted.elapsed().as_secs_f64());
                 a.output.push(tok);
                 on_token(a.req.id, tok);
                 if a.output.len() == a.req.max_new {
-                    self.finish(slot, a, engine);
+                    self.resolve(slot, a, Outcome::Completed, engine);
                     continue;
                 }
             }
@@ -201,11 +328,48 @@ impl Scheduler {
             };
         }
         let vocab = engine.vocab();
-        let logits = engine.step(&self.tokens)?;
+        // Transient failures (injected faults, contained worker panics)
+        // are absorbed with exponential backoff: the batch state was not
+        // advanced (pre-execute faults fail before the math runs), so
+        // the same tokens retry cleanly. Anything else — or exhausted
+        // retries — is fatal.
+        let logits = match engine.step(&self.tokens) {
+            Ok(l) => l,
+            Err(e) if is_transient(&e) => {
+                self.transient_faults += 1;
+                self.consec_failures += 1;
+                if self.consec_failures > self.policy.max_step_retries {
+                    return Err(e.context("decode step failed after exhausting retries"));
+                }
+                self.backoff_wait = self.policy.retry_backoff_ticks << (self.consec_failures - 1);
+                for (_, _, q) in self.queue.iter_mut() {
+                    *q += 1;
+                }
+                return Ok(false);
+            }
+            Err(e) => return Err(e),
+        };
+        self.consec_failures = 0;
         for (b, s) in self.sampled.iter_mut().enumerate() {
             *s = argmax(&logits[b * vocab..(b + 1) * vocab]);
         }
         self.steps += 1;
+
+        // Quarantine resolution: slots the engine flagged this step hold
+        // scrubbed state and an untrustworthy logits row. Resolve their
+        // requests `Poisoned` — without streaming this step's token —
+        // before the record phase touches them. Fault-free: `q == 0`,
+        // zero work.
+        let q = engine.quarantined();
+        if q != 0 {
+            for slot in 0..self.capacity {
+                if q & (1 << slot) != 0 {
+                    if let Some(a) = self.slots[slot].take() {
+                        self.resolve(slot, a, Outcome::Poisoned, engine);
+                    }
+                }
+            }
+        }
 
         // Record: advance prefill counters, stream sampled tokens, evict
         // finished slots (their columns are admissible next tick).
@@ -223,7 +387,7 @@ impl Scheduler {
             let tok = self.sampled[slot];
             if tok == a.req.eos || a.req.max_new == 0 {
                 let a = self.slots[slot].take().unwrap();
-                self.finish(slot, a, engine);
+                self.resolve(slot, a, Outcome::Completed, engine);
                 continue;
             }
             if a.ttft.is_none() {
@@ -233,7 +397,7 @@ impl Scheduler {
             on_token(a.req.id, tok);
             if a.output.len() == a.req.max_new {
                 let a = self.slots[slot].take().unwrap();
-                self.finish(slot, a, engine);
+                self.resolve(slot, a, Outcome::Completed, engine);
             }
         }
         Ok(true)
@@ -254,18 +418,95 @@ impl Scheduler {
         Ok((self.steps - start, t0.elapsed().as_secs_f64()))
     }
 
-    fn finish(&mut self, slot: usize, a: ActiveSlot, engine: &mut Engine) {
+    /// Queue sweep (shed, then deadline) and active-slot deadline
+    /// eviction. A no-op when both knobs are disabled (default policy):
+    /// the fault-free hot path pays one branch.
+    fn enforce_lifecycle(&mut self, engine: &mut Engine) {
+        let p = self.policy;
+        if p.deadline_ticks == 0 && p.shed_queue_ticks == 0 {
+            return;
+        }
+        let mut i = 0;
+        while i < self.queue.len() {
+            let waited = self.queue[i].2;
+            let outcome = if p.shed_queue_ticks > 0 && waited >= p.shed_queue_ticks {
+                Some(Outcome::Shed)
+            } else if p.deadline_ticks > 0 && waited >= p.deadline_ticks {
+                Some(Outcome::DeadlineExceeded)
+            } else {
+                None
+            };
+            match outcome {
+                Some(o) => {
+                    let (req, submitted, waited) = self.queue.remove(i).unwrap();
+                    self.resolve_queued(req, submitted, waited, o);
+                }
+                None => i += 1,
+            }
+        }
+        if p.deadline_ticks == 0 {
+            return;
+        }
+        for slot in 0..self.capacity {
+            // Deadline counts scheduler-progress ticks (queued + active),
+            // not wall time: deterministic under a replayed arrival trace.
+            let expired = self.slots[slot]
+                .as_ref()
+                .is_some_and(|a| a.queue_steps + a.steps >= p.deadline_ticks);
+            if expired {
+                let a = self.slots[slot].take().unwrap();
+                self.resolve(slot, a, Outcome::DeadlineExceeded, engine);
+            }
+        }
+    }
+
+    /// Resolve an admitted request: free its slot, count the outcome,
+    /// record the result (partial output and real `ttft` included —
+    /// `None` stays `None`, never conflated with `total`).
+    fn resolve(&mut self, slot: usize, a: ActiveSlot, outcome: Outcome, engine: &mut Engine) {
         engine.slots.release(slot);
-        let total = a.submitted.elapsed().as_secs_f64();
+        self.count(outcome);
         self.completed.push(ServedRequest {
             id: a.req.id,
             output: a.output,
             prompt_len: a.req.prompt.len(),
             queue_steps: a.queue_steps,
-            ttft: a.ttft.unwrap_or(total),
-            total,
+            ttft: a.ttft,
+            total: a.submitted.elapsed().as_secs_f64(),
             decode_steps: a.steps,
+            outcome,
         });
+    }
+
+    /// Resolve a request straight out of the wait queue (shed/expired
+    /// before admission): no slot, no output, no first token.
+    fn resolve_queued(
+        &mut self,
+        req: Request,
+        submitted: Instant,
+        queue_steps: usize,
+        outcome: Outcome,
+    ) {
+        self.count(outcome);
+        self.completed.push(ServedRequest {
+            id: req.id,
+            output: Vec::new(),
+            prompt_len: req.prompt.len(),
+            queue_steps,
+            ttft: None,
+            total: submitted.elapsed().as_secs_f64(),
+            decode_steps: 0,
+            outcome,
+        });
+    }
+
+    fn count(&mut self, outcome: Outcome) {
+        match outcome {
+            Outcome::Completed => {}
+            Outcome::DeadlineExceeded => self.deadline_exceeded += 1,
+            Outcome::Shed => self.shed += 1,
+            Outcome::Poisoned => self.poisoned += 1,
+        }
     }
 }
 
@@ -380,7 +621,12 @@ mod tests {
         assert_eq!(streamed, kept);
         for r in &sched.completed {
             assert!(r.output.len() <= 6);
-            assert!(r.ttft <= r.total);
+            assert_eq!(r.outcome, Outcome::Completed, "default policy resolves only Completed");
+            if let Some(t) = r.ttft {
+                assert!(t <= r.total);
+            } else {
+                assert!(r.output.is_empty(), "ttft None only for token-less requests");
+            }
         }
     }
 
@@ -441,6 +687,69 @@ mod tests {
         assert_eq!(steps, 0);
         assert_eq!(sched.completed.len(), 1);
         assert!(sched.completed[0].output.is_empty());
+        assert_eq!(sched.completed[0].outcome, Outcome::Completed);
+        assert_eq!(sched.completed[0].ttft, None, "no first token -> no ttft (the old bug)");
+    }
+
+    /// A request that outlives its tick deadline is evicted with its
+    /// partial output kept, and the freed slot admits the next request
+    /// in the same tick.
+    #[test]
+    fn deadline_evicts_stragglers_and_keeps_partial_output() {
+        let mut engine = ref_engine();
+        let policy = ServePolicy { deadline_ticks: 4, ..ServePolicy::default() };
+        let mut sched = Scheduler::with_policy(engine.batch(), 8, policy);
+        // wants 100 tokens, will only ever get a few
+        sched.submit(Request { id: 1, prompt: vec![3, 5], max_new: 100, eos: -1 }).unwrap();
+        let mut streamed = 0usize;
+        sched.run(&mut engine, &mut |_, _| streamed += 1).unwrap();
+        assert_eq!(sched.completed.len(), 1);
+        let r = &sched.completed[0];
+        assert_eq!(r.outcome, Outcome::DeadlineExceeded);
+        assert_eq!(sched.deadline_exceeded, 1);
+        assert!(!r.output.is_empty(), "tokens streamed before eviction are kept");
+        assert!(r.output.len() < 100);
+        assert_eq!(r.output.len(), streamed, "eviction streams no extra token");
+        assert!(r.ttft.is_some(), "it did produce a first token");
+        // the slot is reusable: a short request completes normally after
+        sched.submit(Request { id: 2, prompt: vec![1], max_new: 2, eos: -1 }).unwrap();
+        sched.run(&mut engine, &mut |_, _| {}).unwrap();
+        assert_eq!(sched.completed[1].outcome, Outcome::Completed);
+    }
+
+    /// Sustained overload: requests stuck in the queue past the shed
+    /// budget resolve `Shed` (never admitted, no tokens), while admitted
+    /// requests complete; accounting covers every submission.
+    #[test]
+    fn overload_sheds_queued_requests() {
+        let mut engine = ref_engine();
+        let cap = engine.batch();
+        let policy = ServePolicy { shed_queue_ticks: 1, ..ServePolicy::default() };
+        let mut sched = Scheduler::with_policy(cap, 2 * cap, policy);
+        let submitted = cap + 3;
+        for i in 0..submitted as u64 {
+            sched
+                .submit(Request { id: i, prompt: vec![2, 4], max_new: 6, eos: -1 })
+                .unwrap();
+        }
+        sched.run(&mut engine, &mut |_, _| {}).unwrap();
+        assert_eq!(sched.completed.len() + sched.rejected, submitted);
+        assert_eq!(sched.shed, 3, "the overflow wave is shed, not served");
+        let shed: Vec<_> =
+            sched.completed.iter().filter(|r| r.outcome == Outcome::Shed).collect();
+        assert_eq!(shed.len(), 3);
+        for r in &shed {
+            assert!(r.output.is_empty());
+            assert_eq!(r.ttft, None);
+            assert_eq!(r.decode_steps, 0);
+        }
+        let done = sched.completed.iter().filter(|r| r.outcome == Outcome::Completed).count();
+        assert_eq!(done, cap, "the admitted wave completes normally");
+        // outcome counters agree with the per-request records
+        assert_eq!(
+            sched.completed.len(),
+            done + sched.shed + sched.deadline_exceeded + sched.poisoned
+        );
     }
 
     #[test]

@@ -24,6 +24,7 @@
 
 use anyhow::Result;
 
+use crate::runtime::simd::finite_mask;
 use crate::runtime::Tensor;
 
 /// Tokens of per-slot history kept (most recent last): enough for
@@ -134,6 +135,39 @@ impl SlotStore {
         }
     }
 
+    /// `true` iff every element of this slot's (S, z) columns is finite.
+    /// Allocation-free: strided [`finite_mask`] scans over the
+    /// contiguous inner runs of each column.
+    pub fn state_finite(&self, slot: usize) -> bool {
+        assert!(slot < self.batch);
+        slot_finite(&self.s, 1, slot) && slot_finite(&self.z, 1, slot)
+    }
+
+    /// Bitmask of slots whose recurrent state holds a non-finite value
+    /// (bit `i` = slot `i`). Scans every slot, free or active — poison in
+    /// a stale free column would otherwise resurface on the wholesale
+    /// state swap. Batches beyond 64 slots are not scanned (the step
+    /// executor asserts `batch <= 64` at construction).
+    pub fn health_check(&self) -> u64 {
+        let mut mask = 0u64;
+        for slot in 0..self.batch.min(64) {
+            if !self.state_finite(slot) {
+                mask |= 1 << slot;
+            }
+        }
+        mask
+    }
+
+    /// Quarantine recovery: zero one slot's (S, z) columns in place,
+    /// touching nothing else — no position, history, or lifecycle
+    /// change. Whether the slot's sequence is then resolved (`Poisoned`)
+    /// or re-admitted is the scheduler's decision, not the store's.
+    pub fn scrub(&mut self, slot: usize) -> Result<()> {
+        assert!(slot < self.batch);
+        zero_slot(&mut self.s, 1, slot)?;
+        zero_slot(&mut self.z, 1, slot)
+    }
+
     /// Prefill handoff: install a single-slot (L, H, Dp, Dv) / (L, H, Dp)
     /// state — e.g. from `runtime::reference::prefill_state` — into this
     /// slot's columns and set its position (the prompt length). The slot
@@ -147,6 +181,23 @@ impl SlotStore {
         self.life[slot] = SlotLife::Active;
         Ok(())
     }
+}
+
+/// All-finite scan of the `slot`-th column along `axis` — the read-only
+/// sibling of `zero_slot`'s addressing. Non-f32 tensors report unhealthy
+/// rather than panicking (the store only ever holds f32 state).
+fn slot_finite(t: &Tensor, axis: usize, slot: usize) -> bool {
+    let outer: usize = t.shape[..axis].iter().product();
+    let axis_len = t.shape[axis];
+    let inner: usize = t.shape[axis + 1..].iter().product();
+    let data = match t.as_f32() {
+        Ok(d) => d,
+        Err(_) => return false,
+    };
+    (0..outer).all(|o| {
+        let base = o * axis_len * inner + slot * inner;
+        finite_mask(&data[base..base + inner])
+    })
 }
 
 /// Zero the `slot`-th column of a tensor along axis `axis` (axis 1 = the
@@ -241,6 +292,36 @@ mod tests {
         assert!(st.history(1).is_empty());
         st.reset(0).unwrap();
         assert!(st.history(0).is_empty());
+    }
+
+    #[test]
+    fn health_check_flags_only_the_poisoned_slot() {
+        let mut st = store();
+        assert_eq!(st.health_check(), 0, "fresh finite state is healthy");
+        // NaN in slot 1's S column (layer 1) and +Inf in slot 2's z.
+        st.s.as_f32_mut().unwrap()[17] = f32::NAN;
+        st.z.as_f32_mut().unwrap()[5] = f32::INFINITY;
+        assert!(!st.state_finite(1));
+        assert!(!st.state_finite(2));
+        assert!(st.state_finite(0), "slot 0 untouched");
+        assert_eq!(st.health_check(), 0b110);
+    }
+
+    #[test]
+    fn scrub_clears_state_only_for_that_slot() {
+        let mut st = store();
+        st.reset(1).unwrap();
+        st.record(1, 42);
+        st.s.as_f32_mut().unwrap()[5] = f32::NEG_INFINITY;
+        assert_eq!(st.health_check(), 0b010);
+        st.scrub(1).unwrap();
+        assert_eq!(st.health_check(), 0);
+        let d = st.s.as_f32().unwrap();
+        assert!(d[4..8].iter().all(|&x| x == 0.0));
+        assert!(d[0..4].iter().all(|&x| x != 0.0), "slot 0 column untouched");
+        // scrub is state-only: lifecycle, position, history survive
+        assert_eq!(st.life(1), SlotLife::Active);
+        assert_eq!(st.history(1), &[42]);
     }
 
     #[test]

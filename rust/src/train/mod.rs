@@ -1,5 +1,12 @@
 //! Training orchestration: the generic step driver over AOT train/distill
 //! graphs, LR schedules, and the two-stage conversion pipeline (A.3).
+//!
+//! Crash safety (DESIGN.md §11): `Session::checkpoint`/`resume` persist
+//! the full optimization state (params + AdamW moments + step counter)
+//! atomically, so a killed run resumes bit-identically from the last
+//! checkpoint; a non-finite loss surfaces as the typed
+//! [`NonFiniteLoss`] error, and `Session::run_guarded` turns it into
+//! skip-the-batch + rollback-to-checkpoint instead of lost progress.
 
 pub mod conversion;
 pub mod schedule;
@@ -7,4 +14,4 @@ pub mod session;
 
 pub use conversion::{convert, ConversionSpec};
 pub use schedule::Schedule;
-pub use session::{Batch, Session};
+pub use session::{Batch, GuardReport, NonFiniteLoss, Session, CKPT_STEP_KEY};

@@ -12,11 +12,60 @@
 //! keeps the train-loop integration test, the conversion pipeline, and the
 //! train bench running in CI without `make artifacts`.
 
+use std::path::Path;
 use std::rc::Rc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::{ArtifactRegistry, Executable, ExecOptions, ParamStore, Tensor};
+
+/// Typed error for a step whose `loss` output came back NaN/Inf
+/// (divergence, poisoned batch, bad checkpoint). Surfaced instead of
+/// silently entering `Session::losses`, where it would corrupt every
+/// trailing mean and loss-decrease gate downstream. The session's
+/// params/opt state HAS already absorbed the bad update when this is
+/// returned — recovery policy (skip + rollback) belongs to the guarded
+/// layer, [`Session::run_guarded`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct NonFiniteLoss {
+    /// Step index the failing update ran at (pre-increment).
+    pub step: i32,
+    /// Step artifact that produced it.
+    pub artifact: String,
+    pub loss: f32,
+}
+
+impl std::fmt::Display for NonFiniteLoss {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "step artifact {:?} produced non-finite loss {} at step {}",
+            self.artifact, self.loss, self.step
+        )
+    }
+}
+
+impl std::error::Error for NonFiniteLoss {}
+
+/// What [`Session::run_guarded`] did: how many steps landed, which batch
+/// cursors were skipped as poisonous, and the checkpoint/rollback count.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GuardReport {
+    /// optimization steps that completed
+    pub steps: usize,
+    /// global batch cursors whose step produced a non-finite loss
+    pub skipped: Vec<usize>,
+    /// rollbacks to the last checkpoint
+    pub rollbacks: usize,
+    /// checkpoints written (the entry checkpoint included)
+    pub checkpoints: usize,
+    /// loss of the last completed step (NaN if `steps == 0`)
+    pub final_loss: f32,
+}
+
+/// Leaf name carrying the global step counter inside a session
+/// checkpoint (disjoint from `params/`, `m/`, `v/` by construction).
+pub const CKPT_STEP_KEY: &str = "ckpt/step";
 
 /// Named batch tensors, matched to manifest slots by name.
 #[derive(Debug, Clone, Default)]
@@ -109,6 +158,7 @@ impl Session {
     /// optimizer moments are fed back every step, and cloning them per
     /// step dominated the small-model hot path (§Perf L3).
     pub fn train_step(&mut self, lr: f32, wd: f32, batch: &Batch) -> Result<f32> {
+        let step_before = self.step;
         let step_t = Tensor::scalar_i32(self.step);
         let lr_t = Tensor::scalar_f32(lr);
         let wd_t = Tensor::scalar_f32(wd);
@@ -156,6 +206,18 @@ impl Session {
         let loss = loss.ok_or_else(|| {
             anyhow!("step artifact {:?} declares no `loss` output", man.name)
         })?;
+        // Non-finite loss is a typed error, not a recorded data point.
+        // NOTE: params/opt/step were already scattered above — the bad
+        // update is in the session. Rollback policy lives in
+        // `run_guarded`; bare callers should treat the session as
+        // tainted (restore a checkpoint or discard it).
+        if !loss.is_finite() {
+            return Err(anyhow::Error::new(NonFiniteLoss {
+                step: step_before,
+                artifact: man.name.clone(),
+                loss,
+            }));
+        }
         self.losses.push(loss);
         Ok(loss)
     }
@@ -184,6 +246,135 @@ impl Session {
         let k = n.min(self.losses.len());
         self.losses[self.losses.len() - k..].iter().sum::<f32>() / k as f32
     }
+
+    // -- crash safety (DESIGN.md §11) -----------------------------------
+
+    /// Atomically checkpoint the full optimization state — every param
+    /// leaf, the AdamW `m/`/`v/` moments, and the step counter (under
+    /// [`CKPT_STEP_KEY`]) — in the existing `ParamStore` binary format
+    /// via `save_atomic`: a crash mid-write leaves the previous
+    /// checkpoint intact. The loss history is telemetry, not
+    /// optimization state, and is deliberately not checkpointed.
+    pub fn checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut all = self.params.clone();
+        for (name, t) in &self.opt.tensors {
+            all.insert(name.clone(), t.clone());
+        }
+        all.insert(CKPT_STEP_KEY, Tensor::scalar_i32(self.step));
+        all.save_atomic(path)
+    }
+
+    /// Roll this session's params/opt/step back to a [`checkpoint`]
+    /// (`losses` is untouched — truncate it yourself if replaying).
+    ///
+    /// [`checkpoint`]: Session::checkpoint
+    pub fn restore(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let (params, opt, step) = split_checkpoint(ParamStore::load(path)?)?;
+        self.params = params;
+        self.opt = opt;
+        self.step = step;
+        Ok(())
+    }
+
+    /// Rebuild a session from a checkpoint in a fresh process (the
+    /// kill-and-resume path): same params, moments, and step counter, so
+    /// step k+1 is bit-identical to the uninterrupted run's. The loss
+    /// history starts empty.
+    pub fn resume(
+        reg: &ArtifactRegistry,
+        step_name: &str,
+        path: impl AsRef<Path>,
+    ) -> Result<Session> {
+        let (params, opt, step) = split_checkpoint(ParamStore::load(path)?)?;
+        let step_exe = reg.get(step_name)?;
+        Ok(Session { step_exe, params, opt, step, losses: Vec::new() })
+    }
+
+    /// `run` with the skip-and-rollback guardrail: checkpoint on entry
+    /// and every `ckpt_every` completed steps; when a step raises
+    /// [`NonFiniteLoss`], mark its global batch cursor poisonous, roll
+    /// the session back to the last checkpoint, and replay — skipping
+    /// every known-bad cursor. `lr` is indexed by completed-step count,
+    /// `next_batch` by the global cursor (so a replay feeds the same
+    /// data stream minus the poison). Fails if more cursors are skipped
+    /// than steps requested (the data is hopeless, not unlucky).
+    pub fn run_guarded(
+        &mut self,
+        steps: usize,
+        lr: impl Fn(usize) -> f32,
+        wd: f32,
+        mut next_batch: impl FnMut(usize) -> Batch,
+        ckpt_path: impl AsRef<Path>,
+        ckpt_every: usize,
+    ) -> Result<GuardReport> {
+        assert!(ckpt_every > 0, "ckpt_every must be positive");
+        let path = ckpt_path.as_ref();
+        let mut report = GuardReport { final_loss: f32::NAN, ..GuardReport::default() };
+        self.checkpoint(path)?;
+        report.checkpoints = 1;
+        // (completed steps, batch cursor, losses len) at the last checkpoint
+        let mut ckpt = (0usize, 0usize, self.losses.len());
+        let mut done = 0usize;
+        let mut cursor = 0usize;
+        while done < steps {
+            if report.skipped.len() > steps {
+                bail!(
+                    "run_guarded: skipped {} batches for {} requested steps — every \
+                     replay hits new non-finite losses, giving up",
+                    report.skipped.len(),
+                    steps
+                );
+            }
+            if report.skipped.contains(&cursor) {
+                cursor += 1;
+                continue;
+            }
+            let b = next_batch(cursor);
+            match self.train_step(lr(done), wd, &b) {
+                Ok(loss) => {
+                    report.final_loss = loss;
+                    done += 1;
+                    cursor += 1;
+                    if done % ckpt_every == 0 {
+                        self.checkpoint(path)?;
+                        report.checkpoints += 1;
+                        ckpt = (done, cursor, self.losses.len());
+                    }
+                }
+                Err(e) if e.downcast_ref::<NonFiniteLoss>().is_some() => {
+                    report.skipped.push(cursor);
+                    report.rollbacks += 1;
+                    self.restore(path)?;
+                    self.losses.truncate(ckpt.2);
+                    done = ckpt.0;
+                    cursor = ckpt.1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        report.steps = done;
+        Ok(report)
+    }
+}
+
+/// Split a checkpoint store back into (params, opt moments, step).
+fn split_checkpoint(all: ParamStore) -> Result<(ParamStore, ParamStore, i32)> {
+    let mut params = ParamStore::new();
+    let mut opt = ParamStore::new();
+    let mut step = None;
+    for (name, t) in all.tensors {
+        if name == CKPT_STEP_KEY {
+            step = Some(t.item_i32()?);
+        } else if name.starts_with("m/") || name.starts_with("v/") {
+            opt.insert(name, t);
+        } else {
+            params.insert(name, t);
+        }
+    }
+    let step = step.ok_or_else(|| {
+        anyhow!("checkpoint missing {CKPT_STEP_KEY:?} leaf — not a session checkpoint?")
+    })?;
+    Ok((params, opt, step))
 }
 
 /// Deterministic, learnable batch for the builtin `ref_lm` training
@@ -326,6 +517,26 @@ mod tests {
             "{err:#}"
         );
         assert!(s.losses.is_empty(), "a failed step must not record a loss");
+    }
+
+    #[test]
+    fn train_step_surfaces_non_finite_loss_as_typed_error() {
+        let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+        reg.set_exec_options(ExecOptions::serial());
+        let mut s = Session::init(&reg, "ref_lm", 3).unwrap();
+        let mut batch = ref_lm_demo_batch(0, false);
+        // poison the loss mask: the masked mean loss is NaN
+        for (name, t) in batch.slots.iter_mut() {
+            if name == "loss_mask" {
+                t.as_f32_mut().unwrap()[0] = f32::NAN;
+            }
+        }
+        let err = s.train_step(1e-3, 0.0, &batch).unwrap_err();
+        let nf = err.downcast_ref::<NonFiniteLoss>().expect("typed NonFiniteLoss");
+        assert_eq!(nf.step, 0, "reports the step the failing update ran at");
+        assert_eq!(nf.artifact, "ref_lm_train_step");
+        assert!(!nf.loss.is_finite());
+        assert!(s.losses.is_empty(), "the poisoned loss must not be recorded");
     }
 
     #[test]

@@ -133,16 +133,22 @@ fn decode_probe() {
 /// The continuous-batching scheduler's decode loop on top of the engine:
 /// mid-generation ticks (no admissions, no evictions, no streaming side
 /// effects) must allocate nothing — the scheduler's token/sample buffers
-/// persist and per-request outputs are pre-reserved at admission.
+/// persist and per-request outputs are pre-reserved at admission. The
+/// robustness layer rides along for free: deadline/shed bookkeeping is
+/// armed (large budgets, so nothing triggers), the engine's per-step
+/// quarantine scan runs, and an explicit `health_check` sweep is added
+/// to the measured window — none of it may allocate.
 fn scheduler_probe() {
-    use hedgehog::serve::{Request, Scheduler};
+    use hedgehog::serve::{Request, Scheduler, ServePolicy};
 
     let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
     reg.set_exec_options(ExecOptions::serial());
     let params = ref_lm_demo_params();
     let mut engine = Engine::new(&reg, REF_LM_TAG, &params).unwrap();
     let cap = engine.batch();
-    let mut sched = Scheduler::new(cap, 2 * cap);
+    let policy =
+        ServePolicy { deadline_ticks: 10_000, shed_queue_ticks: 10_000, ..ServePolicy::default() };
+    let mut sched = Scheduler::with_policy(cap, 2 * cap, policy);
     for id in 0..cap as u64 {
         // max_new large enough that no slot finishes inside the window
         sched.submit(Request { id, prompt: vec![2, 4, 6], max_new: 64, eos: -1 }).unwrap();
@@ -155,10 +161,12 @@ fn scheduler_probe() {
     let allocs = alloc_calls_during(|| {
         for _ in 0..8 {
             sched.tick(&mut engine, &mut sink).unwrap();
+            std::hint::black_box(engine.slots.health_check());
         }
     });
     assert_eq!(allocs, 0, "Scheduler::tick allocated {allocs} times over 8 decode ticks (want 0)");
     assert_eq!(sched.active(), cap, "probe window must stay mid-generation");
+    assert_eq!(engine.quarantined(), 0, "fault-free probe must not quarantine");
 }
 
 #[test]

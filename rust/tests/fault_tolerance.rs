@@ -1,0 +1,292 @@
+//! Fault-tolerance integration tests (DESIGN.md §11): seeded chaos
+//! against the serve stack and kill/resume against the train stack.
+//!
+//! Everything here is hermetic (reference backend builtins, no
+//! artifacts on disk) and deterministic: chaos schedules are pure
+//! functions of a seed via [`FaultPlan`], so a failure replays
+//! byte-for-byte. Injected worker panics print their unwind message to
+//! stderr — in this test binary those lines are expected output, not a
+//! crash (the pool contains them and the scheduler retries).
+
+use hedgehog::runtime::{
+    ref_lm_demo_params, ArtifactRegistry, ChaosBackend, ExecOptions, FaultEvent, FaultKind,
+    FaultPlan, FaultRates, PoolError, TransientExecError, REF_LM_TAG,
+};
+use hedgehog::serve::{Engine, Outcome, Request, Scheduler, ServePolicy, TrafficGen};
+use hedgehog::train::session::{ref_lm_demo_batch, Session};
+
+fn chaos_registry(plan: FaultPlan) -> ArtifactRegistry {
+    let (chaos, _handle) = ChaosBackend::with_plan(plan);
+    let reg = ArtifactRegistry::with_backend("/nonexistent/artifacts-dir", Box::new(chaos))
+        .expect("chaos registry");
+    reg.set_exec_options(ExecOptions::serial());
+    reg
+}
+
+fn ref_registry() -> ArtifactRegistry {
+    let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").expect("reference registry");
+    reg.set_exec_options(ExecOptions::serial());
+    reg
+}
+
+/// Drive a scheduler + traffic generator to idle, submitting everything
+/// the generator produces. Returns how many requests were submitted.
+fn drive_to_idle(
+    sched: &mut Scheduler,
+    engine: &mut Engine,
+    gen: &mut TrafficGen,
+    target: u64,
+) -> usize {
+    let mut submitted = 0usize;
+    let mut clock = 0usize;
+    while gen.generated() < target || !sched.is_idle() {
+        if gen.generated() < target {
+            while let Some(req) = gen.next_if_due(clock) {
+                submitted += 1;
+                let _ = sched.submit(req); // QueueFull -> counted in rejected
+                if gen.generated() >= target {
+                    break;
+                }
+            }
+        }
+        sched.tick(engine, &mut |_, _| {}).expect("tick must absorb transient faults");
+        clock += 1;
+        assert!(clock < 100_000, "chaos run failed to drain (livelock?)");
+    }
+    submitted
+}
+
+/// Every injected fault kind fires on its scheduled decode-execute
+/// ordinal and surfaces through the typed channel the design names:
+/// pool panics and transient errors as retryable step errors, logits
+/// and state corruption as a single-slot quarantine.
+#[test]
+fn each_fault_kind_surfaces_through_its_typed_channel() {
+    let plan = FaultPlan::from_events(vec![
+        FaultEvent { step: 0, kind: FaultKind::WorkerPanic, slot: 0, value: 0.0 },
+        FaultEvent { step: 1, kind: FaultKind::TransientError, slot: 0, value: 0.0 },
+        FaultEvent { step: 2, kind: FaultKind::CorruptLogits, slot: 0, value: f32::NAN },
+        FaultEvent { step: 3, kind: FaultKind::CorruptState, slot: 1, value: f32::INFINITY },
+    ]);
+    let reg = chaos_registry(plan);
+    let mut engine = Engine::new(&reg, REF_LM_TAG, &ref_lm_demo_params()).unwrap();
+    let toks = vec![3i32; engine.batch()];
+
+    // ordinal 0: a real unwinding task, contained by the pool
+    let err = engine.step(&toks).expect_err("injected panic must fail the step");
+    assert!(err.downcast_ref::<PoolError>().is_some(), "want PoolError, got: {err:#}");
+    // ordinal 1: retryable executor fault, fired before the math ran
+    let err = engine.step(&toks).expect_err("injected transient must fail the step");
+    assert!(err.downcast_ref::<TransientExecError>().is_some(), "want transient, got: {err:#}");
+    // failed pre-execute steps never advanced the state
+    assert!(engine.positions().iter().all(|&p| p == 0), "failed step advanced positions");
+
+    // ordinal 2: NaN in slot 0's logits row -> only slot 0 quarantined
+    engine.step(&toks).expect("corruption does not fail the step");
+    assert_eq!(engine.quarantined(), 0b01, "logits poison quarantines slot 0 only");
+    // ordinal 3: Inf in slot 1's state column -> only slot 1 quarantined
+    engine.step(&toks).expect("corruption does not fail the step");
+    assert_eq!(engine.quarantined(), 0b10, "state poison quarantines slot 1 only");
+    // past the plan: clean steps, scrubbed state stays healthy
+    engine.step(&toks).unwrap();
+    assert_eq!(engine.quarantined(), 0);
+    assert_eq!(engine.slots.health_check(), 0, "scrub left no poison behind");
+}
+
+/// The outcome-accounting invariant under a high-rate seeded storm of
+/// every executor fault family: the process never aborts, ticks never
+/// fail, and every submitted request resolves to exactly one outcome.
+#[test]
+fn chaos_storm_resolves_every_request_exactly_once() {
+    let rates = FaultRates {
+        corrupt_state: 0.05,
+        corrupt_logits: 0.05,
+        worker_panic: 0.03,
+        transient: 0.03,
+        burst: 0.0,
+    };
+    let (chaos, handle) = ChaosBackend::new(0xFA7A1, 4096, 4, &rates);
+    let reg = ArtifactRegistry::with_backend("/nonexistent/artifacts-dir", Box::new(chaos))
+        .expect("chaos registry");
+    reg.set_exec_options(ExecOptions::serial());
+    let mut engine = Engine::new(&reg, REF_LM_TAG, &ref_lm_demo_params()).unwrap();
+    let cap = engine.batch();
+    let policy = ServePolicy {
+        deadline_ticks: 300,
+        shed_queue_ticks: 60,
+        max_step_retries: 10,
+        retry_backoff_ticks: 1,
+    };
+    let mut sched = Scheduler::with_policy(cap, 2 * cap, policy);
+    let mut gen = TrafficGen::new(0x57A4, 0.9, (2, 8), (2, 8), engine.vocab(), -1);
+
+    let submitted = drive_to_idle(&mut sched, &mut engine, &mut gen, 50);
+
+    assert_eq!(
+        sched.completed.len() + sched.rejected,
+        submitted,
+        "a request was lost or duplicated under chaos"
+    );
+    let mut ids: Vec<u64> = sched.completed.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    let n = ids.len();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "a request resolved twice");
+    // per-request records agree with the aggregate outcome counters
+    let by = |o: Outcome| sched.completed.iter().filter(|r| r.outcome == o).count();
+    assert_eq!(by(Outcome::Shed), sched.shed);
+    assert_eq!(by(Outcome::Poisoned), sched.poisoned);
+    assert_eq!(by(Outcome::DeadlineExceeded), sched.deadline_exceeded);
+    assert_eq!(
+        by(Outcome::Completed) + sched.shed + sched.poisoned + sched.deadline_exceeded,
+        sched.completed.len()
+    );
+    // the storm actually stormed, and the loop actually absorbed it
+    assert!(handle.injected().total() > 0, "chaos plan injected nothing");
+    let inj = handle.injected();
+    assert_eq!(sched.transient_faults, inj.worker_panics + inj.transients);
+}
+
+/// Quarantine blast radius: corrupting one slot must not perturb any
+/// other request's output. Requests that complete both fault-free and
+/// under a corruption-only chaos plan stream byte-identical tokens.
+#[test]
+fn quarantine_leaves_other_requests_byte_identical() {
+    let requests: Vec<Request> = (0..40u64)
+        .map(|i| Request {
+            id: i,
+            prompt: vec![(1 + i % 7) as i32, (2 + i % 11) as i32, (3 + i % 5) as i32],
+            max_new: 3 + (i % 4) as usize,
+            eos: -1,
+        })
+        .collect();
+
+    let run = |reg: &ArtifactRegistry| -> Scheduler {
+        let mut engine = Engine::new(reg, REF_LM_TAG, &ref_lm_demo_params()).unwrap();
+        let mut sched = Scheduler::new(engine.batch(), requests.len());
+        for req in &requests {
+            sched.submit(req.clone()).unwrap();
+        }
+        let mut ticks = 0usize;
+        while !sched.is_idle() {
+            sched.tick(&mut engine, &mut |_, _| {}).unwrap();
+            ticks += 1;
+            assert!(ticks < 100_000, "run failed to drain");
+        }
+        sched
+    };
+
+    let clean = run(&ref_registry());
+    // ~0.19/step corruption probability over ~50 decode steps: several
+    // requests get poisoned, most still complete. One pinned event on
+    // top of the seeded plan guarantees at least one quarantine fires
+    // while the batch is full, whatever the seed rolls.
+    let rates =
+        FaultRates { corrupt_state: 0.1, corrupt_logits: 0.1, ..FaultRates::default() };
+    let mut events = FaultPlan::generate(0xB1A57, 4096, 4, &rates).events().to_vec();
+    events.push(FaultEvent { step: 10, kind: FaultKind::CorruptLogits, slot: 2, value: f32::NAN });
+    let (chaos, _handle) = ChaosBackend::with_plan(FaultPlan::from_events(events));
+    let reg = ArtifactRegistry::with_backend("/nonexistent/artifacts-dir", Box::new(chaos))
+        .expect("chaos registry");
+    reg.set_exec_options(ExecOptions::serial());
+    let chaotic = run(&reg);
+
+    assert_eq!(clean.completed.len(), requests.len());
+    assert_eq!(clean.poisoned, 0, "fault-free run must not quarantine");
+    assert!(chaotic.poisoned >= 1, "rates this high must poison someone in 40 requests");
+    assert_eq!(
+        chaotic.completed.len() + chaotic.rejected,
+        requests.len(),
+        "accounting must survive quarantines"
+    );
+    let output_of = |s: &Scheduler, id: u64| -> Option<Vec<i32>> {
+        s.completed
+            .iter()
+            .find(|r| r.id == id && r.outcome == Outcome::Completed)
+            .map(|r| r.output.clone())
+    };
+    let mut compared = 0usize;
+    for req in &requests {
+        if let (Some(a), Some(b)) = (output_of(&clean, req.id), output_of(&chaotic, req.id)) {
+            assert_eq!(a, b, "request {} diverged under someone else's quarantine", req.id);
+            compared += 1;
+        }
+    }
+    assert!(compared >= 10, "only {compared} requests completed in both runs");
+}
+
+/// Kill-and-resume: a session checkpointed at step k and resumed in a
+/// fresh registry (a fresh process, morally) produces bit-identical
+/// losses from step k+1 on.
+#[test]
+fn kill_and_resume_is_bit_identical() {
+    let reg = ref_registry();
+    let mut full = Session::init(&reg, REF_LM_TAG, 7).unwrap();
+    full.run(10, |_| 1e-2, 0.0, |i| ref_lm_demo_batch(i, false)).unwrap();
+
+    let reg_b = ref_registry();
+    let mut killed = Session::init(&reg_b, REF_LM_TAG, 7).unwrap();
+    killed.run(5, |_| 1e-2, 0.0, |i| ref_lm_demo_batch(i, false)).unwrap();
+    let ckpt = std::env::temp_dir().join("hh_ft_resume.ckpt");
+    killed.checkpoint(&ckpt).unwrap();
+    drop(killed);
+    drop(reg_b);
+
+    let reg_c = ref_registry();
+    let mut resumed =
+        Session::resume(&reg_c, &format!("{REF_LM_TAG}_train_step"), &ckpt).unwrap();
+    std::fs::remove_file(&ckpt).ok();
+    assert_eq!(resumed.step, 5, "checkpoint must carry the step counter");
+    assert!(resumed.losses.is_empty(), "loss history is telemetry, not state");
+    resumed.run(5, |_| 1e-2, 0.0, |i| ref_lm_demo_batch(5 + i, false)).unwrap();
+
+    assert_eq!(resumed.losses.len(), 5);
+    for (k, (a, b)) in full.losses[5..].iter().zip(&resumed.losses).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "loss diverged at step {} (uninterrupted {a} vs resumed {b})",
+            5 + k
+        );
+    }
+}
+
+/// `run_guarded` end to end: a poisoned batch cursor is skipped, the
+/// session rolls back to the last checkpoint, and training still lands
+/// the requested number of finite steps.
+#[test]
+fn guarded_run_skips_poison_and_rolls_back() {
+    let reg = ref_registry();
+    let mut s = Session::init(&reg, REF_LM_TAG, 11).unwrap();
+    let ckpt = std::env::temp_dir().join("hh_ft_guarded.ckpt");
+    let report = s
+        .run_guarded(
+            10,
+            |_| 1e-2,
+            0.0,
+            |cursor| {
+                let mut b = ref_lm_demo_batch(cursor, false);
+                if cursor == 6 {
+                    for (name, t) in b.slots.iter_mut() {
+                        if name == "loss_mask" {
+                            t.as_f32_mut().unwrap()[0] = f32::NAN;
+                        }
+                    }
+                }
+                b
+            },
+            &ckpt,
+            4,
+        )
+        .unwrap();
+    std::fs::remove_file(&ckpt).ok();
+
+    assert_eq!(report.steps, 10);
+    assert_eq!(report.skipped, vec![6], "exactly the poisoned cursor is skipped");
+    assert_eq!(report.rollbacks, 1);
+    assert_eq!(report.checkpoints, 3, "entry + steps 4 and 8");
+    assert!(report.final_loss.is_finite());
+    assert_eq!(s.step, 10, "10 optimizer steps landed despite the rollback");
+    assert_eq!(s.losses.len(), 10, "replayed losses were truncated, not duplicated");
+    assert!(s.losses.iter().all(|l| l.is_finite()));
+}

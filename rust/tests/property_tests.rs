@@ -238,3 +238,86 @@ fn prop_samsum_masks_inside_sequence() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Scheduler outcome accounting (DESIGN.md §11)
+// ---------------------------------------------------------------------------
+
+/// Whatever the lifecycle policy (deadlines and shedding on or off),
+/// every submitted request resolves to exactly one typed outcome:
+/// `completed + shed + poisoned + deadline_exceeded + rejected ==
+/// submitted`, with unique ids and counters that agree with the
+/// per-request records. Fewer sweeps than the pure-state-machine props —
+/// each sweep drives a real decode engine.
+#[test]
+fn prop_scheduler_resolves_every_request_to_one_outcome() {
+    use hedgehog::runtime::{ref_lm_demo_params, ArtifactRegistry, ExecOptions, REF_LM_TAG};
+    use hedgehog::serve::{Engine, Outcome, Scheduler, ServePolicy, TrafficGen};
+
+    for seed in 0..8u64 {
+        let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+        reg.set_exec_options(ExecOptions::serial());
+        let mut engine = Engine::new(&reg, REF_LM_TAG, &ref_lm_demo_params()).unwrap();
+        let cap = engine.batch();
+        let mut rng = Pcg32::new(seed ^ 0x5C4ED);
+        // randomize the policy: each knob independently off or small
+        let deadline = if rng.bool(0.5) { 6 + rng.usize_below(30) } else { 0 };
+        let shed = if rng.bool(0.5) { 2 + rng.usize_below(10) } else { 0 };
+        let policy = ServePolicy {
+            deadline_ticks: deadline,
+            shed_queue_ticks: shed,
+            ..ServePolicy::default()
+        };
+        let mut sched = Scheduler::with_policy(cap, 1 + rng.usize_below(2 * cap), policy);
+        let mut gen = TrafficGen::new(seed, 0.5 + f64::from(rng.f32()), (1, 10), (1, 8), 32, -1);
+        let target = 15 + rng.usize_below(15) as u64;
+
+        let mut submitted = 0usize;
+        let mut clock = 0usize;
+        while gen.generated() < target || !sched.is_idle() {
+            if gen.generated() < target {
+                while let Some(req) = gen.next_if_due(clock) {
+                    submitted += 1;
+                    let _ = sched.submit(req);
+                    if gen.generated() >= target {
+                        break;
+                    }
+                }
+            }
+            sched.tick(&mut engine, &mut |_, _| {}).unwrap();
+            clock += 1;
+            assert!(clock < 10_000, "seed {seed}: no termination");
+        }
+
+        assert_eq!(
+            sched.completed.len() + sched.rejected,
+            submitted,
+            "seed {seed}: lost or duplicated requests (policy {policy:?})"
+        );
+        let mut ids: Vec<u64> = sched.completed.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        let n = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "seed {seed}: a request resolved twice");
+        let by = |o: Outcome| sched.completed.iter().filter(|r| r.outcome == o).count();
+        assert_eq!(by(Outcome::Shed), sched.shed, "seed {seed}");
+        assert_eq!(by(Outcome::DeadlineExceeded), sched.deadline_exceeded, "seed {seed}");
+        assert_eq!(by(Outcome::Poisoned), sched.poisoned, "seed {seed}");
+        assert_eq!(by(Outcome::Poisoned), 0, "seed {seed}: fault-free runs never poison");
+        assert_eq!(
+            by(Outcome::Completed) + sched.shed + sched.deadline_exceeded + sched.poisoned,
+            sched.completed.len(),
+            "seed {seed}: counters disagree with records"
+        );
+        if deadline == 0 && shed == 0 {
+            assert!(
+                sched.completed.iter().all(|r| r.outcome == Outcome::Completed),
+                "seed {seed}: default lifecycle must resolve everything Completed"
+            );
+        }
+        for r in sched.completed.iter().filter(|r| r.outcome == Outcome::Shed) {
+            assert!(r.output.is_empty(), "seed {seed}: shed request streamed tokens");
+            assert_eq!(r.ttft, None, "seed {seed}: shed request has a first token");
+        }
+    }
+}

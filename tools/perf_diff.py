@@ -15,7 +15,12 @@ The fresh document's schema picks the comparison mode:
   ``git show HEAD:BENCH_kernels.json``.
 * ``hedgehog_serve_v1`` (continuous-batching serve load) — records
   matched on (tag, slots), compared on sustained generated tokens/sec.
-  Baseline defaults to ``git show HEAD:BENCH_serve.json``.
+  Baseline defaults to ``git show HEAD:BENCH_serve.json``. The serve
+  bench is fault-free by construction, so any nonzero shed / poisoned /
+  deadline_exceeded count in the *fresh* run warns regardless of the
+  baseline (a numeric guardrail or lifecycle knob fired where none
+  should — see DESIGN.md §11; the chaos soak's BENCH_soak.json is a
+  different schema and is not diffed here).
 * ``hedgehog_quality_v1`` (feature-map diagnostics) — records matched on
   (tag, feature_map), compared on the paper's quality axes instead of
   throughput: Spearman rho (warn on an absolute drop > 0.05),
@@ -203,6 +208,20 @@ def main(argv):
         return 0
 
     serve = mode == "serve"
+    if serve:
+        # The serve-load bench runs no fault injection: a nonzero
+        # non-Completed outcome count means a guardrail fired on the
+        # fault-free path. Independent of the baseline's provenance.
+        for r in fresh.get("results", []):
+            faults = {
+                k: r.get(k, 0) for k in ("shed", "poisoned", "deadline_exceeded") if r.get(k, 0)
+            }
+            if faults:
+                detail = ", ".join(f"{k}={v}" for k, v in faults.items())
+                print(
+                    f"  WARNING: fault-free serve run reports non-Completed outcomes for "
+                    f"{r['tag']} (slots={r['slots']}): {detail}"
+                )
     key = serve_key if serve else kernel_key
     base_by_key = {key(r): r for r in base.get("results", [])}
     rate_field = "sustained_tokens_per_sec" if serve else "tokens_per_sec"
