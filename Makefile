@@ -8,11 +8,17 @@
 #   make chaos-smoke  seeded fault-injection soak (serve stack) -> BENCH_soak.json
 #   make perf-diff    fresh smoke sweep vs the committed BENCH_kernels.json
 #                     snapshot (warn-only, >25% tokens/sec regression)
+#   make lint-contracts  static contract check: every builtin tag x graph
+#                     family manifest vs the derived contract, plus the
+#                     mutation self-test and the pool schedule model
+#   make lint-unsafe  hermetic SAFETY-comment lint (python, no rustc)
+#   make tools-test   unit tests for the python tooling (perf_diff)
 #
 # `make artifacts` (model-graph export) lives in python/compile and needs
 # jax; everything here is hermetic Rust.
 
-.PHONY: build test bench bench-smoke refconv-smoke serve-smoke chaos-smoke perf-diff
+.PHONY: build test bench bench-smoke refconv-smoke serve-smoke chaos-smoke perf-diff \
+	lint-contracts lint-unsafe tools-test
 
 build:
 	cargo build --release
@@ -70,6 +76,24 @@ refconv-smoke:
 # regressions print a WARNING block, the target still exits 0. Set
 # PERF_DIFF_FRESH to reuse an existing emission (CI does this right after
 # bench-smoke instead of running the sweep twice).
+# Soundness gate (DESIGN.md §12). `lint-contracts` executes no graph:
+# the binary statically derives every builtin contract, validates the
+# runtime's manifests against it, proves the checker's detection power
+# via seeded corruptions, and model-checks the worker-pool protocol over
+# bounded interleavings. The same checks also run inside `make test`
+# (rust/tests/contract_gate.rs); the binary exists for fast local runs
+# and a readable CI log.
+lint-contracts:
+	cargo run --release --bin contract_check
+
+# Pure-python lints/tests: runnable before (or without) the Rust
+# toolchain. CI runs them first — they fail in seconds, not minutes.
+lint-unsafe:
+	python3 tools/lint_unsafe.py
+
+tools-test:
+	python3 tools/test_perf_diff.py
+
 PERF_DIFF_FRESH ?=
 
 perf-diff:

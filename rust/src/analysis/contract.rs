@@ -1,0 +1,913 @@
+//! Static contract checker for the builtin graph families.
+//!
+//! The repo's correctness story flows through hand-maintained contracts:
+//! `ModelConfig`-derived leaf trees, zero-padded `layer{i:02}` naming,
+//! sorted tree-path order, AdamW moment mirrors (`m/`, `v/`), the init
+//! draw order, and the decode/train leaf coherence the conversion
+//! pipeline depends on. Every check here runs *without executing any
+//! graph*: the checker re-derives the expected manifest for each
+//! (tag, family) pair from first principles — deliberately **not** by
+//! calling `ref_lm::builtin_manifest` or `ModelConfig::leaf_slots` — and
+//! classifies any divergence into a typed [`Violation`]. Two independent
+//! derivations that must agree catch the class of bug where a wiring
+//! mistake and its validator drift together (the failure mode hybrid
+//! conversion papers blame for silent per-layer quality loss).
+//!
+//! Entry points:
+//!   * [`check_manifest`] — classify one manifest against one family.
+//!   * [`check_builtins`] — every builtin tag × graph family, plus the
+//!     cross-cutting invariants (init draw order, `leaf_slots` agreement,
+//!     decode/train coherence).
+//!   * [`mutation_self_test`] — seed deliberate corruptions and assert
+//!     each is flagged with the right code (the checker checking itself).
+//!
+//! Wired as the `contract_check` binary (`make lint-contracts`), a tier-1
+//! test (`tests/contract_gate.rs`), and the first stage of the runtime's
+//! own load-time manifest validation (`ref_lm::validate_manifest`,
+//! `reference::validate_decode_manifest`), so runtime loading and static
+//! checking cannot drift apart.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::json::Json;
+use crate::runtime::manifest::{Manifest, Slot};
+use crate::runtime::ref_lm::{builtin_manifest, TrainGraph};
+use crate::runtime::reference::builtin_decode_manifest;
+use crate::runtime::tensor::DType;
+use crate::runtime::{FeatureKind, ModelConfig};
+
+/// The five graph families every builtin tag must expose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphFamily {
+    Init,
+    TrainStep,
+    DistillStep,
+    Eval,
+    DecodeStep,
+}
+
+impl GraphFamily {
+    pub const ALL: [GraphFamily; 5] = [
+        GraphFamily::Init,
+        GraphFamily::TrainStep,
+        GraphFamily::DistillStep,
+        GraphFamily::Eval,
+        GraphFamily::DecodeStep,
+    ];
+
+    /// The `meta["graph"]` value (and the human-readable name).
+    pub fn name(self) -> &'static str {
+        match self {
+            GraphFamily::Init => "init",
+            GraphFamily::TrainStep => "train_step",
+            GraphFamily::DistillStep => "distill_step",
+            GraphFamily::Eval => "eval",
+            GraphFamily::DecodeStep => "decode_step",
+        }
+    }
+
+    /// Artifact-name suffix appended to the tag.
+    pub fn suffix(self) -> &'static str {
+        match self {
+            GraphFamily::Init => "_init",
+            GraphFamily::TrainStep => "_train_step",
+            GraphFamily::DistillStep => "_distill_step",
+            GraphFamily::Eval => "_eval",
+            GraphFamily::DecodeStep => "_decode_step",
+        }
+    }
+
+    pub(crate) fn of_train_graph(graph: TrainGraph) -> GraphFamily {
+        match graph {
+            TrainGraph::Init => GraphFamily::Init,
+            TrainGraph::Train => GraphFamily::TrainStep,
+            TrainGraph::Distill => GraphFamily::DistillStep,
+            TrainGraph::Eval => GraphFamily::Eval,
+        }
+    }
+}
+
+/// What kind of contract a manifest broke. One code per corruption
+/// class, so the mutation self-test can assert each class is detected
+/// *as itself*, not just "something failed".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ViolationCode {
+    /// A leaf the config demands is absent from the `params/` group.
+    MissingLeaf,
+    /// A `params/` slot names a leaf the config does not derive.
+    UnexpectedLeaf,
+    /// A `params/` leaf exists but with the wrong shape.
+    LeafShape,
+    /// A `params/` leaf exists but with the wrong dtype.
+    LeafDtype,
+    /// A leaf group is not in sorted tree-path order.
+    UnsortedLeaves,
+    /// A `layer<i>` path segment is not zero-padded to two digits.
+    UnpaddedLayer,
+    /// The `m/` or `v/` AdamW moment group does not mirror `params/`.
+    MomentMirror,
+    /// `ModelConfig::init_params` draws a layout that disagrees with the
+    /// derived leaf tree (draw-order / leaf-set drift).
+    DrawOrder,
+    /// The decode step's parameter slots disagree with the train step's.
+    DecodeTrainDrift,
+    /// A decode recurrent-state slot (`s`, `z`) has the wrong shape.
+    StateShape,
+    /// A non-parameter slot (tokens, step, seed, logits, ...) is wrong:
+    /// missing, misnamed, misshaped, mistyped, or out of order.
+    IoSlot,
+    /// Manifest meta disagrees with the config-derived expectation.
+    MetaDrift,
+    /// `ModelConfig::validate` rejected the config itself.
+    ConfigInvalid,
+    /// `ModelConfig::leaf_slots` disagrees with the independent
+    /// derivation (the runtime and the checker drifted apart).
+    ConfigDrift,
+}
+
+impl ViolationCode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ViolationCode::MissingLeaf => "missing-leaf",
+            ViolationCode::UnexpectedLeaf => "unexpected-leaf",
+            ViolationCode::LeafShape => "leaf-shape",
+            ViolationCode::LeafDtype => "leaf-dtype",
+            ViolationCode::UnsortedLeaves => "unsorted-leaves",
+            ViolationCode::UnpaddedLayer => "unpadded-layer",
+            ViolationCode::MomentMirror => "moment-mirror",
+            ViolationCode::DrawOrder => "draw-order",
+            ViolationCode::DecodeTrainDrift => "decode-train-drift",
+            ViolationCode::StateShape => "state-shape",
+            ViolationCode::IoSlot => "io-slot",
+            ViolationCode::MetaDrift => "meta-drift",
+            ViolationCode::ConfigInvalid => "config-invalid",
+            ViolationCode::ConfigDrift => "config-drift",
+        }
+    }
+}
+
+/// One classified contract break in one artifact.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub artifact: String,
+    pub code: ViolationCode,
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: [{}] {}", self.artifact, self.code.name(), self.detail)
+    }
+}
+
+/// One parameter leaf: tree path relative to the group prefix + shape.
+/// Dtype is always f32 — parameters are, moments mirror them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LeafSpec {
+    pub path: String,
+    pub shape: Vec<usize>,
+}
+
+/// The parameter leaf tree one `ModelConfig` implies, in sorted
+/// tree-path order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LeafTree {
+    pub leaves: Vec<LeafSpec>,
+}
+
+impl LeafTree {
+    /// Derive the tree from first principles: vocab/layers/heads/head_dim
+    /// plus the feature kind's two orthogonal properties. Written against
+    /// the documented naming scheme, not `ModelConfig::leaf_slots` — the
+    /// two must agree (checked in [`check_builtins`]) precisely because
+    /// they are written twice.
+    pub fn derive(cfg: &ModelConfig) -> LeafTree {
+        let (v, h, d) = (cfg.vocab, cfg.heads, cfg.head_dim);
+        let dm = h * d;
+        let mut leaves =
+            vec![LeafSpec { path: "embed".to_string(), shape: vec![v, dm] }];
+        for i in 0..cfg.layers {
+            // Sorted basename order within a layer: fm_k, fm_q, wk, wo,
+            // wq, wv ("f" < "w"; "k" < "o" < "q" < "v").
+            if cfg.feature.has_fm() {
+                for leaf in ["fm_k", "fm_q"] {
+                    leaves.push(LeafSpec {
+                        path: format!("layer{i:02}/{leaf}"),
+                        shape: vec![h, d, d],
+                    });
+                }
+            }
+            if cfg.feature.projected() {
+                for leaf in ["wk", "wo", "wq", "wv"] {
+                    leaves.push(LeafSpec {
+                        path: format!("layer{i:02}/{leaf}"),
+                        shape: vec![dm, dm],
+                    });
+                }
+            }
+        }
+        leaves.push(LeafSpec { path: "unembed".to_string(), shape: vec![dm, v] });
+        LeafTree { leaves }
+    }
+
+    /// The tree as manifest slots under `prefix/`.
+    pub fn slots(&self, prefix: &str) -> Vec<Slot> {
+        self.leaves
+            .iter()
+            .map(|l| Slot {
+                name: format!("{prefix}/{}", l.path),
+                shape: l.shape.clone(),
+                dtype: DType::F32,
+            })
+            .collect()
+    }
+}
+
+fn f_slot(name: &str, shape: &[usize]) -> Slot {
+    Slot { name: name.to_string(), shape: shape.to_vec(), dtype: DType::F32 }
+}
+
+fn i_slot(name: &str, shape: &[usize]) -> Slot {
+    Slot { name: name.to_string(), shape: shape.to_vec(), dtype: DType::I32 }
+}
+
+/// The manifest one (tag, family) pair *must* have, derived
+/// independently of `ref_lm::builtin_manifest` / `builtin_decode_manifest`.
+pub fn expected_manifest(tag: &str, cfg: &ModelConfig, family: GraphFamily) -> Manifest {
+    let tree = LeafTree::derive(cfg);
+    let params = tree.slots("params");
+    let (b, n) = (cfg.batch, cfg.seq);
+    let opt_slots = || {
+        let mut v = tree.slots("m");
+        v.extend(tree.slots("v"));
+        v.push(i_slot("step", &[]));
+        v.push(f_slot("lr", &[]));
+        v.push(f_slot("wd", &[]));
+        v
+    };
+    let step_outputs = || {
+        let mut v = params.clone();
+        v.extend(tree.slots("m"));
+        v.extend(tree.slots("v"));
+        v.push(i_slot("step", &[]));
+        v.push(f_slot("loss", &[]));
+        v
+    };
+    let (inputs, outputs) = match family {
+        GraphFamily::Init => {
+            let seed = Slot { name: "seed".to_string(), shape: vec![], dtype: DType::U32 };
+            (vec![seed], params.clone())
+        }
+        GraphFamily::TrainStep => {
+            let mut ins = params.clone();
+            ins.extend(opt_slots());
+            ins.push(i_slot("tokens", &[b, n]));
+            ins.push(i_slot("targets", &[b, n]));
+            ins.push(f_slot("loss_mask", &[b, n]));
+            (ins, step_outputs())
+        }
+        GraphFamily::DistillStep => {
+            let mut ins = params.clone();
+            ins.extend(opt_slots());
+            ins.push(i_slot("tokens", &[b, n]));
+            (ins, step_outputs())
+        }
+        GraphFamily::Eval => {
+            let mut ins = params.clone();
+            ins.push(i_slot("tokens", &[b, n]));
+            ins.push(i_slot("targets", &[b, n]));
+            ins.push(f_slot("loss_mask", &[b, n]));
+            (ins, vec![f_slot("loss", &[]), f_slot("metric", &[])])
+        }
+        GraphFamily::DecodeStep => {
+            let (l, h, d) = (cfg.layers, cfg.heads, cfg.head_dim);
+            // Dp from the map directly (T2R is the one kind with Dp = d)
+            // rather than via `cfg.dp()` — keep the derivation separate.
+            let dp = if cfg.feature == FeatureKind::T2R { d } else { 2 * d };
+            let s_shape = [l, b, h, dp, d];
+            let z_shape = [l, b, h, dp];
+            let mut ins = vec![
+                i_slot("token", &[b]),
+                i_slot("pos", &[b]),
+                f_slot("s", &s_shape),
+                f_slot("z", &z_shape),
+            ];
+            ins.extend(params.clone());
+            let outs = vec![
+                f_slot("logits", &[b, cfg.vocab]),
+                f_slot("s", &s_shape),
+                f_slot("z", &z_shape),
+            ];
+            (ins, outs)
+        }
+    };
+    Manifest {
+        name: format!("{tag}{}", family.suffix()),
+        inputs,
+        outputs,
+        meta: expected_meta(tag, cfg, family),
+    }
+}
+
+fn expected_meta(tag: &str, cfg: &ModelConfig, family: GraphFamily) -> BTreeMap<String, Json> {
+    let mut meta = BTreeMap::new();
+    for (key, val) in [
+        ("family", tag),
+        ("graph", family.name()),
+        ("kernel", "hedgehog"),
+        ("feature", cfg.feature.name()),
+        ("backend", "reference"),
+    ] {
+        meta.insert(key.to_string(), Json::Str(val.to_string()));
+    }
+    let nums: &[(&str, usize)] = if family == GraphFamily::DecodeStep {
+        &[
+            ("vocab", cfg.vocab),
+            ("batch", cfg.batch),
+            ("heads", cfg.heads),
+            ("d_model", cfg.heads * cfg.head_dim),
+            ("n_layers", cfg.layers),
+        ]
+    } else {
+        &[
+            ("vocab", cfg.vocab),
+            ("n_layers", cfg.layers),
+            ("heads", cfg.heads),
+            ("d_head", cfg.head_dim),
+            ("d_model", cfg.heads * cfg.head_dim),
+            ("batch_size", cfg.batch),
+            ("seq_len", cfg.seq),
+        ]
+    };
+    for (key, val) in nums {
+        meta.insert(key.to_string(), Json::Num(*val as f64));
+    }
+    meta
+}
+
+/// Leaf-group prefix of a slot name ("params", "m", "v"), if any.
+fn leaf_group(name: &str) -> Option<&str> {
+    let head = name.split('/').next().unwrap_or(name);
+    if name.contains('/') && matches!(head, "params" | "m" | "v") {
+        Some(head)
+    } else {
+        None
+    }
+}
+
+/// Zero-padding check: every `layer<digits>` path segment must use
+/// exactly two digits, or lexicographic order stops matching numeric
+/// order and positional leaf indexing shears.
+fn check_layer_padding(artifact: &str, dir: &str, slots: &[Slot], out: &mut Vec<Violation>) {
+    for s in slots {
+        for seg in s.name.split('/') {
+            if let Some(digits) = seg.strip_prefix("layer") {
+                if !digits.is_empty()
+                    && digits.bytes().all(|b| b.is_ascii_digit())
+                    && digits.len() != 2
+                {
+                    out.push(Violation {
+                        artifact: artifact.to_string(),
+                        code: ViolationCode::UnpaddedLayer,
+                        detail: format!(
+                            "{dir} {:?}: layer index {digits:?} is not zero-padded to two digits",
+                            s.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Compare one leaf group (the actual slots under `prefix/`) against the
+/// derived tree. `params/` discrepancies get leaf codes; `m/`/`v/`
+/// discrepancies are moment-mirror breaks by definition.
+fn check_leaf_group(
+    artifact: &str,
+    dir: &str,
+    prefix: &str,
+    tree: &LeafTree,
+    actual: &[&Slot],
+    out: &mut Vec<Violation>,
+) {
+    let is_params = prefix == "params";
+    let code = |c: ViolationCode| if is_params { c } else { ViolationCode::MomentMirror };
+    let expected = tree.slots(prefix);
+    let actual_by_name: BTreeMap<&str, &Slot> =
+        actual.iter().map(|s| (s.name.as_str(), *s)).collect();
+    let expected_names: std::collections::BTreeSet<&str> =
+        expected.iter().map(|s| s.name.as_str()).collect();
+    for want in &expected {
+        match actual_by_name.get(want.name.as_str()) {
+            None => out.push(Violation {
+                artifact: artifact.to_string(),
+                code: code(ViolationCode::MissingLeaf),
+                detail: format!("{dir}: leaf {:?} is missing", want.name),
+            }),
+            Some(got) => {
+                if got.shape != want.shape {
+                    out.push(Violation {
+                        artifact: artifact.to_string(),
+                        code: code(ViolationCode::LeafShape),
+                        detail: format!(
+                            "{dir}: leaf {:?} has shape {:?}, want {:?}",
+                            want.name, got.shape, want.shape
+                        ),
+                    });
+                }
+                if got.dtype != DType::F32 {
+                    out.push(Violation {
+                        artifact: artifact.to_string(),
+                        code: code(ViolationCode::LeafDtype),
+                        detail: format!(
+                            "{dir}: leaf {:?} has dtype {:?}, want F32",
+                            want.name, got.dtype
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    for got in actual {
+        if !expected_names.contains(got.name.as_str()) {
+            out.push(Violation {
+                artifact: artifact.to_string(),
+                code: code(ViolationCode::UnexpectedLeaf),
+                detail: format!("{dir}: unexpected leaf {:?}", got.name),
+            });
+        }
+    }
+    for pair in actual.windows(2) {
+        if pair[0].name >= pair[1].name {
+            out.push(Violation {
+                artifact: artifact.to_string(),
+                code: ViolationCode::UnsortedLeaves,
+                detail: format!(
+                    "{dir}: {:?} listed before {:?} breaks sorted tree-path order",
+                    pair[0].name, pair[1].name
+                ),
+            });
+        }
+    }
+}
+
+/// Compare the non-leaf slots (tokens, step, seed, logits, state, ...)
+/// positionally against the expectation.
+fn check_io_slots(
+    artifact: &str,
+    dir: &str,
+    expected: &[&Slot],
+    actual: &[&Slot],
+    out: &mut Vec<Violation>,
+) {
+    let state_slot = |name: &str| name == "s" || name == "z";
+    if expected.len() != actual.len() {
+        let want: Vec<&str> = expected.iter().map(|s| s.name.as_str()).collect();
+        let got: Vec<&str> = actual.iter().map(|s| s.name.as_str()).collect();
+        out.push(Violation {
+            artifact: artifact.to_string(),
+            code: ViolationCode::IoSlot,
+            detail: format!("{dir}: non-leaf slots are {got:?}, want {want:?}"),
+        });
+        return;
+    }
+    for (want, got) in expected.iter().zip(actual) {
+        if want.name != got.name {
+            out.push(Violation {
+                artifact: artifact.to_string(),
+                code: ViolationCode::IoSlot,
+                detail: format!("{dir}: slot {:?} where {:?} belongs", got.name, want.name),
+            });
+            continue;
+        }
+        if want.shape != got.shape {
+            let code = if state_slot(&want.name) {
+                ViolationCode::StateShape
+            } else {
+                ViolationCode::IoSlot
+            };
+            out.push(Violation {
+                artifact: artifact.to_string(),
+                code,
+                detail: format!(
+                    "{dir}: slot {:?} has shape {:?}, want {:?}",
+                    want.name, got.shape, want.shape
+                ),
+            });
+        }
+        if want.dtype != got.dtype {
+            out.push(Violation {
+                artifact: artifact.to_string(),
+                code: ViolationCode::IoSlot,
+                detail: format!(
+                    "{dir}: slot {:?} has dtype {:?}, want {:?}",
+                    want.name, got.dtype, want.dtype
+                ),
+            });
+        }
+    }
+}
+
+fn check_direction(
+    artifact: &str,
+    dir: &str,
+    tree: &LeafTree,
+    expected: &[Slot],
+    actual: &[Slot],
+    out: &mut Vec<Violation>,
+) {
+    let before = out.len();
+    check_layer_padding(artifact, dir, actual, out);
+    for prefix in ["params", "m", "v"] {
+        let exp_group: Vec<&Slot> =
+            expected.iter().filter(|s| leaf_group(&s.name) == Some(prefix)).collect();
+        let act_group: Vec<&Slot> =
+            actual.iter().filter(|s| leaf_group(&s.name) == Some(prefix)).collect();
+        if exp_group.is_empty() && act_group.is_empty() {
+            continue;
+        }
+        if exp_group.is_empty() {
+            let code = if prefix == "params" {
+                ViolationCode::UnexpectedLeaf
+            } else {
+                ViolationCode::MomentMirror
+            };
+            out.push(Violation {
+                artifact: artifact.to_string(),
+                code,
+                detail: format!("{dir}: unexpected {prefix}/ leaf group ({} slots)", act_group.len()),
+            });
+            continue;
+        }
+        check_leaf_group(artifact, dir, prefix, tree, &act_group, out);
+    }
+    let exp_other: Vec<&Slot> =
+        expected.iter().filter(|s| leaf_group(&s.name).is_none()).collect();
+    let act_other: Vec<&Slot> = actual.iter().filter(|s| leaf_group(&s.name).is_none()).collect();
+    check_io_slots(artifact, dir, &exp_other, &act_other, out);
+    // Backstop: if every per-group check passed but the interleaving of
+    // groups still differs (e.g. the m/ block before params/), flag it.
+    if out.len() == before {
+        let want: Vec<&str> = expected.iter().map(|s| s.name.as_str()).collect();
+        let got: Vec<&str> = actual.iter().map(|s| s.name.as_str()).collect();
+        if want != got {
+            out.push(Violation {
+                artifact: artifact.to_string(),
+                code: ViolationCode::IoSlot,
+                detail: format!("{dir}: slot ordering differs from the aot.py convention"),
+            });
+        }
+    }
+}
+
+fn check_meta(
+    artifact: &str,
+    expected: &BTreeMap<String, Json>,
+    actual: &BTreeMap<String, Json>,
+    out: &mut Vec<Violation>,
+) {
+    for (key, want) in expected {
+        match actual.get(key) {
+            None => out.push(Violation {
+                artifact: artifact.to_string(),
+                code: ViolationCode::MetaDrift,
+                detail: format!("meta key {key:?} is missing"),
+            }),
+            Some(got) if got != want => out.push(Violation {
+                artifact: artifact.to_string(),
+                code: ViolationCode::MetaDrift,
+                detail: format!("meta key {key:?} is {got:?}, want {want:?}"),
+            }),
+            Some(_) => {}
+        }
+    }
+    for key in actual.keys() {
+        if !expected.contains_key(key) {
+            out.push(Violation {
+                artifact: artifact.to_string(),
+                code: ViolationCode::MetaDrift,
+                detail: format!("unexpected meta key {key:?}"),
+            });
+        }
+    }
+}
+
+/// Classify every way `manifest` diverges from the (tag, family)
+/// contract. Empty result == the manifest is exactly the expected one.
+pub fn check_manifest(
+    tag: &str,
+    cfg: &ModelConfig,
+    family: GraphFamily,
+    manifest: &Manifest,
+) -> Vec<Violation> {
+    let want = expected_manifest(tag, cfg, family);
+    let tree = LeafTree::derive(cfg);
+    let mut out = Vec::new();
+    if manifest.name != want.name {
+        out.push(Violation {
+            artifact: manifest.name.clone(),
+            code: ViolationCode::IoSlot,
+            detail: format!("artifact name {:?}, want {:?}", manifest.name, want.name),
+        });
+    }
+    check_direction(&manifest.name, "input", &tree, &want.inputs, &manifest.inputs, &mut out);
+    check_direction(&manifest.name, "output", &tree, &want.outputs, &manifest.outputs, &mut out);
+    check_meta(&manifest.name, &want.meta, &manifest.meta, &mut out);
+    out
+}
+
+/// Result of a full builtin sweep.
+#[derive(Debug, Clone)]
+pub struct CheckReport {
+    pub tags: usize,
+    pub artifacts: usize,
+    pub violations: Vec<Violation>,
+}
+
+impl CheckReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+fn slots_eq(a: &[Slot], b: &[Slot]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| x.name == y.name && x.shape == y.shape && x.dtype == y.dtype)
+}
+
+/// Every builtin tag × graph family, statically: the runtime's own
+/// builtin manifests are checked against the independent derivation,
+/// plus the cross-cutting invariants no single manifest can witness.
+pub fn check_builtins() -> CheckReport {
+    let mut violations = Vec::new();
+    let mut artifacts = 0;
+    let tags = ModelConfig::builtin_tags();
+    for tag in tags {
+        let cfg = ModelConfig::for_tag(tag).expect("builtin tag must resolve");
+        if let Err(e) = cfg.validate() {
+            violations.push(Violation {
+                artifact: tag.to_string(),
+                code: ViolationCode::ConfigInvalid,
+                detail: format!("{e:#}"),
+            });
+            continue;
+        }
+        let tree = LeafTree::derive(&cfg);
+        // The runtime derives leaves via `leaf_slots`; the checker derives
+        // them from the documented scheme. They must agree exactly.
+        if !slots_eq(&tree.slots("params"), &cfg.leaf_slots("params")) {
+            violations.push(Violation {
+                artifact: tag.to_string(),
+                code: ViolationCode::ConfigDrift,
+                detail: "ModelConfig::leaf_slots disagrees with the derived leaf tree".to_string(),
+            });
+        }
+        // Init draw-order compatibility: the seeded constructor must
+        // produce exactly the derived leaf set (names AND shapes) — a
+        // skipped or re-ordered rng draw surfaces as a layout mismatch
+        // because `ParamStore` orders by name.
+        let init = cfg.init_params(1);
+        let drawn: Vec<(&String, &Vec<usize>)> =
+            init.tensors.iter().map(|(n, t)| (n, &t.shape)).collect();
+        let want_drawn: Vec<Slot> = tree.slots("params");
+        if drawn.len() != want_drawn.len()
+            || drawn
+                .iter()
+                .zip(&want_drawn)
+                .any(|((n, sh), w)| n.as_str() != w.name || **sh != w.shape)
+        {
+            violations.push(Violation {
+                artifact: tag.to_string(),
+                code: ViolationCode::DrawOrder,
+                detail: format!(
+                    "init_params draws {} leaves that do not match the derived tree of {}",
+                    drawn.len(),
+                    want_drawn.len()
+                ),
+            });
+        }
+        // The five families, as the runtime actually registers them.
+        for graph in [TrainGraph::Init, TrainGraph::Train, TrainGraph::Distill, TrainGraph::Eval] {
+            let m = builtin_manifest(&cfg, tag, graph);
+            artifacts += 1;
+            violations.extend(check_manifest(tag, &cfg, GraphFamily::of_train_graph(graph), &m));
+        }
+        let decode = builtin_decode_manifest(&cfg, tag);
+        artifacts += 1;
+        violations.extend(check_manifest(tag, &cfg, GraphFamily::DecodeStep, &decode));
+        // Decode/train leaf coherence: the serving path and the training
+        // path must agree on the parameter slots leaf-for-leaf, or a
+        // trained checkpoint feeds the decode step skewed.
+        let train = builtin_manifest(&cfg, tag, TrainGraph::Train);
+        let t_params: Vec<Slot> = train
+            .inputs
+            .iter()
+            .filter(|s| leaf_group(&s.name) == Some("params"))
+            .cloned()
+            .collect();
+        let d_params: Vec<Slot> = decode
+            .inputs
+            .iter()
+            .filter(|s| leaf_group(&s.name) == Some("params"))
+            .cloned()
+            .collect();
+        if !slots_eq(&t_params, &d_params) {
+            violations.push(Violation {
+                artifact: decode.name.clone(),
+                code: ViolationCode::DecodeTrainDrift,
+                detail: format!(
+                    "decode params slots ({}) do not mirror {} train params slots ({})",
+                    d_params.len(),
+                    train.name,
+                    t_params.len()
+                ),
+            });
+        }
+    }
+    CheckReport { tags: tags.len(), artifacts, violations }
+}
+
+/// Seed deliberate corruptions into known-good manifests and assert each
+/// is flagged with its own code — the checker proving it can actually
+/// see every corruption class it claims to cover. Returns one line per
+/// verified mutation (for the `contract_check` report).
+pub fn mutation_self_test() -> Result<Vec<String>> {
+    let tag = "ref_lm2"; // layered + learnable: every corruption class applies
+    let cfg = ModelConfig::for_tag(tag).expect("builtin tag");
+    let train = || builtin_manifest(&cfg, tag, TrainGraph::Train);
+    let decode = || builtin_decode_manifest(&cfg, tag);
+    let mut log = Vec::new();
+    let mut case = |label: &str,
+                    family: GraphFamily,
+                    m: Manifest,
+                    want: ViolationCode|
+     -> Result<()> {
+        let found = check_manifest(tag, &cfg, family, &m);
+        if found.is_empty() {
+            bail!("mutation {label:?}: checker flagged nothing");
+        }
+        if !found.iter().any(|v| v.code == want) {
+            let codes: Vec<&str> = found.iter().map(|v| v.code.name()).collect();
+            bail!("mutation {label:?}: expected code {:?}, got {codes:?}", want.name());
+        }
+        log.push(format!("{label} -> {}", want.name()));
+        Ok(())
+    };
+    let input_index = |m: &Manifest, name: &str| {
+        m.inputs.iter().position(|s| s.name == name).expect("slot present in builtin")
+    };
+
+    let mut m = train();
+    let i = input_index(&m, "params/embed");
+    m.inputs[i].name = "params/embedding".to_string();
+    case("renamed leaf (params/embed -> params/embedding)", GraphFamily::TrainStep, m,
+        ViolationCode::MissingLeaf)?;
+
+    let mut m = train();
+    let i = input_index(&m, "params/embed");
+    m.inputs[i].shape.reverse();
+    case("transposed shape (params/embed [V,D] -> [D,V])", GraphFamily::TrainStep, m,
+        ViolationCode::LeafShape)?;
+
+    let mut m = train();
+    m.inputs.retain(|s| s.name != "m/embed");
+    case("dropped moment (m/embed removed)", GraphFamily::TrainStep, m,
+        ViolationCode::MomentMirror)?;
+
+    let mut m = train();
+    for s in &mut m.inputs {
+        s.name = s.name.replace("layer00/", "layer0/");
+    }
+    case("unpadded layer name (layer00 -> layer0)", GraphFamily::TrainStep, m,
+        ViolationCode::UnpaddedLayer)?;
+
+    let mut m = train();
+    let i = input_index(&m, "params/embed");
+    m.inputs[i].dtype = DType::I32;
+    case("wrong leaf dtype (params/embed f32 -> i32)", GraphFamily::TrainStep, m,
+        ViolationCode::LeafDtype)?;
+
+    let mut m = train();
+    let (a, b) = (input_index(&m, "params/layer00/fm_k"), input_index(&m, "params/layer00/fm_q"));
+    m.inputs.swap(a, b);
+    case("swapped sort order (fm_k <-> fm_q)", GraphFamily::TrainStep, m,
+        ViolationCode::UnsortedLeaves)?;
+
+    let mut m = train();
+    m.meta.insert("d_head".to_string(), Json::Num(8.0));
+    case("meta drift (d_head 16 -> 8)", GraphFamily::TrainStep, m, ViolationCode::MetaDrift)?;
+
+    let mut m = train();
+    let i = input_index(&m, "loss_mask");
+    m.inputs[i].dtype = DType::I32;
+    case("wrong batch-slot dtype (loss_mask f32 -> i32)", GraphFamily::TrainStep, m,
+        ViolationCode::IoSlot)?;
+
+    let mut m = train();
+    m.outputs.pop(); // drops "loss"
+    case("dropped output (loss removed)", GraphFamily::TrainStep, m, ViolationCode::IoSlot)?;
+
+    let mut m = decode();
+    let i = input_index(&m, "s");
+    *m.inputs[i].shape.last_mut().expect("s has rank 5") += 1;
+    case("decode state shape (s last dim +1)", GraphFamily::DecodeStep, m,
+        ViolationCode::StateShape)?;
+
+    Ok(log)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_are_clean() {
+        let report = check_builtins();
+        assert_eq!(report.tags, 3);
+        assert_eq!(report.artifacts, 15, "3 tags x 5 graph families");
+        assert!(
+            report.ok(),
+            "builtin contracts violated:\n{}",
+            report.violations.iter().map(|v| format!("  {v}\n")).collect::<String>()
+        );
+    }
+
+    #[test]
+    fn independent_derivation_matches_runtime_builders() {
+        // The checker's expected_manifest and the runtime's builders are
+        // two implementations of one contract; they must agree slot-for-
+        // slot and meta-for-meta on every builtin tag and family.
+        for tag in ModelConfig::builtin_tags() {
+            let cfg = ModelConfig::for_tag(tag).unwrap();
+            for graph in
+                [TrainGraph::Init, TrainGraph::Train, TrainGraph::Distill, TrainGraph::Eval]
+            {
+                let family = GraphFamily::of_train_graph(graph);
+                let want = expected_manifest(tag, &cfg, family);
+                let got = builtin_manifest(&cfg, tag, graph);
+                assert_eq!(want.name, got.name);
+                assert!(slots_eq(&want.inputs, &got.inputs), "{}: inputs", got.name);
+                assert!(slots_eq(&want.outputs, &got.outputs), "{}: outputs", got.name);
+                assert_eq!(want.meta, got.meta, "{}: meta", got.name);
+            }
+            let want = expected_manifest(tag, &cfg, GraphFamily::DecodeStep);
+            let got = builtin_decode_manifest(&cfg, tag);
+            assert_eq!(want.name, got.name);
+            assert!(slots_eq(&want.inputs, &got.inputs), "{}: inputs", got.name);
+            assert!(slots_eq(&want.outputs, &got.outputs), "{}: outputs", got.name);
+            assert_eq!(want.meta, got.meta, "{}: meta", got.name);
+        }
+    }
+
+    #[test]
+    fn checker_generalizes_across_the_feature_zoo() {
+        // Non-builtin configs (every feature kind, including the 4-leaf
+        // DPFP layers) must also check clean against the runtime builders.
+        for kind in FeatureKind::zoo() {
+            let layers = if kind == FeatureKind::FixedExp { 1 } else { 2 };
+            let cfg = ModelConfig { layers, feature: kind, ..ModelConfig::ref_lm() };
+            cfg.validate().unwrap();
+            for graph in
+                [TrainGraph::Init, TrainGraph::Train, TrainGraph::Distill, TrainGraph::Eval]
+            {
+                let m = builtin_manifest(&cfg, "zoo", graph);
+                let found = check_manifest("zoo", &cfg, GraphFamily::of_train_graph(graph), &m);
+                assert!(found.is_empty(), "{}: {:?}", kind.name(), found);
+            }
+            let m = builtin_decode_manifest(&cfg, "zoo");
+            let found = check_manifest("zoo", &cfg, GraphFamily::DecodeStep, &m);
+            assert!(found.is_empty(), "{}: {:?}", kind.name(), found);
+        }
+    }
+
+    #[test]
+    fn mutation_self_test_detects_every_corruption_class() {
+        let log = mutation_self_test().unwrap();
+        assert_eq!(log.len(), 10, "every seeded mutation verified: {log:?}");
+    }
+
+    #[test]
+    fn clean_manifest_yields_no_violations() {
+        let cfg = ModelConfig::ref_lm2();
+        let m = builtin_manifest(&cfg, "ref_lm2", TrainGraph::Train);
+        assert!(check_manifest("ref_lm2", &cfg, GraphFamily::TrainStep, &m).is_empty());
+    }
+
+    #[test]
+    fn violation_display_names_the_artifact_and_code() {
+        let cfg = ModelConfig::ref_lm2();
+        let mut m = builtin_manifest(&cfg, "ref_lm2", TrainGraph::Train);
+        m.inputs.retain(|s| s.name != "v/unembed");
+        let found = check_manifest("ref_lm2", &cfg, GraphFamily::TrainStep, &m);
+        assert!(!found.is_empty());
+        let text = found[0].to_string();
+        assert!(text.contains("ref_lm2_train_step"), "{text}");
+        assert!(text.contains("moment-mirror"), "{text}");
+    }
+}

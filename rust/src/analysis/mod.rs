@@ -1,0 +1,19 @@
+//! Static soundness gate: checks that run without executing any graph
+//! or spawning any thread. See rust/DESIGN.md §12.
+//!
+//! * [`contract`] — validates every builtin tag × graph family manifest
+//!   against an independently derived `ModelConfig` leaf tree, plus the
+//!   cross-cutting invariants (init draw order, decode/train coherence),
+//!   with a mutation self-test proving each corruption class is caught.
+//! * [`schedule`] — a hermetic explicit-state model checker that
+//!   enumerates bounded interleavings of the `WorkerPool` dispatch
+//!   protocol (claim/park/panic/teardown), with seeded-bug variants
+//!   proving the explorer can find deadlocks and double-claims.
+//!
+//! Both are wired into the `contract_check` binary (`make
+//! lint-contracts`), the tier-1 test suite (`tests/contract_gate.rs`),
+//! and — for the contract leg — the runtime's own load-time manifest
+//! validation, so the static checker and the loader cannot drift apart.
+
+pub mod contract;
+pub mod schedule;

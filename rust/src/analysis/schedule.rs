@@ -1,0 +1,739 @@
+//! Deterministic schedule explorer for the `WorkerPool` dispatch protocol.
+//!
+//! `runtime::pool` coordinates dispatchers and lazily-grown workers with
+//! one mutex, two condvars, and an atomic claim counter. Its unit tests
+//! exercise real threads, so they sample a handful of interleavings per
+//! run; this module instead *enumerates* bounded interleavings of an
+//! explicit-state model of the same protocol — loom-style, but hermetic
+//! (no dependencies, no real threads, byte-for-byte deterministic).
+//!
+//! The model mirrors `pool.rs` step for step: the install gate
+//! (`func.is_some() || active != 0` waited on `done`), the epoch-guarded
+//! worker pickup, the shared `next_task` fetch-add claim loop, panic
+//! stashing, the `active == 0` completion handshake, and shutdown/join
+//! teardown. Each mutex-protected critical section is one atomic model
+//! step; `Condvar::wait` is modeled as its real atomic release-and-park.
+//! One deliberate coarse-graining: where `run()` drops the state lock
+//! and *then* calls `done.notify_all()`, the model merges release and
+//! notify into a single step. That ordering race is benign in the real
+//! code (waiters re-check their predicate under the lock), and merging
+//! it keeps the state space finite; DESIGN.md §12 records the caveat.
+//!
+//! The explorer checks five properties on every reachable state:
+//! no deadlock, no task claimed twice per dispatch generation, no task
+//! executed after its job completed (use-after-return of the borrowed
+//! closure), no task lost, and no panic dropped. [`Bug`] variants seed
+//! real protocol mistakes (skipping the completion wait, skipping the
+//! `active` accounting, removing the install gate, demoting the final
+//! `notify_all` to `notify_one`) and the self-test asserts the explorer
+//! actually finds a violation for each — the checker checking itself,
+//! same as the contract module's mutation self-test.
+
+use std::collections::HashSet;
+
+/// Model capacity bounds (array sizes in the `Copy` state).
+pub const MAX_TASKS: usize = 4;
+pub const MAX_THREADS: usize = 6;
+
+/// `Shared.lock` value meaning "mutex free"; otherwise the holder tid.
+const FREE: u8 = 0xFF;
+
+/// Protocol mistakes the explorer must be able to detect. Each variant
+/// deletes or weakens one line of the real implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bug {
+    /// Dispatcher completes without waiting for `active == 0`.
+    SkipCompletionWait,
+    /// Workers neither increment nor decrement `active`.
+    SkipActiveAccounting,
+    /// Dispatcher installs without waiting for the previous job to clear.
+    NoInstallGate,
+    /// The last worker's completion wake is `notify_one`, not
+    /// `notify_all` — with a gate-waiter and a completion-waiter parked
+    /// on the same condvar, the single token can land on the wrong one.
+    NotifyOneDone,
+}
+
+/// What the explorer found wrong with a schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ViolationKind {
+    /// A reachable state where no runnable thread exists.
+    Deadlock,
+    /// A task index executed twice within one dispatch generation.
+    DoubleClaim,
+    /// A worker executed a task after its job completed (the borrowed
+    /// closure is gone in the real pool — use-after-return).
+    UseAfterReturn,
+    /// A dispatch completed with a task never (or wrongly) executed.
+    LostTask,
+    /// A task panicked but the dispatch surfaced no error.
+    LostPanic,
+}
+
+impl ViolationKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ViolationKind::Deadlock => "deadlock",
+            ViolationKind::DoubleClaim => "double-claim",
+            ViolationKind::UseAfterReturn => "use-after-return",
+            ViolationKind::LostTask => "lost-task",
+            ViolationKind::LostPanic => "lost-panic",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ScheduleViolation {
+    pub kind: ViolationKind,
+    pub detail: String,
+}
+
+/// One bounded configuration of the model.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelSpec {
+    /// Concurrent dispatchers (threads calling `run`).
+    pub dispatchers: usize,
+    /// Pool worker threads.
+    pub workers: usize,
+    /// Tasks per dispatch.
+    pub tasks: usize,
+    /// Sequential dispatches each dispatcher performs.
+    pub jobs: usize,
+    /// Bit `i` set => task `i` panics when executed.
+    pub panic_mask: u8,
+    /// Seeded protocol mistake, if any.
+    pub bug: Option<Bug>,
+    /// Explored-state cap; exceeding it reports `complete: false`.
+    pub max_states: usize,
+}
+
+impl ModelSpec {
+    pub fn new(dispatchers: usize, workers: usize, tasks: usize, jobs: usize) -> ModelSpec {
+        assert!(tasks <= MAX_TASKS, "model supports at most {MAX_TASKS} tasks");
+        assert!(
+            dispatchers + workers <= MAX_THREADS,
+            "model supports at most {MAX_THREADS} threads"
+        );
+        assert!(dispatchers >= 1 && jobs >= 1);
+        ModelSpec {
+            dispatchers,
+            workers,
+            tasks,
+            jobs,
+            panic_mask: 0,
+            bug: None,
+            max_states: 2_000_000,
+        }
+    }
+
+    pub fn with_panics(mut self, mask: u8) -> ModelSpec {
+        self.panic_mask = mask;
+        self
+    }
+
+    pub fn with_bug(mut self, bug: Bug) -> ModelSpec {
+        self.bug = Some(bug);
+        self
+    }
+
+    fn threads(&self) -> usize {
+        self.dispatchers + self.workers
+    }
+
+    fn is_worker(&self, tid: usize) -> bool {
+        tid >= self.dispatchers
+    }
+}
+
+/// Program counter: one variant per atomic step of the protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum Pc {
+    // Dispatcher (`run`): install gate, claim loop, completion, teardown.
+    DGateLock,
+    DGateCheck,
+    DGateWait,
+    DClaim,
+    DExec,
+    DDoneLock,
+    DDoneCheck,
+    DDoneWait,
+    DNext,
+    DShutdownLock,
+    DShutdownSet,
+    DJoin,
+    // Worker (`worker_loop`): park, epoch-guarded pickup, claim loop,
+    // panic stash + active decrement.
+    WParkLock,
+    WParkCheck,
+    WWorkWait,
+    WClaim,
+    WExec,
+    WDoneLock,
+    WDoneUpdate,
+    Halted,
+}
+
+/// The mutex-protected `JobState` plus the claim atomic, flattened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct Shared {
+    /// Mutex: FREE or the holder tid.
+    lock: u8,
+    /// `func.is_some()` — a job is installed and not yet completed.
+    installed: bool,
+    /// Dispatch generation counter (guards worker pickup).
+    epoch: u8,
+    /// Workers joined to the current job.
+    active: u8,
+    /// The `next_task` claim atomic.
+    next: u8,
+    /// `num_tasks` of the installed job.
+    num_tasks: u8,
+    /// First stashed worker panic (`JobState::panicked`).
+    panicked: bool,
+    /// Ground truth: some task of the current job panicked (model-only,
+    /// used to assert the panic is not dropped at completion).
+    panic_seen: bool,
+    /// Pool shutdown flag.
+    shutdown: bool,
+    /// Executions per task index in the current dispatch generation;
+    /// verified ==1 and re-zeroed at completion.
+    claims: [u8; MAX_TASKS],
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct Thread {
+    pc: Pc,
+    /// Last observed epoch (worker pickup guard; dispatcher job identity).
+    seen: u8,
+    /// Claimed task index while in an Exec step.
+    task: u8,
+    /// `num_tasks` captured at pickup/install time.
+    ntasks: u8,
+    /// Local panic pending stash (worker) or dispatcher-owned panic.
+    panicked: bool,
+    /// Dispatches this dispatcher still owes.
+    jobs_left: u8,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct State {
+    shared: Shared,
+    threads: [Thread; MAX_THREADS],
+}
+
+fn initial_state(spec: &ModelSpec) -> State {
+    let idle = Thread { pc: Pc::Halted, seen: 0, task: 0, ntasks: 0, panicked: false, jobs_left: 0 };
+    let mut threads = [idle; MAX_THREADS];
+    for (tid, t) in threads.iter_mut().enumerate().take(spec.threads()) {
+        if spec.is_worker(tid) {
+            t.pc = Pc::WParkLock;
+        } else {
+            t.pc = Pc::DGateLock;
+            t.jobs_left = spec.jobs as u8;
+        }
+    }
+    State {
+        shared: Shared {
+            lock: FREE,
+            installed: false,
+            epoch: 0,
+            active: 0,
+            next: 0,
+            num_tasks: 0,
+            panicked: false,
+            panic_seen: false,
+            shutdown: false,
+            claims: [0; MAX_TASKS],
+        },
+        threads,
+    }
+}
+
+/// `work.notify_all()`: every parked worker re-contends for the lock.
+fn wake_workers(spec: &ModelSpec, s: &mut State) {
+    for tid in spec.dispatchers..spec.threads() {
+        if s.threads[tid].pc == Pc::WWorkWait {
+            s.threads[tid].pc = Pc::WParkLock;
+        }
+    }
+}
+
+/// `done.notify_all()`: gate-waiters and completion-waiters both park on
+/// the `done` condvar; all of them re-contend.
+fn wake_done_all(spec: &ModelSpec, s: &mut State) {
+    for tid in 0..spec.dispatchers {
+        match s.threads[tid].pc {
+            Pc::DGateWait => s.threads[tid].pc = Pc::DGateLock,
+            Pc::DDoneWait => s.threads[tid].pc = Pc::DDoneLock,
+            _ => {}
+        }
+    }
+}
+
+fn violation(kind: ViolationKind, detail: String) -> ScheduleViolation {
+    ScheduleViolation { kind, detail }
+}
+
+/// All successor states of `state` if thread `tid` takes its next atomic
+/// step. Empty vec: the thread is disabled (parked, blocked on the lock,
+/// or waiting to join). `Err`: the step itself witnesses a violation.
+fn step(spec: &ModelSpec, st: &State, tid: usize) -> Result<Vec<State>, ScheduleViolation> {
+    use Pc::*;
+    let t = st.threads[tid];
+    let sh = st.shared;
+    let mut s = *st;
+    match t.pc {
+        // Parked threads move only when a notifier rewrites their pc.
+        Halted | DGateWait | DDoneWait | WWorkWait => Ok(vec![]),
+
+        // Lock acquisitions: enabled iff the mutex is free.
+        DGateLock | DDoneLock | DShutdownLock | WParkLock | WDoneLock => {
+            if sh.lock != FREE {
+                return Ok(vec![]);
+            }
+            s.shared.lock = tid as u8;
+            s.threads[tid].pc = match t.pc {
+                DGateLock => DGateCheck,
+                DDoneLock => DDoneCheck,
+                DShutdownLock => DShutdownSet,
+                WParkLock => WParkCheck,
+                WDoneLock => WDoneUpdate,
+                _ => unreachable!(),
+            };
+            Ok(vec![s])
+        }
+
+        // Install gate: wait until no job is installed and no worker is
+        // active, then install ours and wake the workers (the real
+        // notify_all happens while the lock is still held).
+        DGateCheck => {
+            let busy = sh.installed || sh.active != 0;
+            if busy && spec.bug != Some(Bug::NoInstallGate) {
+                s.shared.lock = FREE;
+                s.threads[tid].pc = DGateWait;
+                return Ok(vec![s]);
+            }
+            s.shared.installed = true;
+            s.shared.epoch = sh.epoch.wrapping_add(1);
+            s.shared.next = 0;
+            s.shared.num_tasks = spec.tasks as u8;
+            s.shared.panicked = false;
+            s.shared.panic_seen = false;
+            s.threads[tid].seen = s.shared.epoch;
+            s.threads[tid].ntasks = spec.tasks as u8;
+            s.threads[tid].panicked = false;
+            wake_workers(spec, &mut s);
+            s.shared.lock = FREE;
+            s.threads[tid].pc = DClaim;
+            Ok(vec![s])
+        }
+
+        // fetch_add claim. (The exhausted branch does not bump `next`;
+        // the real fetch_add does, but the value is never read again and
+        // leaving it fixed keeps the state space finite.)
+        DClaim => {
+            if sh.next >= t.ntasks {
+                s.threads[tid].pc = DDoneLock;
+            } else {
+                s.shared.next = sh.next + 1;
+                s.threads[tid].task = sh.next;
+                s.threads[tid].pc = DExec;
+            }
+            Ok(vec![s])
+        }
+
+        DExec => {
+            let i = t.task as usize;
+            if sh.epoch != t.seen {
+                // Another dispatcher installed over our live job (only
+                // reachable with the install gate removed): the index we
+                // claimed came from the new job's counter, so that job
+                // will never execute it with its own closure.
+                return Err(violation(
+                    ViolationKind::LostTask,
+                    format!(
+                        "dispatcher {tid} executed task {i} claimed from a superseded dispatch"
+                    ),
+                ));
+            }
+            s.shared.claims[i] += 1;
+            if s.shared.claims[i] > 1 {
+                return Err(violation(
+                    ViolationKind::DoubleClaim,
+                    format!("task {i} executed {} times in one dispatch", s.shared.claims[i]),
+                ));
+            }
+            if spec.panic_mask & (1 << i) != 0 {
+                s.threads[tid].panicked = true;
+                s.shared.panic_seen = true;
+                s.threads[tid].pc = DDoneLock;
+            } else {
+                s.threads[tid].pc = DClaim;
+            }
+            Ok(vec![s])
+        }
+
+        // Completion: wait for the workers to drain, then verify and
+        // clear the job. Release + done-notify are merged into this one
+        // step (the documented coarse-graining).
+        DDoneCheck => {
+            if sh.active != 0 && spec.bug != Some(Bug::SkipCompletionWait) {
+                s.shared.lock = FREE;
+                s.threads[tid].pc = DDoneWait;
+                return Ok(vec![s]);
+            }
+            s.shared.installed = false;
+            let took = sh.panicked;
+            let was_panic = sh.panic_seen;
+            s.shared.panicked = false;
+            s.shared.panic_seen = false;
+            if spec.panic_mask == 0 {
+                for i in 0..spec.tasks {
+                    if s.shared.claims[i] != 1 {
+                        return Err(violation(
+                            ViolationKind::LostTask,
+                            format!(
+                                "dispatch completed with task {i} executed {} times",
+                                s.shared.claims[i]
+                            ),
+                        ));
+                    }
+                }
+            }
+            if was_panic && !took && !t.panicked {
+                return Err(violation(
+                    ViolationKind::LostPanic,
+                    "a task panicked but the completed dispatch surfaced no error".to_string(),
+                ));
+            }
+            s.shared.claims = [0; MAX_TASKS];
+            s.threads[tid].panicked = false;
+            s.threads[tid].jobs_left -= 1;
+            s.shared.lock = FREE;
+            wake_done_all(spec, &mut s);
+            s.threads[tid].pc = DNext;
+            Ok(vec![s])
+        }
+
+        DNext => {
+            if t.jobs_left > 0 {
+                s.threads[tid].pc = DGateLock;
+            } else if tid == 0 {
+                // Thread 0 owns the pool and drops it last, after every
+                // other dispatcher has retired (mirrors the unit tests,
+                // where `thread::scope` joins before the owner drops).
+                if (1..spec.dispatchers).any(|d| st.threads[d].pc != Halted) {
+                    return Ok(vec![]);
+                }
+                s.threads[tid].pc = DShutdownLock;
+            } else {
+                s.threads[tid].pc = Halted;
+            }
+            Ok(vec![s])
+        }
+
+        // Drop: set shutdown under the lock, wake every parked worker.
+        DShutdownSet => {
+            s.shared.shutdown = true;
+            wake_workers(spec, &mut s);
+            s.shared.lock = FREE;
+            s.threads[tid].pc = DJoin;
+            Ok(vec![s])
+        }
+
+        DJoin => {
+            let all_parked = (spec.dispatchers..spec.threads())
+                .all(|w| st.threads[w].pc == Halted);
+            if !all_parked {
+                return Ok(vec![]);
+            }
+            s.threads[tid].pc = Halted;
+            Ok(vec![s])
+        }
+
+        // Worker park loop: shutdown beats pickup; pickup requires an
+        // unseen epoch, an installed job, and headroom in `active`.
+        WParkCheck => {
+            if sh.shutdown {
+                s.shared.lock = FREE;
+                s.threads[tid].pc = Halted;
+                return Ok(vec![s]);
+            }
+            if sh.epoch != t.seen {
+                s.threads[tid].seen = sh.epoch;
+                if sh.installed && (sh.active as usize) < spec.workers {
+                    if spec.bug != Some(Bug::SkipActiveAccounting) {
+                        s.shared.active = sh.active + 1;
+                    }
+                    s.threads[tid].ntasks = sh.num_tasks;
+                    s.shared.lock = FREE;
+                    s.threads[tid].pc = WClaim;
+                    return Ok(vec![s]);
+                }
+            }
+            s.shared.lock = FREE;
+            s.threads[tid].pc = WWorkWait;
+            Ok(vec![s])
+        }
+
+        WClaim => {
+            if sh.next >= t.ntasks {
+                s.threads[tid].pc = WDoneLock;
+            } else {
+                s.shared.next = sh.next + 1;
+                s.threads[tid].task = sh.next;
+                s.threads[tid].pc = WExec;
+            }
+            Ok(vec![s])
+        }
+
+        WExec => {
+            let i = t.task as usize;
+            if !sh.installed || sh.epoch != t.seen {
+                // The job we picked up completed (or was replaced) while
+                // we held a claimed index: in the real pool the borrowed
+                // closure no longer exists.
+                return Err(violation(
+                    ViolationKind::UseAfterReturn,
+                    format!("worker {tid} executed task {i} after its dispatch completed"),
+                ));
+            }
+            s.shared.claims[i] += 1;
+            if s.shared.claims[i] > 1 {
+                return Err(violation(
+                    ViolationKind::DoubleClaim,
+                    format!("task {i} executed {} times in one dispatch", s.shared.claims[i]),
+                ));
+            }
+            if spec.panic_mask & (1 << i) != 0 {
+                s.threads[tid].panicked = true;
+                s.shared.panic_seen = true;
+                s.threads[tid].pc = WDoneLock;
+            } else {
+                s.threads[tid].pc = WClaim;
+            }
+            Ok(vec![s])
+        }
+
+        // Worker retirement from a job: stash the panic, decrement
+        // `active`, and if we were last, wake the `done` waiters.
+        // Release + notify are merged (same coarse-graining as above).
+        WDoneUpdate => {
+            if t.panicked {
+                s.shared.panicked = true;
+                s.threads[tid].panicked = false;
+            }
+            if spec.bug != Some(Bug::SkipActiveAccounting) {
+                s.shared.active = sh.active - 1;
+            }
+            s.shared.lock = FREE;
+            s.threads[tid].pc = WParkLock;
+            if s.shared.active != 0 {
+                return Ok(vec![s]);
+            }
+            if spec.bug == Some(Bug::NotifyOneDone) {
+                // notify_one: exactly one parked done-waiter gets the
+                // token — one successor per possible recipient.
+                let waiters: Vec<usize> = (0..spec.dispatchers)
+                    .filter(|&d| {
+                        matches!(s.threads[d].pc, Pc::DGateWait | Pc::DDoneWait)
+                    })
+                    .collect();
+                if waiters.is_empty() {
+                    return Ok(vec![s]);
+                }
+                let mut succs = Vec::with_capacity(waiters.len());
+                for d in waiters {
+                    let mut s2 = s;
+                    s2.threads[d].pc = match s2.threads[d].pc {
+                        Pc::DGateWait => Pc::DGateLock,
+                        Pc::DDoneWait => Pc::DDoneLock,
+                        _ => unreachable!(),
+                    };
+                    succs.push(s2);
+                }
+                return Ok(succs);
+            }
+            wake_done_all(spec, &mut s);
+            Ok(vec![s])
+        }
+    }
+}
+
+fn all_halted(spec: &ModelSpec, st: &State) -> bool {
+    (0..spec.threads()).all(|tid| st.threads[tid].pc == Pc::Halted)
+}
+
+/// Result of exhaustively exploring one [`ModelSpec`].
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Distinct states reached.
+    pub states: usize,
+    /// False if the `max_states` cap truncated the search.
+    pub complete: bool,
+    /// First violation found, if any.
+    pub violation: Option<ScheduleViolation>,
+}
+
+/// Exhaustive DFS over every interleaving of `spec`. Deterministic:
+/// successor generation and the traversal order are both fixed, so the
+/// same spec always yields the same report.
+pub fn explore(spec: &ModelSpec) -> Report {
+    let init = initial_state(spec);
+    let mut visited: HashSet<State> = HashSet::new();
+    visited.insert(init);
+    let mut stack = vec![init];
+    while let Some(st) = stack.pop() {
+        let mut any_enabled = false;
+        for tid in 0..spec.threads() {
+            let succs = match step(spec, &st, tid) {
+                Err(v) => {
+                    return Report {
+                        states: visited.len(),
+                        complete: false,
+                        violation: Some(v),
+                    }
+                }
+                Ok(succs) => succs,
+            };
+            if !succs.is_empty() {
+                any_enabled = true;
+            }
+            for succ in succs {
+                if visited.insert(succ) {
+                    if visited.len() > spec.max_states {
+                        return Report {
+                            states: visited.len(),
+                            complete: false,
+                            violation: None,
+                        };
+                    }
+                    stack.push(succ);
+                }
+            }
+        }
+        if !any_enabled && !all_halted(spec, &st) {
+            let stuck: Vec<String> = (0..spec.threads())
+                .filter(|&tid| st.threads[tid].pc != Pc::Halted)
+                .map(|tid| format!("thread {tid} at {:?}", st.threads[tid].pc))
+                .collect();
+            return Report {
+                states: visited.len(),
+                complete: false,
+                violation: Some(violation(
+                    ViolationKind::Deadlock,
+                    format!("no runnable thread: {}", stuck.join(", ")),
+                )),
+            };
+        }
+    }
+    Report { states: visited.len(), complete: true, violation: None }
+}
+
+/// The clean configurations `contract_check` sweeps: every protocol
+/// surface (lazy growth, reuse across dispatches, dispatcher
+/// contention, panics) in a bounded box.
+pub fn clean_specs() -> Vec<(&'static str, ModelSpec)> {
+    vec![
+        ("1 dispatcher, 1 worker, 2 tasks, 2 dispatches", ModelSpec::new(1, 1, 2, 2)),
+        ("1 dispatcher, 2 workers, 3 tasks", ModelSpec::new(1, 2, 3, 1)),
+        ("2 dispatchers contending, 1 worker, 2 tasks each", ModelSpec::new(2, 1, 2, 1)),
+        ("panicking task, 2 workers", ModelSpec::new(1, 2, 2, 1).with_panics(0b01)),
+        ("panicking task on the dispatcher path", ModelSpec::new(1, 0, 2, 1).with_panics(0b10)),
+        ("2 dispatchers, 2 workers", ModelSpec::new(2, 2, 2, 1)),
+    ]
+}
+
+/// The seeded-bug configurations and the violation kinds each may
+/// legitimately surface as (the schedule decides which is hit first).
+pub fn seeded_bug_specs() -> Vec<(&'static str, ModelSpec, &'static [ViolationKind])> {
+    use ViolationKind::*;
+    vec![
+        (
+            "completion wait removed",
+            ModelSpec::new(1, 1, 2, 1).with_bug(Bug::SkipCompletionWait),
+            &[UseAfterReturn, LostTask, DoubleClaim][..],
+        ),
+        (
+            "active accounting removed",
+            ModelSpec::new(1, 1, 2, 1).with_bug(Bug::SkipActiveAccounting),
+            &[UseAfterReturn, LostTask, DoubleClaim][..],
+        ),
+        (
+            "install gate removed",
+            ModelSpec::new(2, 0, 2, 1).with_bug(Bug::NoInstallGate),
+            &[LostTask, DoubleClaim, UseAfterReturn][..],
+        ),
+        (
+            "completion notify_all demoted to notify_one",
+            ModelSpec::new(2, 1, 2, 1).with_bug(Bug::NotifyOneDone),
+            &[Deadlock][..],
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_protocol_has_no_violations() {
+        for (label, spec) in clean_specs() {
+            let report = explore(&spec);
+            assert!(report.complete, "{label}: state cap hit at {}", report.states);
+            assert!(
+                report.violation.is_none(),
+                "{label}: {:?} after {} states",
+                report.violation,
+                report.states
+            );
+        }
+    }
+
+    #[test]
+    fn every_seeded_bug_is_found() {
+        for (label, spec, expected) in seeded_bug_specs() {
+            let report = explore(&spec);
+            let v = report
+                .violation
+                .unwrap_or_else(|| panic!("{label}: no violation in {} states", report.states));
+            assert!(
+                expected.contains(&v.kind),
+                "{label}: found {} ({}), expected one of {:?}",
+                v.kind.name(),
+                v.detail,
+                expected.iter().map(|k| k.name()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn exploration_is_deterministic() {
+        let spec = ModelSpec::new(2, 1, 2, 1);
+        let a = explore(&spec);
+        let b = explore(&spec);
+        assert_eq!(a.states, b.states);
+        assert_eq!(a.complete, b.complete);
+        assert!(a.violation.is_none() && b.violation.is_none());
+    }
+
+    #[test]
+    fn state_cap_truncates_without_a_spurious_violation() {
+        let mut spec = ModelSpec::new(2, 2, 2, 2);
+        spec.max_states = 50;
+        let report = explore(&spec);
+        assert!(!report.complete);
+        assert!(report.violation.is_none());
+        assert!(report.states > 50);
+    }
+
+    #[test]
+    fn panicking_dispatch_still_surfaces_the_panic() {
+        // LostPanic is asserted inside the explorer on every completing
+        // schedule; a clean run of a panicking spec means no schedule
+        // can drop the panic.
+        let report = explore(&ModelSpec::new(1, 2, 3, 1).with_panics(0b100));
+        assert!(report.complete);
+        assert!(report.violation.is_none(), "{:?}", report.violation);
+    }
+}

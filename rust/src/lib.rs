@@ -4,6 +4,13 @@
 //! including the pluggable execution-backend seam (XLA/PJRT behind the
 //! `pjrt` feature vs. the always-available pure-Rust reference backend).
 
+// Part of the soundness gate (DESIGN.md §12): inside an `unsafe fn`,
+// every unsafe operation still needs its own `unsafe {}` block — and
+// therefore its own `// SAFETY:` comment (enforced by
+// tools/lint_unsafe.py).
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod coordinator;
 pub mod data;
 pub mod metrics;

@@ -205,9 +205,9 @@ impl ParamStore {
             let mut raw = vec![0u8; n * 4];
             f.read_exact(&mut raw)?;
             let t = match dt[0] {
-                0 => Tensor::from_f32(cast_vec::<f32>(&raw), &shape),
-                1 => Tensor::from_i32(cast_vec::<i32>(&raw), &shape),
-                2 => Tensor::from_u32(cast_vec::<u32>(&raw), &shape),
+                0 => Tensor::from_f32(decode_f32_le(&raw), &shape),
+                1 => Tensor::from_i32(decode_i32_le(&raw), &shape),
+                2 => Tensor::from_u32(decode_u32_le(&raw), &shape),
                 other => bail!("bad dtype byte {other}"),
             };
             store.insert(name, t);
@@ -217,6 +217,11 @@ impl ParamStore {
 }
 
 fn write_slice<T>(f: &mut impl Write, v: &[T]) -> Result<()> {
+    // SAFETY: viewing initialized `T`s (here: f32/i32/u32, no padding
+    // bytes) as bytes. `u8` has alignment 1, so any pointer is aligned
+    // for it; the length is exactly the slice's size in bytes, so the
+    // view stays inside the allocation. Write-direction only — the read
+    // path decodes with `from_le_bytes` and never casts back.
     let bytes =
         unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) };
     f.write_all(bytes)?;
@@ -229,14 +234,25 @@ fn read_u64(f: &mut impl Read) -> Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
-fn cast_vec<T: Copy>(raw: &[u8]) -> Vec<T> {
-    let n = raw.len() / std::mem::size_of::<T>();
-    let mut out = Vec::with_capacity(n);
-    unsafe {
-        out.set_len(n);
-        std::ptr::copy_nonoverlapping(raw.as_ptr(), out.as_mut_ptr() as *mut u8, raw.len());
-    }
-    out
+// Byte -> element decoding for the load path. Deliberately safe code: a
+// `&[u8]` has alignment 1 and casting it to `&[f32]`/`Vec<f32>` (as an
+// earlier revision did) is UB whenever the buffer happens to land on an
+// unaligned address — exactly the hazard Miri flags. `chunks_exact` +
+// `from_le_bytes` compiles to the same wide loads on x86_64 without
+// assuming anything about alignment, and pins the on-disk format to
+// little-endian explicitly. Trailing bytes (len not a multiple of 4)
+// cannot occur — `load` sizes `raw` as `n * 4` — and would be ignored.
+
+fn decode_f32_le(raw: &[u8]) -> Vec<f32> {
+    raw.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect()
+}
+
+fn decode_i32_le(raw: &[u8]) -> Vec<i32> {
+    raw.chunks_exact(4).map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect()
+}
+
+fn decode_u32_le(raw: &[u8]) -> Vec<u32> {
+    raw.chunks_exact(4).map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect()
 }
 
 #[cfg(test)]
@@ -307,5 +323,57 @@ mod tests {
     #[test]
     fn num_elements() {
         assert_eq!(sample().num_elements(), 6);
+    }
+
+    #[test]
+    fn decode_is_alignment_independent() {
+        // Round-trip through every odd offset into a shared byte buffer:
+        // the decoder must read the same values from a slice starting at
+        // any address, 4-aligned or not. (The old `&[u8] -> Vec<f32>`
+        // pointer cast was UB exactly here.)
+        let vals: Vec<f32> = vec![0.0, -1.5, 3.25e-7, f32::MAX, f32::MIN_POSITIVE, -0.0];
+        let mut encoded = Vec::new();
+        write_slice(&mut encoded, &vals).unwrap();
+        for offset in 0..4 {
+            let mut padded = vec![0xAAu8; offset];
+            padded.extend_from_slice(&encoded);
+            let back = decode_f32_le(&padded[offset..]);
+            assert_eq!(back.len(), vals.len(), "offset {offset}");
+            for (a, b) in vals.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits(), "offset {offset}: {a} != {b}");
+            }
+        }
+        // Same property for the integer decoders.
+        let ivals: Vec<i32> = vec![i32::MIN, -1, 0, 1, i32::MAX];
+        let mut ienc = Vec::new();
+        write_slice(&mut ienc, &ivals).unwrap();
+        for offset in 0..4 {
+            let mut padded = vec![0x55u8; offset];
+            padded.extend_from_slice(&ienc);
+            assert_eq!(decode_i32_le(&padded[offset..]), ivals, "offset {offset}");
+        }
+        let uvals: Vec<u32> = vec![0, 1, 0xDEAD_BEEF, u32::MAX];
+        let mut uenc = Vec::new();
+        write_slice(&mut uenc, &uvals).unwrap();
+        for offset in 0..4 {
+            let mut padded = vec![0x99u8; offset];
+            padded.extend_from_slice(&uenc);
+            assert_eq!(decode_u32_le(&padded[offset..]), uvals, "offset {offset}");
+        }
+    }
+
+    #[test]
+    fn decode_preserves_nan_payloads() {
+        // f32 NaNs must survive the checkpoint byte-for-byte: a quiet
+        // NaN with a payload and a signaling-style pattern both
+        // round-trip to identical bits (value equality would be useless
+        // here — NaN != NaN).
+        let patterns: Vec<u32> = vec![0x7FC0_0001, 0xFFC0_DEAD, 0x7F80_0001];
+        let vals: Vec<f32> = patterns.iter().map(|&p| f32::from_bits(p)).collect();
+        let mut encoded = Vec::new();
+        write_slice(&mut encoded, &vals).unwrap();
+        let back = decode_f32_le(&encoded);
+        let bits: Vec<u32> = back.iter().map(|f| f.to_bits()).collect();
+        assert_eq!(bits, patterns);
     }
 }

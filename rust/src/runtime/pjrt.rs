@@ -112,6 +112,12 @@ pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
 /// host layout, which is what the CPU PJRT client expects).
 fn raw_bytes(t: &Tensor) -> &[u8] {
     fn cast<T>(v: &[T]) -> &[u8] {
+        // SAFETY: write-direction T -> u8 view of initialized elements
+        // (f32/i32/u32, no padding bytes). `u8` has alignment 1, so any
+        // source address is aligned for it, and the length is exactly
+        // the slice's size in bytes. The mirrored *read* direction must
+        // NOT be cast this way (alignment!) — see params.rs
+        // `decode_f32_le` for the safe decoding idiom.
         unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
     }
     match &t.data {

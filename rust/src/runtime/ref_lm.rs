@@ -244,6 +244,27 @@ pub(crate) fn validate_manifest(
     graph: TrainGraph,
     manifest: &Manifest,
 ) -> Result<()> {
+    // First pass: the static contract checker's classified diagnosis —
+    // shared with `contract_check`, so load-time validation and static
+    // checking use one leaf-tree model, and a corrupted manifest names
+    // its violation class (missing-leaf, moment-mirror, ...) instead of
+    // a bare "does not match".
+    let violations = crate::analysis::contract::check_manifest(
+        tag,
+        cfg,
+        crate::analysis::contract::GraphFamily::of_train_graph(graph),
+        manifest,
+    );
+    if let Some(v) = violations.first() {
+        bail!(
+            "{}: manifest violates the builtin {tag} training contract \
+             ({} violation(s); first: {v})",
+            manifest.name,
+            violations.len()
+        );
+    }
+    // Byte-equality backstop: a clean classification must mean exact
+    // agreement with the builtin geometry.
     let want = builtin_manifest(cfg, tag, graph);
     let slots_eq = |a: &[Slot], b: &[Slot]| {
         a.len() == b.len()
@@ -2063,7 +2084,9 @@ mod tests {
         let err = crate::runtime::Backend::load(&backend, std::path::Path::new("x"), &bad)
             .err()
             .expect("geometry look-alike must fail to load");
-        assert!(err.to_string().contains("training geometry"), "{err:#}");
+        // The contract checker classifies the corruption, not just "no".
+        assert!(err.to_string().contains("training contract"), "{err:#}");
+        assert!(err.to_string().contains("leaf-shape"), "{err:#}");
     }
 
     #[test]

@@ -518,8 +518,10 @@ fn builtin_fig6_manifest(attn: &str, n: usize) -> Manifest {
 /// contract the serving engine drives: token/pos plus the per-layer
 /// (S, z) recurrent state and named parameter leaves in, logits plus the
 /// advanced state out. The parameter slots are exactly the config's
-/// sorted leaf layout, shared with the training graphs.
-fn builtin_decode_manifest(cfg: &ModelConfig, tag: &str) -> Manifest {
+/// sorted leaf layout, shared with the training graphs. `pub(crate)` so
+/// the static contract checker (`analysis::contract`) can sweep it
+/// against its independently derived expectation.
+pub(crate) fn builtin_decode_manifest(cfg: &ModelConfig, tag: &str) -> Manifest {
     let f = |name: &str, shape: &[usize]| Slot {
         name: name.to_string(),
         shape: shape.to_vec(),
@@ -566,6 +568,26 @@ fn builtin_decode_manifest(cfg: &ModelConfig, tag: &str) -> Manifest {
 /// meta like `vocab` to slice the logits buffer, so a drifted meta value
 /// would turn into out-of-bounds rows, not just wrong math).
 fn validate_decode_manifest(tag: &str, cfg: &ModelConfig, manifest: &Manifest) -> Result<()> {
+    // First pass: the static contract checker's classified diagnosis —
+    // the same leaf-tree model `contract_check` sweeps, so load-time
+    // validation and static checking cannot drift apart, and a corrupted
+    // manifest names its violation class instead of "does not match".
+    let violations = crate::analysis::contract::check_manifest(
+        tag,
+        cfg,
+        crate::analysis::contract::GraphFamily::DecodeStep,
+        manifest,
+    );
+    if let Some(v) = violations.first() {
+        bail!(
+            "{}: manifest violates the builtin {tag} decode contract \
+             ({} violation(s); first: {v})",
+            manifest.name,
+            violations.len()
+        );
+    }
+    // Byte-equality backstop: the checker classifying nothing must mean
+    // exact agreement with the builtin geometry.
     let want = builtin_decode_manifest(cfg, tag);
     let slots_eq = |a: &[Slot], b: &[Slot]| {
         a.len() == b.len()
@@ -2029,13 +2051,16 @@ mod tests {
             let mut m = builtin_decode_manifest(&cfg, tag);
             m.inputs[2].shape = vec![cfg.layers, cfg.batch, cfg.heads, cfg.dp(), 99];
             let err = backend.load(Path::new("unused"), &m).unwrap_err();
-            assert!(err.to_string().contains("decode geometry"), "{err:#}");
+            // The contract checker classifies the corruption: a wrong
+            // recurrent-state shape is a state-shape violation.
+            assert!(err.to_string().contains("decode contract"), "{err:#}");
+            assert!(err.to_string().contains("state-shape"), "{err:#}");
             // Meta drift is just as dangerous: the engine slices logits
             // by the manifest's `vocab`, so a wrong value must not load.
             let mut m = builtin_decode_manifest(&cfg, tag);
             m.meta.insert("vocab".to_string(), Json::Num(512.0));
             let err = backend.load(Path::new("unused"), &m).unwrap_err();
-            assert!(err.to_string().contains("decode geometry"), "{err:#}");
+            assert!(err.to_string().contains("meta-drift"), "{err:#}");
             // The unmodified builtin, of course, loads.
             assert!(backend.load(Path::new("unused"), &builtin_decode_manifest(&cfg, tag)).is_ok());
         }

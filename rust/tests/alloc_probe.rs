@@ -12,6 +12,10 @@
 //! counts deterministic (everything runs with threads=1 — the inline
 //! pool path spawns nothing and takes no locks).
 
+// Integration tests are separate crates: the soundness-gate lint from
+// src/lib.rs must be re-armed here (DESIGN.md §12).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -30,18 +34,29 @@ static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
 
 // SAFETY: delegates every operation to `System`; only adds a counter.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: signature dictated by `GlobalAlloc`; the caller's
+    // obligations are the trait's, discharged in the inner block.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: forwarding the caller's layout to `System` unchanged —
+        // the caller's `GlobalAlloc` obligations carry over verbatim.
+        unsafe { System.alloc(layout) }
     }
 
+    // SAFETY: trait-dictated signature, as for `alloc`.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: `ptr` came from `alloc`/`realloc` above, which return
+        // `System` pointers, so releasing through `System` with the same
+        // layout is the matching pair.
+        unsafe { System.dealloc(ptr, layout) }
     }
 
+    // SAFETY: trait-dictated signature, as for `alloc`.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: same forwarding argument as `dealloc` — `ptr` is a
+        // live `System` allocation with this layout.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 }
 

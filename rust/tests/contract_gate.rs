@@ -1,0 +1,72 @@
+//! Tier-1 soundness gate (DESIGN.md §12): the same static checks that
+//! back the `contract_check` binary, run inside `cargo test` so they can
+//! never rot out of the default CI path.
+//!
+//! Three layers, all hermetic (no graph execution, no threads beyond the
+//! model checker's own bookkeeping, no filesystem):
+//!
+//! 1. every builtin tag × graph family's manifest matches the
+//!    independently derived contract;
+//! 2. the mutation self-test proves the checker *detects* each seeded
+//!    corruption class (a checker that accepts everything also passes
+//!    layer 1);
+//! 3. the pool schedule model explores its bounded interleavings clean,
+//!    and each seeded protocol bug is caught.
+
+use hedgehog::analysis::{contract, schedule};
+
+#[test]
+fn builtin_contracts_hold_statically() {
+    let report = contract::check_builtins();
+    assert!(report.tags >= 3, "expected all builtin tags, saw {}", report.tags);
+    assert!(
+        report.artifacts >= report.tags * 5,
+        "expected init/decode/eval + train graphs per tag, saw {} artifacts",
+        report.artifacts
+    );
+    assert!(
+        report.ok(),
+        "builtin contract violations:\n{}",
+        report
+            .violations
+            .iter()
+            .map(|v| format!("  {v}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn mutation_self_test_proves_detection_power() {
+    let detected = contract::mutation_self_test().expect("self-test must pass on a sound checker");
+    assert!(
+        detected.len() >= 10,
+        "self-test shrank to {} corruption cases — keep every class covered",
+        detected.len()
+    );
+}
+
+#[test]
+fn pool_schedules_are_clean_and_seeded_bugs_are_caught() {
+    for (name, spec) in schedule::clean_specs() {
+        let report = schedule::explore(&spec);
+        assert!(report.complete, "{name}: state cap truncated the clean sweep");
+        assert!(
+            report.violation.is_none(),
+            "{name}: clean protocol violated: {:?}",
+            report.violation
+        );
+    }
+    for (name, spec, expected) in schedule::seeded_bug_specs() {
+        let report = schedule::explore(&spec);
+        let v = report
+            .violation
+            .unwrap_or_else(|| panic!("{name}: seeded bug escaped the model checker"));
+        assert!(
+            expected.contains(&v.kind),
+            "{name}: found {:?}, expected one of {:?}",
+            v.kind,
+            expected
+        );
+    }
+}

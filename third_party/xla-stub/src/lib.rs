@@ -144,6 +144,12 @@ impl Literal {
         let size = std::mem::size_of::<T>();
         let n = self.data.len() / size;
         let mut out: Vec<T> = Vec::with_capacity(n);
+        // SAFETY: byte-wise copy INTO the new Vec's allocation, which is
+        // aligned for T by construction; the source is read as bytes, so
+        // its alignment is irrelevant. `n * size <= self.data.len()` keeps
+        // the copy in bounds, every copied T is a valid bit pattern
+        // (NativeType is f32/i32/u32), and `set_len` runs only after the
+        // first `n` elements are fully initialized by the copy.
         unsafe {
             std::ptr::copy_nonoverlapping(
                 self.data.as_ptr(),

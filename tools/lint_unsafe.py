@@ -1,0 +1,150 @@
+#!/usr/bin/env python3
+"""Hermetic SAFETY-comment lint for the soundness gate (DESIGN.md §12).
+
+Every `unsafe` occurrence in Rust source must be justified:
+
+* an `unsafe {}` block or `unsafe impl` needs a `// SAFETY:` comment on
+  the same line or within the preceding comment block;
+* an `unsafe fn` declaration needs either a `# Safety` doc section
+  (rustdoc convention) or a `// SAFETY:` comment nearby;
+* `rust/src/lib.rs` must carry `#![deny(unsafe_op_in_unsafe_fn)]` so the
+  compiler forces inner `unsafe {}` blocks (each with its own comment)
+  inside unsafe fns.
+
+Pure stdlib, no rustc needed: this runs anywhere Python runs, including
+the tier-1 CI leg before the Rust toolchain is even installed. The
+parser is deliberately line-based and conservative — it strips `//`
+comments and string literals crudely, which is enough for rustfmt'd
+source; it does not try to be a Rust lexer.
+
+Exit status: 0 clean, 1 violations (listed as file:line), 2 bad usage.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# Directories holding Rust source that must pass the lint.
+RUST_ROOTS = [
+    REPO / "rust" / "src",
+    REPO / "rust" / "tests",
+    REPO / "rust" / "benches",
+    REPO / "third_party" / "xla-stub" / "src",
+]
+
+# How many lines above an `unsafe` site we scan for its justification.
+LOOKBACK = 12
+
+WORD_UNSAFE = re.compile(r"\bunsafe\b")
+STRING_LIT = re.compile(r'"(?:[^"\\]|\\.)*"')
+
+
+def strip_code(line: str) -> str:
+    """Remove string literals and trailing // comments from a code line."""
+    no_strings = STRING_LIT.sub('""', line)
+    return no_strings.split("//", 1)[0]
+
+
+def is_comment_line(stripped: str) -> bool:
+    return stripped.startswith(("//", "/*", "*", "*/"))
+
+
+def has_justification(lines: list[str], idx: int) -> bool:
+    """True if lines[idx] (0-based) is covered by a SAFETY/`# Safety` note.
+
+    Accepts the note on the same line or in the contiguous comment /
+    attribute block immediately above, up to LOOKBACK lines away.
+    """
+    if "SAFETY" in lines[idx] or "# Safety" in lines[idx]:
+        return True
+    for back in range(1, LOOKBACK + 1):
+        j = idx - back
+        if j < 0:
+            break
+        prev = lines[j].strip()
+        if "SAFETY" in prev or "# Safety" in prev:
+            return True
+        # Keep walking only through comment/attribute/blank lines — a code
+        # line breaks the contiguous justification block, unless it is a
+        # rustfmt continuation head (`let x =` wrapped before the unsafe
+        # block on the next line).
+        if prev and not is_comment_line(prev) and not prev.startswith("#["):
+            if prev.endswith(("=", "(", ",")):
+                continue
+            break
+    return False
+
+
+def lint_file(path: Path) -> list[tuple[int, str]]:
+    violations: list[tuple[int, str]] = []
+    lines = path.read_text().splitlines()
+    for i, raw in enumerate(lines):
+        stripped = raw.strip()
+        if is_comment_line(stripped):
+            continue
+        code = strip_code(raw)
+        if not WORD_UNSAFE.search(code):
+            continue
+        # The lint-arming attribute itself is not an unsafe site.
+        if "unsafe_op_in_unsafe_fn" in code:
+            continue
+        if not has_justification(lines, i):
+            violations.append((i + 1, stripped))
+    return violations
+
+
+def check_deny_attribute() -> list[str]:
+    problems = []
+    lib = REPO / "rust" / "src" / "lib.rs"
+    if "#![deny(unsafe_op_in_unsafe_fn)]" not in lib.read_text():
+        problems.append(
+            f"{lib.relative_to(REPO)}: missing #![deny(unsafe_op_in_unsafe_fn)] "
+            "(required crate-wide by the soundness gate, DESIGN.md §12)"
+        )
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) > 1:
+        print(__doc__)
+        return 2
+
+    rs_files = sorted(f for root in RUST_ROOTS if root.is_dir() for f in root.rglob("*.rs"))
+    if not rs_files:
+        print("lint_unsafe: no Rust sources found — wrong working tree?", file=sys.stderr)
+        return 2
+
+    failures = 0
+    sites = 0
+    for path in rs_files:
+        file_violations = lint_file(path)
+        for lineno, text in file_violations:
+            print(f"{path.relative_to(REPO)}:{lineno}: unsafe without SAFETY comment: {text}")
+            failures += 1
+        sites += len(
+            [
+                1
+                for i, raw in enumerate(path.read_text().splitlines())
+                if WORD_UNSAFE.search(strip_code(raw))
+                and not is_comment_line(raw.strip())
+                and "unsafe_op_in_unsafe_fn" not in raw
+            ]
+        )
+
+    for problem in check_deny_attribute():
+        print(problem)
+        failures += 1
+
+    if failures:
+        print(f"\nlint_unsafe: {failures} violation(s) across {len(rs_files)} files")
+        return 1
+    print(f"lint_unsafe: OK — {sites} unsafe site(s) in {len(rs_files)} files, all justified")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

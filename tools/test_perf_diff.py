@@ -1,0 +1,223 @@
+#!/usr/bin/env python3
+"""Unit tests for tools/perf_diff.py — stdlib unittest only.
+
+CI runners are not guaranteed to ship pytest, so this is runnable as
+``python3 tools/test_perf_diff.py`` (and discoverable by pytest when it
+is around). Every test passes ``--baseline`` explicitly so nothing here
+touches git state, and all fixture documents live in a tempdir.
+
+Covers all three schema modes (kernel, serve, quality), the
+regression-WARNING paths, the provenance downgrade to informational,
+the serve fault-count warning, and the exit-2 unusable-input contract.
+"""
+
+import contextlib
+import io
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import perf_diff  # noqa: E402
+
+
+def kernel_doc(rate, provenance="measured", chunk_size=16):
+    return {
+        "schema": "hedgehog_bench_v2",
+        "provenance": provenance,
+        "available_parallelism": 8,
+        "smoke": False,
+        "results": [
+            {
+                "kernel": "kernel_linear_attention",
+                "n": 256,
+                "threads": 4,
+                "chunk_size": chunk_size,
+                "geometry": "l2h2d8",
+                "tokens_per_sec": rate,
+            }
+        ],
+    }
+
+
+def serve_doc(rate, provenance="measured", **faults):
+    rec = {
+        "tag": "ref_lm2",
+        "slots": 4,
+        "sustained_tokens_per_sec": rate,
+        "ttft_p50_ms": 3,
+    }
+    rec.update(faults)
+    return {
+        "schema": "hedgehog_serve_v1",
+        "provenance": provenance,
+        "available_parallelism": 8,
+        "smoke": False,
+        "results": [rec],
+    }
+
+
+def quality_doc(rho, viol, kl, provenance="measured"):
+    return {
+        "schema": "hedgehog_quality_v1",
+        "provenance": provenance,
+        "available_parallelism": 8,
+        "smoke": False,
+        "results": [
+            {
+                "tag": "ref_lm2",
+                "feature_map": "hedgehog",
+                "spearman_rho": rho,
+                "monotonicity_violation_rate": viol,
+                "kl_teacher_student": kl,
+            }
+        ],
+    }
+
+
+class PerfDiffTest(unittest.TestCase):
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        self.addCleanup(self._tmp.cleanup)
+
+    def write(self, name, doc):
+        path = os.path.join(self._tmp.name, name)
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        return path
+
+    def run_diff(self, fresh, base):
+        """Run main() with an explicit baseline; returns (rc, stdout)."""
+        out = io.StringIO()
+        with contextlib.redirect_stdout(out):
+            rc = perf_diff.main(["perf_diff.py", fresh, "--baseline", base])
+        return rc, out.getvalue()
+
+    # ---- kernel schema ------------------------------------------------
+
+    def test_kernel_within_threshold_is_quiet(self):
+        fresh = self.write("fresh.json", kernel_doc(1000.0))
+        base = self.write("base.json", kernel_doc(1100.0))
+        rc, out = self.run_diff(fresh, base)
+        self.assertEqual(rc, 0)
+        self.assertNotIn("WARNING", out)
+        self.assertIn("all 1 chunked configs within threshold", out)
+
+    def test_kernel_regression_warns_but_exits_zero(self):
+        fresh = self.write("fresh.json", kernel_doc(700.0))
+        base = self.write("base.json", kernel_doc(1000.0))
+        rc, out = self.run_diff(fresh, base)
+        self.assertEqual(rc, 0, "perf-diff is warn-only by contract")
+        self.assertIn("WARNING: 1 config(s) regressed below 75%", out)
+
+    def test_kernel_naive_rows_are_skipped(self):
+        fresh = self.write("fresh.json", kernel_doc(100.0, chunk_size=0))
+        base = self.write("base.json", kernel_doc(1000.0, chunk_size=0))
+        rc, out = self.run_diff(fresh, base)
+        self.assertEqual(rc, 0)
+        self.assertIn("no overlapping chunked configs", out)
+
+    def test_unmeasured_baseline_downgrades_to_informational(self):
+        fresh = self.write("fresh.json", kernel_doc(500.0))
+        base = self.write("base.json", kernel_doc(1000.0, provenance="modeled"))
+        rc, out = self.run_diff(fresh, base)
+        self.assertEqual(rc, 0)
+        self.assertIn("baseline provenance is 'modeled'", out)
+        self.assertIn("informational", out)
+        # the regression must NOT surface as a gating WARNING block
+        self.assertNotIn("config(s) regressed below", out)
+
+    # ---- serve schema -------------------------------------------------
+
+    def test_serve_regression_warns(self):
+        fresh = self.write("fresh.json", serve_doc(600.0))
+        base = self.write("base.json", serve_doc(1000.0))
+        rc, out = self.run_diff(fresh, base)
+        self.assertEqual(rc, 0)
+        self.assertIn("WARNING: 1 config(s) regressed below 75%", out)
+
+    def test_serve_fault_counts_warn_even_when_fast(self):
+        fresh = self.write("fresh.json", serve_doc(2000.0, shed=2, poisoned=1))
+        base = self.write("base.json", serve_doc(1000.0))
+        rc, out = self.run_diff(fresh, base)
+        self.assertEqual(rc, 0)
+        self.assertIn("non-Completed outcomes", out)
+        self.assertIn("shed=2", out)
+        self.assertIn("poisoned=1", out)
+
+    def test_serve_fault_warning_independent_of_provenance(self):
+        fresh = self.write("fresh.json", serve_doc(2000.0, deadline_exceeded=3))
+        base = self.write("base.json", serve_doc(1000.0, provenance="modeled"))
+        rc, out = self.run_diff(fresh, base)
+        self.assertEqual(rc, 0)
+        self.assertIn("deadline_exceeded=3", out)
+
+    # ---- quality schema -----------------------------------------------
+
+    def test_quality_clean_rows_pass(self):
+        fresh = self.write("fresh.json", quality_doc(0.93, 0.02, 0.010))
+        base = self.write("base.json", quality_doc(0.95, 0.01, 0.009))
+        rc, out = self.run_diff(fresh, base)
+        self.assertEqual(rc, 0)
+        self.assertIn("all 1 quality rows within threshold", out)
+        self.assertNotIn("DEGRADED", out)
+
+    def test_quality_degradations_flag_each_axis(self):
+        # rho drops 0.10 (> 0.05), violation rate rises 0.10 (> 0.05),
+        # KL rises 2x (> 1.25x relative)
+        fresh = self.write("fresh.json", quality_doc(0.85, 0.11, 0.020))
+        base = self.write("base.json", quality_doc(0.95, 0.01, 0.010))
+        rc, out = self.run_diff(fresh, base)
+        self.assertEqual(rc, 0)
+        self.assertIn("DEGRADED", out)
+        self.assertIn("spearman_rho", out)
+        self.assertIn("monotonicity_violation_rate", out)
+        self.assertIn("kl_teacher_student", out)
+        self.assertIn("row(s) degraded past threshold", out)
+
+    def test_quality_unmeasured_baseline_is_informational(self):
+        fresh = self.write("fresh.json", quality_doc(0.80, 0.20, 0.100))
+        base = self.write("base.json", quality_doc(0.95, 0.01, 0.010, provenance="modeled"))
+        rc, out = self.run_diff(fresh, base)
+        self.assertEqual(rc, 0)
+        self.assertIn("degraded vs the unmeasured baseline (informational)", out)
+
+    # ---- unusable inputs ----------------------------------------------
+
+    def test_missing_fresh_file_is_exit_2(self):
+        base = self.write("base.json", kernel_doc(1000.0))
+        with contextlib.redirect_stderr(io.StringIO()):
+            rc = perf_diff.main(
+                ["perf_diff.py", os.path.join(self._tmp.name, "nope.json"), "--baseline", base]
+            )
+        self.assertEqual(rc, 2)
+
+    def test_unparseable_fresh_file_exits_2(self):
+        path = os.path.join(self._tmp.name, "garbage.json")
+        with open(path, "w") as f:
+            f.write("{not json")
+        base = self.write("base.json", kernel_doc(1000.0))
+        with contextlib.redirect_stderr(io.StringIO()):
+            with self.assertRaises(SystemExit) as cm:
+                perf_diff.main(["perf_diff.py", path, "--baseline", base])
+        self.assertEqual(cm.exception.code, 2)
+
+    def test_no_arguments_is_exit_2(self):
+        with contextlib.redirect_stderr(io.StringIO()):
+            self.assertEqual(perf_diff.main(["perf_diff.py"]), 2)
+
+    def test_disjoint_configs_compare_nothing(self):
+        fresh_doc = kernel_doc(1000.0)
+        fresh_doc["results"][0]["n"] = 1024  # no such row in baseline
+        fresh = self.write("fresh.json", fresh_doc)
+        base = self.write("base.json", kernel_doc(1000.0))
+        rc, out = self.run_diff(fresh, base)
+        self.assertEqual(rc, 0)
+        self.assertIn("no overlapping chunked configs", out)
+
+
+if __name__ == "__main__":
+    unittest.main()
