@@ -88,6 +88,12 @@ pub struct BenchRecord {
     /// `tools/perf_diff.py` never compares across shapes; None (JSON
     /// null) for the fixed-shape kernel sweeps.
     pub geometry: Option<String>,
+    /// SIMD dispatch tier the row was measured under ("scalar", "lanes8",
+    /// "avx2" — `runtime::simd::SimdIsa::name`), so `tools/perf_diff.py`
+    /// never compares tokens/sec across ISA tiers (same precedent as
+    /// `geometry`); None (JSON null) for benches that run whatever the
+    /// runtime dispatch picked without recording it.
+    pub simd_isa: Option<String>,
 }
 
 impl BenchRecord {
@@ -115,12 +121,19 @@ impl BenchRecord {
             speedup,
             max_rel_err,
             geometry: None,
+            simd_isa: None,
         }
     }
 
     /// Stamp the model geometry on a record (builder style).
     pub fn with_geometry(mut self, geometry: &str) -> Self {
         self.geometry = Some(geometry.to_string());
+        self
+    }
+
+    /// Stamp the SIMD dispatch tier on a record (builder style).
+    pub fn with_simd_isa(mut self, isa: &str) -> Self {
+        self.simd_isa = Some(isa.to_string());
         self
     }
 }
@@ -148,7 +161,7 @@ pub fn write_json(
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"schema\": \"hedgehog_bench_v2\",\n");
+    s.push_str("  \"schema\": \"hedgehog_bench_v3\",\n");
     s.push_str(&format!("  \"title\": {title:?},\n"));
     s.push_str(&format!("  \"baseline\": {baseline:?},\n"));
     s.push_str("  \"provenance\": \"measured\",\n");
@@ -160,9 +173,13 @@ pub fn write_json(
             Some(g) => format!("{g:?}"),
             None => "null".to_string(),
         };
+        let simd_isa = match &r.simd_isa {
+            Some(i) => format!("{i:?}"),
+            None => "null".to_string(),
+        };
         s.push_str(&format!(
             "    {{\"kernel\": {:?}, \"n\": {}, \"threads\": {}, \"chunk_size\": {}, \
-             \"geometry\": {}, \"reps\": {}, \"mean_ms\": {}, \"min_ms\": {}, \
+             \"geometry\": {}, \"simd_isa\": {}, \"reps\": {}, \"mean_ms\": {}, \"min_ms\": {}, \
              \"ns_per_iter\": {}, \"tokens_per_sec\": {}, \"speedup\": {}, \
              \"max_rel_err\": {}}}{}\n",
             r.kernel,
@@ -170,6 +187,7 @@ pub fn write_json(
             r.threads,
             r.chunk_size,
             geometry,
+            simd_isa,
             r.reps,
             json_num(r.mean_ms),
             json_num(r.min_ms),

@@ -1,10 +1,14 @@
 //! Serving under load: the continuous-batching scheduler driven by
-//! synthetic Poisson traffic, per builtin tag.
+//! synthetic Poisson traffic, per builtin tag x decode thread count.
 //!
-//! Emits `BENCH_serve.json` (schema `hedgehog_serve_v1`): sustained
+//! Emits `BENCH_serve.json` (schema `hedgehog_serve_v2`): sustained
 //! generated tokens/sec, p50/p99 time-to-first-token, p50/p99 per-token
 //! decode latency, high-water concurrency, and shed requests — keyed by
-//! (tag, slots) so `tools/perf_diff.py` never compares across geometry.
+//! (tag, slots, threads, simd_isa) so `tools/perf_diff.py` never
+//! compares across geometry, pool width, or ISA tier. The threads sweep
+//! exercises the sharded decode path (DESIGN.md §13): tokens/sec for
+//! `ref_lm4` should improve monotonically threads=1 -> 4 on hardware
+//! with the cores to back it.
 //!
 //! Hermetic: runs only on the reference backend (the builtin decode
 //! graphs + chunked prefill are the serve stack this repo optimizes);
@@ -14,12 +18,15 @@
 mod common;
 
 use common::{bench_out_path, smoke_mode};
+use hedgehog::runtime::simd;
 use hedgehog::runtime::{ArtifactRegistry, ExecOptions, ModelConfig};
 use hedgehog::serve::{Engine, Scheduler, TrafficGen};
 
 struct ServeRecord {
     tag: String,
     slots: usize,
+    threads: usize,
+    simd_isa: String,
     requests: usize,
     rejected: usize,
     max_concurrent: usize,
@@ -48,7 +55,10 @@ fn percentile(xs: &[f64], p: f64) -> f64 {
     sorted[idx]
 }
 
-fn drive_tag(tag: &str, reg: &ArtifactRegistry, target: usize) -> ServeRecord {
+fn drive_tag(tag: &str, reg: &ArtifactRegistry, target: usize, threads: usize) -> ServeRecord {
+    // Explicit thread count for the sharded decode + pooled prefill;
+    // threads=1 is the serial baseline the sweep compares against.
+    reg.set_exec_options(ExecOptions { threads, chunk_size: ExecOptions::DEFAULT_CHUNK });
     let params = ModelConfig::for_tag(tag).expect("builtin tag").init_params(0x5EED);
     let mut engine = Engine::new(reg, tag, &params).expect("builtin decode engine");
     let cap = engine.batch();
@@ -90,6 +100,8 @@ fn drive_tag(tag: &str, reg: &ArtifactRegistry, target: usize) -> ServeRecord {
     ServeRecord {
         tag: tag.to_string(),
         slots: cap,
+        threads,
+        simd_isa: simd::active_isa().name().to_string(),
         requests: sched.completed.len(),
         rejected: sched.rejected,
         max_concurrent: sched.max_concurrent,
@@ -117,7 +129,7 @@ fn write_serve_json(path: &std::path::Path, records: &[ServeRecord]) -> std::io:
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"schema\": \"hedgehog_serve_v1\",\n");
+    s.push_str("  \"schema\": \"hedgehog_serve_v2\",\n");
     s.push_str("  \"title\": \"continuous-batching serve under Poisson load\",\n");
     s.push_str("  \"provenance\": \"measured\",\n");
     s.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
@@ -125,13 +137,16 @@ fn write_serve_json(path: &std::path::Path, records: &[ServeRecord]) -> std::io:
     s.push_str("  \"results\": [\n");
     for (i, r) in records.iter().enumerate() {
         s.push_str(&format!(
-            "    {{\"tag\": {:?}, \"slots\": {}, \"requests\": {}, \"rejected\": {}, \
+            "    {{\"tag\": {:?}, \"slots\": {}, \"threads\": {}, \"simd_isa\": {:?}, \
+             \"requests\": {}, \"rejected\": {}, \
              \"max_concurrent\": {}, \"engine_steps\": {}, \
              \"sustained_tokens_per_sec\": {}, \"ttft_p50_ms\": {}, \"ttft_p99_ms\": {}, \
              \"tok_p50_ms\": {}, \"tok_p99_ms\": {}, \
              \"shed\": {}, \"poisoned\": {}, \"deadline_exceeded\": {}}}{}\n",
             r.tag,
             r.slots,
+            r.threads,
+            r.simd_isa,
             r.requests,
             r.rejected,
             r.max_concurrent,
@@ -160,32 +175,56 @@ fn main() {
         );
         return;
     }
-    // latency-bound decode steps: serial, default chunking for prefill
-    reg.set_exec_options(ExecOptions::serial());
     let target = if smoke_mode() { 24 } else { 200 };
+    // Decode pool widths: serial baseline, then the sharded decode path.
+    // Thread counts beyond the slot count clamp inside the executor.
+    let thread_cases: &[usize] = if smoke_mode() { &[1, 2] } else { &[1, 2, 4] };
 
-    let mut records = Vec::new();
-    println!("== bench: serve under load ({target} requests per tag) ==");
+    let mut records: Vec<ServeRecord> = Vec::new();
+    println!("== bench: serve under load ({target} requests per tag x threads) ==");
     println!(
-        "{:<8}  {:>5}  {:>8}  {:>8}  {:>12}  {:>9}  {:>9}  {:>9}  {:>9}",
-        "tag", "slots", "requests", "rejected", "tokens/sec", "ttft p50", "ttft p99", "tok p50",
-        "tok p99"
+        "{:<8}  {:>5}  {:>3}  {:>8}  {:>8}  {:>12}  {:>9}  {:>9}  {:>9}  {:>9}",
+        "tag", "slots", "t", "requests", "rejected", "tokens/sec", "ttft p50", "ttft p99",
+        "tok p50", "tok p99"
     );
     for tag in ModelConfig::builtin_tags() {
-        let r = drive_tag(tag, &reg, target);
+        for &threads in thread_cases {
+            let r = drive_tag(tag, &reg, target, threads);
+            println!(
+                "{:<8}  {:>5}  {:>3}  {:>8}  {:>8}  {:>12.0}  {:>8.3}ms  {:>8.3}ms  {:>8.3}ms  \
+                 {:>8.3}ms",
+                r.tag,
+                r.slots,
+                r.threads,
+                r.requests,
+                r.rejected,
+                r.sustained_tokens_per_sec,
+                r.ttft_p50_ms,
+                r.ttft_p99_ms,
+                r.tok_p50_ms,
+                r.tok_p99_ms
+            );
+            records.push(r);
+        }
+    }
+
+    // ISSUE-10 acceptance readout: sharded decode should scale ref_lm4
+    // monotonically with the pool width on hardware with the cores to
+    // back it. Informational (warn-only cross-machine, like perf_diff).
+    let lm4: Vec<&ServeRecord> = records.iter().filter(|r| r.tag == "ref_lm4").collect();
+    if lm4.len() > 1 {
+        let tps: Vec<String> = lm4
+            .iter()
+            .map(|r| format!("t={} -> {:.0} tok/s", r.threads, r.sustained_tokens_per_sec))
+            .collect();
+        let monotonic = lm4
+            .windows(2)
+            .all(|w| w[1].sustained_tokens_per_sec >= w[0].sustained_tokens_per_sec);
         println!(
-            "{:<8}  {:>5}  {:>8}  {:>8}  {:>12.0}  {:>8.3}ms  {:>8.3}ms  {:>8.3}ms  {:>8.3}ms",
-            r.tag,
-            r.slots,
-            r.requests,
-            r.rejected,
-            r.sustained_tokens_per_sec,
-            r.ttft_p50_ms,
-            r.ttft_p99_ms,
-            r.tok_p50_ms,
-            r.tok_p99_ms
+            "ref_lm4 thread scaling: {} ({})",
+            tps.join(", "),
+            if monotonic { "monotonic" } else { "NOT monotonic on this host" }
         );
-        records.push(r);
     }
 
     let path = bench_out_path("BENCH_serve.json");

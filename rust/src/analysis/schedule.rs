@@ -19,6 +19,14 @@
 //! code (waiters re-check their predicate under the lock), and merging
 //! it keeps the state space finite; DESIGN.md §12 records the caveat.
 //!
+//! Not modeled, deliberately: the SIMD tier a job carries
+//! (`JobState.isa`, DESIGN.md §13) is dispatch *payload* — written at
+//! install and read at pickup, both already inside the mutex-held steps
+//! the model has. It adds no states, transitions, or synchronization,
+//! so modeling it would only inflate the state space without checking
+//! anything new (pool.rs's module doc makes the same claim from its
+//! side; keep the two in sync).
+//!
 //! The explorer checks five properties on every reachable state:
 //! no deadlock, no task claimed twice per dispatch generation, no task
 //! executed after its job completed (use-after-return of the borrowed
@@ -641,6 +649,13 @@ pub fn clean_specs() -> Vec<(&'static str, ModelSpec)> {
         ("panicking task, 2 workers", ModelSpec::new(1, 2, 2, 1).with_panics(0b01)),
         ("panicking task on the dispatcher path", ModelSpec::new(1, 0, 2, 1).with_panics(0b10)),
         ("2 dispatchers, 2 workers", ModelSpec::new(2, 2, 2, 1)),
+        // The sharded-decode dispatch shape (DESIGN.md §13): the step
+        // executor fans a decode tick out as one task per batch slot —
+        // `run(threads, batch, ..)` with batch = 4 on the builtins — so
+        // the model covers full-width pickup (every worker claims) and
+        // the tick-after-tick reuse of the same installed-job protocol.
+        ("sharded decode tick: 4 slot tasks, 1 dispatcher + 3 workers", ModelSpec::new(1, 3, 4, 1)),
+        ("sharded decode ticks back-to-back: 4 slot tasks, 2 workers", ModelSpec::new(1, 2, 4, 2)),
     ]
 }
 

@@ -33,8 +33,20 @@
 //! handshake as an explicit-state model and enumerates every bounded
 //! interleaving for deadlocks, double-claims, and use-after-return of
 //! the lifetime-erased closure (rust/DESIGN.md §12). Change the protocol
-//! here and the model there together.
+//! here and the model there together. (The SIMD tier a job carries —
+//! below — is job *payload*, not protocol: it adds no states, no
+//! transitions, and no synchronization, so the model is unaffected.)
+//!
+//! SIMD-tier propagation (DESIGN.md §13): the dispatcher resolves
+//! `simd::active_isa()` once at install time and stashes it in the job
+//! state; every worker pins that tier (`simd::with_isa`) around its
+//! claim loop. Without this, a test or bench that pinned a tier via the
+//! thread-local override would silently run pooled tasks on the workers'
+//! own default — mixing tiers inside one dispatch and un-pinning the
+//! exact path under test. It also makes threads=1 vs threads=N runs
+//! tier-identical by construction.
 
+use crate::runtime::simd::{self, SimdIsa};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -98,6 +110,10 @@ struct JobState {
     /// broadcast but skip a full job — explicit `ExecOptions::threads`
     /// counts stay honored exactly, never just "at least".
     max_workers: usize,
+    /// SIMD tier of the current job, resolved by the dispatcher at
+    /// install time and pinned on every worker for its claim loop (see
+    /// the module docs). Payload, not protocol.
+    isa: SimdIsa,
     /// First worker-task panic of the current job (caught; surfaced to
     /// the dispatcher as a typed `PoolError` after the job fully drains).
     panicked: Option<String>,
@@ -145,6 +161,7 @@ impl WorkerPool {
                     epoch: 0,
                     active: 0,
                     max_workers: 0,
+                    isa: SimdIsa::Lanes8,
                     panicked: None,
                     shutdown: false,
                 }),
@@ -230,6 +247,9 @@ impl WorkerPool {
             st.func = Some(TaskFn(func));
             st.num_tasks = num_tasks;
             st.max_workers = threads.min(num_tasks) - 1;
+            // Workers pin the dispatcher's tier — a thread-local
+            // `with_isa` override on this thread covers the whole job.
+            st.isa = simd::active_isa();
             st.epoch = st.epoch.wrapping_add(1);
             inner.work.notify_all();
         }
@@ -361,7 +381,7 @@ impl Drop for WorkerPool {
 fn worker_loop(inner: Arc<PoolInner>) {
     let mut seen = 0u64;
     loop {
-        let (func, num_tasks) = {
+        let (func, num_tasks, isa) = {
             let mut st = inner.state.lock().unwrap();
             loop {
                 if st.shutdown {
@@ -372,7 +392,7 @@ fn worker_loop(inner: Arc<PoolInner>) {
                     if st.func.is_some() && st.active < st.max_workers {
                         let func = st.func.unwrap();
                         st.active += 1;
-                        break (func, st.num_tasks);
+                        break (func, st.num_tasks, st.isa);
                     }
                     // Job gone, or its worker budget is already full
                     // (this worker was spawned for a wider dispatch):
@@ -381,23 +401,28 @@ fn worker_loop(inner: Arc<PoolInner>) {
                 st = inner.work.wait(st).unwrap();
             }
         };
-        let mut panicked = None;
-        loop {
-            let i = inner.next_task.fetch_add(1, Ordering::Relaxed);
-            if i >= num_tasks {
-                break;
+        // Pin the dispatcher's SIMD tier for the whole claim loop (module
+        // docs): every task of one job runs on one tier, on every thread.
+        let panicked = simd::with_isa(isa, || {
+            let mut panicked = None;
+            loop {
+                let i = inner.next_task.fetch_add(1, Ordering::Relaxed);
+                if i >= num_tasks {
+                    break;
+                }
+                // A successful claim implies the dispatcher is still
+                // blocked in `run` (it cannot observe active == 0 while
+                // this worker holds an unfinished claim), so the closure
+                // is alive. Panics are caught so `active` is always
+                // decremented — a worker that unwound past the decrement
+                // would deadlock every subsequent dispatch.
+                if let Err(p) = catch_unwind(AssertUnwindSafe(|| (func.0)(i))) {
+                    panicked = Some(panic_message(&*p));
+                    break;
+                }
             }
-            // A successful claim implies the dispatcher is still blocked
-            // in `run` (it cannot observe active == 0 while this worker
-            // holds an unfinished claim), so the closure is alive. Panics
-            // are caught so `active` is always decremented — a worker
-            // that unwound past the decrement would deadlock every
-            // subsequent dispatch.
-            if let Err(p) = catch_unwind(AssertUnwindSafe(|| (func.0)(i))) {
-                panicked = Some(panic_message(&*p));
-                break;
-            }
-        }
+            panicked
+        });
         let mut st = inner.state.lock().unwrap();
         if panicked.is_some() && st.panicked.is_none() {
             st.panicked = panicked;
@@ -609,6 +634,36 @@ mod tests {
         })
         .unwrap();
         assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn workers_inherit_the_dispatchers_simd_tier() {
+        // A thread-local `with_isa` pin on the dispatcher must cover the
+        // pooled tasks too — workers read the job's stashed tier, not
+        // their own (autodetected) default. Scalar is never any host's
+        // default, so observing it on a worker proves propagation.
+        let pool = WorkerPool::new();
+        let mismatches = AtomicUsize::new(0);
+        simd::with_isa(SimdIsa::Scalar, || {
+            pool.run(4, 64, &|_| {
+                if simd::active_isa() != SimdIsa::Scalar {
+                    mismatches.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .unwrap();
+        });
+        assert_eq!(mismatches.load(Ordering::Relaxed), 0, "worker ran on a different tier");
+        // And the pin must not leak into the next job: a dispatch outside
+        // the override runs on the process default everywhere.
+        let default_isa = simd::active_isa();
+        let mismatches = AtomicUsize::new(0);
+        pool.run(4, 64, &|_| {
+            if simd::active_isa() != default_isa {
+                mismatches.fetch_add(1, Ordering::Relaxed);
+            }
+        })
+        .unwrap();
+        assert_eq!(mismatches.load(Ordering::Relaxed), 0, "stale tier pin leaked into next job");
     }
 
     #[test]

@@ -1467,14 +1467,167 @@ fn decode_slot_inline(
 /// decode into layer-major passes changes nothing, and every per-row
 /// operation here is the same `simd` call sequence `decode_layer` makes,
 /// so parity with sequential stepping is property-tested at <= 1e-5 for
-/// every builtin tag. Buffers are allocated per call — prefill is a
-/// per-admission one-shot, not part of the zero-alloc steady-state
-/// decode contract.
+/// every builtin tag.
+///
+/// This is the compat wrapper: fresh scratch, no pool (single-threaded).
+/// The serving stack calls [`prefill_state_with`] instead, with a
+/// persistent [`PrefillScratch`] and the executor's `WorkerPool`.
 pub fn prefill_state(
     cfg: &ModelConfig,
     leaves: &[&Tensor],
     prompt: &[i32],
     opts: ExecOptions,
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    prefill_state_with(cfg, leaves, prompt, opts, None, &mut PrefillScratch::new())
+}
+
+/// Reusable prefill working set (DESIGN.md §13): one growable buffer
+/// that [`prefill_state_with`] carves into its row planes and per-head
+/// scratch sets, so admission bursts stop re-allocating the nine
+/// per-admission buffers the old path paid for (`rust/tests/
+/// alloc_probe.rs` measures the before/after). The returned
+/// `(s, z, logits)` are still freshly allocated — they are handed off
+/// to the slot store, not scratch.
+#[derive(Default)]
+pub struct PrefillScratch {
+    buf: Vec<f32>,
+}
+
+impl PrefillScratch {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+}
+
+/// Stage-1 prefill task: project one block of residual rows through
+/// wq/wk/wv into its disjoint q/k/w row blocks.
+struct ProjTask<'a> {
+    r0: usize,
+    q: &'a mut [f32],
+    k: &'a mut [f32],
+    w: &'a mut [f32],
+}
+
+/// Stage-2 prefill task: one head's full-sequence fold — feature rows
+/// and the single-pass (S, z) carry — through its own scratch set and
+/// its disjoint per-head state blocks.
+struct HeadTask<'a> {
+    head: usize,
+    pre_q: &'a mut [f32],
+    pre_k: &'a mut [f32],
+    vh: &'a mut [f32],
+    outh: &'a mut [f32],
+    qf: &'a mut [f32],
+    kf: &'a mut [f32],
+    sh: &'a mut [f32],
+    zh: &'a mut [f32],
+}
+
+/// Stage-3 prefill task: gather every head's output columns and apply
+/// the residual/output projection for one block of rows.
+struct GatherTask<'a> {
+    r0: usize,
+    x: &'a mut [f32],
+    y: &'a mut [f32],
+}
+
+/// Run one prefill stage: on the pool when the dispatch resolved to
+/// parallel, inline otherwise (no pool handle, or a serial resolve).
+/// The inline loop is the pooled order with one claimant — every task
+/// owns disjoint outputs and reads only barrier-complete stages, so the
+/// two are bit-identical.
+fn run_stage<T: Send>(
+    pool: Option<&WorkerPool>,
+    threads: usize,
+    tasks: Vec<T>,
+    f: impl Fn(T) + Sync,
+) -> Result<(), PoolError> {
+    match pool {
+        Some(p) if threads > 1 => p.run_tasks(threads, tasks, f),
+        _ => {
+            for t in tasks {
+                f(t);
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Carve one layer's stage-2 work: per-head scratch sets out of the
+/// heads region and per-head (S, z) blocks out of the layer state.
+fn head_tasks<'a>(
+    mut hr: &'a mut [f32],
+    mut sr: &'a mut [f32],
+    mut zr: &'a mut [f32],
+    (h, n, d, dp, cmax): (usize, usize, usize, usize, usize),
+) -> Vec<HeadTask<'a>> {
+    let mut tasks = Vec::with_capacity(h);
+    for head in 0..h {
+        let tail = std::mem::take(&mut hr);
+        let (pre_q, r) = tail.split_at_mut(n * d);
+        let (pre_k, r) = r.split_at_mut(n * d);
+        let (vh, r) = r.split_at_mut(n * d);
+        let (outh, r) = r.split_at_mut(n * d);
+        let (qf, r) = r.split_at_mut(cmax * dp);
+        let (kf, r) = r.split_at_mut(cmax * dp);
+        hr = r;
+        let (sh, r) = std::mem::take(&mut sr).split_at_mut(dp * d);
+        sr = r;
+        let (zh, r) = std::mem::take(&mut zr).split_at_mut(dp);
+        zr = r;
+        tasks.push(HeadTask { head, pre_q, pre_k, vh, outh, qf, kf, sh, zh });
+    }
+    tasks
+}
+
+/// Immutable views of each head's `outh` rows, re-split from the heads
+/// region after the stage-2 barrier (offset 3·n·d inside each set).
+fn outh_views(heads_region: &[f32], h: usize, head_set: usize, nd: usize) -> Vec<&[f32]> {
+    let mut views = Vec::with_capacity(h);
+    let mut hr = heads_region;
+    for _ in 0..h {
+        let (set, r) = hr.split_at(head_set);
+        views.push(&set[3 * nd..4 * nd]);
+        hr = r;
+    }
+    views
+}
+
+/// Carve stage-1/stage-3 row blocks: disjoint `rows · dm` slices of two
+/// row planes, one pair per `bounds` window.
+fn row_block_tasks<'a>(
+    mut a: &'a mut [f32],
+    mut b: &'a mut [f32],
+    bounds: &[usize],
+    dm: usize,
+) -> Vec<GatherTask<'a>> {
+    let mut tasks = Vec::with_capacity(bounds.len().max(1) - 1);
+    for wnd in bounds.windows(2) {
+        let rows = wnd[1] - wnd[0];
+        let (ab, r) = std::mem::take(&mut a).split_at_mut(rows * dm);
+        a = r;
+        let (bb, r) = std::mem::take(&mut b).split_at_mut(rows * dm);
+        b = r;
+        tasks.push(GatherTask { r0: wnd[0], x: ab, y: bb });
+    }
+    tasks
+}
+
+/// [`prefill_state`] with the serving executor's persistent scratch and
+/// worker pool. Within each layer the work runs as three barriered
+/// stages — row-block projections, per-head sequence folds, row-block
+/// gather + residual — each over disjoint `split_at_mut` regions, so no
+/// new `unsafe` is introduced and the result is bit-identical to the
+/// single-threaded pass (each row/head sees the same `simd` call
+/// sequence on the same operands, and pool workers inherit the
+/// dispatcher's SIMD tier). `pool: None` forces the inline path.
+pub fn prefill_state_with(
+    cfg: &ModelConfig,
+    leaves: &[&Tensor],
+    prompt: &[i32],
+    opts: ExecOptions,
+    pool: Option<&WorkerPool>,
+    scratch: &mut PrefillScratch,
 ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
     if prompt.is_empty() {
         bail!("prefill_state: empty prompt (admit the slot with reset state instead)");
@@ -1488,127 +1641,190 @@ pub fn prefill_state(
     // fold order is chunk-independent, so here it just means "one block".
     let cmax = if opts.chunk_size == 0 { n } else { opts.chunk_size.min(n) };
 
+    // Same per-token flop model as decode, times the prompt length.
+    let proj = if cfg.projected() { 4 * dm * dm } else { 0 };
+    let flops = (n * (cfg.layers * (h * dp * d * 4 + proj) + dm * v)) as f64;
+    let threads = if pool.is_some() { auto_threads(opts, flops) } else { 1 };
+
     let mut s = vec![0.0f32; cfg.layers * h * dp * d];
     let mut z = vec![0.0f32; cfg.layers * h * dp];
 
+    // One carve of the persistent scratch covers the whole working set:
+    // five (n, D) row planes, then one scratch set per head (pre_q /
+    // pre_k / vh / outh rows and qf/kf feature blocks) so stage-2 tasks
+    // own disjoint regions. Every region is fully written before it is
+    // read, so a grown buffer never needs re-zeroing.
+    let head_set = 4 * n * d + 2 * cmax * dp;
+    let need = 5 * n * dm + h * head_set;
+    if scratch.buf.len() < need {
+        scratch.buf.resize(need, 0.0);
+    }
+    let buf = &mut scratch.buf[..need];
+    let (x, rest) = buf.split_at_mut(n * dm);
+    let (y, rest) = rest.split_at_mut(n * dm);
+    let (q, rest) = rest.split_at_mut(n * dm);
+    let (k, rest) = rest.split_at_mut(n * dm);
+    let (w, heads_region) = rest.split_at_mut(n * dm);
+
     // Residual stream rows (n, D): embed gather, same id-wrapping as decode.
-    let mut x = vec![0.0f32; n * dm];
     for (t, &tok) in prompt.iter().enumerate() {
         let id = tok.rem_euclid(v as i32) as usize;
         x[t * dm..(t + 1) * dm].copy_from_slice(&mp.embed[id * dm..(id + 1) * dm]);
     }
 
-    // Reusable layer/head buffers (q/k/w rows only used by Learnable).
-    let mut y = vec![0.0f32; n * dm];
-    let mut q = vec![0.0f32; n * dm];
-    let mut k = vec![0.0f32; n * dm];
-    let mut w = vec![0.0f32; n * dm];
-    let mut pre_q = vec![0.0f32; n * d];
-    let mut pre_k = vec![0.0f32; n * d];
-    let mut vh = vec![0.0f32; n * d];
-    let mut outh = vec![0.0f32; n * d];
-    let mut qf = vec![0.0f32; cmax * dp];
-    let mut kf = vec![0.0f32; cmax * dp];
+    // Row-block boundaries for stages 1 and 3 (uniform per-row cost).
+    let bounds = span_bounds(n, threads, false);
 
     for l in 0..cfg.layers {
         let s_l = &mut s[l * h * dp * d..(l + 1) * h * dp * d];
         let z_l = &mut z[l * h * dp..(l + 1) * h * dp];
         match mp.layers.get(l) {
             Some(lp) => {
-                // Project every row with decode_layer's op convention.
-                for t in 0..n {
-                    let xr = &x[t * dm..(t + 1) * dm];
-                    for (out, wm) in [
-                        (&mut q[t * dm..(t + 1) * dm], lp.wq),
-                        (&mut k[t * dm..(t + 1) * dm], lp.wk),
-                        (&mut w[t * dm..(t + 1) * dm], lp.wv),
-                    ] {
-                        simd::scaled_add(out, 0.0, xr[0], &wm[..dm]);
-                        for (i, &xi) in xr.iter().enumerate().skip(1) {
-                            simd::axpy(out, xi, &wm[i * dm..(i + 1) * dm]);
+                // Stage 1 (row blocks): project every row with
+                // decode_layer's op convention.
+                let tasks = {
+                    let mut tasks = Vec::with_capacity(bounds.len() - 1);
+                    let (mut qr, mut kr, mut wr) = (&mut q[..], &mut k[..], &mut w[..]);
+                    for wnd in bounds.windows(2) {
+                        let rows = wnd[1] - wnd[0];
+                        let (qb, r) = std::mem::take(&mut qr).split_at_mut(rows * dm);
+                        qr = r;
+                        let (kb, r) = std::mem::take(&mut kr).split_at_mut(rows * dm);
+                        kr = r;
+                        let (wb, r) = std::mem::take(&mut wr).split_at_mut(rows * dm);
+                        wr = r;
+                        tasks.push(ProjTask { r0: wnd[0], q: qb, k: kb, w: wb });
+                    }
+                    tasks
+                };
+                let xs = &x[..];
+                run_stage(pool, threads, tasks, |t: ProjTask| {
+                    let rows = t.q.len() / dm;
+                    for i in 0..rows {
+                        let xr = &xs[(t.r0 + i) * dm..(t.r0 + i + 1) * dm];
+                        for (out, wm) in [
+                            (&mut t.q[i * dm..(i + 1) * dm], lp.wq),
+                            (&mut t.k[i * dm..(i + 1) * dm], lp.wk),
+                            (&mut t.w[i * dm..(i + 1) * dm], lp.wv),
+                        ] {
+                            simd::scaled_add(out, 0.0, xr[0], &wm[..dm]);
+                            for (j, &xi) in xr.iter().enumerate().skip(1) {
+                                simd::axpy(out, xi, &wm[j * dm..(j + 1) * dm]);
+                            }
                         }
                     }
-                }
-                for head in 0..h {
-                    // Pre-activation rows: with fm leaves, pre = fm . q_h
-                    // (the single pass then applies the elementwise map,
-                    // matching decode_layer); without (DPFP), the map
-                    // consumes the projected head rows directly.
-                    for t in 0..n {
-                        let qh = &q[t * dm + head * d..t * dm + (head + 1) * d];
-                        let kh = &k[t * dm + head * d..t * dm + (head + 1) * d];
+                })?;
+
+                // Stage 2 (heads): pre-activation rows — with fm leaves,
+                // pre = fm . q_h (the single pass then applies the
+                // elementwise map, matching decode_layer); without
+                // (DPFP), the map consumes the projected head rows
+                // directly — then the per-head single-pass fold.
+                let tasks = head_tasks(heads_region, s_l, z_l, (h, n, d, dp, cmax));
+                let (qs, ks, ws) = (&q[..], &k[..], &w[..]);
+                run_stage(pool, threads.min(h), tasks, |t: HeadTask| {
+                    let head = t.head;
+                    for row in 0..n {
+                        let qh = &qs[row * dm + head * d..row * dm + (head + 1) * d];
+                        let kh = &ks[row * dm + head * d..row * dm + (head + 1) * d];
                         match (lp.fm_q, lp.fm_k) {
                             (Some(fq), Some(fk)) => {
                                 let fm_q = &fq[head * dd..(head + 1) * dd];
                                 let fm_k = &fk[head * dd..(head + 1) * dd];
                                 for r in 0..d {
-                                    pre_q[t * d + r] = simd::dot(qh, &fm_q[r * d..(r + 1) * d]);
-                                    pre_k[t * d + r] = simd::dot(kh, &fm_k[r * d..(r + 1) * d]);
+                                    t.pre_q[row * d + r] =
+                                        simd::dot(qh, &fm_q[r * d..(r + 1) * d]);
+                                    t.pre_k[row * d + r] =
+                                        simd::dot(kh, &fm_k[r * d..(r + 1) * d]);
                                 }
                             }
                             _ => {
-                                pre_q[t * d..(t + 1) * d].copy_from_slice(qh);
-                                pre_k[t * d..(t + 1) * d].copy_from_slice(kh);
+                                t.pre_q[row * d..(row + 1) * d].copy_from_slice(qh);
+                                t.pre_k[row * d..(row + 1) * d].copy_from_slice(kh);
                             }
                         }
-                        vh[t * d..(t + 1) * d]
-                            .copy_from_slice(&w[t * dm + head * d..t * dm + (head + 1) * d]);
+                        t.vh[row * d..(row + 1) * d]
+                            .copy_from_slice(&ws[row * dm + head * d..row * dm + (head + 1) * d]);
                     }
-                    let sh = &mut s_l[head * dp * d..(head + 1) * dp * d];
-                    let zh = &mut z_l[head * dp..(head + 1) * dp];
                     linear_head_single_pass(
                         map,
-                        &pre_q,
-                        &pre_k,
-                        &vh,
-                        &mut outh,
+                        t.pre_q,
+                        t.pre_k,
+                        t.vh,
+                        t.outh,
                         cmax,
                         d,
                         d,
                         dp,
-                        (&mut qf, &mut kf, sh, zh),
+                        (t.qf, t.kf, t.sh, t.zh),
                     );
-                    for t in 0..n {
-                        y[t * dm + head * d..t * dm + (head + 1) * d]
-                            .copy_from_slice(&outh[t * d..(t + 1) * d]);
+                })?;
+
+                // Stage 3 (row blocks): gather head columns into y, then
+                // residual + output projection: x_t += y_t wo.
+                let ouths = outh_views(heads_region, h, head_set, n * d);
+                let ouths = &ouths[..];
+                let tasks = row_block_tasks(x, y, &bounds, dm);
+                run_stage(pool, threads, tasks, |t: GatherTask| {
+                    let rows = t.y.len() / dm;
+                    for i in 0..rows {
+                        let row = t.r0 + i;
+                        let yr = &mut t.y[i * dm..(i + 1) * dm];
+                        for (head, outh) in ouths.iter().enumerate() {
+                            yr[head * d..(head + 1) * d]
+                                .copy_from_slice(&outh[row * d..(row + 1) * d]);
+                        }
+                        let xr = &mut t.x[i * dm..(i + 1) * dm];
+                        for (j, &yj) in yr.iter().enumerate() {
+                            simd::axpy(xr, yj, &lp.wo[j * dm..(j + 1) * dm]);
+                        }
                     }
-                }
-                // residual + output projection: x_t += y_t wo
-                for t in 0..n {
-                    let xr = &mut x[t * dm..(t + 1) * dm];
-                    for (j, &yj) in y[t * dm..(t + 1) * dm].iter().enumerate() {
-                        simd::axpy(xr, yj, &lp.wo[j * dm..(j + 1) * dm]);
-                    }
-                }
+                })?;
             }
             None => {
                 // FixedExp: q = k = v = the raw head slice, phi = the
                 // data-independent Hedgehog map, stack by replacement.
-                for head in 0..h {
-                    for t in 0..n {
-                        vh[t * d..(t + 1) * d]
-                            .copy_from_slice(&x[t * dm + head * d..t * dm + (head + 1) * d]);
+                let tasks = head_tasks(heads_region, s_l, z_l, (h, n, d, dp, cmax));
+                let xs = &x[..];
+                run_stage(pool, threads.min(h), tasks, |t: HeadTask| {
+                    let head = t.head;
+                    for row in 0..n {
+                        t.vh[row * d..(row + 1) * d].copy_from_slice(
+                            &xs[row * dm + head * d..row * dm + (head + 1) * d],
+                        );
                     }
-                    let sh = &mut s_l[head * dp * d..(head + 1) * dp * d];
-                    let zh = &mut z_l[head * dp..(head + 1) * dp];
+                    let vh = &t.vh[..];
                     linear_head_single_pass(
                         map,
-                        &vh,
-                        &vh,
-                        &vh,
-                        &mut outh,
+                        vh,
+                        vh,
+                        vh,
+                        t.outh,
                         cmax,
                         d,
                         d,
                         dp,
-                        (&mut qf, &mut kf, sh, zh),
+                        (t.qf, t.kf, t.sh, t.zh),
                     );
-                    for t in 0..n {
-                        y[t * dm + head * d..t * dm + (head + 1) * d]
-                            .copy_from_slice(&outh[t * d..(t + 1) * d]);
+                })?;
+
+                // Stage 3 (row blocks): gather into y, stack by
+                // replacement onto x.
+                let ouths = outh_views(heads_region, h, head_set, n * d);
+                let ouths = &ouths[..];
+                let tasks = row_block_tasks(x, y, &bounds, dm);
+                run_stage(pool, threads, tasks, |t: GatherTask| {
+                    let rows = t.y.len() / dm;
+                    for i in 0..rows {
+                        let row = t.r0 + i;
+                        let yr = &mut t.y[i * dm..(i + 1) * dm];
+                        for (head, outh) in ouths.iter().enumerate() {
+                            yr[head * d..(head + 1) * d]
+                                .copy_from_slice(&outh[row * d..(row + 1) * d]);
+                        }
+                        t.x[i * dm..(i + 1) * dm].copy_from_slice(yr);
                     }
-                }
-                x.copy_from_slice(&y);
+                })?;
             }
         }
     }
@@ -1622,25 +1838,76 @@ pub fn prefill_state(
     Ok((s, z, logits))
 }
 
-/// Per-slot decode work item for the pool path: disjoint views of the
-/// slot's per-layer state blocks, logits row, and scratch region.
-struct DecodeSlot<'a> {
-    token: i32,
-    s: Vec<&'a mut [f32]>,
-    z: Vec<&'a mut [f32]>,
-    logits: &'a mut [f32],
-    scratch: &'a mut [f32],
+/// Raw shard bases for the pooled decode path (DESIGN.md §13). One
+/// allocation-free `WorkerPool::run` dispatch advances every slot
+/// concurrently; each task re-materializes only the regions its slot
+/// index owns. Raw pointers rather than `split_at_mut` because the
+/// (L, B, ...) state layout is layer-major — one slot's per-layer
+/// blocks are not contiguous, and a safe slice plan needs per-step
+/// `Vec`s of slice handles, which is exactly the steady-state
+/// allocation this path eliminates.
+struct ShardCtx {
+    s: *mut f32,
+    z: *mut f32,
+    logits: *mut f32,
+    scratch: *mut f32,
 }
 
-/// Run one pooled decode slot (same math as `decode_slot_inline`, over
-/// pre-split per-layer state views).
-fn run_decode_slot(cfg: &ModelConfig, mp: &ModelParams, t: DecodeSlot) {
-    let (dm, v) = (cfg.d_model(), cfg.vocab);
-    let DecodeSlot { token, s, z, logits, scratch } = t;
+// SAFETY: the raw bases are dereferenced only inside `run_shard_slot`,
+// which slices out exclusively the regions owned by its slot index;
+// distinct slots map to disjoint ranges of every buffer (the same
+// disjointness the old `split_at_mut` plan encoded), and the pool's
+// claim counter hands each slot index to exactly one task
+// (`analysis::schedule` model-checks that uniqueness).
+unsafe impl Sync for ShardCtx {}
+
+/// Advance one slot through the shard bases — identical math to
+/// [`decode_slot_inline`], re-deriving that function's state/scratch
+/// regions from raw pointers so the pooled path allocates nothing.
+///
+/// # Safety
+///
+/// Callers must guarantee: `slot < cfg.batch`; every base in `ctx`
+/// points at a live f32 buffer of the manifest length for `cfg`
+/// (`s`: L·B·H·Dp·d, `z`: L·B·H·Dp, `logits`: B·V, `scratch`:
+/// B·`slot_scratch_len`); and no other live reference touches this
+/// slot's regions of those buffers for the duration of the call.
+unsafe fn run_shard_slot(
+    cfg: &ModelConfig,
+    mp: &ModelParams,
+    token: i32,
+    slot: usize,
+    ctx: &ShardCtx,
+) {
+    let (b, h, d, dp, dm, v) =
+        (cfg.batch, cfg.heads, cfg.head_dim, cfg.dp(), cfg.d_model(), cfg.vocab);
+    let per = slot_scratch_len(cfg);
+    debug_assert!(slot < b, "shard slot out of range");
+    // SAFETY: scratch row [slot·per, (slot+1)·per) and logits row
+    // [slot·v, (slot+1)·v) are in bounds (bases cover b ≥ slot+1 rows)
+    // and owned by this slot alone — the caller's contract.
+    let (scratch, logits) = unsafe {
+        (
+            std::slice::from_raw_parts_mut(ctx.scratch.add(slot * per), per),
+            std::slice::from_raw_parts_mut(ctx.logits.add(slot * v), v),
+        )
+    };
     let tok = token.rem_euclid(v as i32) as usize;
     let (x, rest) = scratch.split_at_mut(dm);
     x.copy_from_slice(&mp.embed[tok * dm..(tok + 1) * dm]);
-    for (l, (s_l, z_l)) in s.into_iter().zip(z).enumerate() {
+    for l in 0..cfg.layers {
+        let sb = (l * b + slot) * h * dp * d;
+        let zb = (l * b + slot) * h * dp;
+        // SAFETY: layer l's slot-indexed state blocks — the offsets
+        // `decode_slot_inline` slices safely — are disjoint across
+        // slots and owned by this task (caller contract), and each is
+        // materialized once per loop iteration (no self-overlap).
+        let (s_l, z_l) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(ctx.s.add(sb), h * dp * d),
+                std::slice::from_raw_parts_mut(ctx.z.add(zb), h * dp),
+            )
+        };
         decode_layer(cfg, mp.layers.get(l), s_l, z_l, x, rest);
     }
     simd::scaled_add(logits, 0.0, x[0], &mp.unembed[..v]);
@@ -1712,42 +1979,24 @@ impl RefDecode {
                 );
             }
         } else {
-            // distribute each slot's per-layer state blocks (the (L, B,
-            // ...) layout is layer-major, so one slot's blocks are not
-            // contiguous)
-            let mut slot_s: Vec<Vec<&mut [f32]>> =
-                (0..b).map(|_| Vec::with_capacity(cfg.layers)).collect();
-            let mut slot_z: Vec<Vec<&mut [f32]>> =
-                (0..b).map(|_| Vec::with_capacity(cfg.layers)).collect();
-            let mut s_rest = &mut s_out[..];
-            let mut z_rest = &mut z_out[..];
-            for _l in 0..cfg.layers {
-                for slot in 0..b {
-                    let (blk, r) = std::mem::take(&mut s_rest).split_at_mut(h * dp * d);
-                    s_rest = r;
-                    slot_s[slot].push(blk);
-                    let (blk, r) = std::mem::take(&mut z_rest).split_at_mut(h * dp);
-                    z_rest = r;
-                    slot_z[slot].push(blk);
-                }
-            }
-            let mut tasks = Vec::with_capacity(b);
-            let mut l_rest = &mut logits[..];
-            let mut sc_rest = &mut guard[..];
-            for (slot, (s_v, z_v)) in slot_s.into_iter().zip(slot_z).enumerate() {
-                let (lg, r) = std::mem::take(&mut l_rest).split_at_mut(v);
-                l_rest = r;
-                let (sc, r) = std::mem::take(&mut sc_rest).split_at_mut(per);
-                sc_rest = r;
-                tasks.push(DecodeSlot {
-                    token: token[slot],
-                    s: s_v,
-                    z: z_v,
-                    logits: lg,
-                    scratch: sc,
-                });
-            }
-            self.pool.run_tasks(threads, tasks, |t: DecodeSlot| run_decode_slot(cfg, &mp, t))?;
+            // Sharded pool path: one allocation-free dispatch advances
+            // every slot; tasks derive their disjoint regions from the
+            // shard bases (see ShardCtx for why not split_at_mut).
+            let ctx = ShardCtx {
+                s: s_out.as_mut_ptr(),
+                z: z_out.as_mut_ptr(),
+                logits: logits.as_mut_ptr(),
+                scratch: guard.as_mut_ptr(),
+            };
+            let mp = &mp;
+            self.pool.run(threads, b, &|slot| {
+                // SAFETY: num_tasks == b so slot < b; the buffer lengths
+                // were validated against the manifest above; and the
+                // pool hands each slot index to exactly one task, so
+                // this call exclusively owns the slot's regions — the
+                // full `run_shard_slot` contract.
+                unsafe { run_shard_slot(cfg, mp, token[slot], slot, &ctx) }
+            })?;
         }
         Ok(())
     }

@@ -42,10 +42,11 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::runtime::reference::prefill_state;
+use crate::runtime::reference::{prefill_state_with, PrefillScratch};
 use crate::runtime::simd::finite_mask;
 use crate::runtime::{
     ArtifactRegistry, Executable, ExecOptions, ModelConfig, ParamStore, SlotPoisoned, Tensor,
+    WorkerPool,
 };
 
 use super::slot::SlotStore;
@@ -80,6 +81,12 @@ pub struct StepExecutor {
     prefill_cfg: Option<ModelConfig>,
     /// Chunking for the prefill pass (captured from the registry).
     prefill_opts: ExecOptions,
+    /// Persistent prefill working set (DESIGN.md §13), reused across
+    /// admissions so bursts stop churning the allocator.
+    prefill_scratch: PrefillScratch,
+    /// Pool for the parallel prefill stages. Lazy: no worker threads
+    /// exist until a dispatch resolves to `threads > 1`.
+    prefill_pool: WorkerPool,
     /// Slots quarantined by the last `step` (bit b = slot b), cleared at
     /// the start of every step. See the guardrail sweep in `step`.
     quarantined: u64,
@@ -149,6 +156,8 @@ impl StepExecutor {
             vocab,
             prefill_cfg,
             prefill_opts: reg.exec_options(),
+            prefill_scratch: PrefillScratch::new(),
+            prefill_pool: WorkerPool::new(),
             quarantined: 0,
             tokens_processed: 0,
         };
@@ -278,8 +287,11 @@ impl StepExecutor {
     /// `prompt.len()`, and return the last-position logits (they predict
     /// the first generated token). Returns `Ok(None)` when the artifact
     /// has no prefill path (compiled backends) or the prompt is empty —
-    /// callers then fall back to per-token stepping. Allocates per call;
-    /// prefill is a per-admission one-shot, not steady-state decode.
+    /// callers then fall back to per-token stepping. The working set is
+    /// persistent (`PrefillScratch`) and the per-layer stages run on
+    /// the executor's pool when the dispatch resolves parallel —
+    /// admission is cheap under burst, but still a per-admission
+    /// one-shot, not steady-state decode.
     pub fn prefill(
         &mut self,
         slots: &mut SlotStore,
@@ -294,7 +306,14 @@ impl StepExecutor {
         // Param slots in manifest order are exactly the sorted leaves
         // the builtin decode manifest declares after token/pos/s/z.
         let leaves: Vec<&Tensor> = self.param_inputs.iter().flatten().collect();
-        let (s, z, logits) = prefill_state(&cfg, &leaves, prompt, self.prefill_opts)?;
+        let (s, z, logits) = prefill_state_with(
+            &cfg,
+            &leaves,
+            prompt,
+            self.prefill_opts,
+            Some(&self.prefill_pool),
+            &mut self.prefill_scratch,
+        )?;
         slots.load(slot, &s, &z, prompt.len() as i32)?;
         self.tokens_processed += prompt.len();
         Ok(Some(logits))

@@ -9,8 +9,11 @@
 //! Single `#[test]` in its own binary: the counting allocator is
 //! process-global and libtest runs tests in one process concurrently, so
 //! keeping every probe inside one sequential test function keeps the
-//! counts deterministic (everything runs with threads=1 — the inline
-//! pool path spawns nothing and takes no locks).
+//! counts deterministic. Most probes run with threads=1 (the inline pool
+//! path spawns nothing and takes no locks); the sharded-decode probe
+//! deliberately runs threads=2 — the pool's claim-counter dispatch is
+//! allocation-free by design, so a measured window of zero stays
+//! deterministic even with a live worker thread.
 
 // Integration tests are separate crates: the soundness-gate lint from
 // src/lib.rs must be re-armed here (DESIGN.md §12).
@@ -145,6 +148,61 @@ fn decode_probe() {
     assert_eq!(late, 0, "Engine::step allocated {late} times per token at pos 512 (want 0)");
 }
 
+/// Same decode-tick contract on the *sharded* pool path (DESIGN.md §13):
+/// with an explicit threads=2 dispatch the step executor fans the slots
+/// out over pool tasks through `WorkerPool::run`'s claim-counter
+/// dispatch — no task cells, no per-dispatch boxing — so after the first
+/// step (worker spawn + scratch growth, covered by warmup) a steady-state
+/// tick must allocate exactly as little as the serial path: nothing.
+fn sharded_decode_probe() {
+    let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+    reg.set_exec_options(ExecOptions { threads: 2, chunk_size: ExecOptions::DEFAULT_CHUNK });
+    let params = ref_lm_demo_params();
+    let mut engine = Engine::new(&reg, REF_LM_TAG, &params).unwrap();
+    let early = decode_allocs_at(&mut engine, 8);
+    let late = decode_allocs_at(&mut engine, 256);
+    assert_eq!(early, 0, "sharded Engine::step allocated {early} times per token (want 0)");
+    assert_eq!(
+        late, 0,
+        "sharded Engine::step allocated {late} times per token at pos 256 (want 0)"
+    );
+}
+
+/// Prefill admissions reuse the executor's persistent `PrefillScratch`
+/// (DESIGN.md §13): the first admission grows the working set (plus the
+/// engine's one-time prefill machinery), every later same-length
+/// admission pays only the handed-off (S, z, logits) outputs — a fixed
+/// count that neither grows over admissions nor repeats the first
+/// admission's scratch build.
+fn prefill_scratch_probe() {
+    let reg = ArtifactRegistry::open("/nonexistent/artifacts-dir").unwrap();
+    reg.set_exec_options(ExecOptions::serial());
+    let params = ref_lm_demo_params();
+    let mut engine = Engine::new(&reg, REF_LM_TAG, &params).unwrap();
+    assert!(engine.supports_prefill());
+    let prompt = [2i32, 4, 6, 8, 10, 12, 14, 16, 3, 5, 7, 9, 11];
+    let admit = |engine: &mut Engine, slot: usize| {
+        alloc_calls_during(|| {
+            let logits = engine.prefill_slot(slot, &prompt).unwrap();
+            std::hint::black_box(&logits);
+            drop(logits);
+        })
+    };
+    let first = admit(&mut engine, 0);
+    let second = admit(&mut engine, 1);
+    let third = admit(&mut engine, 2);
+    assert!(
+        second < first,
+        "second admission ({second} allocs) should be cheaper than the first ({first}): \
+         the prefill scratch did not persist"
+    );
+    assert_eq!(
+        second, third,
+        "admission allocation count must be steady once the scratch is grown \
+         (second: {second}, third: {third})"
+    );
+}
+
 /// The continuous-batching scheduler's decode loop on top of the engine:
 /// mid-generation ticks (no admissions, no evictions, no streaming side
 /// effects) must allocate nothing — the scheduler's token/sample buffers
@@ -188,5 +246,7 @@ fn scheduler_probe() {
 fn execute_allocations_do_not_scale_with_sequence_length_or_position() {
     kernel_probe();
     decode_probe();
+    sharded_decode_probe();
+    prefill_scratch_probe();
     scheduler_probe();
 }

@@ -6,6 +6,9 @@
 
 use hedgehog::data::{ar::ArTask, corpus, glue, lra, samsum, Pcg32};
 use hedgehog::metrics;
+use hedgehog::runtime::reference::{prefill_state, prefill_state_with, PrefillScratch};
+use hedgehog::runtime::simd::{self, SimdIsa};
+use hedgehog::runtime::{ExecOptions, FeatureKind, ModelConfig, ParamStore, Tensor, WorkerPool};
 use hedgehog::serve::{Batcher, Request};
 
 const SWEEPS: u64 = 50;
@@ -234,6 +237,128 @@ fn prop_samsum_masks_inside_sequence() {
         for (i, &m) in s.mask.iter().enumerate() {
             if m > 0.0 {
                 assert!(i <= last_nonpad, "seed {seed}: mask on pure padding");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD dispatch tiers + pooled prefill (DESIGN.md §13)
+// ---------------------------------------------------------------------------
+
+/// Seeded params + the manifest-ordered leaf list for a config (the same
+/// sorted layout `builtin_decode_manifest` exposes as `inputs[4..]`).
+fn prefill_params(cfg: &ModelConfig) -> ParamStore {
+    cfg.init_params(0x5EED)
+}
+
+fn leaf_refs<'a>(cfg: &ModelConfig, params: &'a ParamStore) -> Vec<&'a Tensor> {
+    cfg.leaf_slots("params").iter().map(|sl| params.get(&sl.name).unwrap()).collect()
+}
+
+/// The non-scalar tiers this host can run (lanes8 always; avx2 where the
+/// CPU has AVX2+FMA — CI's dispatch matrix covers the avx2 leg on hosts
+/// that skip it here).
+fn host_tiers() -> Vec<SimdIsa> {
+    let mut tiers = vec![SimdIsa::Lanes8];
+    if simd::avx2_supported() {
+        tiers.push(SimdIsa::Avx2);
+    } else {
+        eprintln!("host lacks AVX2+FMA — avx2 tier parity covered by CI's matrix leg only");
+    }
+    tiers
+}
+
+/// Every dispatch tier must agree with the scalar oracle to <= 1e-5
+/// relative, for every feature map in the zoo, across a chunk grid
+/// (including the non-divisor chunk and the one-block naive path). The
+/// whole-model prefill composes every `runtime::simd` kernel the decode
+/// hot path uses — dot/axpy/scaled_add/rank1_update and each map's
+/// exp/relu/dpfp feature pipeline — so this is the end-to-end tier
+/// parity gate on top of simd.rs's per-kernel unit sweeps.
+#[test]
+fn prop_prefill_tier_parity_across_feature_zoo() {
+    let prompt: Vec<i32> = vec![3, 250, 17, 17, 99, 0, 42, 128, 7, 64, 9, 77, 5];
+    for kind in FeatureKind::zoo() {
+        let cfg = ModelConfig { feature: kind, ..ModelConfig::ref_lm2() };
+        let params = prefill_params(&cfg);
+        let leaves = leaf_refs(&cfg, &params);
+        let grid = [
+            ExecOptions::serial(),
+            ExecOptions { threads: 1, chunk_size: 5 },
+            ExecOptions::naive(),
+        ];
+        for opts in grid {
+            let (os, oz, ol) = simd::with_isa(SimdIsa::Scalar, || {
+                prefill_state(&cfg, &leaves, &prompt, opts).unwrap()
+            });
+            for &isa in &host_tiers() {
+                let (ts, tz, tl) =
+                    simd::with_isa(isa, || prefill_state(&cfg, &leaves, &prompt, opts).unwrap());
+                for (what, got, want) in [("S", &ts, &os), ("z", &tz, &oz), ("logits", &tl, &ol)]
+                {
+                    assert_eq!(got.len(), want.len(), "{} {what}: length", kind.name());
+                    for (i, (x, y)) in got.iter().zip(want).enumerate() {
+                        let tol = 1e-5 * y.abs().max(1.0);
+                        assert!(
+                            (x - y).abs() <= tol,
+                            "{} {what}[{i}] ({opts:?}, {isa:?}): tier {x} vs scalar {y}",
+                            kind.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pool-parallel prefill must be *bit-identical* to the inline pass with
+/// the same options, for every builtin tag, thread count, and dispatch
+/// tier: every stage-2 head fold and stage-1/3 row block runs the same
+/// `simd` call sequence on the same operands whichever worker claims it,
+/// and pool workers inherit the dispatcher's tier (a worker falling back
+/// to a different tier would break exact equality here). Together with
+/// `prefill_matches_sequential_decode` (reference.rs, <= 1e-5 vs n
+/// decode steps) this closes the pooled-prefill state-handoff contract.
+#[test]
+fn prop_pooled_prefill_bit_identical_to_inline() {
+    let prompt: Vec<i32> = vec![3, 250, 17, 17, 99, 0, 42, 128, 7, 64, 9, 77, 5, 12, 201];
+    let pool = WorkerPool::new();
+    let mut scratch = PrefillScratch::new();
+    for tag in ModelConfig::builtin_tags() {
+        let cfg = ModelConfig::for_tag(tag).unwrap();
+        let params = prefill_params(&cfg);
+        let leaves = leaf_refs(&cfg, &params);
+        for &isa in &host_tiers() {
+            for threads in [2usize, 3, 4] {
+                for chunk in [5usize, ExecOptions::DEFAULT_CHUNK] {
+                    let opts = ExecOptions { threads, chunk_size: chunk };
+                    let inline_opts = ExecOptions { threads: 1, chunk_size: chunk };
+                    let (ws, wz, wl) = simd::with_isa(isa, || {
+                        prefill_state(&cfg, &leaves, &prompt, inline_opts).unwrap()
+                    });
+                    let (gs, gz, gl) = simd::with_isa(isa, || {
+                        prefill_state_with(
+                            &cfg,
+                            &leaves,
+                            &prompt,
+                            opts,
+                            Some(&pool),
+                            &mut scratch,
+                        )
+                        .unwrap()
+                    });
+                    for (what, got, want) in
+                        [("S", &gs, &ws), ("z", &gz, &wz), ("logits", &gl, &wl)]
+                    {
+                        assert!(
+                            got.iter().zip(want.iter()).all(|(a, b)| a.to_bits() == b.to_bits())
+                                && got.len() == want.len(),
+                            "{tag} {what} ({isa:?}, t={threads}, C={chunk}): pooled prefill \
+                             diverged from the inline pass"
+                        );
+                    }
+                }
             }
         }
     }

@@ -6,17 +6,22 @@ Usage:
 
 The fresh document's schema picks the comparison mode:
 
-* ``hedgehog_bench_v2`` (kernel/train sweeps) — records matched on
-  (kernel, n, threads, chunk_size, geometry); the geometry field (model
-  layers/heads/head_dim, emitted by the train bench) guarantees
-  tokens/sec is never compared across model shapes; only chunked configs
-  (chunk_size > 0) are compared — the naive oracle rows are a
-  correctness baseline, not a perf target. Baseline defaults to
-  ``git show HEAD:BENCH_kernels.json``.
-* ``hedgehog_serve_v1`` (continuous-batching serve load) — records
-  matched on (tag, slots), compared on sustained generated tokens/sec.
-  Baseline defaults to ``git show HEAD:BENCH_serve.json``. The serve
-  bench is fault-free by construction, so any nonzero shed / poisoned /
+* ``hedgehog_bench_v3`` (kernel/train sweeps; v2 accepted for old
+  baselines) — records matched on (kernel, n, threads, chunk_size,
+  geometry, simd_isa); the geometry field (model layers/heads/head_dim,
+  emitted by the train bench) guarantees tokens/sec is never compared
+  across model shapes, and simd_isa (the runtime dispatch tier the row
+  was measured under — same precedent) guarantees it is never compared
+  across ISA tiers; only chunked configs (chunk_size > 0) are compared
+  — the naive oracle rows are a correctness baseline, not a perf
+  target. Baseline defaults to ``git show HEAD:BENCH_kernels.json``.
+  v2 records carry no simd_isa key and so only ever match other
+  pre-dispatch rows (None == None), never a tier-stamped v3 row.
+* ``hedgehog_serve_v2`` (continuous-batching serve load; v1 accepted
+  for old baselines) — records matched on (tag, slots, threads,
+  simd_isa), compared on sustained generated tokens/sec. Baseline
+  defaults to ``git show HEAD:BENCH_serve.json``. The serve bench is
+  fault-free by construction, so any nonzero shed / poisoned /
   deadline_exceeded count in the *fresh* run warns regardless of the
   baseline (a numeric guardrail or lifecycle knob fired where none
   should — see DESIGN.md §11; the chaos soak's BENCH_soak.json is a
@@ -48,7 +53,7 @@ import sys
 
 REGRESSION_RATIO = 0.75  # warn when fresh < 75% of baseline tokens/sec
 
-SERVE_SCHEMA = "hedgehog_serve_v1"
+SERVE_SCHEMAS = ("hedgehog_serve_v1", "hedgehog_serve_v2")
 QUALITY_SCHEMA = "hedgehog_quality_v1"
 
 # (field, direction, threshold): "higher"/"lower" use absolute deltas,
@@ -93,15 +98,26 @@ def load_baseline(spec, default_file):
 
 
 def kernel_key(r):
-    # geometry distinguishes model shapes (train-bench records); kernel
-    # sweep records predate the field / carry null, which matches itself.
-    return (r["kernel"], r["n"], r["threads"], r["chunk_size"], r.get("geometry"))
+    # geometry distinguishes model shapes (train-bench records) and
+    # simd_isa distinguishes dispatch tiers; records predating either
+    # field carry null, which matches only itself — a v2 row never
+    # compares against a tier-stamped v3 row.
+    return (
+        r["kernel"],
+        r["n"],
+        r["threads"],
+        r["chunk_size"],
+        r.get("geometry"),
+        r.get("simd_isa"),
+    )
 
 
 def serve_key(r):
-    # slots pins the engine geometry: tokens/sec at 4 slots is not
-    # comparable to tokens/sec at 8.
-    return (r["tag"], r["slots"])
+    # slots pins the engine geometry (tokens/sec at 4 slots is not
+    # comparable to 8); threads pins the decode pool width and simd_isa
+    # the dispatch tier — v1 rows carry neither and match only other
+    # pre-dispatch rows.
+    return (r["tag"], r["slots"], r.get("threads"), r.get("simd_isa"))
 
 
 def quality_key(r):
@@ -168,7 +184,7 @@ def main(argv):
         print(f"perf-diff: cannot read fresh file: {e}", file=sys.stderr)
         return 2
     schema = fresh.get("schema")
-    if schema == SERVE_SCHEMA:
+    if schema in SERVE_SCHEMAS:
         mode, default_file = "serve", "BENCH_serve.json"
     elif schema == QUALITY_SCHEMA:
         mode, default_file = "quality", "BENCH_quality.json"
@@ -235,9 +251,11 @@ def main(argv):
             continue
         compared += 1
         ratio = r[rate_field] / b[rate_field]
+        isa = f" isa={r['simd_isa']}" if r.get("simd_isa") else ""
         if serve:
+            threads = f" t={r['threads']}" if r.get("threads") is not None else ""
             line = (
-                f"  {r['tag']:<10} slots={r['slots']:<3} "
+                f"  {r['tag']:<10} slots={r['slots']:<3}{threads}{isa} "
                 f"{b[rate_field]:>14.0f} -> {r[rate_field]:>14.0f} tok/s "
                 f"({ratio:5.2f}x) ttft_p50={r.get('ttft_p50_ms', '?')}ms"
             )
@@ -246,7 +264,7 @@ def main(argv):
             line = (
                 f"  {r['kernel']:<12} n={r['n']:<6} t={r['threads']:<3} C={r['chunk_size']:<4} "
                 f"{b[rate_field]:>14.0f} -> {r[rate_field]:>14.0f} tok/s "
-                f"({ratio:5.2f}x){geom}"
+                f"({ratio:5.2f}x){geom}{isa}"
             )
         print(line)
         if ratio < REGRESSION_RATIO:

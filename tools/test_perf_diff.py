@@ -24,9 +24,9 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import perf_diff  # noqa: E402
 
 
-def kernel_doc(rate, provenance="measured", chunk_size=16):
+def kernel_doc(rate, provenance="measured", chunk_size=16, simd_isa="lanes8"):
     return {
-        "schema": "hedgehog_bench_v2",
+        "schema": "hedgehog_bench_v3",
         "provenance": provenance,
         "available_parallelism": 8,
         "smoke": False,
@@ -37,22 +37,25 @@ def kernel_doc(rate, provenance="measured", chunk_size=16):
                 "threads": 4,
                 "chunk_size": chunk_size,
                 "geometry": "l2h2d8",
+                "simd_isa": simd_isa,
                 "tokens_per_sec": rate,
             }
         ],
     }
 
 
-def serve_doc(rate, provenance="measured", **faults):
+def serve_doc(rate, provenance="measured", threads=2, simd_isa="lanes8", **faults):
     rec = {
         "tag": "ref_lm2",
         "slots": 4,
+        "threads": threads,
+        "simd_isa": simd_isa,
         "sustained_tokens_per_sec": rate,
         "ttft_p50_ms": 3,
     }
     rec.update(faults)
     return {
-        "schema": "hedgehog_serve_v1",
+        "schema": "hedgehog_serve_v2",
         "provenance": provenance,
         "available_parallelism": 8,
         "smoke": False,
@@ -120,6 +123,32 @@ class PerfDiffTest(unittest.TestCase):
         self.assertEqual(rc, 0)
         self.assertIn("no overlapping chunked configs", out)
 
+    def test_kernel_isa_mismatch_rows_never_compare(self):
+        # An avx2-tier row must not be judged against a lanes8 baseline:
+        # the ISA is part of the config identity, not a nuisance variable.
+        fresh = self.write("fresh.json", kernel_doc(500.0, simd_isa="avx2"))
+        base = self.write("base.json", kernel_doc(1000.0, simd_isa="lanes8"))
+        rc, out = self.run_diff(fresh, base)
+        self.assertEqual(rc, 0)
+        self.assertIn("no overlapping chunked configs", out)
+        self.assertNotIn("WARNING: 1 config(s) regressed", out)
+
+    def test_kernel_v2_baseline_rows_still_match_untiered_rows(self):
+        # Pre-dispatch v2 snapshots carry no simd_isa key; a fresh doc
+        # whose rows also omit it (None == None) must keep comparing so
+        # old baselines stay usable until the first CI replacement.
+        fresh_doc = kernel_doc(700.0)
+        fresh_doc["schema"] = "hedgehog_bench_v2"
+        del fresh_doc["results"][0]["simd_isa"]
+        base_doc = kernel_doc(1000.0)
+        base_doc["schema"] = "hedgehog_bench_v2"
+        del base_doc["results"][0]["simd_isa"]
+        fresh = self.write("fresh.json", fresh_doc)
+        base = self.write("base.json", base_doc)
+        rc, out = self.run_diff(fresh, base)
+        self.assertEqual(rc, 0)
+        self.assertIn("WARNING: 1 config(s) regressed below 75%", out)
+
     def test_unmeasured_baseline_downgrades_to_informational(self):
         fresh = self.write("fresh.json", kernel_doc(500.0))
         base = self.write("base.json", kernel_doc(1000.0, provenance="modeled"))
@@ -154,6 +183,32 @@ class PerfDiffTest(unittest.TestCase):
         rc, out = self.run_diff(fresh, base)
         self.assertEqual(rc, 0)
         self.assertIn("deadline_exceeded=3", out)
+
+    def test_serve_thread_counts_are_distinct_configs(self):
+        # A t=4 sharded-decode row is a different config from the t=1
+        # serial baseline; tokens/sec across pool widths never compare.
+        fresh = self.write("fresh.json", serve_doc(500.0, threads=4))
+        base = self.write("base.json", serve_doc(1000.0, threads=1))
+        rc, out = self.run_diff(fresh, base)
+        self.assertEqual(rc, 0)
+        self.assertIn("no overlapping serve configs", out)
+
+    def test_serve_v1_baseline_rows_still_match_untiered_rows(self):
+        # Old v1 snapshots predate threads/simd_isa; matching on
+        # (tag, slots, None, None) keeps them comparable to each other.
+        fresh_doc = serve_doc(600.0)
+        fresh_doc["schema"] = "hedgehog_serve_v1"
+        for k in ("threads", "simd_isa"):
+            del fresh_doc["results"][0][k]
+        base_doc = serve_doc(1000.0)
+        base_doc["schema"] = "hedgehog_serve_v1"
+        for k in ("threads", "simd_isa"):
+            del base_doc["results"][0][k]
+        fresh = self.write("fresh.json", fresh_doc)
+        base = self.write("base.json", base_doc)
+        rc, out = self.run_diff(fresh, base)
+        self.assertEqual(rc, 0)
+        self.assertIn("WARNING: 1 config(s) regressed below 75%", out)
 
     # ---- quality schema -----------------------------------------------
 
